@@ -1,0 +1,36 @@
+//! Bench: the aggregation hot path — per-user accumulate (runs cohort
+//! times per round) and the worker reduce (once per round), at the
+//! benchmark models' parameter counts. Paper §3 item 4: tensors stay in
+//! one buffer end-to-end; this is the Rust analogue (add_assign into the
+//! resident accumulator, no reallocation).
+
+use pfl::fl::aggregator::{Aggregator, SumAggregator};
+use pfl::fl::stats::Statistics;
+use pfl::util::bench::{bench, bench_per_op, black_box};
+
+fn main() {
+    for &d in &[119_569usize, 545_098, 1_964_640] {
+        let agg = SumAggregator;
+        let users = 10;
+        bench_per_op(&format!("accumulate/user d={d}"), 2, 10, users, || {
+            let mut acc: Option<Statistics> = None;
+            for u in 0..users {
+                agg.accumulate(
+                    &mut acc,
+                    Statistics::new_update(vec![u as f32 * 1e-3; d], 1.0),
+                );
+            }
+            black_box(acc.map(|a| a.weight));
+        });
+        bench(&format!("worker_reduce/8 partials d={d}"), 2, 10, || {
+            let partials: Vec<Statistics> =
+                (0..8).map(|w| Statistics::new_update(vec![w as f32; d], 6.0)).collect();
+            black_box(agg.worker_reduce(partials).map(|a| a.weight));
+        });
+        bench(&format!("average_in_place d={d}"), 2, 10, || {
+            let mut s = Statistics::new_update(vec![1.0; d], 50.0);
+            s.average_in_place();
+            black_box(s.weight);
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench: one full central iteration, end to end (sample → schedule →
+//! local training on worker replicas → postprocess → reduce → DP noise →
+//! central update). The ratio between this and `runtime_hotpath`'s raw
+//! step time is the framework overhead — the quantity pfl-research's
+//! design minimizes (paper §3; its analogue of Table 1's pfl rows).
+
+use pfl::baselines::EngineVariant;
+use pfl::config::build;
+use pfl::fl::callbacks::Callback;
+use pfl::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    if pfl::runtime::Manifest::load_default().is_err() {
+        eprintln!("skipping end_to_end_round: run `make artifacts` first");
+        return Ok(());
+    }
+
+    for (label, preset, dp) in [
+        ("cifar10 C=10", "cifar10-iid", false),
+        ("cifar10 C=10 +DP", "cifar10-iid-dp", true),
+    ] {
+        let mut cfg = pfl::config::preset(preset)?;
+        cfg.iterations = 1; // measured per-round via repeated runs below
+        cfg.cohort_size = 10;
+        cfg.dataset.num_users = 100;
+        cfg.eval_every = 10_000;
+        if dp {
+            cfg.privacy.noise_cohort = 200.0;
+        }
+
+        // persistent backend: compile once, then time rounds
+        let mut backend = build::build_backend(&cfg, EngineVariant::PflStyle.profile())?;
+        let init = build::init_params(&cfg)?;
+        // warm-up round compiles the executables
+        let _ = backend.run(init.clone(), &mut Vec::<Box<dyn Callback>>::new())?;
+        drop(backend);
+
+        // measure full (build + 3 rounds) minus build amortization by
+        // timing a 3-round run with a pre-warmed artifact cache per
+        // iteration; PJRT compilation is part of round 0 only.
+        let mut cfg3 = cfg.clone();
+        cfg3.iterations = 3;
+        bench(&format!("round/{label} (3 rounds incl. setup)"), 0, 3, || {
+            let mut b = build::build_backend(&cfg3, EngineVariant::PflStyle.profile()).unwrap();
+            let out = b.run(init.clone(), &mut Vec::<Box<dyn Callback>>::new()).unwrap();
+            pfl::util::bench::black_box(out.rounds);
+        });
+
+        // round-only timing from the outcome's own per-round clock
+        let mut cfg10 = cfg.clone();
+        cfg10.iterations = 8;
+        let mut b = build::build_backend(&cfg10, EngineVariant::PflStyle.profile())?;
+        let out = b.run(init.clone(), &mut Vec::<Box<dyn Callback>>::new())?;
+        let warm: Vec<f64> =
+            out.round_nanos.iter().skip(1).map(|n| *n as f64 / 1e9).collect();
+        let mean = warm.iter().sum::<f64>() / warm.len() as f64;
+        let busy: u64 = out.worker_busy_nanos.iter().sum();
+        println!(
+            "round/{label}: warm rounds mean {mean:.3}s over {} rounds; device-busy frac {:.2}",
+            warm.len(),
+            (busy as f64 / 1e9) / out.wall_secs
+        );
+    }
+    Ok(())
+}

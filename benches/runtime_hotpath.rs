@@ -1,0 +1,67 @@
+//! Bench: the PJRT execution hot path (one local train step / eval batch
+//! / L1 clip kernel per benchmark model). These are the irreducible
+//! device costs the simulation wraps; everything in the speed tables sits
+//! on top of them. Paper analogue: the per-step GPU time underlying
+//! Tables 1–2.
+
+use pfl::fl::context::LocalParams;
+use pfl::fl::model::HloModel;
+use pfl::fl::Model;
+use pfl::runtime::{Manifest, Runtime};
+use pfl::util::bench::bench;
+use pfl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping runtime_hotpath: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let rt = Runtime::new(manifest)?;
+    println!("# runtime hot path (CPU PJRT, interpret-mode Pallas)");
+
+    for name in ["cnn_c10", "mlp_flair", "lm_so", "lora_llm"] {
+        let mut model = HloModel::new(&rt, name, 1)?;
+        let data = match name {
+            "cnn_c10" => pfl::data::FederatedDataset::user_data(
+                &pfl::data::SynthCifar::new(4, 30, None, 3),
+                0,
+            ),
+            "mlp_flair" => pfl::data::FederatedDataset::user_data(
+                &pfl::data::SynthFlair::new(4, None, 3),
+                0,
+            ),
+            "lm_so" => pfl::data::FederatedDataset::user_data(
+                &pfl::data::SynthText::new(4, 3),
+                0,
+            ),
+            _ => pfl::data::FederatedDataset::user_data(
+                &pfl::data::SynthInstruct::new(pfl::data::InstructFlavor::Alpaca, 200, 3),
+                0,
+            ),
+        };
+        // one user's local optimization (epochs=1)
+        let p = LocalParams { epochs: 1, batch_size: 16, lr: 0.1, mu: 0.0, max_steps: 0 };
+        bench(&format!("{name}/train_local(1 user)"), 2, 10, || {
+            let out = model.train_local(&data, &p, None, 7).unwrap();
+            pfl::util::bench::black_box(out.loss_sum);
+        });
+        bench(&format!("{name}/evaluate(1 user)"), 2, 10, || {
+            let m = model.evaluate(&data, None).unwrap();
+            pfl::util::bench::black_box(m.get("loss"));
+        });
+        // the L1 Pallas clip kernel on a param-sized vector
+        let mut rng = Rng::seed_from_u64(0);
+        let template: Vec<f32> =
+            (0..model.param_count()).map(|_| rng.normal() as f32 * 0.01).collect();
+        let kernel = model.clip_kernel().unwrap();
+        bench(&format!("{name}/clip_kernel({} params)", template.len()), 2, 10, || {
+            let mut v = template.clone();
+            let norm = kernel.clip(&mut v, 0.5).unwrap();
+            pfl::util::bench::black_box(norm);
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench: the greedy user-scheduler (paper App. B.6). It runs once per
+//! (context, cohort), so it must stay negligible next to local training —
+//! the perf target is < 1 ms at cohort 50k (the paper's largest, Fig. 3
+//! right).
+
+use pfl::fl::scheduler::{median, schedule, SchedulerKind};
+use pfl::util::bench::{bench, black_box};
+use pfl::util::rng::Rng;
+
+fn weights(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.lognormal(2.5, 1.2).ceil().max(1.0)).collect()
+}
+
+fn main() {
+    println!("# scheduler cost per cohort (workers = 32)");
+    for n in [50usize, 400, 5_000, 50_000] {
+        let w = weights(n, 7);
+        for kind in [
+            SchedulerKind::Uniform,
+            SchedulerKind::Greedy,
+            SchedulerKind::GreedyBase { base: median(&w) },
+            SchedulerKind::GreedyMedianBase,
+        ] {
+            bench(&format!("schedule/{kind:?}/cohort={n}"), 2, 10, || {
+                black_box(schedule(kind, &w, 32));
+            });
+        }
+    }
+    println!("# straggler-gap quality at cohort 5000 (lower is better)");
+    let w = weights(5_000, 3);
+    for kind in [SchedulerKind::Uniform, SchedulerKind::Greedy, SchedulerKind::GreedyMedianBase] {
+        let gap = schedule(kind, &w, 32).predicted_straggler_gap();
+        println!("{kind:?}: predicted straggler gap = {gap:.1} weight units");
+    }
+}

@@ -1,0 +1,95 @@
+//! End-to-end driver (DESIGN.md deliverable (b)/EXPERIMENTS.md §E2E):
+//! train the StackOverflow benchmark transformer (~2.0M parameters,
+//! paper App. C.6) with **FedAdam + central DP** for a few hundred
+//! rounds on the synthetic user-keyed corpus, proving that all layers
+//! compose on a real workload:
+//!
+//!   L1 Pallas clip kernel → L2 JAX train/eval steps (AOT HLO) →
+//!   PJRT runtime → worker replicas → greedy scheduling → Gaussian
+//!   mechanism with PLD-calibrated noise → FedAdam central updates.
+//!
+//! ```sh
+//! cargo run --release --example train_lm_e2e -- --rounds 200 --cohort 8
+//! ```
+//!
+//! Logs the loss/perplexity curve and writes `e2e_lm_curve.csv`; the run
+//! recorded in EXPERIMENTS.md used the default arguments.
+
+use pfl::baselines::EngineVariant;
+use pfl::fl::callbacks::{Callback, CsvReporter};
+use pfl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let rounds = args.get_u64("rounds", 200)?;
+    let cohort = args.get_usize("cohort", 8)?;
+    let workers = args.get_usize("workers", 2)?;
+    let csv = args.get_str("csv", "e2e_lm_curve.csv").to_string();
+
+    // The paper's StackOverflow-with-DP benchmark (Tables 7 + 9):
+    // FedAdam (lr 0.1, warmup, tau 0.1), clip bound 1.0, eps=2, delta=1e-6,
+    // noise cohort 5000 -> r = C/5000 noise rescaling (App. C.4).
+    let mut cfg = pfl::config::preset("stackoverflow-dp")?;
+    cfg.iterations = rounds;
+    cfg.cohort_size = cohort;
+    cfg.dataset.num_users = 2_000;
+    cfg.num_workers = workers;
+    cfg.eval_every = (rounds / 20).max(1);
+    cfg.central_opt.warmup = (rounds / 10).max(1);
+    // keep the paper's noise *per-user scale* honest at the small cohort:
+    // noise cohort C~ = 50x the simulated cohort
+    cfg.privacy.noise_cohort = (cohort as f64) * 50.0;
+
+    let sigma = pfl::config::build::calibrated_noise_multiplier(&cfg)?;
+    eprintln!(
+        "== e2e: {} | T={rounds} C={cohort} workers={workers} ==",
+        cfg.name
+    );
+    eprintln!(
+        "== DP: eps={} delta={} accountant={} -> noise multiplier sigma={sigma:.4} (r={:.4}) ==",
+        cfg.privacy.epsilon,
+        cfg.privacy.delta,
+        cfg.privacy.accountant,
+        cohort as f64 / cfg.privacy.noise_cohort,
+    );
+
+    let dataset = pfl::config::build::build_dataset(&cfg.dataset)?;
+    let mut backend =
+        pfl::config::build::build_backend(&cfg, EngineVariant::PflStyle.profile())?;
+    let init = pfl::config::build::init_params(&cfg)?;
+    let mut callbacks: Vec<Box<dyn Callback>> = vec![
+        Box::new(pfl::config::build::build_eval_callback(&cfg, &dataset)?),
+        Box::new(CsvReporter::new(&csv)),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let out = backend.run(init, &mut callbacks)?;
+
+    println!("\nround  train-loss  central-ppl  snr");
+    for (t, m) in &out.history {
+        if let Some(ppl) = m.get("centraleval/perplexity") {
+            println!(
+                "{t:>5}  {:>10.4}  {ppl:>11.3}  {:>6.2}",
+                m.get("train/loss").unwrap_or(f64::NAN),
+                m.get("dp/snr").unwrap_or(f64::NAN),
+            );
+        }
+    }
+    let first_ppl = out
+        .history
+        .iter()
+        .find_map(|(_, m)| m.get("centraleval/perplexity"))
+        .unwrap_or(f64::NAN);
+    let final_ppl = out.final_metric("centraleval/perplexity").unwrap_or(f64::NAN);
+    println!(
+        "\n{} rounds in {:.1}s | {} users trained | perplexity {first_ppl:.2} -> {final_ppl:.2} | curve -> {csv}",
+        out.rounds,
+        t0.elapsed().as_secs_f64(),
+        out.counters.users_trained,
+    );
+    anyhow::ensure!(
+        final_ppl < first_ppl,
+        "perplexity did not improve under DP training"
+    );
+    Ok(())
+}

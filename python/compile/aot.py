@@ -1,0 +1,154 @@
+"""AOT compile path: lower every (model x step) to HLO *text* + manifest.
+
+This is the only place Python touches the stack. `make artifacts` runs it
+once; the Rust coordinator then loads `artifacts/*.hlo.txt` through the
+PJRT CPU client and Python never appears on the simulation path.
+
+Interchange format is HLO text, NOT `HloModuleProto.serialize()` — jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.clip_scale import clip_scale
+from .model import MODELS
+from .models import lora_lm
+from .models.common import manifest_layout
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def _io_spec(args):
+    return [
+        {"shape": list(a.shape), "dtype": _DTYPE[a.dtype]} for a in args
+    ]
+
+
+def _out_spec(fn, args):
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    return [{"shape": list(o.shape), "dtype": _DTYPE[o.dtype]} for o in outs]
+
+
+def _emit(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def build_all(out_dir: str, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "models": {}, "artifacts": {}}
+
+    for name, mdef in MODELS.items():
+        if only and name not in only:
+            continue
+        specs, train, eval_step, train_args, eval_args = mdef.make_steps(
+            mdef.train_batch, mdef.eval_batch
+        )
+        entries, total = manifest_layout(specs)
+        model_entry = {
+            "param_count": total,
+            "layout": entries,
+            "train_batch": mdef.train_batch,
+            "eval_batch": mdef.eval_batch,
+            "flops_per_train_step": mdef.module.flops_per_train_step(
+                mdef.train_batch
+            ),
+            "description": mdef.description,
+        }
+        if mdef.has_base:
+            bentries, btotal = manifest_layout(lora_lm.base_param_specs())
+            model_entry["base_param_count"] = btotal
+            model_entry["base_layout"] = bentries
+
+        for step_name, fn, args in (
+            ("train", train, train_args(total)),
+            ("eval", eval_step, eval_args(total)),
+        ):
+            art = f"{name}_{step_name}"
+            path = os.path.join(out_dir, art + ".hlo.txt")
+            if verbose:
+                print(f"lowering {art} ...", flush=True)
+            text = _emit(fn, args, path)
+            manifest["artifacts"][art] = {
+                "file": os.path.basename(path),
+                "inputs": _io_spec(args),
+                "outputs": _out_spec(fn, args),
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+
+        # Per-model clip artifact (param-count-shaped): the L1 Pallas
+        # clip_scale kernel as a standalone executable for the DP
+        # postprocessor in rust.
+        clip_args = (
+            jax.ShapeDtypeStruct((total,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        art = f"{name}_clip"
+        path = os.path.join(out_dir, art + ".hlo.txt")
+        if verbose:
+            print(f"lowering {art} ...", flush=True)
+        text = _emit(lambda v, b: clip_scale(v, b), clip_args, path)
+        manifest["artifacts"][art] = {
+            "file": os.path.basename(path),
+            "inputs": _io_spec(clip_args),
+            "outputs": [
+                {"shape": [total], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        model_entry["artifacts"] = {
+            "train": f"{name}_train",
+            "eval": f"{name}_eval",
+            "clip": f"{name}_clip",
+        }
+        manifest["models"][name] = model_entry
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="compat: marker file path")
+    p.add_argument("--only", nargs="*", default=None, help="subset of models")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    build_all(out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

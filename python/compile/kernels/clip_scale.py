@@ -1,0 +1,80 @@
+"""Pallas kernel: fused L2-norm + clip of a flat model update.
+
+This is the per-user DP clipping step that pfl-research keeps on the GPU
+end-to-end (paper §3 item 4 and §A: "model updates from each user are
+clipped so that their L2 norm is upper-bounded"). It is the L1 hot-spot of
+the privacy path: every sampled user's update passes through it once per
+central iteration.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the vector is processed in
+row blocks of BLOCK elements; each block is one HBM->VMEM transfer
+(BLOCK * 4 bytes = 512 KiB at the default, far below the ~16 MiB VMEM
+budget), reduced on the VPU. Two passes over HBM (reduce, then scale) —
+arithmetic intensity is O(1) so the kernel is bandwidth-bound and two
+passes is the roofline for a clip that needs the *global* norm before it
+can scale. interpret=True for CPU-PJRT execution (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128 * 1024 f32 = 512 KiB per block in VMEM.
+BLOCK = 128 * 1024
+
+
+def _sumsq_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[0] = jnp.sum(x * x)
+
+
+def _scale_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+def _pad_to_block(v, block):
+    n = v.shape[0]
+    rem = (-n) % block
+    if rem:
+        v = jnp.concatenate([v, jnp.zeros((rem,), v.dtype)])
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def clip_scale(v, bound, block=BLOCK):
+    """L2-clip flat vector `v` to `bound`; returns (clipped, norm).
+
+    Zero-padding to a block multiple does not change the norm, and the
+    padded tail is dropped before returning.
+    """
+    n = v.shape[0]
+    vp = _pad_to_block(v, block)
+    nb = vp.shape[0] // block
+
+    partial_sums = pl.pallas_call(
+        _sumsq_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=True,
+    )(vp)
+
+    norm = jnp.sqrt(jnp.sum(partial_sums))
+    scale = jnp.minimum(1.0, bound / jnp.maximum(norm, 1e-30)).astype(v.dtype)
+
+    scaled = pl.pallas_call(
+        _scale_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, v.dtype),
+        interpret=True,
+    )(vp, scale.reshape(1))
+
+    return scaled[:n], norm

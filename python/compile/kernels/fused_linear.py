@@ -1,0 +1,151 @@
+"""Pallas kernel: tiled matmul + bias + activation, with a custom VJP.
+
+The dense layers of every benchmark model (CNN head, transformer FF and
+logit projection, FLAIR MLP trunk) run through this kernel, so it sits on
+the local-training hot path — the bulk of per-user FLOPs in the paper's
+simulations.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a 3-D grid over
+(M/bm, N/bn, K/bk) tiles with MXU-shaped (128,128) output tiles and an
+accumulate-in-place inner loop over K — the BlockSpec expresses the
+HBM->VMEM schedule that a CUDA kernel would express with threadblocks and
+shared-memory staging. Bias-add and activation are fused into the final
+K-step so the pre-activation tile never round-trips to HBM.
+
+Autodiff: `pallas_call` has no automatic VJP, so `fused_linear` carries a
+`jax.custom_vjp` whose backward pass reuses the same tiled kernel for the
+two transposed matmuls (dx = g @ W^T, dW = x^T @ g). This keeps *both*
+forward and backward on the L1 kernel.
+
+interpret=True for CPU-PJRT execution (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles.
+BM, BN, BK = 128, 128, 128
+
+
+def _gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+
+
+_ACTS = {
+    "id": lambda y: y,
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "gelu": _gelu,
+}
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk, act):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = _ACTS[act](o_ref[...] + b_ref[...])
+
+
+def _pad2(a, m, n):
+    pm, pn = (-a.shape[0]) % m, (-a.shape[1]) % n
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def _matmul_bias_act(x, w, b, act="id", bm=BM, bn=BN, bk=BK):
+    """Tiled pallas (x @ w + b) then activation. Pads to tile multiples."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    bp = jnp.pad(b, (0, (-n) % bn)).reshape(1, -1)
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=gk, act=act),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def _matmul_raw(x, w):
+    return _matmul_bias_act(x, w, jnp.zeros((w.shape[1],), x.dtype), act="id")
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Plain tiled pallas matmul (no bias, no activation), differentiable."""
+    return _matmul_raw(x, w)
+
+
+def _mm_fwd(x, w):
+    return _matmul_raw(x, w), (x, w)
+
+
+def _mm_bwd(res, dy):
+    x, w = res
+    return _matmul_raw(dy, w.T), _matmul_raw(x.T, dy)
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+def _act_grad(act, pre):
+    if act == "id":
+        return jnp.ones_like(pre)
+    if act == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if act == "gelu":
+        # d/dy of tanh-approx gelu
+        c = 0.7978845608028654
+        t = jnp.tanh(c * (pre + 0.044715 * pre**3))
+        return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t**2) * c * (
+            1.0 + 3 * 0.044715 * pre**2
+        )
+    raise ValueError(act)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act="id"):
+    """act(x @ w + b), forward and backward both on the Pallas kernel."""
+    return _matmul_bias_act(x, w, b, act=act)
+
+
+def _fl_fwd(x, w, b, act):
+    pre = _matmul_bias_act(x, w, b, act="id")
+    return _ACTS[act](pre), (x, w, pre)
+
+
+def _fl_bwd(act, res, dy):
+    x, w, pre = res
+    g = dy * _act_grad(act, pre)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. `python/tests/test_kernels.py` sweeps shapes and dtypes
+with hypothesis and asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def clip_scale_ref(v, bound):
+    """L2-clip a flat vector to `bound`.
+
+    Returns (clipped, norm). If ||v|| <= bound the vector is returned
+    unchanged; otherwise it is scaled by bound/||v||. This is the per-user
+    DP sensitivity-control step (paper App. A, Gaussian mechanism step 1).
+    """
+    norm = jnp.sqrt(jnp.sum(v.astype(jnp.float32) ** 2))
+    scale = jnp.minimum(1.0, bound / jnp.maximum(norm, 1e-30))
+    return (v * scale).astype(v.dtype), norm
+
+
+def matmul_ref(x, w):
+    """Plain matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_linear_ref(x, w, b, act="id"):
+    """matmul + bias + activation oracle for the fused Pallas kernel."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(
+        jnp.float32
+    )
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        # tanh-approx gelu, matching the kernel
+        y = (
+            0.5
+            * y
+            * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+        )
+    elif act != "id":
+        raise ValueError(f"unknown act {act!r}")
+    return y.astype(x.dtype)

@@ -1,0 +1,60 @@
+"""L2 model registry: every benchmark model and its AOT-lowered steps.
+
+Each entry maps a model name to its step builders and batch shapes. The
+unified train step (see models/common.py) serves FedAvg, FedProx,
+AdaFedProx and SCAFFOLD from a single artifact; SCAFFOLD's control-variate
+bookkeeping and FedProx's adaptive mu live in the Rust coordinator.
+"""
+
+from dataclasses import dataclass
+from typing import Callable
+
+from .models import cnn, lora_lm, mlp_multilabel, transformer
+
+
+@dataclass
+class ModelDef:
+    name: str
+    module: object
+    train_batch: int
+    eval_batch: int
+    make_steps: Callable
+    has_base: bool = False  # lora: frozen base weights are a runtime input
+    description: str = ""
+
+
+MODELS = {
+    "cnn_c10": ModelDef(
+        name="cnn_c10",
+        module=cnn,
+        train_batch=10,
+        eval_batch=256,
+        make_steps=cnn.make_steps,
+        description="CIFAR10 benchmark CNN (paper App. C.5)",
+    ),
+    "lm_so": ModelDef(
+        name="lm_so",
+        module=transformer,
+        train_batch=16,
+        eval_batch=64,
+        make_steps=transformer.make_steps,
+        description="StackOverflow transformer LM, 1.96M params (App. C.6)",
+    ),
+    "mlp_flair": ModelDef(
+        name="mlp_flair",
+        module=mlp_multilabel,
+        train_batch=16,
+        eval_batch=128,
+        make_steps=mlp_multilabel.make_steps,
+        description="FLAIR multi-label classifier stand-in (App. C.7)",
+    ),
+    "lora_llm": ModelDef(
+        name="lora_llm",
+        module=lora_lm,
+        train_batch=4,
+        eval_batch=8,
+        make_steps=lora_lm.make_steps,
+        has_base=True,
+        description="LLM fine-tune stand-in: frozen base + LoRA r=8 (App. C.8)",
+    ),
+}

@@ -1,0 +1,107 @@
+"""CIFAR10 benchmark CNN (paper App. C.5; architecture after Reddi et al.
+"Adaptive Federated Optimization", Table 4 — two conv blocks + two dense).
+
+Dense layers run on the L1 Pallas `fused_linear` kernel; convolutions use
+XLA's native conv (the paper's models do the same through torch/tf).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fused_linear import fused_linear
+from .common import (
+    ParamSpec,
+    fan_in_std,
+    make_train_step,
+    softmax_xent,
+    unflatten,
+)
+
+NUM_CLASSES = 10
+IMG = (32, 32, 3)
+C1, C2, HID = 32, 64, 128
+
+
+def param_specs():
+    return [
+        ParamSpec("conv1_w", (3, 3, 3, C1), "normal", fan_in_std(3, 3, 3)),
+        ParamSpec("conv1_b", (C1,), "zeros"),
+        ParamSpec("conv2_w", (3, 3, C1, C2), "normal", fan_in_std(3, 3, C1)),
+        ParamSpec("conv2_b", (C2,), "zeros"),
+        ParamSpec("fc1_w", (8 * 8 * C2, HID), "normal", fan_in_std(8 * 8 * C2)),
+        ParamSpec("fc1_b", (HID,), "zeros"),
+        ParamSpec("fc2_w", (HID, NUM_CLASSES), "normal", fan_in_std(HID)),
+        ParamSpec("fc2_b", (NUM_CLASSES,), "zeros"),
+    ]
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params, x):
+    h = jax.nn.relu(_conv(x, params["conv1_w"], params["conv1_b"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, params["conv2_w"], params["conv2_b"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = fused_linear(h, params["fc1_w"], params["fc1_b"], "relu")
+    return fused_linear(h, params["fc2_w"], params["fc2_b"], "id")
+
+
+def loss_fn(params, x, y, w):
+    logits = forward(params, x)
+    mean, loss_sum, correct, wsum = softmax_xent(logits, y, w)
+    return mean, (loss_sum, correct, wsum)
+
+
+def make_steps(batch_size: int, eval_batch: int):
+    specs = param_specs()
+    train = make_train_step(loss_fn, specs)
+
+    def eval_step(flat, x, y, w):
+        params = unflatten(flat, specs)
+        _, (loss_sum, correct, wsum) = loss_fn(params, x, y, w)
+        return loss_sum, correct, wsum
+
+    def train_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            f,
+            f,
+            jax.ShapeDtypeStruct((batch_size, *IMG), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def eval_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            jax.ShapeDtypeStruct((eval_batch, *IMG), jnp.float32),
+            jax.ShapeDtypeStruct((eval_batch,), jnp.int32),
+            jax.ShapeDtypeStruct((eval_batch,), jnp.float32),
+        )
+
+    return specs, train, eval_step, train_args, eval_args
+
+
+def flops_per_train_step(batch_size: int) -> int:
+    """Analytic FLOP estimate (fwd+bwd ~ 3x fwd) for GPU-hour simulation."""
+    conv1 = 32 * 32 * C1 * (3 * 3 * 3) * 2
+    conv2 = 16 * 16 * C2 * (3 * 3 * C1) * 2
+    fc1 = (8 * 8 * C2) * HID * 2
+    fc2 = HID * NUM_CLASSES * 2
+    return 3 * batch_size * (conv1 + conv2 + fc1 + fc2)

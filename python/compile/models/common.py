@@ -1,0 +1,139 @@
+"""Shared model plumbing: flat-parameter layout, init specs, local step.
+
+All benchmark models expose their parameters to the Rust coordinator as a
+single flat f32 vector (pfl-research's "one model per worker, updated
+in-place" design maps to one donated flat buffer per worker). The manifest
+records the (name, shape, offset, init) layout so Rust can initialize and
+inspect tensors without Python.
+
+The *unified local step* lowers FedAvg / FedProx / SCAFFOLD into one HLO
+artifact per model: the gradient is
+
+    g = dL/dp + mu * (p - p_global) + c_diff
+
+with mu=0, c_diff=0 recovering plain FedAvg local SGD. One artifact per
+model serves every algorithm, exactly mirroring how pfl-research keeps one
+resident model and varies only the algorithm objects around it.
+"""
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    # init kind: "zeros" | "ones" | "normal" (with std) | "uniform" (+-scale)
+    init: str = "normal"
+    std: float = 0.02
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+def fan_in_std(*fan_in_dims: int, gain: float = 2.0) -> float:
+    """He-style init std: sqrt(gain / fan_in)."""
+    fan = int(math.prod(fan_in_dims))
+    return math.sqrt(gain / max(fan, 1))
+
+
+def layout(specs: List[ParamSpec]):
+    """Return [(spec, offset)] and total size."""
+    out, off = [], 0
+    for s in specs:
+        out.append((s, off))
+        off += s.size
+    return out, off
+
+
+def unflatten(flat, specs: List[ParamSpec]):
+    """Split a flat vector into the named tensors of `specs`."""
+    params, off = {}, 0
+    for s in specs:
+        params[s.name] = jax.lax.dynamic_slice(flat, (off,), (s.size,)).reshape(
+            s.shape
+        )
+        off += s.size
+    return params
+
+
+def manifest_layout(specs: List[ParamSpec]):
+    """JSON-serializable layout for the Rust side."""
+    entries, off = [], 0
+    for s in specs:
+        entries.append(
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "offset": off,
+                "size": s.size,
+                "init": s.init,
+                "std": s.std,
+            }
+        )
+        off += s.size
+    return entries, off
+
+
+def make_train_step(
+    loss_fn: Callable, specs: List[ParamSpec]
+) -> Callable:
+    """Build the unified local-SGD step for a model.
+
+    loss_fn(params_dict, *batch) -> (mean_loss, (loss_sum, stat_sum, wsum))
+
+    Returns step(flat, global_flat, c_diff, *batch, lr, mu) ->
+        (new_flat, loss_sum, stat_sum, wsum)
+    """
+
+    def step(flat, global_flat, c_diff, *batch_and_hp):
+        *batch, lr, mu = batch_and_hp
+
+        def obj(f):
+            params = unflatten(f, specs)
+            return loss_fn(params, *batch)
+
+        grads, aux = jax.grad(obj, has_aux=True)(flat)
+        loss_sum, stat_sum, wsum = aux
+        g = grads + mu * (flat - global_flat) + c_diff
+        new_flat = flat - lr * g
+        return new_flat, loss_sum, stat_sum, wsum
+
+    return step
+
+
+def masked_mean(per_example_loss, w):
+    """Weighted mean + the sufficient statistics the metrics system wants."""
+    loss_sum = jnp.sum(per_example_loss * w)
+    wsum = jnp.sum(w)
+    return loss_sum / jnp.maximum(wsum, 1e-12), loss_sum, wsum
+
+
+def softmax_xent(logits, labels, w):
+    """Per-example softmax cross entropy with integer labels, masked."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_ex = logz - ll
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    mean, loss_sum, wsum = masked_mean(per_ex, w)
+    return mean, loss_sum, jnp.sum(correct * w), wsum
+
+
+def sigmoid_bce(logits, targets, w):
+    """Mean-over-labels BCE per example, masked over the batch."""
+    per_label = jnp.maximum(logits, 0) - logits * targets + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    per_ex = jnp.mean(per_label, axis=-1)
+    # "stat" for multi-label: exact-match count is uninformative; use
+    # micro-averaged true positives at threshold 0 as the cheap aggregate.
+    preds = (logits > 0).astype(jnp.float32)
+    tp = jnp.sum(preds * targets, axis=-1)
+    mean, loss_sum, wsum = masked_mean(per_ex, w)
+    return mean, loss_sum, jnp.sum(tp * w), wsum

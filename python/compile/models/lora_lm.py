@@ -1,0 +1,176 @@
+"""LLM benchmark stand-in: frozen-base transformer + LoRA rank-8 adapters
+(paper App. C.8: TinyLlama-1.1B with LoRA r=8, bf16; substitution per
+DESIGN.md §2 — a small causal transformer whose *frozen base weights are a
+runtime input* while only the adapters live in the trainable flat vector,
+exercising the identical adapter-only FL code path at CPU-simulable size).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fused_linear import fused_linear, matmul
+from .common import ParamSpec, fan_in_std, unflatten
+
+VOCAB = 2_000
+EMB = 64
+HEADS = 4
+FF = 256
+LAYERS = 2
+SEQ = 32
+RANK = 8
+ALPHA = 16.0
+PAD = 0
+
+
+def base_param_specs():
+    specs = [
+        ParamSpec("embed", (VOCAB, EMB), "normal", 0.02),
+        ParamSpec("pos", (SEQ, EMB), "normal", 0.01),
+    ]
+    for i in range(LAYERS):
+        p = f"l{i}_"
+        specs += [
+            ParamSpec(p + "qkv_w", (EMB, 3 * EMB), "normal", fan_in_std(EMB, gain=1.0)),
+            ParamSpec(p + "qkv_b", (3 * EMB,), "zeros"),
+            ParamSpec(p + "proj_w", (EMB, EMB), "normal", fan_in_std(EMB, gain=1.0)),
+            ParamSpec(p + "proj_b", (EMB,), "zeros"),
+            ParamSpec(p + "ln1_g", (EMB,), "ones"),
+            ParamSpec(p + "ln1_b", (EMB,), "zeros"),
+            ParamSpec(p + "ff1_w", (EMB, FF), "normal", fan_in_std(EMB)),
+            ParamSpec(p + "ff1_b", (FF,), "zeros"),
+            ParamSpec(p + "ff2_w", (FF, EMB), "normal", fan_in_std(FF)),
+            ParamSpec(p + "ff2_b", (EMB,), "zeros"),
+            ParamSpec(p + "ln2_g", (EMB,), "ones"),
+            ParamSpec(p + "ln2_b", (EMB,), "zeros"),
+        ]
+    specs += [ParamSpec("lnf_g", (EMB,), "ones"), ParamSpec("lnf_b", (EMB,), "zeros")]
+    return specs
+
+
+def adapter_param_specs():
+    """LoRA A/B on the qkv and ff1 projections. A ~ N(0, 1/r), B = 0 so the
+    adapter starts as the identity perturbation (standard LoRA init)."""
+    specs = []
+    for i in range(LAYERS):
+        p = f"l{i}_"
+        specs += [
+            ParamSpec(p + "qkv_A", (EMB, RANK), "normal", 1.0 / RANK),
+            ParamSpec(p + "qkv_B", (RANK, 3 * EMB), "zeros"),
+            ParamSpec(p + "ff1_A", (EMB, RANK), "normal", 1.0 / RANK),
+            ParamSpec(p + "ff1_B", (RANK, FF), "zeros"),
+        ]
+    return specs
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g + b
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, mask):
+    B, T, E = x.shape
+    hd = E // HEADS
+    qkv = (x.reshape(B * T, E) @ qkv_w + qkv_b).reshape(B, T, 3, HEADS, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(causal[None, None] & mask[:, None, None, :], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, E)
+    return (out.reshape(B * T, E) @ proj_w + proj_b).reshape(B, T, E)
+
+
+def forward(adapters, base, tokens):
+    B, T = tokens.shape
+    x = base["embed"][tokens] + base["pos"][None, :T]
+    mask = tokens != PAD
+    scale = ALPHA / RANK
+    for i in range(LAYERS):
+        p = f"l{i}_"
+        qkv_w = base[p + "qkv_w"] + scale * (adapters[p + "qkv_A"] @ adapters[p + "qkv_B"])
+        x = x + _attention(
+            _ln(x, base[p + "ln1_g"], base[p + "ln1_b"]),
+            qkv_w, base[p + "qkv_b"], base[p + "proj_w"], base[p + "proj_b"],
+            mask,
+        )
+        h = _ln(x, base[p + "ln2_g"], base[p + "ln2_b"])
+        ff1_w = base[p + "ff1_w"] + scale * (adapters[p + "ff1_A"] @ adapters[p + "ff1_B"])
+        h2 = fused_linear(h.reshape(B * T, EMB), ff1_w, base[p + "ff1_b"], "gelu")
+        h2 = fused_linear(h2, base[p + "ff2_w"], base[p + "ff2_b"], "id")
+        x = x + h2.reshape(B, T, EMB)
+    x = _ln(x, base["lnf_g"], base["lnf_b"])
+    logits = matmul(x[:, :-1].reshape(B * (T - 1), EMB), base["embed"].T)
+    return logits.reshape(B, T - 1, -1)
+
+
+def loss_fn(adapters, base, tokens, w):
+    logits = forward(adapters, base, tokens)
+    targets = tokens[:, 1:]
+    tok_mask = (targets != PAD).astype(jnp.float32) * w[:, None]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss_sum = jnp.sum((logz - ll) * tok_mask)
+    wsum = jnp.sum(tok_mask)
+    correct = jnp.sum(
+        (jnp.argmax(logits, -1) == targets).astype(jnp.float32) * tok_mask
+    )
+    return loss_sum / jnp.maximum(wsum, 1e-12), (loss_sum, correct, wsum)
+
+
+def make_steps(batch_size: int, eval_batch: int):
+    specs = adapter_param_specs()
+    bspecs = base_param_specs()
+
+    def train(flat, base_flat, global_flat, c_diff, tokens, w, lr, mu):
+        base = unflatten(base_flat, bspecs)
+
+        def obj(f):
+            return loss_fn(unflatten(f, specs), base, tokens, w)
+
+        grads, (loss_sum, correct, wsum) = jax.grad(obj, has_aux=True)(flat)
+        g = grads + mu * (flat - global_flat) + c_diff
+        return flat - lr * g, loss_sum, correct, wsum
+
+    def eval_step(flat, base_flat, tokens, w):
+        base = unflatten(base_flat, bspecs)
+        _, (loss_sum, correct, wsum) = loss_fn(unflatten(flat, specs), base, tokens, w)
+        return loss_sum, correct, wsum
+
+    def train_args(total):
+        base_total = sum(s.size for s in bspecs)
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            jax.ShapeDtypeStruct((base_total,), jnp.float32),
+            f,
+            f,
+            jax.ShapeDtypeStruct((batch_size, SEQ), jnp.int32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def eval_args(total):
+        base_total = sum(s.size for s in bspecs)
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            jax.ShapeDtypeStruct((base_total,), jnp.float32),
+            jax.ShapeDtypeStruct((eval_batch, SEQ), jnp.int32),
+            jax.ShapeDtypeStruct((eval_batch,), jnp.float32),
+        )
+
+    return specs, train, eval_step, train_args, eval_args
+
+
+def flops_per_train_step(batch_size: int) -> int:
+    per_tok = (
+        4 * EMB * EMB * 2
+        + 2 * SEQ * EMB * 2
+        + 2 * EMB * FF * 2
+        + 2 * (EMB * RANK + RANK * 3 * EMB)
+    ) * LAYERS + EMB * VOCAB * 2
+    return 3 * batch_size * SEQ * per_tok

@@ -1,0 +1,88 @@
+"""FLAIR benchmark stand-in: multi-label classifier over precomputed
+features (paper App. C.7 uses a pretrained ResNet18 + linear head on 17
+coarse labels; our substitution keeps the trained part — features -> MLP
+trunk -> 17 sigmoid heads — and replaces the frozen pretrained backbone
+with a synthetic feature generator; see DESIGN.md §2).
+
+The eval step additionally returns the raw scores so the Rust side can
+compute macro-averaged precision (C-AP / mAP) over the full eval set.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fused_linear import fused_linear
+from .common import (
+    ParamSpec,
+    fan_in_std,
+    make_train_step,
+    sigmoid_bce,
+    unflatten,
+)
+
+FEAT = 192
+HID = 256
+LABELS = 17
+
+
+def param_specs():
+    return [
+        ParamSpec("fc1_w", (FEAT, HID), "normal", fan_in_std(FEAT)),
+        ParamSpec("fc1_b", (HID,), "zeros"),
+        ParamSpec("fc2_w", (HID, HID), "normal", fan_in_std(HID)),
+        ParamSpec("fc2_b", (HID,), "zeros"),
+        ParamSpec("head_w", (HID, LABELS), "normal", fan_in_std(HID)),
+        ParamSpec("head_b", (LABELS,), "zeros"),
+    ]
+
+
+def forward(params, x):
+    h = fused_linear(x, params["fc1_w"], params["fc1_b"], "relu")
+    h = fused_linear(h, params["fc2_w"], params["fc2_b"], "relu")
+    return fused_linear(h, params["head_w"], params["head_b"], "id")
+
+
+def loss_fn(params, x, y, w):
+    logits = forward(params, x)
+    mean, loss_sum, tp, wsum = sigmoid_bce(logits, y, w)
+    return mean, (loss_sum, tp, wsum)
+
+
+def make_steps(batch_size: int, eval_batch: int):
+    specs = param_specs()
+    train = make_train_step(loss_fn, specs)
+
+    def eval_step(flat, x, y, w):
+        params = unflatten(flat, specs)
+        logits = forward(params, x)
+        _, (loss_sum, tp, wsum) = loss_fn(params, x, y, w)
+        return loss_sum, tp, wsum, logits
+
+    def train_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            f,
+            f,
+            jax.ShapeDtypeStruct((batch_size, FEAT), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size, LABELS), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def eval_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            jax.ShapeDtypeStruct((eval_batch, FEAT), jnp.float32),
+            jax.ShapeDtypeStruct((eval_batch, LABELS), jnp.float32),
+            jax.ShapeDtypeStruct((eval_batch,), jnp.float32),
+        )
+
+    return specs, train, eval_step, train_args, eval_args
+
+
+def flops_per_train_step(batch_size: int) -> int:
+    fwd = FEAT * HID * 2 + HID * HID * 2 + HID * LABELS * 2
+    return 3 * batch_size * fwd

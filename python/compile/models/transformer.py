@@ -1,0 +1,154 @@
+"""StackOverflow benchmark transformer LM (paper App. C.6, Table 9).
+
+Next-word prediction: 96-d embeddings, 3 encoder layers, 8 heads, 1536-d
+feedforward, sequence length 20, tied input/output embedding — 1.96M
+parameters, matching the paper's "transformer model with 1,962,912
+parameters" up to the vocab substitution (synthetic Zipf 10k vocab).
+
+The feedforward blocks and the tied logit projection run on the L1 Pallas
+`fused_linear`/`matmul` kernels; attention einsums stay in XLA (they are
+small at T=20 and fuse well).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fused_linear import fused_linear, matmul
+from .common import ParamSpec, fan_in_std, make_train_step, unflatten
+
+VOCAB = 10_000
+EMB = 96
+HEADS = 8
+FF = 1536
+LAYERS = 3
+SEQ = 20  # tokens per example fed to the model (predict 1..SEQ-1)
+PAD = 0
+
+
+def param_specs(vocab=VOCAB, layers=LAYERS):
+    specs = [
+        ParamSpec("embed", (vocab, EMB), "normal", 0.02),
+        ParamSpec("pos", (SEQ, EMB), "normal", 0.01),
+    ]
+    for i in range(layers):
+        p = f"l{i}_"
+        specs += [
+            ParamSpec(p + "qkv_w", (EMB, 3 * EMB), "normal", fan_in_std(EMB, gain=1.0)),
+            ParamSpec(p + "qkv_b", (3 * EMB,), "zeros"),
+            ParamSpec(p + "proj_w", (EMB, EMB), "normal", fan_in_std(EMB, gain=1.0)),
+            ParamSpec(p + "proj_b", (EMB,), "zeros"),
+            ParamSpec(p + "ln1_g", (EMB,), "ones"),
+            ParamSpec(p + "ln1_b", (EMB,), "zeros"),
+            ParamSpec(p + "ff1_w", (EMB, FF), "normal", fan_in_std(EMB)),
+            ParamSpec(p + "ff1_b", (FF,), "zeros"),
+            ParamSpec(p + "ff2_w", (FF, EMB), "normal", fan_in_std(FF)),
+            ParamSpec(p + "ff2_b", (EMB,), "zeros"),
+            ParamSpec(p + "ln2_g", (EMB,), "ones"),
+            ParamSpec(p + "ln2_b", (EMB,), "zeros"),
+        ]
+    specs += [
+        ParamSpec("lnf_g", (EMB,), "ones"),
+        ParamSpec("lnf_b", (EMB,), "zeros"),
+    ]
+    return specs
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g + b
+
+
+def _attention(x, p, prefix, mask):
+    B, T, E = x.shape
+    hd = E // HEADS
+    qkv = (x.reshape(B * T, E) @ p[prefix + "qkv_w"] + p[prefix + "qkv_b"]).reshape(
+        B, T, 3, HEADS, hd
+    )
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(causal[None, None] & mask[:, None, None, :], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, E)
+    return (out.reshape(B * T, E) @ p[prefix + "proj_w"] + p[prefix + "proj_b"]).reshape(
+        B, T, E
+    )
+
+
+def forward(params, tokens):
+    """tokens [B, SEQ] i32 -> logits [B, SEQ-1, VOCAB] predicting tokens[1:]."""
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :T]
+    mask = tokens != PAD
+    for i in range(LAYERS):
+        p = f"l{i}_"
+        x = x + _attention(_ln(x, params[p + "ln1_g"], params[p + "ln1_b"]), params, p, mask)
+        h = _ln(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        h2 = fused_linear(h.reshape(B * T, EMB), params[p + "ff1_w"], params[p + "ff1_b"], "relu")
+        h2 = fused_linear(h2, params[p + "ff2_w"], params[p + "ff2_b"], "id")
+        x = x + h2.reshape(B, T, EMB)
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    # tied output embedding, on the pallas matmul
+    logits = matmul(x[:, :-1].reshape(B * (T - 1), EMB), params["embed"].T)
+    return logits.reshape(B, T - 1, -1)
+
+
+def loss_fn(params, tokens, w):
+    """Causal LM loss. `w` [B] is the per-example mask; token-level mask is
+    target != PAD. Returns sums over *tokens* so perplexity = exp(loss_sum/wsum)."""
+    logits = forward(params, tokens)
+    targets = tokens[:, 1:]
+    tok_mask = (targets != PAD).astype(jnp.float32) * w[:, None]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    per_tok = (logz - ll) * tok_mask
+    loss_sum = jnp.sum(per_tok)
+    wsum = jnp.sum(tok_mask)
+    correct = jnp.sum(
+        (jnp.argmax(logits, -1) == targets).astype(jnp.float32) * tok_mask
+    )
+    return loss_sum / jnp.maximum(wsum, 1e-12), (loss_sum, correct, wsum)
+
+
+def make_steps(batch_size: int, eval_batch: int):
+    specs = param_specs()
+    train = make_train_step(loss_fn, specs)
+
+    def eval_step(flat, tokens, w):
+        params = unflatten(flat, specs)
+        _, (loss_sum, correct, wsum) = loss_fn(params, tokens, w)
+        return loss_sum, correct, wsum
+
+    def train_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            f,
+            f,
+            jax.ShapeDtypeStruct((batch_size, SEQ), jnp.int32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def eval_args(total):
+        f = jax.ShapeDtypeStruct((total,), jnp.float32)
+        return (
+            f,
+            jax.ShapeDtypeStruct((eval_batch, SEQ), jnp.int32),
+            jax.ShapeDtypeStruct((eval_batch,), jnp.float32),
+        )
+
+    return specs, train, eval_step, train_args, eval_args
+
+
+def flops_per_train_step(batch_size: int) -> int:
+    per_tok = (
+        4 * EMB * EMB * 2  # qkv + proj
+        + 2 * SEQ * EMB * 2  # attention scores + mix
+        + 2 * EMB * FF * 2  # ff
+    ) * LAYERS + EMB * VOCAB * 2  # logits
+    return 3 * batch_size * SEQ * per_tok

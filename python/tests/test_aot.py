@@ -1,0 +1,86 @@
+"""AOT pipeline: manifest consistency and HLO-text emission.
+
+These tests validate the python->rust interchange contract without
+requiring rust: the manifest's shapes must match what the step functions
+actually take/return, and the emitted HLO must be text (parseable header,
+ENTRY, no serialized-proto bytes).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import MODELS
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke(tmp_path):
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_build_single_model(tmp_path):
+    manifest = aot.build_all(str(tmp_path), only=["mlp_flair"], verbose=False)
+    assert set(manifest["models"]) == {"mlp_flair"}
+    arts = manifest["models"]["mlp_flair"]["artifacts"]
+    for key in ("train", "eval", "clip"):
+        art = manifest["artifacts"][arts[key]]
+        p = tmp_path / art["file"]
+        assert p.exists()
+        head = p.read_text()[:200]
+        assert head.startswith("HloModule")
+
+    m = manifest["models"]["mlp_flair"]
+    assert m["param_count"] == sum(
+        e["size"] for e in m["layout"]
+    )
+    # train inputs: params, global, c_diff, x, y, w, lr, mu
+    tr = manifest["artifacts"][arts["train"]]
+    assert len(tr["inputs"]) == 8
+    assert tr["inputs"][0]["shape"] == [m["param_count"]]
+    assert tr["outputs"][0]["shape"] == [m["param_count"]]
+    # clip: (v, bound) -> (clipped, norm)
+    cl = manifest["artifacts"][arts["clip"]]
+    assert cl["inputs"][0]["shape"] == [m["param_count"]]
+    assert cl["outputs"][1]["shape"] == []
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_models_present(self, manifest):
+        assert set(manifest["models"]) == set(MODELS)
+
+    def test_artifact_files_exist_and_are_text(self, manifest):
+        for art in manifest["artifacts"].values():
+            p = os.path.join(ART_DIR, art["file"])
+            assert os.path.exists(p), p
+            with open(p) as f:
+                assert f.read(9) == "HloModule"
+
+    def test_layouts_cover_param_count(self, manifest):
+        for m in manifest["models"].values():
+            end = max(e["offset"] + e["size"] for e in m["layout"])
+            assert end == m["param_count"]
+
+    def test_flops_positive(self, manifest):
+        for m in manifest["models"].values():
+            assert m["flops_per_train_step"] > 0

@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against the oracle is the
+core correctness signal the AOT path relies on (the same kernels lower
+into every model artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.clip_scale import clip_scale
+from compile.kernels.fused_linear import fused_linear, matmul
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def vec_and_bound(draw):
+    n = draw(st.integers(min_value=1, max_value=5000))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    scale = draw(st.sampled_from([1e-3, 1.0, 10.0, 1e3]))
+    bound = draw(st.sampled_from([0.1, 0.4, 1.0, 100.0]))
+    rng = np.random.default_rng(seed)
+    v = (rng.normal(size=(n,)) * scale).astype(np.float32)
+    return v, np.float32(bound)
+
+
+class TestClipScale:
+    @settings(**SETTINGS)
+    @given(vec_and_bound())
+    def test_matches_ref(self, vb):
+        v, bound = vb
+        got, gn = clip_scale(jnp.asarray(v), bound, block=1024)
+        want, wn = ref.clip_scale_ref(jnp.asarray(v), bound)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(gn), float(wn), rtol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(vb=vec_and_bound())
+    def test_norm_bound_invariant(self, vb):
+        """Property: the clipped vector's norm never exceeds bound (+eps)."""
+        v, bound = vb
+        got, _ = clip_scale(jnp.asarray(v), bound, block=512)
+        out_norm = float(jnp.linalg.norm(got))
+        assert out_norm <= float(bound) * (1 + 1e-4)
+
+    def test_below_bound_unchanged(self):
+        v = jnp.asarray([0.1, -0.2, 0.05], jnp.float32)
+        got, n = clip_scale(v, 1.0, block=4)
+        np.testing.assert_allclose(np.array(got), np.array(v), rtol=1e-6)
+        assert float(n) < 1.0
+
+    def test_zero_vector(self):
+        v = jnp.zeros((17,), jnp.float32)
+        got, n = clip_scale(v, 0.5, block=8)
+        assert float(n) == 0.0
+        np.testing.assert_array_equal(np.array(got), np.zeros(17, np.float32))
+
+    def test_exact_block_multiple(self):
+        v = jnp.ones((2048,), jnp.float32)
+        got, n = clip_scale(v, 1.0, block=1024)
+        np.testing.assert_allclose(float(n), np.sqrt(2048.0), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(got)), 1.0, rtol=1e-5
+        )
+
+    def test_large_default_block(self):
+        rng = np.random.default_rng(7)
+        v = jnp.asarray(rng.normal(size=(300_000,)).astype(np.float32))
+        got, n = clip_scale(v, 1.0)
+        want, wn = ref.clip_scale_ref(v, 1.0)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+@st.composite
+def mm_shapes(draw):
+    m = draw(st.integers(min_value=1, max_value=200))
+    k = draw(st.integers(min_value=1, max_value=200))
+    n = draw(st.integers(min_value=1, max_value=200))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return m, k, n, seed
+
+
+def _rand_mm(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)
+
+
+class TestFusedLinear:
+    @settings(**SETTINGS)
+    @given(mm_shapes(), st.sampled_from(["id", "relu", "gelu"]))
+    def test_matches_ref(self, shapes, act):
+        x, w, b = _rand_mm(*shapes)
+        got = fused_linear(x, w, b, act)
+        want = ref.fused_linear_ref(x, w, b, act)
+        np.testing.assert_allclose(
+            np.array(got), np.array(want), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(**SETTINGS)
+    @given(mm_shapes())
+    def test_matmul_matches_ref(self, shapes):
+        x, w, _ = _rand_mm(*shapes)
+        got = matmul(x, w)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(
+            np.array(got), np.array(want), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("act", ["id", "relu", "gelu"])
+    def test_gradients_match_ref(self, act):
+        x, w, b = _rand_mm(13, 37, 11, 3)
+
+        def f_kernel(x, w, b):
+            return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+        def f_ref(x, w, b):
+            return jnp.sum(jnp.sin(ref.fused_linear_ref(x, w, b, act)))
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, c in zip(gk, gr):
+            np.testing.assert_allclose(
+                np.array(a), np.array(c), rtol=1e-3, atol=1e-4
+            )
+
+    def test_matmul_gradients(self):
+        x, w, _ = _rand_mm(9, 21, 5, 11)
+
+        def f(x, w):
+            return jnp.sum(matmul(x, w) ** 2)
+
+        def f_ref(x, w):
+            return jnp.sum(ref.matmul_ref(x, w) ** 2)
+
+        gk = jax.grad(f, argnums=(0, 1))(x, w)
+        gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        for a, c in zip(gk, gr):
+            np.testing.assert_allclose(np.array(a), np.array(c), rtol=1e-3, atol=1e-3)
+
+    def test_tile_exact_multiples(self):
+        # shapes exactly on the (128,128,128) tile grid
+        x, w, b = _rand_mm(128, 256, 128, 5)
+        got = fused_linear(x, w, b, "relu")
+        want = ref.fused_linear_ref(x, w, b, "relu")
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+    def test_jit_compatible(self):
+        x, w, b = _rand_mm(4, 8, 3, 9)
+        got = jax.jit(lambda x, w, b: fused_linear(x, w, b, "relu"))(x, w, b)
+        want = ref.fused_linear_ref(x, w, b, "relu")
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,234 @@
+"""L2 correctness: model step semantics every algorithm relies on.
+
+Checks, per model: parameter-count bookkeeping, gradient finiteness, loss
+decrease under local SGD, the unified-step algebra (mu / c_diff terms),
+and metric sufficient statistics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import MODELS
+from compile.models import cnn, lora_lm, mlp_multilabel, transformer
+from compile.models.common import manifest_layout, unflatten
+
+
+def _init_flat(specs, seed=0):
+    rng = np.random.default_rng(seed)
+    parts = []
+    for s in specs:
+        if s.init == "zeros":
+            parts.append(np.zeros(s.size, np.float32))
+        elif s.init == "ones":
+            parts.append(np.ones(s.size, np.float32))
+        else:
+            parts.append(rng.normal(0, s.std, s.size).astype(np.float32))
+    return jnp.asarray(np.concatenate(parts))
+
+
+def _batch_for(name, mdef, specs, seed=1):
+    rng = np.random.default_rng(seed)
+    B = mdef.train_batch
+    if name == "cnn_c10":
+        x = jnp.asarray(rng.normal(size=(B, 32, 32, 3)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 10, B).astype(np.int32))
+        w = jnp.ones((B,), jnp.float32)
+        return (x, y, w)
+    if name == "lm_so":
+        toks = rng.integers(1, transformer.VOCAB, (B, transformer.SEQ)).astype(np.int32)
+        return (jnp.asarray(toks), jnp.ones((B,), jnp.float32))
+    if name == "mlp_flair":
+        x = jnp.asarray(rng.normal(size=(B, mlp_multilabel.FEAT)).astype(np.float32))
+        y = jnp.asarray((rng.random((B, mlp_multilabel.LABELS)) < 0.2).astype(np.float32))
+        return (x, y, jnp.ones((B,), jnp.float32))
+    if name == "lora_llm":
+        toks = rng.integers(1, lora_lm.VOCAB, (B, lora_lm.SEQ)).astype(np.int32)
+        return (jnp.asarray(toks), jnp.ones((B,), jnp.float32))
+    raise KeyError(name)
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name, mdef in MODELS.items():
+        specs, train, ev, targs, eargs = mdef.make_steps(
+            mdef.train_batch, mdef.eval_batch
+        )
+        out[name] = (mdef, specs, train, ev)
+    return out
+
+
+PARAM_COUNTS = {
+    "cnn_c10": None,  # checked for >0 only
+    "lm_so": 1_964_640,  # ~1.96M, paper says 1,962,912 for its vocab
+    "mlp_flair": None,
+    "lora_llm": None,
+}
+
+
+class TestLayout:
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_layout_contiguous(self, name, built):
+        _, specs, _, _ = built[name]
+        entries, total = manifest_layout(specs)
+        off = 0
+        for e in entries:
+            assert e["offset"] == off
+            assert e["size"] == int(np.prod(e["shape"])) if e["shape"] else 1
+            off += e["size"]
+        assert off == total > 0
+
+    def test_lm_param_count_near_paper(self, built):
+        _, specs, _, _ = built["lm_so"]
+        total = sum(s.size for s in specs)
+        # paper: 1,962,912 parameters; ours differs only by vocab rounding
+        assert abs(total - 1_962_912) / 1_962_912 < 0.01
+
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_unflatten_roundtrip(self, name, built):
+        _, specs, _, _ = built[name]
+        flat = _init_flat(specs)
+        tree = unflatten(flat, specs)
+        rec = jnp.concatenate([tree[s.name].reshape(-1) for s in specs])
+        np.testing.assert_array_equal(np.array(rec), np.array(flat))
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_loss_decreases(self, name, built):
+        mdef, specs, train, _ = built[name]
+        flat = _init_flat(specs)
+        batch = _batch_for(name, mdef, specs)
+        zeros = jnp.zeros_like(flat)
+        extra = ()
+        if mdef.has_base:
+            base = _init_flat(lora_lm.base_param_specs(), seed=42)
+            extra = (base,)
+        lr, mu = jnp.float32(0.1), jnp.float32(0.0)
+
+        def run(f):
+            if mdef.has_base:
+                return train(f, extra[0], zeros, zeros, *batch, lr, mu)
+            return train(f, zeros, zeros, *batch, lr, mu)
+
+        losses = []
+        for _ in range(6):
+            flat, loss_sum, _, wsum = run(flat)
+            losses.append(float(loss_sum) / float(wsum))
+        assert all(np.isfinite(losses)), losses
+        assert losses[-1] < losses[0], losses
+
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_zero_lr_is_identity(self, name, built):
+        mdef, specs, train, _ = built[name]
+        flat = _init_flat(specs)
+        batch = _batch_for(name, mdef, specs)
+        zeros = jnp.zeros_like(flat)
+        args = (flat, zeros, zeros, *batch, jnp.float32(0.0), jnp.float32(0.0))
+        if mdef.has_base:
+            base = _init_flat(lora_lm.base_param_specs(), seed=42)
+            args = (flat, base, zeros, zeros, *batch, jnp.float32(0.0), jnp.float32(0.0))
+        new, *_ = train(*args)
+        np.testing.assert_array_equal(np.array(new), np.array(flat))
+
+    def test_prox_term_pulls_toward_global(self, built):
+        """With huge mu the step should move params toward global."""
+        mdef, specs, train, _ = built["mlp_flair"]
+        flat = _init_flat(specs, seed=0)
+        glob = _init_flat(specs, seed=99)
+        batch = _batch_for("mlp_flair", mdef, specs)
+        zeros = jnp.zeros_like(flat)
+        lr = jnp.float32(0.01)
+        new_noprox, *_ = train(flat, glob, zeros, *batch, lr, jnp.float32(0.0))
+        new_prox, *_ = train(flat, glob, zeros, *batch, lr, jnp.float32(100.0))
+        d_noprox = float(jnp.linalg.norm(new_noprox - glob))
+        d_prox = float(jnp.linalg.norm(new_prox - glob))
+        assert d_prox < d_noprox
+
+    def test_cdiff_shifts_update_exactly(self, built):
+        """SCAFFOLD algebra: step(c_diff) == step(0) - lr*c_diff."""
+        mdef, specs, train, _ = built["mlp_flair"]
+        flat = _init_flat(specs)
+        batch = _batch_for("mlp_flair", mdef, specs)
+        zeros = jnp.zeros_like(flat)
+        rng = np.random.default_rng(5)
+        cd = jnp.asarray(rng.normal(size=flat.shape).astype(np.float32))
+        lr = jnp.float32(0.05)
+        a, *_ = train(flat, zeros, zeros, *batch, lr, jnp.float32(0.0))
+        b, *_ = train(flat, zeros, cd, *batch, lr, jnp.float32(0.0))
+        np.testing.assert_allclose(
+            np.array(b), np.array(a - lr * cd), rtol=1e-4, atol=1e-5
+        )
+
+    def test_mask_excludes_examples(self, built):
+        """A fully-masked batch must produce a zero gradient step."""
+        mdef, specs, train, _ = built["cnn_c10"]
+        flat = _init_flat(specs)
+        x, y, _ = _batch_for("cnn_c10", mdef, specs)
+        w0 = jnp.zeros((mdef.train_batch,), jnp.float32)
+        zeros = jnp.zeros_like(flat)
+        new, loss_sum, correct, wsum = train(
+            flat, zeros, zeros, x, y, w0, jnp.float32(0.1), jnp.float32(0.0)
+        )
+        assert float(wsum) == 0.0
+        assert float(loss_sum) == 0.0
+        np.testing.assert_allclose(np.array(new), np.array(flat), atol=1e-6)
+
+
+class TestEvalStep:
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_eval_stats_shapes(self, name, built):
+        mdef, specs, _, ev = built[name]
+        flat = _init_flat(specs)
+        rng = np.random.default_rng(3)
+        B = mdef.eval_batch
+        if name == "cnn_c10":
+            args = (
+                flat,
+                jnp.asarray(rng.normal(size=(B, 32, 32, 3)).astype(np.float32)),
+                jnp.asarray(rng.integers(0, 10, B).astype(np.int32)),
+                jnp.ones((B,), jnp.float32),
+            )
+        elif name == "lm_so":
+            args = (
+                flat,
+                jnp.asarray(rng.integers(1, transformer.VOCAB, (B, transformer.SEQ)).astype(np.int32)),
+                jnp.ones((B,), jnp.float32),
+            )
+        elif name == "mlp_flair":
+            args = (
+                flat,
+                jnp.asarray(rng.normal(size=(B, mlp_multilabel.FEAT)).astype(np.float32)),
+                jnp.asarray((rng.random((B, mlp_multilabel.LABELS)) < 0.2).astype(np.float32)),
+                jnp.ones((B,), jnp.float32),
+            )
+        else:
+            base = _init_flat(lora_lm.base_param_specs(), seed=42)
+            args = (
+                flat,
+                base,
+                jnp.asarray(rng.integers(1, lora_lm.VOCAB, (B, lora_lm.SEQ)).astype(np.int32)),
+                jnp.ones((B,), jnp.float32),
+            )
+        out = ev(*args)
+        loss_sum, stat, wsum = out[0], out[1], out[2]
+        assert np.isfinite(float(loss_sum))
+        assert float(wsum) > 0
+        if name == "mlp_flair":
+            scores = out[3]
+            assert scores.shape == (B, mlp_multilabel.LABELS)
+
+    def test_untrained_lm_perplexity_near_vocab(self, built):
+        """Random-init LM perplexity should be ~vocab size (uniform)."""
+        mdef, specs, _, ev = built["lm_so"]
+        flat = _init_flat(specs)
+        rng = np.random.default_rng(4)
+        B = mdef.eval_batch
+        toks = jnp.asarray(
+            rng.integers(1, transformer.VOCAB, (B, transformer.SEQ)).astype(np.int32)
+        )
+        loss_sum, _, wsum = ev(flat, toks, jnp.ones((B,), jnp.float32))
+        ppl = float(jnp.exp(loss_sum / wsum))
+        assert 0.2 * transformer.VOCAB < ppl < 5 * transformer.VOCAB

@@ -1,0 +1,232 @@
+//! Baseline FL-simulator architecture emulations (paper §4.1, App. D).
+//!
+//! We cannot ship TFF, Flower, FedML, FedScale and FLUTE; instead each
+//! baseline is an [`OverheadProfile`] that re-introduces, on top of the
+//! *same* local compute (the same PJRT executables), exactly the design
+//! costs the paper attributes the speed gap to (§3 items 1–6 and App.
+//! D.4.2):
+//!
+//! * **per-user model re-allocation** instead of one resident model
+//!   updated in place (Flower / FedML / FedScale);
+//! * **host round-trips** of every update through a NumPy-style staging
+//!   buffer (Flower's outer loop);
+//! * **explicit topology**: every per-user update serialized through a
+//!   dedicated coordinator process (TFF-style execution stacks);
+//! * **full-participation bookkeeping**: per-round work proportional to
+//!   the population, not the cohort (FedScale's sampler);
+//! * **per-round checkpointing** hard-coded in the framework (FedScale);
+//! * **interpreter/dispatch tax** per local step (FLUTE's client loop;
+//!   calibrated, see `benchmarks` in the CLI).
+//!
+//! The profiles change *where time goes*, never the statistics: every
+//! variant converges to the same model up to scheduling-order floating
+//! point noise (asserted in `framework_integration.rs`), which mirrors the
+//! accuracy-consistency column of paper Table 1.
+
+use anyhow::{bail, Result};
+
+/// Overhead knobs a worker round pays per user / per step / per round.
+#[derive(Debug, Clone, Default)]
+pub struct OverheadProfile {
+    /// Re-materialize model-sized tensors for every client.
+    pub realloc_per_user: bool,
+    /// Bounce every update device→host→device.
+    pub cpu_roundtrip: bool,
+    /// Route every per-user update through a dedicated coordinator thread
+    /// (serialized + deserialized), simulating FL topology.
+    pub coordinator: bool,
+    /// Fixed per-user framework overhead (client construction, context
+    /// switches), busy-wait emulated.
+    pub per_user_overhead_ns: u64,
+    /// Per-local-step dispatch tax (interpreter-driven client loops).
+    pub per_step_overhead_ns: u64,
+    /// Per-round bookkeeping proportional to the *population* (FedScale
+    /// samples all users each round): O(population) work units per round.
+    pub full_participation_bookkeeping: bool,
+    /// Serialize the model to disk every round (hard-coded checkpointing).
+    pub checkpoint_every_round: bool,
+}
+
+/// The engines compared in paper Tables 1–2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineVariant {
+    /// This framework's design: resident model, in-place updates, replica
+    /// workers, on-device DP, greedy load balancing.
+    PflStyle,
+    /// Flower-like: per-client model instantiation + NumPy outer loop.
+    FlowerLike,
+    /// FedML-like: per-client realloc + slow one-off partitioning
+    /// (represented by per-user overhead; App. D.4.2 notes its 20-minute
+    /// init).
+    FedMlLike,
+    /// TFF-like: explicit topology through a coordinator + host copies.
+    TffLike,
+    /// FedScale-like: realloc + full-participation bookkeeping +
+    /// per-round checkpointing.
+    FedScaleLike,
+    /// FLUTE-like: coordinator topology + heavy per-step dispatch tax
+    /// (single process per GPU only — see Table 1, p=1 row).
+    FluteLike,
+}
+
+impl EngineVariant {
+    pub fn all() -> [EngineVariant; 6] {
+        [
+            EngineVariant::PflStyle,
+            EngineVariant::FlowerLike,
+            EngineVariant::FedMlLike,
+            EngineVariant::TffLike,
+            EngineVariant::FedScaleLike,
+            EngineVariant::FluteLike,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineVariant::PflStyle => "pfl-style",
+            EngineVariant::FlowerLike => "flower-like",
+            EngineVariant::FedMlLike => "fedml-like",
+            EngineVariant::TffLike => "tff-like",
+            EngineVariant::FedScaleLike => "fedscale-like",
+            EngineVariant::FluteLike => "flute-like",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        for v in Self::all() {
+            if v.name() == name {
+                return Ok(v);
+            }
+        }
+        bail!("unknown engine {name:?} (one of: pfl-style, flower-like, fedml-like, tff-like, fedscale-like, flute-like)")
+    }
+
+    /// Per-user framework overhead on the paper's A100 testbed,
+    /// **derived from paper Table 1** (p = 1 rows): total wall-clock
+    /// minus pfl-research's, divided by the 1500 × 50 user-trainings of
+    /// the CIFAR10 benchmark. E.g. Flower: (86.88 − 10.13) min / 75 000 ≈
+    /// 61 ms per user. These calibrate the emulations; the structural
+    /// flags (realloc/roundtrip/coordinator) are what *generates* such
+    /// overheads mechanically, and the counters in Figs. 7–8 show them.
+    pub fn paper_user_overhead_ns(&self) -> u64 {
+        match self {
+            EngineVariant::PflStyle => 0,
+            EngineVariant::FlowerLike => 61_400_000,   // 86.88 min
+            EngineVariant::FedMlLike => 64_700_000,    // 90.95 min
+            EngineVariant::TffLike => 82_700_000,      // 113.52 min
+            EngineVariant::FedScaleLike => 332_100_000, // 425.2 min
+            EngineVariant::FluteLike => 46_200_000,    // 67.86 min
+        }
+    }
+
+    /// pfl-research's own per-user wall-clock on the paper testbed:
+    /// 10.13 min / 75 000 users ≈ 8.1 ms (Table 1, p = 1), split into a
+    /// device part and an overlappable host part. The split follows the
+    /// paper's own p-scaling: p = 5 takes 4.20/10.13 ≈ 0.41 of p = 1, so
+    /// ~41% of per-user time is serialized device work and ~59% host
+    /// work that overlaps when processes share the GPU (§4.2).
+    pub const A100_PFL_USER_NS: u64 = 8_100_000;
+    pub const A100_PFL_DEVICE_NS: u64 = 3_350_000;
+    pub const A100_PFL_HOST_NS: u64 = 4_750_000;
+
+    /// The overhead profile of this engine. The per-user taxes are the
+    /// paper-calibrated values above; the structural flags re-create the
+    /// *mechanisms* (re-allocation, host round-trips, coordinator
+    /// topology, full-participation bookkeeping) so the system counters
+    /// of App. D.4.2 (Figs. 7–8) move the way the paper reports.
+    pub fn profile(&self) -> OverheadProfile {
+        let tax = self.paper_user_overhead_ns();
+        match self {
+            EngineVariant::PflStyle => OverheadProfile::default(),
+            EngineVariant::FlowerLike => OverheadProfile {
+                realloc_per_user: true,
+                cpu_roundtrip: true,
+                per_user_overhead_ns: tax,
+                ..Default::default()
+            },
+            EngineVariant::FedMlLike => OverheadProfile {
+                realloc_per_user: true,
+                cpu_roundtrip: true,
+                per_user_overhead_ns: tax,
+                ..Default::default()
+            },
+            EngineVariant::TffLike => OverheadProfile {
+                coordinator: true,
+                cpu_roundtrip: true,
+                per_user_overhead_ns: tax,
+                ..Default::default()
+            },
+            EngineVariant::FedScaleLike => OverheadProfile {
+                realloc_per_user: true,
+                cpu_roundtrip: true,
+                full_participation_bookkeeping: true,
+                checkpoint_every_round: true,
+                per_user_overhead_ns: tax,
+                ..Default::default()
+            },
+            EngineVariant::FluteLike => OverheadProfile {
+                coordinator: true,
+                per_user_overhead_ns: tax,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Whether the engine supports multiple worker processes per device
+    /// (FLUTE could not run p > 1 in the paper's Table 1).
+    pub fn supports_multiprocess(&self) -> bool {
+        !matches!(self, EngineVariant::FluteLike)
+    }
+
+    /// The scheduler the engine uses: only pfl-style load balances.
+    pub fn scheduler(&self) -> crate::fl::scheduler::SchedulerKind {
+        match self {
+            EngineVariant::PflStyle => crate::fl::scheduler::SchedulerKind::Greedy,
+            _ => crate::fl::scheduler::SchedulerKind::Uniform,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for v in EngineVariant::all() {
+            assert_eq!(EngineVariant::from_name(v.name()).unwrap(), v);
+        }
+        assert!(EngineVariant::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn pfl_style_pays_no_overhead() {
+        let p = EngineVariant::PflStyle.profile();
+        assert!(!p.realloc_per_user && !p.cpu_roundtrip && !p.coordinator);
+        assert_eq!(p.per_user_overhead_ns, 0);
+        assert_eq!(p.per_step_overhead_ns, 0);
+    }
+
+    #[test]
+    fn baselines_pay_overheads() {
+        for v in EngineVariant::all() {
+            if v == EngineVariant::PflStyle {
+                continue;
+            }
+            let p = v.profile();
+            assert!(
+                p.realloc_per_user
+                    || p.coordinator
+                    || p.per_user_overhead_ns > 0
+                    || p.full_participation_bookkeeping,
+                "{v:?} has no overhead"
+            );
+        }
+    }
+
+    #[test]
+    fn flute_is_single_process() {
+        assert!(!EngineVariant::FluteLike.supports_multiprocess());
+        assert!(EngineVariant::PflStyle.supports_multiprocess());
+    }
+}

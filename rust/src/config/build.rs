@@ -1,0 +1,254 @@
+//! The launcher glue: turn a [`Config`] into live objects — dataset,
+//! algorithm, DP postprocessors (with accountant-calibrated noise),
+//! model factory and a ready [`SimulatedBackend`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Config, DatasetConfig};
+use crate::baselines::OverheadProfile;
+use crate::data::{
+    FederatedDataset, InstructFlavor, SynthCifar, SynthFlair, SynthInstruct, SynthText,
+};
+use crate::fl::algorithm::RunSpec;
+use crate::fl::backend::{BackendBuilder, RunParams, SimulatedBackend};
+use crate::fl::callbacks::CentralEvalCallback;
+use crate::fl::central_opt::{Adam, CentralOptimizer, Sgd};
+use crate::fl::context::LocalParams;
+use crate::fl::model::HloModel;
+use crate::fl::postprocess::Postprocessor;
+use crate::fl::worker::ModelFactory;
+use crate::fl::{AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, Scaffold};
+use crate::privacy::{accountant_by_name, mechanisms::mechanism_by_name, AccountantParams};
+use crate::runtime::{Manifest, Runtime};
+
+pub fn build_dataset(cfg: &DatasetConfig) -> Result<Arc<dyn FederatedDataset>> {
+    Ok(match cfg.kind.as_str() {
+        "cifar" => Arc::new(SynthCifar::new(
+            cfg.num_users,
+            cfg.per_user.max(1),
+            cfg.dirichlet_alpha,
+            cfg.seed,
+        )),
+        "flair" => Arc::new(SynthFlair::new(cfg.num_users, cfg.dirichlet_alpha, cfg.seed)),
+        "text" => Arc::new(SynthText::new(cfg.num_users, cfg.seed)),
+        "instruct-sa" => Arc::new(SynthInstruct::new(
+            InstructFlavor::Alpaca,
+            cfg.num_users * 16,
+            cfg.seed,
+        )),
+        "instruct-aya" => Arc::new(SynthInstruct::new(
+            InstructFlavor::Aya,
+            cfg.num_users * 12,
+            cfg.seed,
+        )),
+        "instruct-oa" => Arc::new(SynthInstruct::new(
+            InstructFlavor::OpenAssistant,
+            cfg.num_users * 8,
+            cfg.seed,
+        )),
+        other => bail!("unknown dataset kind {other:?}"),
+    })
+}
+
+fn build_central_opt(cfg: &Config) -> Result<Box<dyn CentralOptimizer>> {
+    Ok(match cfg.central_opt.kind.as_str() {
+        "sgd" => Box::new(Sgd),
+        "adam" => Box::new(Adam::new(
+            cfg.central_opt.beta1,
+            cfg.central_opt.beta2,
+            cfg.central_opt.adaptivity,
+        )),
+        other => bail!("unknown central optimizer {other:?}"),
+    })
+}
+
+pub fn run_spec(cfg: &Config, population: usize) -> RunSpec {
+    RunSpec {
+        iterations: cfg.iterations,
+        cohort_size: cfg.cohort_size,
+        val_cohort_size: cfg.val_cohort_size,
+        eval_every: cfg.eval_every,
+        local: LocalParams {
+            epochs: cfg.local_epochs,
+            batch_size: cfg.local_batch,
+            lr: cfg.local_lr as f32,
+            mu: 0.0,
+            max_steps: cfg.local_max_steps,
+        },
+        central_lr: cfg.central_opt.lr,
+        central_lr_warmup: cfg.central_opt.warmup,
+        population,
+        seed: cfg.seed,
+    }
+}
+
+pub fn build_algorithm(cfg: &Config, population: usize) -> Result<Arc<dyn FederatedAlgorithm>> {
+    let spec = run_spec(cfg, population);
+    let opt = build_central_opt(cfg)?;
+    Ok(match cfg.algorithm.kind.as_str() {
+        "fedavg" => Arc::new(FedAvg::new(spec, opt)),
+        "fedprox" => Arc::new(FedProx::new(spec, cfg.algorithm.mu as f32, opt)),
+        "adafedprox" => Arc::new(AdaFedProx::new(spec, opt)),
+        "scaffold" => Arc::new(Scaffold::new(spec, opt)),
+        other => bail!("unknown algorithm {other:?}"),
+    })
+}
+
+/// Calibrate the noise multiplier for the configured (ε, δ, T) budget
+/// with sampling rate q = C̃/M (paper App. C.4), via the configured
+/// accountant.
+pub fn calibrated_noise_multiplier(cfg: &Config) -> Result<f64> {
+    if cfg.privacy.is_none() {
+        return Ok(0.0);
+    }
+    let acc = accountant_by_name(&cfg.privacy.accountant)?;
+    let params = AccountantParams {
+        sampling_rate: (cfg.privacy.noise_cohort / cfg.privacy.population_m).min(1.0),
+        delta: cfg.privacy.delta,
+        steps: cfg.iterations,
+    };
+    acc.calibrate_sigma(cfg.privacy.epsilon, &params)
+        .context("noise calibration")
+}
+
+/// Build the DP postprocessor chain: the mechanism owns clip bound and
+/// noise, with the noise-cohort rescaling r = C/C̃ applied on top of the
+/// calibrated multiplier (σ is per-user-sum; the mechanism divides by C̃
+/// implicitly through r when the simulation averages over C).
+pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>> {
+    if cfg.privacy.is_none() {
+        return Ok(Vec::new());
+    }
+    let sigma = calibrated_noise_multiplier(cfg)?;
+    let r = if cfg.privacy.noise_cohort > 0.0 {
+        cfg.cohort_size as f64 / cfg.privacy.noise_cohort
+    } else {
+        1.0
+    };
+    let pp = mechanism_by_name(
+        &cfg.privacy.mechanism,
+        cfg.privacy.clip_bound as f32,
+        sigma,
+        r,
+    )?;
+    Ok(vec![pp])
+}
+
+/// Model factory: each worker constructs its own PJRT runtime + model
+/// from the artifacts directory (one resident model per worker).
+pub fn hlo_factory(model: String, init_seed: u64) -> ModelFactory {
+    Arc::new(move |_worker| {
+        let rt = std::rc::Rc::new(Runtime::new(Manifest::load_default()?)?);
+        let m = HloModel::new_owned(rt, &model, init_seed)?;
+        Ok(Box::new(m) as Box<dyn crate::fl::Model>)
+    })
+}
+
+/// Initial central parameters for the configured model.
+pub fn init_params(cfg: &Config) -> Result<Vec<f32>> {
+    let manifest = Manifest::load_default()?;
+    Ok(manifest.model(&cfg.model)?.init_params(cfg.seed ^ 0x1817))
+}
+
+/// The headline metric of each benchmark model (paper Tables 1–4).
+pub fn headline_metric(model: &str) -> &'static str {
+    match model {
+        "cnn_c10" => "accuracy",
+        "lm_so" | "lora_llm" => "perplexity",
+        "mlp_flair" => "map",
+        _ => "accuracy",
+    }
+}
+
+/// Central-eval callback over the dataset's held-out shards.
+pub fn build_eval_callback(
+    cfg: &Config,
+    dataset: &Arc<dyn FederatedDataset>,
+) -> Result<CentralEvalCallback> {
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&cfg.model)?;
+    let shards = dataset.central_eval(entry.eval_batch);
+    let rt = std::rc::Rc::new(Runtime::new(manifest.clone())?);
+    let model = HloModel::new_owned(rt, &cfg.model, cfg.seed ^ 0x1817)?;
+    Ok(CentralEvalCallback::new(
+        Box::new(model),
+        shards,
+        cfg.eval_every,
+        headline_metric(&cfg.model),
+    ))
+}
+
+/// Assemble the full backend for a config.
+pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<SimulatedBackend> {
+    let dataset = build_dataset(&cfg.dataset)?;
+    let algorithm = build_algorithm(cfg, dataset.num_users())?;
+    let factory = hlo_factory(cfg.model.clone(), cfg.seed ^ 0x1817);
+    let mut builder = BackendBuilder::new(dataset, algorithm, factory).params(RunParams {
+        num_workers: cfg.num_workers,
+        scheduler: cfg.scheduler_kind()?,
+        profile,
+        seed: cfg.seed,
+        log_every: 0,
+        ..Default::default()
+    });
+    for pp in build_postprocessors(cfg)? {
+        builder = builder.postprocessor(pp);
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn datasets_build_for_all_presets() {
+        for name in crate::config::preset_names() {
+            let cfg = preset(name).unwrap().scaled(0.02);
+            let ds = build_dataset(&cfg.dataset).unwrap();
+            assert!(ds.num_users() > 0, "{name}");
+            let d = ds.user_data(0);
+            assert!(!d.is_empty(), "{name} user 0 empty");
+        }
+    }
+
+    #[test]
+    fn algorithms_build_for_all_kinds() {
+        let mut cfg = preset("cifar10-iid").unwrap();
+        for kind in ["fedavg", "fedprox", "adafedprox", "scaffold"] {
+            cfg.algorithm.kind = kind.into();
+            let alg = build_algorithm(&cfg, 100).unwrap();
+            assert!(!alg.next_contexts(0).is_empty());
+        }
+        cfg.algorithm.kind = "bogus".into();
+        assert!(build_algorithm(&cfg, 100).is_err());
+    }
+
+    #[test]
+    fn dp_presets_calibrate_noise() {
+        let cfg = preset("cifar10-iid-dp").unwrap().scaled(0.1);
+        let sigma = calibrated_noise_multiplier(&cfg).unwrap();
+        assert!(sigma > 0.1 && sigma < 50.0, "sigma {sigma}");
+        let pps = build_postprocessors(&cfg).unwrap();
+        assert_eq!(pps.len(), 1);
+        assert_eq!(pps[0].name(), "gaussian");
+    }
+
+    #[test]
+    fn nodp_presets_have_no_postprocessors() {
+        let cfg = preset("cifar10-iid").unwrap();
+        assert!(build_postprocessors(&cfg).unwrap().is_empty());
+        assert_eq!(calibrated_noise_multiplier(&cfg).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn headline_metrics_per_model() {
+        assert_eq!(headline_metric("cnn_c10"), "accuracy");
+        assert_eq!(headline_metric("lm_so"), "perplexity");
+        assert_eq!(headline_metric("mlp_flair"), "map");
+        assert_eq!(headline_metric("lora_llm"), "perplexity");
+    }
+}

@@ -1,0 +1,583 @@
+//! Config system + benchmark presets (paper §4.3 and App. C).
+//!
+//! A [`Config`] fully describes one simulation: dataset, model, algorithm,
+//! run schedule, privacy setup, and engine topology. Configs serialize to
+//! JSON (`pfl run --config file.json`), and every benchmark in the paper's
+//! suite is a named [`preset`] whose hyperparameters copy Tables 8–11:
+//!
+//! `{cifar10, stackoverflow, flair, llm-sa, llm-aya, llm-oa}` ×
+//! `{iid, noniid}` × `{nodp, dp}`.
+//!
+//! Because this testbed is a CPU PJRT device (not 4×A100), presets are run
+//! through [`Config::scaled`], which shrinks iterations / cohort /
+//! population proportionally while preserving every structural ratio
+//! (local epochs, batch sizes, clip bounds, ε budget, r = C/C̃). The CLI
+//! default is scale 1.0 = paper values; experiments record their scale.
+
+pub mod build;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetConfig {
+    /// "cifar" | "flair" | "text" | "instruct-sa" | "instruct-aya" |
+    /// "instruct-oa" | "tabular" | "points"
+    pub kind: String,
+    pub num_users: usize,
+    /// Datapoints per user for IID fixed-size partitions.
+    pub per_user: usize,
+    /// Dirichlet α for non-IID label partitions (None = IID / natural).
+    pub dirichlet_alpha: Option<f64>,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgorithmConfig {
+    /// "fedavg" | "fedprox" | "adafedprox" | "scaffold"
+    pub kind: String,
+    /// FedProx µ.
+    pub mu: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CentralOptConfig {
+    /// "sgd" | "adam"
+    pub kind: String,
+    pub lr: f64,
+    pub warmup: u64,
+    /// Adam adaptivity degree τ (paper Tables 9–11).
+    pub adaptivity: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrivacyConfig {
+    /// "none" | "gaussian" | "banded-mf" | "adaptive-gaussian" | ...
+    pub mechanism: String,
+    /// "rdp" | "pld" | "prv"
+    pub accountant: String,
+    pub clip_bound: f64,
+    pub epsilon: f64,
+    pub delta: f64,
+    /// Accounting population M (paper Table 7: 1e6).
+    pub population_m: f64,
+    /// Noise cohort size C̃ (paper App. C.4).
+    pub noise_cohort: f64,
+}
+
+impl PrivacyConfig {
+    pub fn none() -> Self {
+        PrivacyConfig {
+            mechanism: "none".into(),
+            accountant: "pld".into(),
+            clip_bound: 0.0,
+            epsilon: 0.0,
+            delta: 0.0,
+            population_m: 1e6,
+            noise_cohort: 0.0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.mechanism == "none"
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub name: String,
+    /// Manifest model name ("cnn_c10" | "lm_so" | "mlp_flair" | "lora_llm").
+    pub model: String,
+    pub dataset: DatasetConfig,
+    pub algorithm: AlgorithmConfig,
+    pub central_opt: CentralOptConfig,
+    pub privacy: PrivacyConfig,
+    // run schedule (paper Tables 8–11)
+    pub iterations: u64,
+    pub cohort_size: usize,
+    pub val_cohort_size: usize,
+    pub eval_every: u64,
+    pub local_epochs: usize,
+    pub local_batch: usize,
+    pub local_lr: f64,
+    pub local_max_steps: usize,
+    // engine
+    pub num_workers: usize,
+    /// "uniform" | "greedy" | "greedy-median"
+    pub scheduler: String,
+    pub seed: u64,
+}
+
+impl Config {
+    /// Scale the compute budget while preserving structure: iterations,
+    /// cohort sizes and population shrink by `f`; batch sizes, epochs,
+    /// clip bounds, ε stay fixed; the DP noise-rescaling r = C/C̃ is
+    /// recomputed downstream from the scaled C.
+    pub fn scaled(mut self, f: f64) -> Config {
+        if (f - 1.0).abs() < 1e-12 {
+            return self;
+        }
+        let sc = |x: usize| ((x as f64 * f).round() as usize).max(1);
+        self.iterations = ((self.iterations as f64 * f).round() as u64).max(1);
+        self.cohort_size = sc(self.cohort_size).max(2);
+        if self.val_cohort_size > 0 {
+            self.val_cohort_size = sc(self.val_cohort_size).max(2);
+        }
+        self.dataset.num_users = sc(self.dataset.num_users).max(self.cohort_size * 2);
+        self.eval_every = ((self.eval_every as f64 * f).round() as u64).max(1);
+        self.name = format!("{}@{f}", self.name);
+        self
+    }
+
+    pub fn scheduler_kind(&self) -> Result<crate::fl::SchedulerKind> {
+        Ok(match self.scheduler.as_str() {
+            "uniform" => crate::fl::SchedulerKind::Uniform,
+            "greedy" => crate::fl::SchedulerKind::Greedy,
+            "greedy-median" => crate::fl::SchedulerKind::GreedyMedianBase,
+            other => bail!("unknown scheduler {other:?}"),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // JSON round trip
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> String {
+        let d = &self.dataset;
+        let a = &self.algorithm;
+        let c = &self.central_opt;
+        let p = &self.privacy;
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("model", s(self.model.clone())),
+            (
+                "dataset",
+                obj(vec![
+                    ("kind", s(d.kind.clone())),
+                    ("num_users", num(d.num_users as f64)),
+                    ("per_user", num(d.per_user as f64)),
+                    (
+                        "dirichlet_alpha",
+                        d.dirichlet_alpha.map(num).unwrap_or(Value::Null),
+                    ),
+                    ("seed", num(d.seed as f64)),
+                ]),
+            ),
+            (
+                "algorithm",
+                obj(vec![("kind", s(a.kind.clone())), ("mu", num(a.mu))]),
+            ),
+            (
+                "central_opt",
+                obj(vec![
+                    ("kind", s(c.kind.clone())),
+                    ("lr", num(c.lr)),
+                    ("warmup", num(c.warmup as f64)),
+                    ("adaptivity", num(c.adaptivity)),
+                    ("beta1", num(c.beta1)),
+                    ("beta2", num(c.beta2)),
+                ]),
+            ),
+            (
+                "privacy",
+                obj(vec![
+                    ("mechanism", s(p.mechanism.clone())),
+                    ("accountant", s(p.accountant.clone())),
+                    ("clip_bound", num(p.clip_bound)),
+                    ("epsilon", num(p.epsilon)),
+                    ("delta", num(p.delta)),
+                    ("population_m", num(p.population_m)),
+                    ("noise_cohort", num(p.noise_cohort)),
+                ]),
+            ),
+            (
+                "run",
+                obj(vec![
+                    ("iterations", num(self.iterations as f64)),
+                    ("cohort_size", num(self.cohort_size as f64)),
+                    ("val_cohort_size", num(self.val_cohort_size as f64)),
+                    ("eval_every", num(self.eval_every as f64)),
+                    ("local_epochs", num(self.local_epochs as f64)),
+                    ("local_batch", num(self.local_batch as f64)),
+                    ("local_lr", num(self.local_lr)),
+                    ("local_max_steps", num(self.local_max_steps as f64)),
+                ]),
+            ),
+            (
+                "engine",
+                obj(vec![
+                    ("num_workers", num(self.num_workers as f64)),
+                    ("scheduler", s(self.scheduler.clone())),
+                    ("seed", num(self.seed as f64)),
+                ]),
+            ),
+        ])
+        .to_string_pretty()
+    }
+
+    pub fn from_json(text: &str) -> Result<Config> {
+        let v = Value::parse(text).context("parsing config JSON")?;
+        let d = v.req("dataset")?;
+        let a = v.req("algorithm")?;
+        let c = v.req("central_opt")?;
+        let p = v.req("privacy")?;
+        let r = v.req("run")?;
+        let e = v.req("engine")?;
+        Ok(Config {
+            name: v.req("name")?.as_str()?.to_string(),
+            model: v.req("model")?.as_str()?.to_string(),
+            dataset: DatasetConfig {
+                kind: d.req("kind")?.as_str()?.to_string(),
+                num_users: d.req("num_users")?.as_usize()?,
+                per_user: d.req("per_user")?.as_usize()?,
+                dirichlet_alpha: match d.get("dirichlet_alpha") {
+                    Some(Value::Null) | None => None,
+                    Some(x) => Some(x.as_f64()?),
+                },
+                seed: d.req("seed")?.as_u64()?,
+            },
+            algorithm: AlgorithmConfig {
+                kind: a.req("kind")?.as_str()?.to_string(),
+                mu: a.req("mu")?.as_f64()?,
+            },
+            central_opt: CentralOptConfig {
+                kind: c.req("kind")?.as_str()?.to_string(),
+                lr: c.req("lr")?.as_f64()?,
+                warmup: c.req("warmup")?.as_u64()?,
+                adaptivity: c.req("adaptivity")?.as_f64()?,
+                beta1: c.req("beta1")?.as_f64()?,
+                beta2: c.req("beta2")?.as_f64()?,
+            },
+            privacy: PrivacyConfig {
+                mechanism: p.req("mechanism")?.as_str()?.to_string(),
+                accountant: p.req("accountant")?.as_str()?.to_string(),
+                clip_bound: p.req("clip_bound")?.as_f64()?,
+                epsilon: p.req("epsilon")?.as_f64()?,
+                delta: p.req("delta")?.as_f64()?,
+                population_m: p.req("population_m")?.as_f64()?,
+                noise_cohort: p.req("noise_cohort")?.as_f64()?,
+            },
+            iterations: r.req("iterations")?.as_u64()?,
+            cohort_size: r.req("cohort_size")?.as_usize()?,
+            val_cohort_size: r.req("val_cohort_size")?.as_usize()?,
+            eval_every: r.req("eval_every")?.as_u64()?,
+            local_epochs: r.req("local_epochs")?.as_usize()?,
+            local_batch: r.req("local_batch")?.as_usize()?,
+            local_lr: r.req("local_lr")?.as_f64()?,
+            local_max_steps: r.req("local_max_steps")?.as_usize()?,
+            num_workers: e.req("num_workers")?.as_usize()?,
+            scheduler: e.req("scheduler")?.as_str()?.to_string(),
+            seed: e.req("seed")?.as_u64()?,
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Presets — paper Tables 8–11
+// ----------------------------------------------------------------------
+
+fn central_dp(clip: f64, noise_cohort: f64) -> PrivacyConfig {
+    // Table 7: ε = 2, δ = 1/M, M = 1e6
+    PrivacyConfig {
+        mechanism: "gaussian".into(),
+        accountant: "pld".into(),
+        clip_bound: clip,
+        epsilon: 2.0,
+        delta: 1e-6,
+        population_m: 1e6,
+        noise_cohort,
+    }
+}
+
+/// CIFAR10 benchmarks (Table 8): 1500 iterations, central SGD lr 1.0,
+/// C = 50, 1 local epoch, batch 10, 50 datapoints/user, eval every 10.
+fn cifar10(iid: bool, dp: bool) -> Config {
+    Config {
+        name: format!(
+            "cifar10{}{}",
+            if iid { "-iid" } else { "-noniid" },
+            if dp { "-dp" } else { "" }
+        ),
+        model: "cnn_c10".into(),
+        dataset: DatasetConfig {
+            kind: "cifar".into(),
+            num_users: 1000, // 50000/50
+            per_user: 50,
+            dirichlet_alpha: if iid { None } else { Some(0.1) },
+            seed: 100,
+        },
+        algorithm: AlgorithmConfig { kind: "fedavg".into(), mu: 0.0 },
+        central_opt: CentralOptConfig {
+            kind: "sgd".into(),
+            lr: 1.0,
+            warmup: 0,
+            adaptivity: 0.0,
+            beta1: 0.0,
+            beta2: 0.0,
+        },
+        privacy: if dp { central_dp(0.4, 1000.0) } else { PrivacyConfig::none() },
+        iterations: 1500,
+        cohort_size: 50,
+        val_cohort_size: 0,
+        eval_every: 10,
+        local_epochs: 1,
+        local_batch: 10,
+        local_lr: 0.1,
+        local_max_steps: 0,
+        num_workers: 1,
+        scheduler: "greedy-median".into(),
+        seed: 0,
+    }
+}
+
+/// StackOverflow benchmarks (Table 9): 2000 iterations, FedAdam (lr 0.1,
+/// warmup 50, τ = 0.1), C = 400, local lr 0.3, batch 16, max 64
+/// sentences/user.
+fn stackoverflow(dp: bool) -> Config {
+    Config {
+        name: format!("stackoverflow{}", if dp { "-dp" } else { "" }),
+        model: "lm_so".into(),
+        dataset: DatasetConfig {
+            kind: "text".into(),
+            num_users: 20_000, // natural user keys; SO has ~342k train users
+            per_user: 0,       // natural heavy-tailed sizes, capped at 64
+            dirichlet_alpha: None,
+            seed: 200,
+        },
+        algorithm: AlgorithmConfig { kind: "fedavg".into(), mu: 0.0 },
+        central_opt: CentralOptConfig {
+            kind: "adam".into(),
+            lr: 0.1,
+            warmup: 50,
+            adaptivity: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+        },
+        privacy: if dp { central_dp(1.0, 5000.0) } else { PrivacyConfig::none() },
+        iterations: 2000,
+        cohort_size: 400,
+        val_cohort_size: 0,
+        eval_every: 20,
+        local_epochs: 1,
+        local_batch: 16,
+        local_lr: 0.3,
+        local_max_steps: 0,
+        num_workers: 1,
+        scheduler: "greedy-median".into(),
+        seed: 0,
+    }
+}
+
+/// FLAIR benchmarks (Table 10): 5000 iterations, FedAdam lr 0.1, τ = 0.1,
+/// C = 200, 2 local epochs, batch 16, max 512 images/user.
+fn flair(iid: bool, dp: bool) -> Config {
+    Config {
+        name: format!(
+            "flair{}{}",
+            if iid { "-iid" } else { "" },
+            if dp { "-dp" } else { "" }
+        ),
+        model: "mlp_flair".into(),
+        dataset: DatasetConfig {
+            kind: "flair".into(),
+            num_users: 5_000, // FLAIR: 41k users; heavy-tailed sizes
+            per_user: if iid { 50 } else { 0 },
+            dirichlet_alpha: if iid { None } else { Some(0.3) },
+            seed: 300,
+        },
+        algorithm: AlgorithmConfig { kind: "fedavg".into(), mu: 0.0 },
+        central_opt: CentralOptConfig {
+            kind: "adam".into(),
+            lr: 0.1,
+            warmup: 0,
+            adaptivity: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+        },
+        privacy: if dp { central_dp(0.1, 5000.0) } else { PrivacyConfig::none() },
+        iterations: 5000,
+        cohort_size: 200,
+        val_cohort_size: 0,
+        eval_every: 20,
+        local_epochs: 2,
+        local_batch: 16,
+        local_lr: 0.01,
+        local_max_steps: 0,
+        num_workers: 1,
+        scheduler: "greedy-median".into(),
+        seed: 0,
+    }
+}
+
+/// LLM benchmarks (Table 11): 1000 iterations, FedAdam lr 0.01, τ = 1e-4,
+/// C = 100, local batch 4, LoRA r=8 adapters only.
+fn llm(flavor: &str, dp: bool) -> Config {
+    Config {
+        name: format!("llm-{flavor}{}", if dp { "-dp" } else { "" }),
+        model: "lora_llm".into(),
+        dataset: DatasetConfig {
+            kind: format!("instruct-{flavor}"),
+            num_users: 3000,
+            per_user: if flavor == "sa" { 16 } else { 0 }, // SA: Poisson(16)
+            dirichlet_alpha: None,
+            seed: 400,
+        },
+        algorithm: AlgorithmConfig { kind: "fedavg".into(), mu: 0.0 },
+        central_opt: CentralOptConfig {
+            kind: "adam".into(),
+            lr: 0.01,
+            warmup: 0,
+            adaptivity: 1e-4,
+            beta1: 0.9,
+            beta2: 0.99,
+        },
+        privacy: if dp { central_dp(0.1, 5000.0) } else { PrivacyConfig::none() },
+        iterations: 1000,
+        cohort_size: 100,
+        val_cohort_size: 0,
+        eval_every: 10,
+        local_epochs: 1,
+        local_batch: 4,
+        local_lr: if flavor == "sa" { 0.01 } else { 0.1 },
+        local_max_steps: 0,
+        num_workers: 1,
+        scheduler: "greedy-median".into(),
+        seed: 0,
+    }
+}
+
+/// Every named preset of the benchmark suite.
+pub fn preset_names() -> Vec<&'static str> {
+    vec![
+        "cifar10-iid",
+        "cifar10-noniid",
+        "cifar10-iid-dp",
+        "cifar10-noniid-dp",
+        "stackoverflow",
+        "stackoverflow-dp",
+        "flair-iid",
+        "flair",
+        "flair-iid-dp",
+        "flair-dp",
+        "llm-sa",
+        "llm-aya",
+        "llm-oa",
+        "llm-sa-dp",
+        "llm-aya-dp",
+        "llm-oa-dp",
+    ]
+}
+
+pub fn preset(name: &str) -> Result<Config> {
+    Ok(match name {
+        "cifar10-iid" => cifar10(true, false),
+        "cifar10-noniid" => cifar10(false, false),
+        "cifar10-iid-dp" => cifar10(true, true),
+        "cifar10-noniid-dp" => cifar10(false, true),
+        "stackoverflow" => stackoverflow(false),
+        "stackoverflow-dp" => stackoverflow(true),
+        "flair-iid" => flair(true, false),
+        "flair" => flair(false, false),
+        "flair-iid-dp" => flair(true, true),
+        "flair-dp" => flair(false, true),
+        "llm-sa" => llm("sa", false),
+        "llm-aya" => llm("aya", false),
+        "llm-oa" => llm("oa", false),
+        "llm-sa-dp" => llm("sa", true),
+        "llm-aya-dp" => llm("aya", true),
+        "llm-oa-dp" => llm("oa", true),
+        other => bail!("unknown preset {other:?} (see `pfl presets`)"),
+    })
+}
+
+/// Dump all presets as a JSON array (the `pfl presets --dump` command —
+/// the analogue of the paper's hyperparameter tables 8–11).
+pub fn dump_presets() -> String {
+    let items: Vec<Value> = preset_names()
+        .iter()
+        .map(|n| Value::parse(&preset(n).unwrap().to_json()).unwrap())
+        .collect();
+    arr(items).to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_construct_and_roundtrip() {
+        for name in preset_names() {
+            let c = preset(name).unwrap();
+            let json = c.to_json();
+            let back = Config::from_json(&json).unwrap();
+            assert_eq!(c, back, "{name} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn paper_hyperparameters_table8() {
+        let c = preset("cifar10-iid").unwrap();
+        assert_eq!(c.iterations, 1500);
+        assert_eq!(c.cohort_size, 50);
+        assert_eq!(c.local_batch, 10);
+        assert_eq!(c.local_lr, 0.1);
+        assert_eq!(c.central_opt.lr, 1.0);
+        assert_eq!(c.dataset.per_user, 50);
+        let dp = preset("cifar10-iid-dp").unwrap();
+        assert_eq!(dp.privacy.clip_bound, 0.4);
+        assert_eq!(dp.privacy.noise_cohort, 1000.0);
+        assert_eq!(dp.privacy.epsilon, 2.0);
+    }
+
+    #[test]
+    fn paper_hyperparameters_table9_10() {
+        let so = preset("stackoverflow").unwrap();
+        assert_eq!(so.iterations, 2000);
+        assert_eq!(so.cohort_size, 400);
+        assert_eq!(so.central_opt.warmup, 50);
+        assert_eq!(so.central_opt.adaptivity, 0.1);
+        let fl = preset("flair-dp").unwrap();
+        assert_eq!(fl.iterations, 5000);
+        assert_eq!(fl.local_epochs, 2);
+        assert_eq!(fl.privacy.clip_bound, 0.1);
+        assert_eq!(fl.privacy.noise_cohort, 5000.0);
+    }
+
+    #[test]
+    fn noniid_uses_dirichlet() {
+        assert_eq!(preset("cifar10-noniid").unwrap().dataset.dirichlet_alpha, Some(0.1));
+        assert_eq!(preset("cifar10-iid").unwrap().dataset.dirichlet_alpha, None);
+    }
+
+    #[test]
+    fn scaling_preserves_structure() {
+        let c = preset("cifar10-iid").unwrap().scaled(0.1);
+        assert_eq!(c.iterations, 150);
+        assert_eq!(c.cohort_size, 5);
+        assert_eq!(c.dataset.num_users, 100);
+        // structural values unchanged
+        assert_eq!(c.local_batch, 10);
+        assert_eq!(c.local_epochs, 1);
+        assert_eq!(c.privacy.is_none(), true);
+        // scale 1.0 is identity
+        let d = preset("cifar10-iid").unwrap().scaled(1.0);
+        assert_eq!(d.iterations, 1500);
+    }
+
+    #[test]
+    fn dump_is_valid_json() {
+        let v = Value::parse(&dump_presets()).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), preset_names().len());
+    }
+
+    #[test]
+    fn scheduler_kind_parses() {
+        let mut c = preset("cifar10-iid").unwrap();
+        assert!(c.scheduler_kind().is_ok());
+        c.scheduler = "bogus".into();
+        assert!(c.scheduler_kind().is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Partition processes used to federate a centralized pool of examples
+//! (paper §4.3: "Datasets × {IID, non-IID}"; App. C.5/C.8).
+
+use crate::util::rng::Rng;
+
+/// IID fixed-size: `num_users` users, each with exactly `per_user`
+/// datapoints (CIFAR10 benchmark: 50000/50 = 1000 users, App. C.5).
+pub fn iid_fixed_size_partition(total: usize, per_user: usize) -> Vec<usize> {
+    let num_users = total / per_user.max(1);
+    vec![per_user; num_users]
+}
+
+/// Per-user class distributions from a symmetric Dirichlet(alpha) —
+/// the standard label-skew non-IID process (App. C.5: alpha = 0.1).
+/// Returns `num_users` rows of class probabilities.
+pub fn dirichlet_label_partition(
+    num_users: usize,
+    num_classes: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xD1A1);
+    (0..num_users).map(|_| rng.dirichlet(alpha, num_classes)).collect()
+}
+
+/// Poisson-distributed user sizes (App. C.8: Stanford Alpaca partition —
+/// "sample the length L of each user dataset using Poisson distribution
+/// with expectation of 16"), stopping when `total` examples are assigned.
+pub fn poisson_size_partition(total: usize, mean: f64, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x7015);
+    let mut sizes = Vec::new();
+    let mut assigned = 0usize;
+    while assigned < total {
+        let l = (rng.poisson(mean) as usize).max(1).min(total - assigned);
+        sizes.push(l);
+        assigned += l;
+    }
+    sizes
+}
+
+/// Log-normal user sizes clipped to [1, max] — FLAIR-like heavy tail
+/// (the dispersion that makes load balancing matter, App. B.6 / Fig. 4).
+pub fn lognormal_size_partition(
+    num_users: usize,
+    mu: f64,
+    sigma: f64,
+    max: usize,
+    seed: u64,
+) -> Vec<usize> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x106A);
+    (0..num_users)
+        .map(|_| (rng.lognormal(mu, sigma).ceil() as usize).clamp(1, max))
+        .collect()
+}
+
+/// Split users that exceed `max` into even chunks of <= max (App. C.8:
+/// "if an annotator has more than 64 pairs, we evenly split").
+pub fn split_oversized(sizes: &[usize], max: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &s in sizes {
+        if s <= max {
+            out.push(s);
+        } else {
+            let chunks = s.div_ceil(max);
+            let base = s / chunks;
+            let rem = s % chunks;
+            for i in 0..chunks {
+                out.push(base + usize::from(i < rem));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_matches_paper_cifar_setup() {
+        let sizes = iid_fixed_size_partition(50_000, 50);
+        assert_eq!(sizes.len(), 1000);
+        assert!(sizes.iter().all(|&s| s == 50));
+    }
+
+    #[test]
+    fn dirichlet_rows_are_distributions() {
+        let rows = dirichlet_label_partition(20, 10, 0.1, 3);
+        assert_eq!(rows.len(), 20);
+        for r in &rows {
+            let sum: f64 = r.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+        // alpha=0.1 should produce skewed rows: top class > 0.5 typically
+        let skewed = rows
+            .iter()
+            .filter(|r| r.iter().cloned().fold(0.0, f64::max) > 0.5)
+            .count();
+        assert!(skewed > 10, "only {skewed}/20 rows skewed");
+        // alpha=100 should be near-uniform
+        let flat = dirichlet_label_partition(20, 10, 100.0, 3);
+        let very_skewed = flat
+            .iter()
+            .filter(|r| r.iter().cloned().fold(0.0, f64::max) > 0.5)
+            .count();
+        assert_eq!(very_skewed, 0);
+    }
+
+    #[test]
+    fn poisson_partition_conserves_total() {
+        let sizes = poisson_size_partition(52_002, 16.0, 1);
+        assert_eq!(sizes.iter().sum::<usize>(), 52_002);
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        assert!((mean - 16.0).abs() < 1.5, "mean {mean}");
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn lognormal_is_heavy_tailed_and_clipped() {
+        let sizes = lognormal_size_partition(5000, 3.0, 1.2, 512, 9);
+        assert!(sizes.iter().all(|&s| (1..=512).contains(&s)));
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        let med = {
+            let mut s = sizes.clone();
+            s.sort_unstable();
+            s[s.len() / 2] as f64
+        };
+        assert!(mean > med, "heavy tail: mean {mean} <= median {med}");
+    }
+
+    #[test]
+    fn split_oversized_conserves_and_bounds() {
+        let out = split_oversized(&[10, 64, 65, 200], 64);
+        assert_eq!(out.iter().sum::<usize>(), 10 + 64 + 65 + 200);
+        assert!(out.iter().all(|&s| s <= 64 && s >= 1));
+        assert_eq!(out.len(), 1 + 1 + 2 + 4);
+    }
+}

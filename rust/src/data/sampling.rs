@@ -1,0 +1,93 @@
+//! Cohort sampling (paper App. A: Poisson sampling for DP accounting;
+//! `pfl/data/sampling.py` for cross-silo).
+
+use crate::util::rng::Rng;
+
+/// Samples the cohort of user ids for one central iteration.
+pub trait CohortSampler: Send + Sync {
+    fn sample(&self, population: usize, iteration: u64, seed: u64) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Fixed-size cohort, uniform without replacement — what simulations
+/// actually run (the accountant then *assumes* Poisson sampling of the
+/// same expected size, App. A).
+pub struct MinibatchSampler {
+    pub cohort_size: usize,
+}
+
+impl CohortSampler for MinibatchSampler {
+    fn sample(&self, population: usize, iteration: u64, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::seed_from_u64(seed ^ iteration.wrapping_mul(0x9E37_79B9));
+        rng.choose_k(population, self.cohort_size)
+    }
+    fn name(&self) -> &'static str {
+        "minibatch"
+    }
+}
+
+/// True Poisson sampling: each user flips a coin with p = C/M.
+pub struct PoissonCohortSampler {
+    pub rate: f64,
+}
+
+impl CohortSampler for PoissonCohortSampler {
+    fn sample(&self, population: usize, iteration: u64, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::seed_from_u64(seed ^ iteration.wrapping_mul(0x517C_C1B7));
+        rng.poisson_subsample(population, self.rate)
+    }
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+}
+
+/// Cross-silo: every silo participates every round (the common cross-silo
+/// regime: few, reliable participants).
+pub struct CrossSiloSampler;
+
+impl CohortSampler for CrossSiloSampler {
+    fn sample(&self, population: usize, _iteration: u64, _seed: u64) -> Vec<usize> {
+        (0..population).collect()
+    }
+    fn name(&self) -> &'static str {
+        "cross-silo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minibatch_size_distinct_deterministic() {
+        let s = MinibatchSampler { cohort_size: 50 };
+        let a = s.sample(1000, 3, 42);
+        assert_eq!(a.len(), 50);
+        let set: std::collections::HashSet<_> = a.iter().collect();
+        assert_eq!(set.len(), 50);
+        assert_eq!(a, s.sample(1000, 3, 42));
+        assert_ne!(a, s.sample(1000, 4, 42));
+    }
+
+    #[test]
+    fn minibatch_caps_at_population() {
+        let s = MinibatchSampler { cohort_size: 50 };
+        assert_eq!(s.sample(10, 0, 1).len(), 10);
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let s = PoissonCohortSampler { rate: 0.05 };
+        let mut total = 0usize;
+        for it in 0..200 {
+            total += s.sample(1000, it, 7).len();
+        }
+        let mean = total as f64 / 200.0;
+        assert!((mean - 50.0).abs() < 5.0, "mean cohort {mean}");
+    }
+
+    #[test]
+    fn cross_silo_takes_everyone() {
+        assert_eq!(CrossSiloSampler.sample(7, 0, 0), (0..7).collect::<Vec<_>>());
+    }
+}

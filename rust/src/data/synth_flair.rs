@@ -1,0 +1,217 @@
+//! FLAIR substitute (paper App. C.7): multi-label classification with 17
+//! coarse labels over features (stand-in for pretrained-ResNet18
+//! embeddings), natural user partition with *heavy-tailed* user sizes —
+//! the dispersion that makes the scheduling experiments (App. B.6,
+//! Figs. 4-5, Table 5) meaningful.
+//!
+//! Generative process: each label has a prototype direction in feature
+//! space; each user has a label-propensity vector (Dirichlet — strong
+//! heterogeneity like real FLAIR user photo collections); an example
+//! activates labels by propensity, x = Σ active prototypes + user bias +
+//! noise, y = the active multi-hot set.
+
+use super::{partition::lognormal_size_partition, FederatedDataset, UserData};
+use crate::util::rng::Rng;
+
+pub const FEAT: usize = 192;
+pub const LABELS: usize = 17;
+
+pub struct SynthFlair {
+    pub num_users: usize,
+    pub max_images: usize,
+    /// None => IID (fixed size, global label prior); Some(alpha) =>
+    /// natural heterogeneous partition.
+    pub dirichlet_alpha: Option<f64>,
+    pub iid_per_user: usize,
+    pub eval_examples: usize,
+    pub noise: f32,
+    seed: u64,
+    prototypes: Vec<f32>, // LABELS x FEAT
+    sizes: Vec<usize>,
+}
+
+impl SynthFlair {
+    pub fn new(num_users: usize, dirichlet_alpha: Option<f64>, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xF1A1_0017);
+        let mut prototypes = vec![0f32; LABELS * FEAT];
+        for v in prototypes.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        // normalize prototypes to unit norm
+        for l in 0..LABELS {
+            let row = &mut prototypes[l * FEAT..(l + 1) * FEAT];
+            let n = crate::util::l2_norm(row) as f32;
+            for v in row.iter_mut() {
+                *v /= n.max(1e-6);
+            }
+        }
+        let sizes = if dirichlet_alpha.is_some() {
+            // FLAIR-like dispersion: median ~20, tail to max_images
+            lognormal_size_partition(num_users, 3.0, 1.2, 512, seed)
+        } else {
+            vec![50; num_users]
+        };
+        SynthFlair {
+            num_users,
+            max_images: 512,
+            dirichlet_alpha,
+            iid_per_user: 50,
+            eval_examples: 2000,
+            noise: 0.6,
+            seed,
+            prototypes,
+            sizes,
+        }
+    }
+
+    pub fn paper_iid(num_users: usize, seed: u64) -> Self {
+        Self::new(num_users, None, seed)
+    }
+
+    pub fn paper_noniid(num_users: usize, seed: u64) -> Self {
+        Self::new(num_users, Some(0.3), seed)
+    }
+
+    fn gen(&self, rng: &mut Rng, n: usize, propensity: Option<&[f64]>) -> UserData {
+        let mut x = vec![0f32; n * FEAT];
+        let mut y = vec![0f32; n * LABELS];
+        // user-level bias vector (heterogeneity in feature space)
+        let mut bias = vec![0f32; FEAT];
+        if propensity.is_some() {
+            for v in bias.iter_mut() {
+                *v = 0.3 * rng.normal() as f32;
+            }
+        }
+        for i in 0..n {
+            let xi = &mut x[i * FEAT..(i + 1) * FEAT];
+            xi.copy_from_slice(&bias);
+            let mut active = 0;
+            for l in 0..LABELS {
+                let p = match propensity {
+                    Some(pr) => (pr[l] * 4.0).min(0.9),
+                    None => 0.15,
+                };
+                if rng.f64() < p {
+                    y[i * LABELS + l] = 1.0;
+                    active += 1;
+                    let proto = &self.prototypes[l * FEAT..(l + 1) * FEAT];
+                    crate::util::add_assign(xi, proto);
+                }
+            }
+            if active == 0 {
+                // guarantee at least one label (FLAIR images always have one)
+                let l = rng.below(LABELS);
+                y[i * LABELS + l] = 1.0;
+                let proto = &self.prototypes[l * FEAT..(l + 1) * FEAT];
+                crate::util::add_assign(xi, proto);
+            }
+            for v in xi.iter_mut() {
+                *v += self.noise * rng.normal() as f32;
+            }
+        }
+        UserData::Features { x, y, feat: FEAT, labels: LABELS }
+    }
+}
+
+impl FederatedDataset for SynthFlair {
+    fn name(&self) -> &str {
+        if self.dirichlet_alpha.is_some() {
+            "synth-flair"
+        } else {
+            "synth-flair-iid"
+        }
+    }
+
+    fn num_users(&self) -> usize {
+        self.num_users
+    }
+
+    fn user_data(&self, uid: usize) -> UserData {
+        let mut rng = Rng::seed_from_u64(self.seed ^ (uid as u64).wrapping_mul(0x5851_F42D));
+        let propensity = self.dirichlet_alpha.map(|alpha| {
+            let mut prng = Rng::seed_from_u64(self.seed ^ (uid as u64).wrapping_mul(0x2545_F491) ^ 0x11);
+            prng.dirichlet(alpha, LABELS)
+        });
+        let n = self.user_len(uid);
+        self.gen(&mut rng, n, propensity.as_deref())
+    }
+
+    fn user_len(&self, uid: usize) -> usize {
+        if self.dirichlet_alpha.is_some() {
+            self.sizes[uid].min(self.max_images)
+        } else {
+            self.iid_per_user
+        }
+    }
+
+    fn central_eval(&self, shard_size: usize) -> Vec<UserData> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0xEEE2);
+        let mut shards = Vec::new();
+        let mut remaining = self.eval_examples;
+        while remaining > 0 {
+            let n = remaining.min(shard_size);
+            shards.push(self.gen(&mut rng, n, None));
+            remaining -= n;
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heterogeneous_sizes_are_heavy_tailed() {
+        let d = SynthFlair::paper_noniid(500, 3);
+        let sizes: Vec<usize> = (0..500).map(|u| d.user_len(u)).collect();
+        let mean = sizes.iter().sum::<usize>() as f64 / 500.0;
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        let median = sorted[250] as f64;
+        assert!(mean > median * 1.2, "mean {mean} median {median}");
+        assert!(*sorted.last().unwrap() > 100);
+        assert!(sorted[0] >= 1);
+    }
+
+    #[test]
+    fn iid_sizes_are_fixed() {
+        let d = SynthFlair::paper_iid(100, 3);
+        assert!((0..100).all(|u| d.user_len(u) == 50));
+    }
+
+    #[test]
+    fn every_example_has_a_label() {
+        let d = SynthFlair::paper_noniid(50, 5);
+        let u = d.user_data(7);
+        if let UserData::Features { y, labels, .. } = &u {
+            for row in y.chunks(*labels) {
+                assert!(row.iter().sum::<f32>() >= 1.0);
+            }
+        } else {
+            panic!("wrong variant");
+        }
+        assert_eq!(u.len(), d.user_len(7));
+    }
+
+    #[test]
+    fn user_data_matches_len_and_is_deterministic() {
+        let d = SynthFlair::paper_noniid(50, 5);
+        for uid in [0, 13, 49] {
+            assert_eq!(d.user_data(uid).len(), d.user_len(uid));
+        }
+        match (d.user_data(13), d.user_data(13)) {
+            (UserData::Features { x: a, .. }, UserData::Features { x: b, .. }) => {
+                assert_eq!(a, b)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn eval_total() {
+        let d = SynthFlair::paper_iid(10, 0);
+        let total: usize = d.central_eval(128).iter().map(|s| s.len()).sum();
+        assert_eq!(total, d.eval_examples);
+    }
+}

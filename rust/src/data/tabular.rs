@@ -1,0 +1,229 @@
+//! Synthetic tabular / point-cloud federated datasets for the non-NN
+//! models (paper §1 "Non-gradient-descent training": federated GBDT and
+//! federated GMM).
+
+use super::{FederatedDataset, UserData};
+use crate::util::rng::Rng;
+
+/// Regression dataset with piecewise structure a GBDT can exploit:
+/// y = Σ_j step(x_j > θ_j) * w_j + noise. Users have heterogeneous
+/// feature distributions (shifted means).
+pub struct SynthTabular {
+    pub num_users: usize,
+    pub per_user: usize,
+    pub dim: usize,
+    pub noise: f64,
+    pub eval_examples: usize,
+    seed: u64,
+    thresholds: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl SynthTabular {
+    pub fn new(num_users: usize, per_user: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7AB1_E000);
+        let thresholds = (0..dim).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+        let weights = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        SynthTabular {
+            num_users,
+            per_user,
+            dim,
+            noise: 0.1,
+            eval_examples: 1000,
+            seed,
+            thresholds,
+            weights,
+        }
+    }
+
+    pub fn true_fn(&self, x: &[f64]) -> f64 {
+        x.iter()
+            .zip(&self.thresholds)
+            .zip(&self.weights)
+            .map(|((xi, t), w)| if xi > t { *w } else { 0.0 })
+            .sum()
+    }
+
+    fn gen(&self, rng: &mut Rng, n: usize, shift: f64) -> UserData {
+        let mut x = vec![0f32; n * self.dim];
+        let mut y = vec![0f32; n];
+        let mut row = vec![0f64; self.dim];
+        for i in 0..n {
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = rng.normal() + shift;
+                x[i * self.dim + j] = *r as f32;
+            }
+            y[i] = (self.true_fn(&row) + self.noise * rng.normal()) as f32;
+        }
+        UserData::Tabular { x, y, dim: self.dim }
+    }
+}
+
+impl FederatedDataset for SynthTabular {
+    fn name(&self) -> &str {
+        "synth-tabular"
+    }
+
+    fn num_users(&self) -> usize {
+        self.num_users
+    }
+
+    fn user_data(&self, uid: usize) -> UserData {
+        let mut rng = Rng::seed_from_u64(self.seed ^ (uid as u64).wrapping_mul(0xBF58_476D));
+        let shift = 0.4 * rng.normal(); // heterogeneous covariate shift
+        self.gen(&mut rng, self.user_len(uid), shift)
+    }
+
+    /// Heterogeneous user sizes in [per_user/2, 3·per_user/2] (realistic
+    /// FL populations have dispersed dataset lengths; keeps the weighting
+    /// and scheduling features observable on this dataset too).
+    fn user_len(&self, uid: usize) -> usize {
+        let mut rng = Rng::seed_from_u64(self.seed ^ (uid as u64).wrapping_mul(0x9E37_79B9));
+        let half = (self.per_user / 2).max(1);
+        half + rng.below(self.per_user.max(1))
+    }
+
+    fn central_eval(&self, shard_size: usize) -> Vec<UserData> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0xEEE4);
+        let mut shards = Vec::new();
+        let mut remaining = self.eval_examples;
+        while remaining > 0 {
+            let n = remaining.min(shard_size);
+            shards.push(self.gen(&mut rng, n, 0.0));
+            remaining -= n;
+        }
+        shards
+    }
+}
+
+/// Mixture-of-Gaussians point clouds (for federated GMM): K true
+/// components; users see a user-specific mixture of them.
+pub struct SynthGmmPoints {
+    pub num_users: usize,
+    pub per_user: usize,
+    pub dim: usize,
+    pub components: usize,
+    pub eval_examples: usize,
+    seed: u64,
+    pub means: Vec<f64>, // components x dim
+}
+
+impl SynthGmmPoints {
+    pub fn new(num_users: usize, per_user: usize, dim: usize, components: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6333_0000);
+        // well-separated means
+        let means = (0..components * dim).map(|_| 4.0 * rng.normal()).collect();
+        SynthGmmPoints {
+            num_users,
+            per_user,
+            dim,
+            components,
+            eval_examples: 1000,
+            seed,
+            means,
+        }
+    }
+
+    fn gen(&self, rng: &mut Rng, n: usize, mixture: &[f64]) -> UserData {
+        let mut x = vec![0f32; n * self.dim];
+        for i in 0..n {
+            let u = rng.f64();
+            let mut k = self.components - 1;
+            let mut acc = 0.0;
+            for (c, p) in mixture.iter().enumerate() {
+                acc += p;
+                if u < acc {
+                    k = c;
+                    break;
+                }
+            }
+            for j in 0..self.dim {
+                x[i * self.dim + j] = (self.means[k * self.dim + j] + rng.normal()) as f32;
+            }
+        }
+        UserData::Points { x, dim: self.dim }
+    }
+}
+
+impl FederatedDataset for SynthGmmPoints {
+    fn name(&self) -> &str {
+        "synth-gmm-points"
+    }
+
+    fn num_users(&self) -> usize {
+        self.num_users
+    }
+
+    fn user_data(&self, uid: usize) -> UserData {
+        let mut rng = Rng::seed_from_u64(self.seed ^ (uid as u64).wrapping_mul(0x9403_91CB));
+        let mixture = rng.dirichlet(0.5, self.components);
+        self.gen(&mut rng, self.per_user, &mixture)
+    }
+
+    fn user_len(&self, _uid: usize) -> usize {
+        self.per_user
+    }
+
+    fn central_eval(&self, shard_size: usize) -> Vec<UserData> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0xEEE5);
+        let uniform = vec![1.0 / self.components as f64; self.components];
+        let mut shards = Vec::new();
+        let mut remaining = self.eval_examples;
+        while remaining > 0 {
+            let n = remaining.min(shard_size);
+            shards.push(self.gen(&mut rng, n, &uniform));
+            remaining -= n;
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tabular_signal_dominates_noise() {
+        let d = SynthTabular::new(10, 200, 5, 1);
+        if let UserData::Tabular { y, .. } = d.user_data(0) {
+            let var: f64 = {
+                let m = y.iter().map(|v| *v as f64).sum::<f64>() / y.len() as f64;
+                y.iter().map(|v| (*v as f64 - m).powi(2)).sum::<f64>() / y.len() as f64
+            };
+            assert!(var > 0.05, "var {var}"); // structure present
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn gmm_points_cluster_near_means() {
+        let d = SynthGmmPoints::new(5, 500, 2, 3, 2);
+        if let UserData::Points { x, dim } = d.user_data(1) {
+            // every point within ~5 sigma of *some* mean
+            for p in x.chunks(dim) {
+                let mut best = f64::MAX;
+                for k in 0..3 {
+                    let dist: f64 = p
+                        .iter()
+                        .enumerate()
+                        .map(|(j, v)| (*v as f64 - d.means[k * dim + j]).powi(2))
+                        .sum();
+                    best = best.min(dist.sqrt());
+                }
+                assert!(best < 6.0, "point {best} sigma away");
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn deterministic_users() {
+        let d = SynthTabular::new(4, 10, 3, 5);
+        match (d.user_data(2), d.user_data(2)) {
+            (UserData::Tabular { x: a, .. }, UserData::Tabular { x: b, .. }) => assert_eq!(a, b),
+            _ => unreachable!(),
+        }
+    }
+}

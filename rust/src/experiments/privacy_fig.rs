@@ -1,0 +1,120 @@
+//! Fig. 6 + the accountant comparison: SNR and accuracy when trading
+//! cohort size C against the noise-rescaling factor r (paper App. C.4).
+//!
+//! Left panel: SNR (Eq. 1) for sweeps of C (black) and r (red). Right
+//! panel: accuracy for the same sweeps. The paper's claim: the two sweeps
+//! correlate ≈ 1, so small-C + rescaled-noise simulations predict the
+//! large-C̃ deployment.
+
+use anyhow::Result;
+
+use super::{run_benchmark, EvalMode, TablePrinter};
+use crate::baselines::EngineVariant;
+use crate::privacy::{accountant_by_name, AccountantParams};
+
+/// Fig. 6: sweep C with full noise vs sweep r at fixed C.
+pub fn fig6(scale: f64, seeds: u64) -> Result<()> {
+    let base = {
+        let mut c = crate::config::preset("cifar10-iid-dp").unwrap();
+        c.iterations = ((40.0 * scale).round() as u64).max(10);
+        c.dataset.num_users = 400;
+        c.eval_every = c.iterations; // final eval only
+        c.val_cohort_size = 0;
+        c
+    };
+
+    let mut t = TablePrinter::new(&["sweep", "C", "r", "SNR (mean)", "accuracy"]);
+    // Sweep 1 (black): increase the real cohort size C, noise for C̃ = C
+    // (no rescaling: r = 1 by setting noise_cohort = C).
+    for &c in &[5usize, 10, 20, 40] {
+        let mut cfg = base.clone();
+        cfg.cohort_size = c;
+        cfg.privacy.noise_cohort = c as f64;
+        cfg.name = format!("fig6-C{c}");
+        let (snr, acc) = run_point(&cfg, seeds)?;
+        t.row(vec![
+            "cohort C".into(),
+            c.to_string(),
+            "1.0".into(),
+            format!("{snr:.3}"),
+            format!("{acc:.4}"),
+        ]);
+    }
+    // Sweep 2 (red): fix C small, reduce the noise via r = C/C̃.
+    let c_fixed = 5usize;
+    for &ctilde in &[5.0f64, 10.0, 20.0, 40.0] {
+        let mut cfg = base.clone();
+        cfg.cohort_size = c_fixed;
+        cfg.privacy.noise_cohort = ctilde;
+        cfg.name = format!("fig6-r{}", c_fixed as f64 / ctilde);
+        let (snr, acc) = run_point(&cfg, seeds)?;
+        t.row(vec![
+            "noise scale r".into(),
+            c_fixed.to_string(),
+            format!("{:.3}", c_fixed as f64 / ctilde),
+            format!("{snr:.3}"),
+            format!("{acc:.4}"),
+        ]);
+    }
+    t.print("Fig 6: SNR and accuracy, cohort size C vs noise scale r");
+    println!("# paper: the two sweeps trace the same curve (correlation ~1)");
+    Ok(())
+}
+
+fn run_point(cfg: &crate::config::Config, seeds: u64) -> Result<(f64, f64)> {
+    let mut snrs = Vec::new();
+    let mut accs = Vec::new();
+    for seed in 0..seeds.max(1) {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let s = run_benchmark(&c, EngineVariant::PflStyle.profile(), EvalMode::Final, 0)?;
+        // mean SNR over the last half of training
+        let series = s.outcome.series("dp/snr");
+        let half = &series[series.len() / 2..];
+        let snr = half.iter().map(|(_, v)| v).sum::<f64>() / half.len().max(1) as f64;
+        snrs.push(snr);
+        accs.push(s.headline.map(|(_, v)| v).unwrap_or(f64::NAN));
+    }
+    Ok((
+        snrs.iter().sum::<f64>() / snrs.len() as f64,
+        accs.iter().sum::<f64>() / accs.len() as f64,
+    ))
+}
+
+/// The `calibrate` command: σ for each accountant on each DP benchmark
+/// (the workflow of paper Table 7 / App. C.4).
+pub fn calibrate() -> Result<()> {
+    let mut t = TablePrinter::new(&[
+        "benchmark",
+        "q = C~/M",
+        "T",
+        "sigma (rdp)",
+        "sigma (pld)",
+        "sigma (prv)",
+    ]);
+    for name in ["cifar10-iid-dp", "stackoverflow-dp", "flair-dp", "llm-sa-dp"] {
+        let cfg = crate::config::preset(name)?;
+        let p = AccountantParams {
+            sampling_rate: cfg.privacy.noise_cohort / cfg.privacy.population_m,
+            delta: cfg.privacy.delta,
+            steps: cfg.iterations,
+        };
+        let mut sigmas = Vec::new();
+        for acc_name in ["rdp", "pld", "prv"] {
+            let acc = accountant_by_name(acc_name)?;
+            let sigma = acc.calibrate_sigma(cfg.privacy.epsilon, &p)?;
+            sigmas.push(sigma);
+        }
+        t.row(vec![
+            name.into(),
+            format!("{:.1e}", p.sampling_rate),
+            p.steps.to_string(),
+            format!("{:.4}", sigmas[0]),
+            format!("{:.4}", sigmas[1]),
+            format!("{:.4}", sigmas[2]),
+        ]);
+    }
+    t.print("Noise calibration: sigma for (eps=2, delta=1e-6, M=1e6)");
+    println!("# tighter accountants need smaller sigma: expect pld <= rdp, prv ~ pld");
+    Ok(())
+}

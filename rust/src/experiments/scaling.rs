@@ -1,0 +1,242 @@
+//! Figs. 2–3: distributed-simulation scaling via the virtual cluster.
+//!
+//! A single measured run per benchmark yields per-user (host, device)
+//! costs; the replay re-schedules those cohorts onto g devices × p
+//! workers (device time serializes per device, host time overlaps —
+//! `simsys::replay_cluster`). Wall-clock and GPU-hours are then exact
+//! functions of the schedule, which is what the paper's scaling figures
+//! measure (scheduling quality, utilization, stragglers).
+
+use anyhow::Result;
+
+use super::{fit_cost_model, run_benchmark, EvalMode, RunSummary, TablePrinter};
+use crate::baselines::EngineVariant;
+use crate::fl::scheduler::{schedule, SchedulerKind};
+use crate::simsys::{replay_cluster, UserCost};
+use crate::util::rng::Rng;
+
+/// Group a run's user costs back into per-round cohorts.
+fn rounds_of(summary: &RunSummary) -> Vec<Vec<UserCost>> {
+    let costs = &summary.outcome.user_costs;
+    let mut rounds = Vec::new();
+    let mut idx = 0;
+    for (_, m) in &summary.outcome.history {
+        let cohort = m.get("sys/cohort").unwrap_or(0.0) as usize;
+        if cohort == 0 || idx >= costs.len() {
+            continue;
+        }
+        let hi = (idx + cohort).min(costs.len());
+        rounds.push(costs[idx..hi].to_vec());
+        idx = hi;
+    }
+    rounds
+}
+
+/// Re-split each measured cost into the paper testbed's device/host
+/// proportions (A100: ~41% serialized device work, ~59% overlappable
+/// host work — derived from paper Table 1's p=1 vs p=5 pfl rows). On
+/// this CPU the device fraction is ~95%, which is not representative of
+/// the GPU overlap the paper's Figs. 2–3 demonstrate; the A100-split
+/// column is the reproduction target, the raw column the honest local
+/// measurement.
+pub fn a100_split(rounds: &[Vec<UserCost>]) -> Vec<Vec<UserCost>> {
+    rounds
+        .iter()
+        .map(|r| {
+            r.iter()
+                .map(|c| UserCost {
+                    datapoints: c.datapoints,
+                    nanos: c.nanos,
+                    device_nanos: (c.nanos as f64 * 0.41) as u64,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay a run onto (gpus × per_gpu) workers; returns (total_secs,
+/// gpu_hours).
+pub fn replay(rounds: &[Vec<UserCost>], gpus: usize, per_gpu: usize) -> (f64, f64) {
+    let workers = gpus * per_gpu;
+    let mut total = 0u64;
+    for round in rounds {
+        let weights: Vec<f64> = round.iter().map(|c| c.datapoints as f64).collect();
+        let sched = schedule(SchedulerKind::GreedyMedianBase, &weights, workers);
+        let queues: Vec<Vec<UserCost>> = sched
+            .assignments
+            .iter()
+            .map(|a| a.iter().map(|&i| round[i]).collect())
+            .collect();
+        let (r, _) = replay_cluster(&queues, gpus, per_gpu, 0);
+        total += r;
+    }
+    let secs = total as f64 / 1e9;
+    (secs, secs * gpus as f64 / 3600.0)
+}
+
+fn measure(cfg: &crate::config::Config) -> Result<RunSummary> {
+    run_benchmark(cfg, EngineVariant::PflStyle.profile(), EvalMode::None, 0)
+}
+
+/// Fig. 2 / Fig. 3 left: wall-clock vs processes per GPU, hardware
+/// pinned (1 virtual GPU).
+pub fn fig2(scale: f64, max_p: usize) -> Result<()> {
+    let mut t = TablePrinter::new(&["benchmark", "p", "wall-clock (s, sim)", "rel. to p=1"]);
+    for (name, cfg) in [
+        ("cifar10", super::speed_cifar_config(scale)),
+        ("stackoverflow", super::speed_so_config(scale)),
+        ("flair", super::speed_flair_config(scale)),
+    ] {
+        eprintln!("[fig2] measuring {name} ...");
+        let summary = measure(&cfg)?;
+        let rounds = rounds_of(&summary);
+        let norm = a100_split(&rounds);
+        let (base, _) = replay(&rounds, 1, 1);
+        let (nbase, _) = replay(&norm, 1, 1);
+        for p in 1..=max_p {
+            let (secs, _) = replay(&rounds, 1, p);
+            let (nsecs, _) = replay(&norm, 1, p);
+            t.row(vec![
+                name.into(),
+                p.to_string(),
+                format!("{secs:.2}"),
+                format!("{:.2} / {:.2} (A100-split)", secs / base, nsecs / nbase),
+            ]);
+        }
+    }
+    t.print("Fig 2: speedup from processes per GPU (virtual cluster)");
+    println!(
+        "# expectation: monotone decrease with p until device saturation; \
+         FLAIR saturates earliest (largest model => device-bound)."
+    );
+    Ok(())
+}
+
+/// Synthetic cohort costs from the fitted linear cost model (Fig. 3
+/// right panel's 50k cohort).
+fn synthetic_rounds(
+    summary: &RunSummary,
+    cohort: usize,
+    rounds: usize,
+    seed: u64,
+) -> Vec<Vec<UserCost>> {
+    let (a, b) = fit_cost_model(&summary.outcome.user_costs);
+    let dev_frac = {
+        let costs = &summary.outcome.user_costs;
+        let dev: u64 = costs.iter().map(|c| c.device_nanos).sum();
+        let tot: u64 = costs.iter().map(|c| c.nanos).sum();
+        if tot == 0 {
+            0.5
+        } else {
+            dev as f64 / tot as f64
+        }
+    };
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..rounds)
+        .map(|_| {
+            (0..cohort)
+                .map(|_| {
+                    let d = (rng.lognormal(2.5, 1.0).ceil() as usize).clamp(1, 512);
+                    let nanos = (a + b * d as f64).max(1.0) as u64;
+                    UserCost {
+                        datapoints: d,
+                        nanos,
+                        device_nanos: (nanos as f64 * dev_frac) as u64,
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Fig. 3: wall-clock + GPU-hours vs #GPUs (left: measured cohort;
+/// right: synthetic 50k cohort from the fitted cost model).
+pub fn fig3(scale: f64, big_cohort: usize) -> Result<()> {
+    let cfg = super::speed_so_config(scale);
+    eprintln!("[fig3] measuring stackoverflow ...");
+    let summary = measure(&cfg)?;
+    let rounds = a100_split(&rounds_of(&summary));
+
+    let mut t = TablePrinter::new(&["panel", "gpus", "p", "wall-clock (s, sim)", "gpu-hours (sim)"]);
+    for &gpus in &[1usize, 2, 4, 8, 16, 32] {
+        for &p in &[1usize, 3, 5] {
+            let (secs, gpu_h) = replay(&rounds, gpus, p);
+            t.row(vec![
+                "left".into(),
+                gpus.to_string(),
+                p.to_string(),
+                format!("{secs:.2}"),
+                format!("{gpu_h:.4}"),
+            ]);
+        }
+    }
+
+    let big = a100_split(&synthetic_rounds(&summary, big_cohort, rounds.len().max(1), 42));
+    for &gpus in &[8usize, 16, 32, 64] {
+        for &p in &[1usize, 5] {
+            let (secs, gpu_h) = replay(&big, gpus, p);
+            t.row(vec![
+                format!("right (cohort {big_cohort})"),
+                gpus.to_string(),
+                p.to_string(),
+                format!("{secs:.2}"),
+                format!("{gpu_h:.4}"),
+            ]);
+        }
+    }
+    t.print("Fig 3: scaling number of GPUs (virtual cluster)");
+    println!(
+        "# expectation: wall-clock falls with gpus; gpu-hours rise as load \
+         balancing loses slack (left), but stay nearly flat with a 50k \
+         cohort (right; paper: +3.6% from 16->32 GPUs)."
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_rounds() -> Vec<Vec<UserCost>> {
+        (0..4)
+            .map(|r| {
+                (0..40)
+                    .map(|i| {
+                        let d = 1 + (i * 7 + r * 3) % 50;
+                        UserCost {
+                            datapoints: d,
+                            nanos: (1000 + 100 * d) as u64,
+                            device_nanos: (70 * d) as u64,
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replay_monotone_in_p_until_saturation() {
+        let rounds = fake_rounds();
+        let (p1, _) = replay(&rounds, 1, 1);
+        let (p2, _) = replay(&rounds, 1, 2);
+        let (p5, _) = replay(&rounds, 1, 5);
+        assert!(p2 < p1, "{p2} !< {p1}");
+        assert!(p5 <= p2 + 1e-9);
+        // device-time floor: can never beat sum of device time on 1 gpu
+        let dev_floor: u64 = rounds
+            .iter()
+            .map(|r| r.iter().map(|c| c.device_nanos).sum::<u64>())
+            .sum();
+        assert!(p5 >= dev_floor as f64 / 1e9 - 1e-9);
+    }
+
+    #[test]
+    fn replay_scales_with_gpus() {
+        let rounds = fake_rounds();
+        let (g1, h1) = replay(&rounds, 1, 2);
+        let (g4, h4) = replay(&rounds, 4, 2);
+        assert!(g4 < g1);
+        // gpu-hours grow (or stay equal) when splitting across devices
+        assert!(h4 >= h1 * 0.99, "h4 {h4} vs h1 {h1}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Table 5 + Figs. 4–5: worker-scheduling studies (paper App. B.6).
+//!
+//! One measured FLAIR-style run provides per-user costs (Fig. 4a's
+//! correlation); the three schedulers are then compared on *measured*
+//! straggler gaps via the replay, exactly the quantity Table 5 reports.
+
+use anyhow::Result;
+
+use super::{cost_correlation, run_benchmark, EvalMode, RunSummary, TablePrinter};
+use crate::baselines::EngineVariant;
+use crate::fl::scheduler::{median, schedule, SchedulerKind};
+use crate::simsys::{replay_round, straggler_gap_nanos, UserCost};
+
+fn measure_flair(scale: f64) -> Result<RunSummary> {
+    let cfg = super::speed_flair_config(scale);
+    run_benchmark(&cfg, EngineVariant::PflStyle.profile(), EvalMode::None, 0)
+}
+
+fn rounds_of(summary: &RunSummary) -> Vec<Vec<UserCost>> {
+    let costs = &summary.outcome.user_costs;
+    let mut rounds = Vec::new();
+    let mut idx = 0;
+    for (_, m) in &summary.outcome.history {
+        let cohort = m.get("sys/cohort").unwrap_or(0.0) as usize;
+        if cohort == 0 || idx >= costs.len() {
+            continue;
+        }
+        let hi = (idx + cohort).min(costs.len());
+        rounds.push(costs[idx..hi].to_vec());
+        idx = hi;
+    }
+    rounds
+}
+
+/// Mean straggler gap over rounds for one scheduler (ms).
+fn mean_gap_ms(rounds: &[Vec<UserCost>], kind: SchedulerKind, workers: usize) -> f64 {
+    let mut total = 0u64;
+    for round in rounds {
+        let weights: Vec<f64> = round.iter().map(|c| c.datapoints as f64).collect();
+        let sched = schedule(kind, &weights, workers);
+        let (_, busy) = replay_round(round, &sched.assignments, 0);
+        total += straggler_gap_nanos(&busy);
+    }
+    total as f64 / rounds.len().max(1) as f64 / 1e6
+}
+
+/// Table 5: maximum straggler time per scheduling policy.
+pub fn table5(scale: f64, workers: usize) -> Result<()> {
+    eprintln!("[table5] measuring FLAIR-style run ...");
+    let summary = measure_flair(scale)?;
+    let rounds = rounds_of(&summary);
+
+    let mut t = TablePrinter::new(&["setup", "mean straggler time (ms)"]);
+    let uniform = mean_gap_ms(&rounds, SchedulerKind::Uniform, workers);
+    let greedy = mean_gap_ms(&rounds, SchedulerKind::Greedy, workers);
+    let greedy_median = mean_gap_ms(&rounds, SchedulerKind::GreedyMedianBase, workers);
+    t.row(vec!["No scheduling (uniform user split)".into(), format!("{uniform:.1}")]);
+    t.row(vec!["Greedy scheduling".into(), format!("{greedy:.1}")]);
+    t.row(vec!["Greedy scheduling +median".into(), format!("{greedy_median:.1}")]);
+    t.print("Table 5: maximum straggler time, averaged over iterations");
+    println!("# paper: 1294 / 484 / 178 ms — expect uniform >> greedy >= greedy+median");
+    Ok(())
+}
+
+/// Fig. 4a: per-user dataset size vs wall-clock scatter (TSV) + the
+/// correlation that justifies weight-by-size scheduling.
+pub fn fig4a(scale: f64) -> Result<()> {
+    eprintln!("[fig4a] measuring FLAIR-style run ...");
+    let summary = measure_flair(scale)?;
+    let costs = &summary.outcome.user_costs;
+    println!("datapoints\twall_ms\tdevice_ms");
+    for c in costs.iter().take(2000) {
+        println!(
+            "{}\t{:.3}\t{:.3}",
+            c.datapoints,
+            c.nanos as f64 / 1e6,
+            c.device_nanos as f64 / 1e6
+        );
+    }
+    println!("# correlation(datapoints, wall) = {:.4}", cost_correlation(costs));
+    Ok(())
+}
+
+/// Fig. 4b: wall-clock change as a base value is added to user weights.
+pub fn fig4b(scale: f64, workers: usize) -> Result<()> {
+    eprintln!("[fig4b] measuring FLAIR-style run ...");
+    let summary = measure_flair(scale)?;
+    let rounds = rounds_of(&summary);
+    let all_weights: Vec<f64> = rounds
+        .iter()
+        .flat_map(|r| r.iter().map(|c| c.datapoints as f64))
+        .collect();
+    let med = median(&all_weights);
+
+    let mut t = TablePrinter::new(&["base value", "total wall-clock (s, sim)", "rel. to base=0"]);
+    let mut base0 = 0.0;
+    for mult in [0.0, 0.25, 0.5, 1.0, 2.0, 4.0] {
+        let base = med * mult;
+        let mut total = 0u64;
+        for round in &rounds {
+            let weights: Vec<f64> = round.iter().map(|c| c.datapoints as f64).collect();
+            let sched = schedule(SchedulerKind::GreedyBase { base }, &weights, workers);
+            let (r, _) = replay_round(round, &sched.assignments, 50_000);
+            total += r;
+        }
+        let secs = total as f64 / 1e9;
+        if mult == 0.0 {
+            base0 = secs;
+        }
+        t.row(vec![
+            format!("{:.1} ({}x median)", base, mult),
+            format!("{secs:.3}"),
+            format!("{:.4}", secs / base0),
+        ]);
+    }
+    t.print("Fig 4b: effect of scheduling base value");
+    println!("# paper: base ≈ median is optimal (~3% over greedy, 19% over none)");
+    Ok(())
+}
+
+/// Fig. 5: per-worker weight totals for one cohort under each scheduler.
+pub fn fig5(scale: f64, workers: usize) -> Result<()> {
+    eprintln!("[fig5] measuring FLAIR-style run ...");
+    let summary = measure_flair(scale)?;
+    let rounds = rounds_of(&summary);
+    let Some(round) = rounds.iter().max_by_key(|r| r.len()) else {
+        anyhow::bail!("no rounds recorded");
+    };
+    let weights: Vec<f64> = round.iter().map(|c| c.datapoints as f64).collect();
+
+    for (label, kind) in [
+        ("a) uniform", SchedulerKind::Uniform),
+        ("b) greedy", SchedulerKind::Greedy),
+        ("c) greedy+median", SchedulerKind::GreedyMedianBase),
+    ] {
+        let sched = schedule(kind, &weights, workers);
+        let (_, busy) = replay_round(round, &sched.assignments, 0);
+        println!("\n# {label}");
+        println!("worker\tusers\ttotal_weight\twall_ms");
+        for (w, a) in sched.assignments.iter().enumerate() {
+            println!(
+                "{w}\t{}\t{:.0}\t{:.3}",
+                a.len(),
+                sched.totals[w],
+                busy[w] as f64 / 1e6
+            );
+        }
+        println!("# straggler gap: {:.3} ms", straggler_gap_nanos(&busy) as f64 / 1e6);
+    }
+    Ok(())
+}

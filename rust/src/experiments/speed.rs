@@ -1,0 +1,317 @@
+//! Tables 1–2 + Figs. 7–8: framework speed comparison.
+//!
+//! Each engine variant runs the *same* benchmark (same PJRT executables,
+//! same hyperparameters, same cohorts) under its overhead profile; the
+//! p = 1 rows are real wall-clock, the p > 1 rows are virtual-cluster
+//! replays of the measured per-user costs (marked `sim`) because this
+//! testbed has a single core. Accuracy is reported as the consistency
+//! check of paper Table 1.
+
+use anyhow::Result;
+
+use super::{run_benchmark, EvalMode, RunSummary, TablePrinter};
+use crate::baselines::EngineVariant;
+use crate::config::Config;
+use crate::fl::scheduler::{schedule, SchedulerKind};
+use crate::simsys::replay_cluster;
+
+/// One engine's measured + simulated timings.
+pub struct EngineRow {
+    pub engine: EngineVariant,
+    pub p1_wall_secs: f64,
+    /// (p, simulated wall secs)
+    pub multi: Option<(usize, f64)>,
+    /// A100-normalized wall-clock at p = 1 and at the multi-p setting:
+    /// the same cohorts replayed with the paper testbed's device time
+    /// (8.1 ms/user, Table 1) plus this engine's paper-calibrated
+    /// overhead — the column whose *ratios* reproduce Table 1's shape.
+    pub a100_p1_secs: f64,
+    pub a100_multi_secs: Option<f64>,
+    pub accuracy: Option<f64>,
+    pub summary: RunSummary,
+}
+
+/// Replay the run's cohorts in A100-normalized time: device time scales
+/// with user datapoints around the 8.1 ms/user mean; host time is the
+/// engine's paper-calibrated per-user overhead. Co-located workers
+/// serialize device time, overlap host time (why p > 1 pays off).
+fn a100_normalized(summary: &RunSummary, engine: EngineVariant, p: usize) -> f64 {
+    let costs = &summary.outcome.user_costs;
+    if costs.is_empty() {
+        return 0.0;
+    }
+    let mean_dp: f64 =
+        costs.iter().map(|c| c.datapoints as f64).sum::<f64>() / costs.len() as f64;
+    let tax = engine.paper_user_overhead_ns();
+    let mut total = 0u64;
+    let mut idx = 0usize;
+    for (_, m) in &summary.outcome.history {
+        let cohort = m.get("sys/cohort").unwrap_or(0.0) as usize;
+        if cohort == 0 || idx >= costs.len() {
+            continue;
+        }
+        let hi = (idx + cohort).min(costs.len());
+        let synthetic: Vec<crate::simsys::UserCost> = costs[idx..hi]
+            .iter()
+            .map(|c| {
+                let scale = c.datapoints as f64 / mean_dp.max(1.0);
+                let dev = (EngineVariant::A100_PFL_DEVICE_NS as f64 * scale) as u64;
+                let host = (EngineVariant::A100_PFL_HOST_NS as f64 * scale) as u64;
+                crate::simsys::UserCost {
+                    datapoints: c.datapoints,
+                    nanos: dev + host + tax,
+                    device_nanos: dev,
+                }
+            })
+            .collect();
+        idx = hi;
+        let weights: Vec<f64> = synthetic.iter().map(|c| c.datapoints as f64).collect();
+        let sched = schedule(engine.scheduler(), &weights, p);
+        let queues: Vec<Vec<crate::simsys::UserCost>> = sched
+            .assignments
+            .iter()
+            .map(|a| a.iter().map(|&i| synthetic[i]).collect())
+            .collect();
+        let (round, _) = replay_cluster(&queues, 1, p, 0);
+        total += round;
+    }
+    total as f64 / 1e9
+}
+
+/// Replay the run's cohorts onto 1 device × p workers using the engine's
+/// scheduler and its per-user overhead tax.
+fn simulate_p(summary: &RunSummary, engine: EngineVariant, p: usize) -> f64 {
+    let profile = engine.profile();
+    let costs = &summary.outcome.user_costs;
+    if costs.is_empty() {
+        return summary.wall_secs;
+    }
+    // Re-schedule each round's measured cohort. Rounds were stored
+    // contiguously; recover them via round sizes from history (cohort
+    // metric), falling back to one big round.
+    let mut total = 0u64;
+    let mut idx = 0usize;
+    for (_, m) in &summary.outcome.history {
+        let cohort = m.get("sys/cohort").unwrap_or(costs.len() as f64) as usize;
+        if cohort == 0 || idx >= costs.len() {
+            continue;
+        }
+        let hi = (idx + cohort).min(costs.len());
+        let round_costs = &costs[idx..hi];
+        idx = hi;
+        let weights: Vec<f64> = round_costs.iter().map(|c| c.datapoints as f64).collect();
+        let sched = schedule(engine.scheduler(), &weights, p);
+        let queues: Vec<Vec<crate::simsys::UserCost>> = sched
+            .assignments
+            .iter()
+            .map(|a| a.iter().map(|&i| round_costs[i]).collect())
+            .collect();
+        let (round, _) = replay_cluster(&queues, 1, p, profile.per_user_overhead_ns);
+        total += round;
+    }
+    total as f64 / 1e9
+}
+
+/// Run one engine on a config; returns measured + simulated rows.
+pub fn run_engine(cfg: &Config, engine: EngineVariant, multi_p: usize) -> Result<EngineRow> {
+    let mut cfg = cfg.clone();
+    cfg.num_workers = 1;
+    cfg.scheduler = match engine.scheduler() {
+        SchedulerKind::Uniform => "uniform".into(),
+        _ => "greedy-median".into(),
+    };
+    cfg.name = format!("{}:{}", cfg.name, engine.name());
+    let summary = run_benchmark(&cfg, engine.profile(), EvalMode::Final, 0)?;
+    let multi = if multi_p > 1 && engine.supports_multiprocess() {
+        Some((multi_p, simulate_p(&summary, engine, multi_p)))
+    } else {
+        None
+    };
+    let a100_p1_secs = a100_normalized(&summary, engine, 1);
+    let a100_multi_secs = if multi_p > 1 && engine.supports_multiprocess() {
+        Some(a100_normalized(&summary, engine, multi_p))
+    } else {
+        None
+    };
+    Ok(EngineRow {
+        engine,
+        p1_wall_secs: summary.wall_secs,
+        multi,
+        a100_p1_secs,
+        a100_multi_secs,
+        accuracy: summary.headline.as_ref().map(|(_, v)| *v),
+        summary,
+    })
+}
+
+fn print_speed_table(title: &str, rows: &[EngineRow], headline: &str) {
+    let mut t = TablePrinter::new(&[
+        "engine",
+        "p",
+        "wall-clock (s)",
+        "A100-norm (s)",
+        headline,
+        "pfl is faster (norm)",
+    ]);
+    // best pfl-style A100-normalized time (the paper compares against
+    // pfl's best p setting)
+    let pfl_best = rows
+        .iter()
+        .filter(|r| r.engine == EngineVariant::PflStyle)
+        .map(|r| r.a100_multi_secs.unwrap_or(r.a100_p1_secs).min(r.a100_p1_secs))
+        .fold(f64::INFINITY, f64::min);
+    for r in rows {
+        let acc = r
+            .accuracy
+            .map(|a| format!("{a:.4}"))
+            .unwrap_or_else(|| "-".into());
+        let speedup = |s: f64| {
+            if r.engine == EngineVariant::PflStyle {
+                "-".to_string()
+            } else {
+                format!("{:.1}x", s / pfl_best)
+            }
+        };
+        t.row(vec![
+            r.engine.name().into(),
+            "1".into(),
+            format!("{:.2}", r.p1_wall_secs),
+            format!("{:.2}", r.a100_p1_secs),
+            acc.clone(),
+            speedup(r.a100_p1_secs),
+        ]);
+        if let (Some((p, s)), Some(ns)) = (r.multi, r.a100_multi_secs) {
+            t.row(vec![
+                r.engine.name().into(),
+                format!("{p} (sim)"),
+                format!("{s:.2}"),
+                format!("{ns:.2}"),
+                acc,
+                speedup(ns),
+            ]);
+        }
+    }
+    t.print(title);
+    println!(
+        "# wall-clock: real time on this testbed (CPU device time dominates);\n\
+         # A100-norm: same cohorts replayed at the paper testbed's 8.1 ms/user\n\
+         #   device time + each engine's paper-calibrated overhead (App. D) —\n\
+         #   the ratio column reproduces Table 1's shape."
+    );
+}
+
+/// Paper Table 1: CIFAR10 speed across engines.
+pub fn table1(scale: f64, multi_p: usize) -> Result<Vec<EngineRow>> {
+    let cfg = super::speed_cifar_config(scale);
+    let mut rows = Vec::new();
+    for engine in EngineVariant::all() {
+        eprintln!("[table1] running {} ...", engine.name());
+        rows.push(run_engine(&cfg, engine, multi_p)?);
+    }
+    print_speed_table("Table 1: CIFAR10 simulation speed", &rows, "accuracy");
+    Ok(rows)
+}
+
+/// Paper Table 2: FLAIR speed (pfl 0.1 = greedy, 0.2 = greedy+median,
+/// +central DP row, vs TFF-like and Flower-like).
+pub fn table2(scale: f64, multi_p: usize) -> Result<()> {
+    let base = super::speed_flair_config(scale);
+
+    let mut t = TablePrinter::new(&["framework", "p", "wall-clock (s)", "mAP", "pfl is faster"]);
+    // pfl 0.1.0: plain greedy scheduling
+    let mut v010 = base.clone();
+    v010.scheduler = "greedy".into();
+    v010.name = "pfl-0.1.0".into();
+    eprintln!("[table2] pfl-0.1.0 (greedy) ...");
+    let r010 = run_benchmark(&v010, EngineVariant::PflStyle.profile(), EvalMode::Final, 0)?;
+
+    // pfl 0.2.0: greedy + median base (App. B.6)
+    let mut v020 = base.clone();
+    v020.scheduler = "greedy-median".into();
+    v020.name = "pfl-0.2.0".into();
+    eprintln!("[table2] pfl-0.2.0 (greedy+median) ...");
+    let r020 = run_benchmark(&v020, EngineVariant::PflStyle.profile(), EvalMode::Final, 0)?;
+
+    // pfl 0.2.0 + central DP (the "+9%" row)
+    let mut vdp = v020.clone();
+    vdp.name = "pfl-0.2.0+dp".into();
+    vdp.privacy = crate::config::preset("flair-dp").unwrap().privacy;
+    vdp.privacy.noise_cohort = (vdp.cohort_size as f64) * 25.0;
+    eprintln!("[table2] pfl-0.2.0 + central DP ...");
+    let rdp = run_benchmark(&vdp, EngineVariant::PflStyle.profile(), EvalMode::Final, 0)?;
+
+    // baselines
+    eprintln!("[table2] tff-like ...");
+    let rtff = run_engine(&base, EngineVariant::TffLike, multi_p)?;
+    eprintln!("[table2] flower-like ...");
+    let rflower = run_engine(&base, EngineVariant::FlowerLike, multi_p)?;
+
+    let pfl = r020.wall_secs;
+    let map = |s: &RunSummary| {
+        s.headline
+            .as_ref()
+            .map(|(_, v)| format!("{v:.4}"))
+            .unwrap_or_else(|| "-".into())
+    };
+    t.row(vec!["pfl-0.1.0".into(), "1".into(), format!("{:.2}", r010.wall_secs), map(&r010), "-".into()]);
+    t.row(vec!["pfl-0.2.0".into(), "1".into(), format!("{:.2}", r020.wall_secs), map(&r020), "-".into()]);
+    t.row(vec![
+        "pfl-0.2.0 +DP".into(),
+        "1".into(),
+        format!("{:.2} (+{:.0}%)", rdp.wall_secs, 100.0 * (rdp.wall_secs / pfl - 1.0)),
+        "-".into(),
+        "-".into(),
+    ]);
+    for r in [&rtff, &rflower] {
+        let (p, s) = r.multi.unwrap_or((1, r.p1_wall_secs));
+        t.row(vec![
+            r.engine.name().into(),
+            format!("{p}{}", if p > 1 { " (sim)" } else { "" }),
+            format!("{s:.2}"),
+            r.accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
+            format!("{:.1}x", s / pfl),
+        ]);
+    }
+    t.print("Table 2: FLAIR simulation speed");
+    Ok(())
+}
+
+/// Figs. 7–8: system metric timelines per engine (TSV).
+pub fn fig7_fig8(scale: f64) -> Result<()> {
+    let cfg = super::speed_cifar_config(scale);
+    for engine in EngineVariant::all() {
+        eprintln!("[fig7] running {} ...", engine.name());
+        let row = run_engine(&cfg, engine, 1)?;
+        let o = &row.summary.outcome;
+        println!("\n# engine={} (p=1)", engine.name());
+        println!("round\twall_s\trss_mb\talloc_mb\tcopy_mb\twire_mb\tdevice_busy_frac");
+        let total_busy: u64 = o.worker_busy_nanos.iter().sum();
+        let busy_frac = if o.wall_secs > 0.0 {
+            (total_busy as f64 / 1e9) / o.wall_secs
+        } else {
+            0.0
+        };
+        for r in &o.timeline.rows {
+            println!(
+                "{}\t{:.2}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.3}",
+                r.round,
+                r.wall_secs,
+                r.rss_bytes as f64 / 1e6,
+                r.loop_alloc_bytes as f64 / 1e6,
+                r.copy_bytes as f64 / 1e6,
+                o.counters.wire_bytes as f64 / 1e6,
+                busy_frac,
+            );
+        }
+        println!(
+            "# totals: users={} steps={} loop_alloc={:.1}MB copies={:.1}MB wire={:.1}MB coord_msgs={}",
+            o.counters.users_trained,
+            o.counters.steps,
+            o.counters.loop_alloc_bytes as f64 / 1e6,
+            o.counters.copy_bytes as f64 / 1e6,
+            o.counters.wire_bytes as f64 / 1e6,
+            o.counters.coordinator_msgs,
+        );
+    }
+    Ok(())
+}

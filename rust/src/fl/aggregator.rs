@@ -1,0 +1,180 @@
+//! Aggregation, decoupled from algorithms (paper App. B.2).
+//!
+//! An aggregator is a pair of operations:
+//! * `accumulate` (f): fold one user's statistics into a worker-local
+//!   partial state, and
+//! * `worker_reduce` (g): combine the partial states of all workers.
+//!
+//! They must satisfy the paper's exchange law
+//!     g({f(Sa, Δ), Sb}) = g({f(Sb, Δ), Sa}) = f(g({Sa, Sb}), Δ)
+//! so that the result is independent of how users are scheduled across
+//! workers. `property_invariants.rs` checks this with randomized inputs
+//! for every aggregator we ship.
+
+use super::stats::Statistics;
+use crate::util::add_assign;
+
+pub trait Aggregator: Send + Sync {
+    /// Fold one user's statistics into the worker-local accumulator.
+    fn accumulate(&self, acc: &mut Option<Statistics>, user: Statistics);
+
+    /// Combine worker partials (all-reduce equivalent; in-process this is
+    /// a tree reduce over the worker results).
+    fn worker_reduce(&self, partials: Vec<Statistics>) -> Option<Statistics>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Vector summation — the FL default: f(S, Δ) = S + Δ, g = Σ.
+#[derive(Debug, Default, Clone)]
+pub struct SumAggregator;
+
+impl Aggregator for SumAggregator {
+    fn accumulate(&self, acc: &mut Option<Statistics>, user: Statistics) {
+        match acc {
+            None => *acc = Some(user),
+            Some(state) => {
+                state.weight += user.weight;
+                for (key, v) in user.vecs {
+                    match state.vecs.get_mut(&key) {
+                        Some(dst) => add_assign(dst, &v),
+                        None => {
+                            state.vecs.insert(key, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn worker_reduce(&self, partials: Vec<Statistics>) -> Option<Statistics> {
+        let mut acc = None;
+        for p in partials {
+            self.accumulate(&mut acc, p);
+        }
+        acc
+    }
+
+    fn name(&self) -> &'static str {
+        "sum"
+    }
+}
+
+/// Set-union collection (paper App. B.2's second example): gathers every
+/// user's statistics individually. Useful for research on per-update
+/// inspection; vectors are stored under unique keys.
+#[derive(Debug, Default, Clone)]
+pub struct CollectAggregator;
+
+impl Aggregator for CollectAggregator {
+    fn accumulate(&self, acc: &mut Option<Statistics>, user: Statistics) {
+        let state = acc.get_or_insert_with(Statistics::default);
+        state.weight += user.weight;
+        let idx = state.vecs.len();
+        for (key, v) in user.vecs {
+            state.vecs.insert(format!("{key}#{idx}"), v);
+        }
+    }
+
+    fn worker_reduce(&self, partials: Vec<Statistics>) -> Option<Statistics> {
+        let mut out: Option<Statistics> = None;
+        for p in partials {
+            let state = out.get_or_insert_with(Statistics::default);
+            state.weight += p.weight;
+            let base = state.vecs.len();
+            for (i, (key, v)) in p.vecs.into_iter().enumerate() {
+                // re-key to keep entries unique across workers
+                let orig = key.split('#').next().unwrap_or(&key).to_string();
+                state.vecs.insert(format!("{orig}#{}", base + i), v);
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "collect"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(v: Vec<f32>, w: f64) -> Statistics {
+        Statistics::new_update(v, w)
+    }
+
+    #[test]
+    fn sum_accumulates_and_reduces() {
+        let agg = SumAggregator;
+        let mut acc = None;
+        agg.accumulate(&mut acc, stat(vec![1.0, 2.0], 1.0));
+        agg.accumulate(&mut acc, stat(vec![3.0, 4.0], 2.0));
+        let a = acc.unwrap();
+        assert_eq!(a.update(), &[4.0, 6.0]);
+        assert_eq!(a.weight, 3.0);
+
+        let reduced = agg
+            .worker_reduce(vec![a, stat(vec![1.0, 1.0], 1.0)])
+            .unwrap();
+        assert_eq!(reduced.update(), &[5.0, 7.0]);
+        assert_eq!(reduced.weight, 4.0);
+    }
+
+    #[test]
+    fn sum_exchange_law_simple() {
+        let agg = SumAggregator;
+        let sa = stat(vec![1.0, 0.0], 1.0);
+        let sb = stat(vec![0.0, 1.0], 1.0);
+        let d = stat(vec![2.0, 2.0], 1.0);
+
+        // g({f(Sa, Δ), Sb})
+        let mut left = Some(sa.clone());
+        agg.accumulate(&mut left, d.clone());
+        let left = agg.worker_reduce(vec![left.unwrap(), sb.clone()]).unwrap();
+
+        // f(g({Sa, Sb}), Δ)
+        let mut right = agg.worker_reduce(vec![sa, sb]);
+        agg.accumulate(&mut right, d);
+        let right = right.unwrap();
+
+        assert_eq!(left.update(), right.update());
+        assert_eq!(left.weight, right.weight);
+    }
+
+    #[test]
+    fn sum_handles_disjoint_keys() {
+        let agg = SumAggregator;
+        let mut a = stat(vec![1.0], 1.0);
+        a.insert("extra", vec![5.0]);
+        let b = stat(vec![2.0], 1.0);
+        let r = agg.worker_reduce(vec![a, b]).unwrap();
+        assert_eq!(r.update(), &[3.0]);
+        assert_eq!(r.get("extra").unwrap(), &[5.0]);
+    }
+
+    #[test]
+    fn collect_keeps_individuals() {
+        let agg = CollectAggregator;
+        let mut acc = None;
+        agg.accumulate(&mut acc, stat(vec![1.0], 1.0));
+        agg.accumulate(&mut acc, stat(vec![2.0], 1.0));
+        let a = acc.unwrap();
+        assert_eq!(a.vecs.len(), 2);
+        let r = agg
+            .worker_reduce(vec![a, {
+                let mut acc2 = None;
+                agg.accumulate(&mut acc2, stat(vec![3.0], 1.0));
+                acc2.unwrap()
+            }])
+            .unwrap();
+        assert_eq!(r.vecs.len(), 3);
+        assert_eq!(r.weight, 3.0);
+    }
+
+    #[test]
+    fn empty_reduce_is_none() {
+        assert!(SumAggregator.worker_reduce(vec![]).is_none());
+        assert!(CollectAggregator.worker_reduce(vec![]).is_none());
+    }
+}

@@ -1,0 +1,601 @@
+//! Federated algorithms (paper App. B.1 "Algorithm" + Alg. 2).
+//!
+//! An algorithm's three responsibilities, verbatim from the paper:
+//! construct the per-iteration [`CentralContext`]s, define the local
+//! optimization (`simulate_one_user`, executed concurrently on worker
+//! replicas), and consume the aggregated statistics to update the central
+//! model. Everything orthogonal to learning (aggregation, DP,
+//! compression) lives in other components that mix and match with these.
+//!
+//! The unified local-step artifact (L2) lowers FedAvg / FedProx / SCAFFOLD
+//! into one executable per model: g = ∇L + µ·(θ′−θ) + c_diff, so switching
+//! algorithms changes only the Rust-side bookkeeping, never the HLO.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::central_opt::CentralOptimizer;
+use super::context::{CentralContext, LocalParams, Population};
+use super::metrics::Metrics;
+use super::model::Model;
+use super::stats::{Statistics, C_DELTA};
+use crate::data::UserData;
+
+/// Shared run schedule: how long to train, how big the cohorts are, and
+/// the resolved-per-iteration local parameters. Constructed from the
+/// config presets (paper Tables 8–11).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Total central iterations T.
+    pub iterations: u64,
+    /// Training cohort size C.
+    pub cohort_size: usize,
+    /// Federated-eval cohort size (0 disables Val contexts).
+    pub val_cohort_size: usize,
+    /// Evaluate every τ iterations.
+    pub eval_every: u64,
+    /// Base local parameters (lr may be overridden by a schedule).
+    pub local: LocalParams,
+    /// Central learning rate (resolved per iteration via warmup).
+    pub central_lr: f64,
+    /// Central lr linear-warmup iterations (paper Table 9).
+    pub central_lr_warmup: u64,
+    /// Population size (for SCAFFOLD's c-update scaling).
+    pub population: usize,
+    /// Seed stream.
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            iterations: 100,
+            cohort_size: 50,
+            val_cohort_size: 0,
+            eval_every: 10,
+            local: LocalParams::default(),
+            central_lr: 1.0,
+            central_lr_warmup: 0,
+            population: 1000,
+            seed: 0,
+        }
+    }
+}
+
+impl RunSpec {
+    pub fn central_lr_at(&self, t: u64) -> f64 {
+        if self.central_lr_warmup == 0 || t >= self.central_lr_warmup {
+            self.central_lr
+        } else {
+            self.central_lr * (t + 1) as f64 / self.central_lr_warmup as f64
+        }
+    }
+
+    fn base_contexts(&self, t: u64, local: LocalParams) -> Vec<CentralContext> {
+        if t >= self.iterations {
+            return Vec::new(); // signal: training complete
+        }
+        let mut ctxs =
+            vec![CentralContext::train(t, self.cohort_size, local, self.seed.wrapping_add(t))];
+        if self.val_cohort_size > 0 && self.eval_every > 0 && t % self.eval_every == 0 {
+            ctxs.push(CentralContext::eval(
+                t,
+                self.val_cohort_size,
+                self.seed.wrapping_add(t) ^ EVAL_SEED,
+            ));
+        }
+        ctxs
+    }
+}
+
+const EVAL_SEED: u64 = 0x45564131;
+
+/// The FederatedAlgorithm interface (paper App. B.1). Methods take
+/// `&self`; algorithm state that evolves across iterations (optimizer
+/// moments, adaptive µ, SCAFFOLD control variates) lives behind mutexes
+/// so `simulate_one_user` can run concurrently on worker replicas.
+pub trait FederatedAlgorithm: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Contexts for iteration t; empty signals that training should end
+    /// (paper Alg. 1 line 4).
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext>;
+
+    /// Local optimization (or evaluation) for one user. Runs on a worker
+    /// replica with that worker's model, already loaded with the current
+    /// central state.
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)>;
+
+    /// Consume the aggregated statistics (one per train context) and
+    /// update the central state in place.
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &CentralContext,
+        aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()>;
+}
+
+/// Evaluation-only handling shared by all algorithms: Val-population
+/// contexts run local evaluation and return metrics, no statistics.
+fn eval_user(model: &mut dyn Model, data: &UserData) -> Result<(Option<Statistics>, Metrics)> {
+    let mut m = model.evaluate(data, None)?;
+    // per-user view of the same quantity (paper App. B.4)
+    let loss = m.get("loss").unwrap_or(0.0);
+    m.add_per_user("loss/per-user", loss);
+    Ok((None, m))
+}
+
+/// Train-side shared path: run the unified local step and wrap the delta.
+fn train_user(
+    model: &mut dyn Model,
+    uid: usize,
+    data: &UserData,
+    ctx: &CentralContext,
+    mu: f32,
+    c_diff: Option<&[f32]>,
+) -> Result<(super::model::TrainOutput, Metrics)> {
+    let mut local = ctx.local.clone();
+    local.mu = mu;
+    let seed = ctx.seed ^ (uid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let out = model.train_local(data, &local, c_diff, seed)?;
+    let mut m = Metrics::new();
+    m.add_central("train/loss", out.loss_sum, out.wsum);
+    m.add_central("train/stat", out.stat_sum, out.wsum);
+    m.add_central("train/steps", out.steps as f64, 1.0);
+    Ok((out, m))
+}
+
+// ---------------------------------------------------------------------
+// FedAvg
+// ---------------------------------------------------------------------
+
+/// Federated averaging (McMahan et al. [60]; paper Alg. 2), with a
+/// pluggable central optimizer (FedAdam etc.).
+pub struct FedAvg {
+    pub spec: RunSpec,
+    opt: Mutex<Box<dyn CentralOptimizer>>,
+}
+
+impl FedAvg {
+    pub fn new(spec: RunSpec, opt: Box<dyn CentralOptimizer>) -> Self {
+        FedAvg { spec, opt: Mutex::new(opt) }
+    }
+}
+
+impl FederatedAlgorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        self.spec.base_contexts(t, self.spec.local.clone())
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            return eval_user(model, data);
+        }
+        let (out, m) = train_user(model, uid, data, ctx, 0.0, None)?;
+        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+    }
+
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &CentralContext,
+        mut aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        aggregate.average_in_place();
+        let lr = self.spec.central_lr_at(ctx.iteration);
+        self.opt.lock().unwrap().apply(central, aggregate.update(), lr);
+        metrics.add_central("central/update-norm", crate::util::l2_norm(aggregate.update()), 1.0);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// FedProx / AdaFedProx
+// ---------------------------------------------------------------------
+
+/// FedProx (Li et al. [52]): FedAvg plus a proximal term µ‖θ′−θ‖²/2 in
+/// the local objective — already lowered into the unified artifact, so
+/// this is FedAvg with µ ≠ 0.
+pub struct FedProx {
+    pub spec: RunSpec,
+    pub mu: f32,
+    opt: Mutex<Box<dyn CentralOptimizer>>,
+}
+
+impl FedProx {
+    pub fn new(spec: RunSpec, mu: f32, opt: Box<dyn CentralOptimizer>) -> Self {
+        FedProx { spec, mu, opt: Mutex::new(opt) }
+    }
+}
+
+impl FederatedAlgorithm for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        let mut local = self.spec.local.clone();
+        local.mu = self.mu;
+        self.spec.base_contexts(t, local)
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            return eval_user(model, data);
+        }
+        let (out, m) = train_user(model, uid, data, ctx, ctx.local.mu, None)?;
+        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+    }
+
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &CentralContext,
+        mut aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        aggregate.average_in_place();
+        let lr = self.spec.central_lr_at(ctx.iteration);
+        self.opt.lock().unwrap().apply(central, aggregate.update(), lr);
+        metrics.add_central("central/update-norm", crate::util::l2_norm(aggregate.update()), 1.0);
+        metrics.add_central("fedprox/mu", ctx.local.mu as f64, 1.0);
+        Ok(())
+    }
+}
+
+/// FedProx with adaptive µ (paper Table 3 "AdaFedProx", rule from [52]
+/// App. C.3.3): increase µ when the aggregated training loss goes up,
+/// decrease it after `patience` consecutive decreases.
+pub struct AdaFedProx {
+    pub spec: RunSpec,
+    pub step: f32,
+    pub max_mu: f32,
+    pub patience: u32,
+    opt: Mutex<Box<dyn CentralOptimizer>>,
+    state: Mutex<AdaState>,
+}
+
+#[derive(Debug, Default)]
+struct AdaState {
+    mu: f32,
+    prev_loss: Option<f64>,
+    decreases: u32,
+}
+
+impl AdaFedProx {
+    pub fn new(spec: RunSpec, opt: Box<dyn CentralOptimizer>) -> Self {
+        AdaFedProx {
+            spec,
+            step: 0.1,
+            max_mu: 1.0,
+            patience: 5,
+            opt: Mutex::new(opt),
+            state: Mutex::new(AdaState::default()),
+        }
+    }
+
+    pub fn current_mu(&self) -> f32 {
+        self.state.lock().unwrap().mu
+    }
+}
+
+impl FederatedAlgorithm for AdaFedProx {
+    fn name(&self) -> &'static str {
+        "adafedprox"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        let mut local = self.spec.local.clone();
+        local.mu = self.current_mu();
+        self.spec.base_contexts(t, local)
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            return eval_user(model, data);
+        }
+        let (out, m) = train_user(model, uid, data, ctx, ctx.local.mu, None)?;
+        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+    }
+
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &CentralContext,
+        mut aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        aggregate.average_in_place();
+        let lr = self.spec.central_lr_at(ctx.iteration);
+        self.opt.lock().unwrap().apply(central, aggregate.update(), lr);
+
+        // Adapt µ on the aggregated train loss trend.
+        let loss = metrics.get("train/loss").unwrap_or(0.0);
+        let mut st = self.state.lock().unwrap();
+        if let Some(prev) = st.prev_loss {
+            if loss > prev {
+                st.mu = (st.mu + self.step).min(self.max_mu);
+                st.decreases = 0;
+            } else {
+                st.decreases += 1;
+                if st.decreases >= self.patience {
+                    st.mu = (st.mu - self.step).max(0.0);
+                    st.decreases = 0;
+                }
+            }
+        }
+        st.prev_loss = Some(loss);
+        metrics.add_central("fedprox/mu", st.mu as f64, 1.0);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// SCAFFOLD
+// ---------------------------------------------------------------------
+
+/// SCAFFOLD (Karimireddy et al. [42]) with option-II control variates:
+///
+/// * local step uses c_diff = c − c_u (lowered into the unified artifact),
+/// * after K local steps, c_u′ = c_u − c + Δ/(K·η_l),
+/// * the aggregated c-deltas update c: c ← c + (|S|/N)·avg(c_delta).
+///
+/// Per-user control variates are model-sized; memory is O(participating
+/// users × params), the known cost of stateful SCAFFOLD in cross-device
+/// settings (one reason the paper finds it underperforms there).
+pub struct Scaffold {
+    pub spec: RunSpec,
+    opt: Mutex<Box<dyn CentralOptimizer>>,
+    c_global: Mutex<Vec<f32>>,
+    c_users: Mutex<HashMap<usize, Vec<f32>>>,
+}
+
+impl Scaffold {
+    pub fn new(spec: RunSpec, opt: Box<dyn CentralOptimizer>) -> Self {
+        Scaffold {
+            spec,
+            opt: Mutex::new(opt),
+            c_global: Mutex::new(Vec::new()),
+            c_users: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Number of users with stored control variates (diagnostics).
+    pub fn tracked_users(&self) -> usize {
+        self.c_users.lock().unwrap().len()
+    }
+}
+
+impl FederatedAlgorithm for Scaffold {
+    fn name(&self) -> &'static str {
+        "scaffold"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        self.spec.base_contexts(t, self.spec.local.clone())
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            return eval_user(model, data);
+        }
+        let n = model.param_count();
+        // c_diff = c − c_u (both default to zeros before first touch)
+        let mut c_diff = vec![0.0f32; n];
+        {
+            let cg = self.c_global.lock().unwrap();
+            if !cg.is_empty() {
+                c_diff.copy_from_slice(&cg);
+            }
+        }
+        let c_u_old: Option<Vec<f32>> = self.c_users.lock().unwrap().get(&uid).cloned();
+        if let Some(cu) = &c_u_old {
+            for (d, u) in c_diff.iter_mut().zip(cu) {
+                *d -= *u;
+            }
+        }
+
+        let (out, m) = train_user(model, uid, data, ctx, 0.0, Some(&c_diff))?;
+        let k = out.steps.max(1) as f32;
+        let inv = 1.0 / (k * ctx.local.lr);
+
+        // c_u' = c_u − c + Δ/(K·lr); c_delta = c_u' − c_u = Δ/(K·lr) − c
+        // Reuse c_diff's buffer for c_delta = Δ·inv − c = Δ·inv − (c_diff + c_u)
+        let mut c_delta = c_diff;
+        {
+            let cg = self.c_global.lock().unwrap();
+            for i in 0..n {
+                let c_i = if cg.is_empty() { 0.0 } else { cg[i] };
+                c_delta[i] = out.update[i] * inv - c_i;
+            }
+        }
+        // store c_u' = c_u + c_delta
+        {
+            let mut users = self.c_users.lock().unwrap();
+            let cu = users.entry(uid).or_insert_with(|| vec![0.0; n]);
+            crate::util::add_assign(cu, &c_delta);
+        }
+
+        let mut stats = Statistics::new_update(out.update, 1.0);
+        stats.insert(C_DELTA, c_delta);
+        Ok((Some(stats), m))
+    }
+
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &CentralContext,
+        mut aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        let cohort = aggregate.weight.max(1.0);
+        aggregate.average_in_place();
+        let lr = self.spec.central_lr_at(ctx.iteration);
+        self.opt.lock().unwrap().apply(central, aggregate.update(), lr);
+
+        if let Some(c_delta_avg) = aggregate.get(C_DELTA) {
+            let scale = (cohort / self.spec.population.max(1) as f64) as f32;
+            let mut cg = self.c_global.lock().unwrap();
+            if cg.is_empty() {
+                *cg = vec![0.0; c_delta_avg.len()];
+            }
+            crate::util::axpy(&mut cg, scale, c_delta_avg);
+            metrics.add_central("scaffold/c-norm", crate::util::l2_norm(&cg), 1.0);
+        }
+        metrics.add_central("central/update-norm", crate::util::l2_norm(aggregate.update()), 1.0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::central_opt::Sgd;
+    use crate::fl::aggregator::Aggregator as _;
+
+    fn spec(iters: u64) -> RunSpec {
+        RunSpec { iterations: iters, cohort_size: 4, val_cohort_size: 2, eval_every: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn contexts_end_training() {
+        let alg = FedAvg::new(spec(3), Box::new(Sgd));
+        assert!(!alg.next_contexts(2).is_empty());
+        assert!(alg.next_contexts(3).is_empty());
+    }
+
+    #[test]
+    fn eval_context_every_tau() {
+        let alg = FedAvg::new(spec(10), Box::new(Sgd));
+        assert_eq!(alg.next_contexts(0).len(), 2); // train + eval
+        assert_eq!(alg.next_contexts(1).len(), 1);
+        assert_eq!(alg.next_contexts(2).len(), 2);
+    }
+
+    #[test]
+    fn fedavg_average_and_apply() {
+        let alg = FedAvg::new(spec(10), Box::new(Sgd));
+        let mut central = vec![1.0f32, 1.0];
+        let ctx = alg.next_contexts(0).remove(0);
+        // two users contributed deltas [1,0] and [0,1]
+        let agg = Statistics::new_update(vec![1.0, 0.0], 1.0);
+        crate::fl::SumAggregator.accumulate(
+            &mut Some(agg.clone()),
+            Statistics::new_update(vec![0.0, 1.0], 1.0),
+        );
+        // do it properly through the aggregator:
+        let mut acc = None;
+        crate::fl::SumAggregator.accumulate(&mut acc, agg);
+        crate::fl::SumAggregator.accumulate(&mut acc, Statistics::new_update(vec![0.0, 1.0], 1.0));
+        let mut metrics = Metrics::new();
+        alg.process_aggregated(&mut central, &ctx, acc.unwrap(), &mut metrics).unwrap();
+        // avg delta = [0.5, 0.5]; sgd lr=1 -> central = [0.5, 0.5]
+        assert_eq!(central, vec![0.5, 0.5]);
+        assert!(metrics.get("central/update-norm").is_some());
+    }
+
+    #[test]
+    fn fedprox_contexts_carry_mu() {
+        let alg = FedProx::new(spec(5), 0.25, Box::new(Sgd));
+        let c = alg.next_contexts(0);
+        assert_eq!(c[0].local.mu, 0.25);
+    }
+
+    #[test]
+    fn adafedprox_mu_adapts_upward_on_loss_increase() {
+        let alg = AdaFedProx::new(spec(100), Box::new(Sgd));
+        let mut central = vec![0.0f32; 2];
+        for (t, loss) in [(0u64, 1.0f64), (1, 2.0), (2, 3.0)] {
+            let ctx = alg.next_contexts(t).remove(0);
+            let mut m = Metrics::new();
+            m.add_central("train/loss", loss, 1.0);
+            alg.process_aggregated(
+                &mut central,
+                &ctx,
+                Statistics::new_update(vec![0.0, 0.0], 1.0),
+                &mut m,
+            )
+            .unwrap();
+        }
+        assert!(alg.current_mu() >= 0.2 - 1e-6, "mu = {}", alg.current_mu());
+    }
+
+    #[test]
+    fn adafedprox_mu_decays_after_patience() {
+        let alg = AdaFedProx::new(spec(100), Box::new(Sgd));
+        // force mu up once
+        {
+            let mut st = alg.state.lock().unwrap();
+            st.mu = 0.5;
+            st.prev_loss = Some(10.0);
+        }
+        let mut central = vec![0.0f32; 1];
+        for t in 0..(alg.patience as u64 + 1) {
+            let ctx = alg.next_contexts(t).remove(0);
+            let mut m = Metrics::new();
+            m.add_central("train/loss", 1.0 - t as f64 * 0.01, 1.0);
+            alg.process_aggregated(
+                &mut central,
+                &ctx,
+                Statistics::new_update(vec![0.0], 1.0),
+                &mut m,
+            )
+            .unwrap();
+        }
+        assert!(alg.current_mu() < 0.5);
+    }
+
+    #[test]
+    fn scaffold_c_update_scales_by_participation() {
+        let spec = RunSpec { population: 10, ..spec(5) };
+        let alg = Scaffold::new(spec, Box::new(Sgd));
+        let ctx = alg.next_contexts(0).remove(0);
+        let mut central = vec![0.0f32; 2];
+        let mut agg = Statistics::new_update(vec![0.0, 0.0], 2.0);
+        agg.insert(C_DELTA, vec![10.0, 0.0]);
+        let mut m = Metrics::new();
+        alg.process_aggregated(&mut central, &ctx, agg, &mut m).unwrap();
+        // avg c_delta = [5, 0]; scale = 2/10 -> c = [1, 0]
+        let cg = alg.c_global.lock().unwrap();
+        assert_eq!(&*cg, &[1.0, 0.0]);
+    }
+}

@@ -1,0 +1,481 @@
+//! `SimulatedBackend` — the generalized PFL simulation loop, a faithful
+//! implementation of paper Algorithm 1:
+//!
+//! ```text
+//! repeat
+//!   (C, θ') ← alg.get_next_central_contexts(θ, t)      // next_contexts
+//!   for each context c_i ∈ C:
+//!     sample cohort, distribute across workers          // scheduler
+//!     workers: simulate_one_user → postprocess_one_user → accumulate
+//!     Δ ← worker_reduce(partials)                        // all-reduce
+//!     for p in reversed(P): Δ ← p.postprocess_server(Δ) // DP noise etc.
+//!   θ ← alg.process_aggregated_statistics_all_contexts
+//!   for b in callbacks: stop |= b.after_central_iteration(θ, t)
+//! until stop
+//! ```
+//!
+//! The backend simulates only the *computation* of FL: the only
+//! synchronization is the per-round reduce over worker partials (§3.1).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::aggregator::Aggregator;
+use super::algorithm::FederatedAlgorithm;
+use super::callbacks::Callback;
+use super::context::{CentralContext, Population};
+use super::metrics::Metrics;
+use super::model::RustClip;
+use super::postprocess::{Postprocessor, PpEnv};
+use super::scheduler::{schedule, SchedulerKind};
+use super::worker::{ModelFactory, WorkerPool, WorkerShared};
+use crate::baselines::OverheadProfile;
+use crate::data::{CohortSampler, FederatedDataset, MinibatchSampler};
+use crate::simsys::{current_rss_bytes, Counters, Timeline, TimelineRow, UserCost};
+use crate::util::rng::Rng;
+
+/// Everything a simulation run needs besides the algorithm + model.
+pub struct RunParams {
+    /// Worker replica count (the paper's g·p worker processes).
+    pub num_workers: usize,
+    pub scheduler: SchedulerKind,
+    pub profile: OverheadProfile,
+    pub seed: u64,
+    /// Print a metrics line every k rounds (0 = silent).
+    pub log_every: u64,
+    /// Which clip kernel the per-user DP path uses. `Hlo` is the paper's
+    /// on-device design (no host transfer on a real accelerator); on CPU
+    /// PJRT the buffers are host-side anyway and the interpret-mode
+    /// Pallas kernel is ~24x slower than the native path (§Perf), so the
+    /// CPU default is `Rust`. Both are bit-compatible (tested).
+    pub clip_backend: ClipBackend,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClipBackend {
+    Hlo,
+    Rust,
+}
+
+impl Default for RunParams {
+    fn default() -> Self {
+        RunParams {
+            num_workers: 1,
+            scheduler: SchedulerKind::GreedyMedianBase,
+            profile: OverheadProfile::default(),
+            seed: 0,
+            log_every: 0,
+            clip_backend: ClipBackend::Rust,
+        }
+    }
+}
+
+/// The result of a full simulation run.
+pub struct RunOutcome {
+    /// Final central model parameters.
+    pub central: Vec<f32>,
+    /// Central iterations completed.
+    pub rounds: u64,
+    pub wall_secs: f64,
+    /// Per-round metrics (train + namespaced val + sys).
+    pub history: Vec<(u64, Metrics)>,
+    /// Merged system counters across all workers and rounds.
+    pub counters: Counters,
+    /// Per-round timeline (Figs. 7–8 output format).
+    pub timeline: Timeline,
+    /// Per-round wall-clock nanos.
+    pub round_nanos: Vec<u64>,
+    /// Per-round measured straggler gap (Table 5 / Fig. 5).
+    pub straggler_nanos: Vec<u64>,
+    /// Per-user (datapoints, nanos) records sampled across the run
+    /// (Fig. 4a; virtual-cluster replay input).
+    pub user_costs: Vec<UserCost>,
+    /// Per-worker busy nanos summed over rounds (GPU-hours analogue).
+    pub worker_busy_nanos: Vec<u64>,
+}
+
+impl RunOutcome {
+    /// Last value of a metric across the history.
+    pub fn final_metric(&self, name: &str) -> Option<f64> {
+        self.history.iter().rev().find_map(|(_, m)| m.get(name))
+    }
+
+    /// Full series of a metric: (round, value).
+    pub fn series(&self, name: &str) -> Vec<(u64, f64)> {
+        self.history
+            .iter()
+            .filter_map(|(t, m)| m.get(name).map(|v| (*t, v)))
+            .collect()
+    }
+}
+
+/// The simulation backend (paper App. B.1 "Backend"; the only concrete
+/// backend, as in pfl-research's initial release).
+pub struct SimulatedBackend {
+    dataset: Arc<dyn FederatedDataset>,
+    val_dataset: Arc<dyn FederatedDataset>,
+    algorithm: Arc<dyn FederatedAlgorithm>,
+    aggregator: Arc<dyn Aggregator>,
+    postprocessors: Arc<Vec<Box<dyn Postprocessor>>>,
+    sampler: Box<dyn CohortSampler>,
+    pool: WorkerPool,
+    params: RunParams,
+}
+
+pub struct BackendBuilder {
+    pub dataset: Arc<dyn FederatedDataset>,
+    pub val_dataset: Option<Arc<dyn FederatedDataset>>,
+    pub algorithm: Arc<dyn FederatedAlgorithm>,
+    pub aggregator: Option<Arc<dyn Aggregator>>,
+    pub postprocessors: Vec<Box<dyn Postprocessor>>,
+    pub sampler: Option<Box<dyn CohortSampler>>,
+    pub factory: ModelFactory,
+    pub params: RunParams,
+}
+
+impl BackendBuilder {
+    pub fn new(
+        dataset: Arc<dyn FederatedDataset>,
+        algorithm: Arc<dyn FederatedAlgorithm>,
+        factory: ModelFactory,
+    ) -> Self {
+        BackendBuilder {
+            dataset,
+            val_dataset: None,
+            algorithm,
+            aggregator: None,
+            postprocessors: Vec::new(),
+            sampler: None,
+            factory,
+            params: RunParams::default(),
+        }
+    }
+
+    pub fn postprocessor(mut self, pp: Box<dyn Postprocessor>) -> Self {
+        self.postprocessors.push(pp);
+        self
+    }
+
+    pub fn params(mut self, params: RunParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn val_dataset(mut self, ds: Arc<dyn FederatedDataset>) -> Self {
+        self.val_dataset = Some(ds);
+        self
+    }
+
+    pub fn sampler(mut self, s: Box<dyn CohortSampler>) -> Self {
+        self.sampler = Some(s);
+        self
+    }
+
+    pub fn build(self) -> Result<SimulatedBackend> {
+        let postprocessors = Arc::new(self.postprocessors);
+        let shared = WorkerShared {
+            dataset: self.dataset.clone(),
+            algorithm: self.algorithm.clone(),
+            postprocessors: postprocessors.clone(),
+            aggregator: self
+                .aggregator
+                .clone()
+                .unwrap_or_else(|| Arc::new(super::aggregator::SumAggregator)),
+            factory: self.factory,
+            profile: self.params.profile.clone(),
+            seed: self.params.seed,
+            use_hlo_clip: self.params.clip_backend == ClipBackend::Hlo,
+        };
+        let pool = WorkerPool::new(self.params.num_workers, shared)?;
+        Ok(SimulatedBackend {
+            val_dataset: self.val_dataset.unwrap_or_else(|| self.dataset.clone()),
+            dataset: self.dataset,
+            algorithm: self.algorithm,
+            aggregator: self
+                .aggregator
+                .unwrap_or_else(|| Arc::new(super::aggregator::SumAggregator)),
+            postprocessors,
+            sampler: self.sampler.unwrap_or_else(|| Box::new(MinibatchSampler { cohort_size: 0 })),
+            pool,
+            params: self.params,
+        })
+    }
+}
+
+impl SimulatedBackend {
+    /// Run the full simulation from `central` (paper Alg. 1). Callbacks
+    /// run on this thread after every central iteration and may stop
+    /// training early.
+    pub fn run(
+        &mut self,
+        mut central: Vec<f32>,
+        callbacks: &mut [Box<dyn Callback>],
+    ) -> Result<RunOutcome> {
+        let start = Instant::now();
+        let mut server_rng = Rng::seed_from_u64(self.params.seed ^ 0x5E12_4E4D);
+        let mut outcome = RunOutcome {
+            central: Vec::new(),
+            rounds: 0,
+            wall_secs: 0.0,
+            history: Vec::new(),
+            counters: Counters::default(),
+            timeline: Timeline::default(),
+            round_nanos: Vec::new(),
+            straggler_nanos: Vec::new(),
+            user_costs: Vec::new(),
+            worker_busy_nanos: vec![0; self.pool.num_workers],
+        };
+
+        let mut t: u64 = 0;
+        'outer: loop {
+            let contexts = self.algorithm.next_contexts(t);
+            if contexts.is_empty() {
+                break; // the algorithm signaled training should end
+            }
+            let round_start = Instant::now();
+            let mut round_metrics = Metrics::new();
+
+            for ctx in &contexts {
+                let (agg, metrics) = self
+                    .run_context(ctx, &central, &mut server_rng, &mut outcome)
+                    .with_context(|| format!("iteration {t} ({:?})", ctx.population))?;
+                match ctx.population {
+                    Population::Train => {
+                        round_metrics.merge(&metrics);
+                        if let Some(agg) = agg {
+                            self.algorithm
+                                .process_aggregated(&mut central, ctx, agg, &mut round_metrics)?;
+                        }
+                    }
+                    Population::Val => round_metrics.merge(&metrics.prefixed("val/")),
+                }
+            }
+
+            let round_nanos = round_start.elapsed().as_nanos() as u64;
+            outcome.round_nanos.push(round_nanos);
+            round_metrics.add_central("sys/round-secs", round_nanos as f64 / 1e9, 1.0);
+
+            // full-participation bookkeeping tax (FedScale-like engines):
+            // O(population) work per round.
+            if self.params.profile.full_participation_bookkeeping {
+                let mut acc = 0u64;
+                for uid in 0..self.dataset.num_users() {
+                    acc = acc.wrapping_add(self.dataset.user_len(uid) as u64);
+                }
+                std::hint::black_box(acc);
+            }
+            if self.params.profile.checkpoint_every_round {
+                // hard-coded per-round checkpointing (FedScale): serialize
+                // the model to a scratch file.
+                let path = std::env::temp_dir().join("pfl_baseline_ckpt.bin");
+                let mut buf = Vec::with_capacity(central.len() * 4);
+                for x in &central {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+                let _ = std::fs::write(path, &buf);
+            }
+
+            let mut stop = false;
+            for cb in callbacks.iter_mut() {
+                stop |= cb.after_central_iteration(&central, t, &mut round_metrics)?;
+            }
+
+            if self.params.log_every > 0 && t % self.params.log_every == 0 {
+                println!("[round {t}] {round_metrics}");
+            }
+            outcome.timeline.push(TimelineRow {
+                round: t,
+                wall_secs: start.elapsed().as_secs_f64(),
+                rss_bytes: current_rss_bytes(),
+                busy_frac: 0.0, // filled by callers that track device busy
+                loop_alloc_bytes: outcome.counters.loop_alloc_bytes,
+                copy_bytes: outcome.counters.copy_bytes,
+            });
+            outcome.history.push((t, round_metrics));
+            outcome.rounds = t + 1;
+            t += 1;
+            if stop {
+                break 'outer;
+            }
+        }
+
+        for cb in callbacks.iter_mut() {
+            cb.on_train_end(&central)?;
+        }
+        outcome.wall_secs = start.elapsed().as_secs_f64();
+        outcome.central = central;
+        Ok(outcome)
+    }
+
+    /// Sample + schedule + train one context's cohort, reduce the worker
+    /// partials and apply the server-side postprocessors (reversed).
+    fn run_context(
+        &self,
+        ctx: &CentralContext,
+        central: &[f32],
+        server_rng: &mut Rng,
+        outcome: &mut RunOutcome,
+    ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
+        let dataset = match ctx.population {
+            Population::Train => &self.dataset,
+            Population::Val => &self.val_dataset,
+        };
+        // --- sample the cohort (with the postprocessors' participation
+        // filters, e.g. banded-MF min-separation) -----------------------
+        let mut cohort = if ctx.cohort_size > 0 {
+            MinibatchSampler { cohort_size: ctx.cohort_size }.sample(
+                dataset.num_users(),
+                ctx.iteration,
+                ctx.seed,
+            )
+        } else {
+            self.sampler.sample(dataset.num_users(), ctx.iteration, ctx.seed)
+        };
+        if ctx.population == Population::Train {
+            cohort.retain(|&uid| {
+                self.postprocessors.iter().all(|p| p.may_participate(uid, ctx.iteration))
+            });
+            for &uid in &cohort {
+                for p in self.postprocessors.iter() {
+                    p.record_participation(uid, ctx.iteration);
+                }
+            }
+        }
+
+        // --- greedy load balancing (App. B.6) --------------------------
+        let weights: Vec<f64> = cohort.iter().map(|&u| dataset.user_len(u) as f64).collect();
+        let sched = schedule(self.params.scheduler, &weights, self.pool.num_workers);
+        let assignments: Vec<Vec<usize>> = sched
+            .assignments
+            .iter()
+            .map(|idxs| idxs.iter().map(|&i| cohort[i]).collect())
+            .collect();
+
+        // --- distribute + train ----------------------------------------
+        let central_arc = Arc::new(central.to_vec());
+        let results = self.pool.run_round(ctx, central_arc, assignments)?;
+
+        let mut metrics = Metrics::new();
+        let mut partials = Vec::with_capacity(results.len());
+        let mut worker_busy: Vec<u64> = Vec::with_capacity(results.len());
+        for r in results {
+            metrics.merge(&r.metrics);
+            outcome.counters.merge(&r.counters);
+            let busy: u64 = r.costs.iter().map(|c| c.nanos).sum();
+            worker_busy.push(busy);
+            outcome.worker_busy_nanos[r.worker] += busy;
+            // keep a bounded sample of user costs for Fig. 4a
+            if outcome.user_costs.len() < 100_000 {
+                outcome.user_costs.extend(&r.costs);
+            }
+            if let Some(p) = r.partial {
+                partials.push(p);
+            }
+        }
+        if ctx.population == Population::Train {
+            let gap = crate::simsys::straggler_gap_nanos(&worker_busy);
+            outcome.straggler_nanos.push(gap);
+            metrics.add_central("sys/straggler-secs", gap as f64 / 1e9, 1.0);
+            metrics.add_central("sys/cohort", cohort.len() as f64, 1.0);
+        }
+
+        // --- worker_reduce (all-reduce equivalent) ----------------------
+        let mut agg = self.aggregator.worker_reduce(partials);
+
+        // --- server postprocessors, reversed (paper Alg. 1 l.18) --------
+        if let Some(agg) = agg.as_mut() {
+            let mut env = PpEnv { clip: &RustClip, rng: server_rng, user_len: 0 };
+            for pp in self.postprocessors.iter().rev() {
+                let pm = pp.postprocess_server(agg, ctx, &mut env)?;
+                metrics.merge(&pm);
+            }
+        }
+        Ok((agg, metrics))
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.pool.num_workers
+    }
+
+    /// Coordinator traffic counters (baseline diagnostics).
+    pub fn coordinator_traffic(&self) -> (u64, u64) {
+        self.pool.coordinator_traffic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::algorithm::{FedAvg, RunSpec};
+    use crate::fl::central_opt::Sgd;
+    use crate::fl::worker::tests::MeanModel;
+
+    fn build_backend(workers: usize, iters: u64) -> SimulatedBackend {
+        let dataset: Arc<dyn FederatedDataset> =
+            Arc::new(crate::data::SynthGmmPoints::new(32, 12, 3, 2, 1));
+        let spec = RunSpec {
+            iterations: iters,
+            cohort_size: 8,
+            val_cohort_size: 4,
+            eval_every: 2,
+            population: 32,
+            ..Default::default()
+        };
+        let alg = Arc::new(FedAvg::new(spec, Box::new(Sgd)));
+        BackendBuilder::new(
+            dataset,
+            alg,
+            Arc::new(|_| Ok(Box::new(MeanModel::new(3)) as Box<dyn crate::fl::Model>)),
+        )
+        .params(RunParams { num_workers: workers, ..Default::default() })
+        .build()
+        .unwrap()
+    }
+
+    #[test]
+    fn run_completes_all_iterations() {
+        let mut b = build_backend(2, 5);
+        let out = b.run(vec![0.0; 3], &mut []).unwrap();
+        assert_eq!(out.rounds, 5);
+        assert_eq!(out.history.len(), 5);
+        assert_eq!(out.round_nanos.len(), 5);
+        assert!(out.counters.users_trained >= 5 * 8);
+        assert!(out.final_metric("train/loss").is_some());
+        // val rounds every 2 iterations
+        assert!(out.final_metric("val/loss").is_some());
+    }
+
+    #[test]
+    fn loss_decreases_on_mean_problem() {
+        let mut b = build_backend(2, 30);
+        let out = b.run(vec![5.0; 3], &mut []).unwrap();
+        let series = out.series("train/loss");
+        let first = series.first().unwrap().1;
+        let last = series.last().unwrap().1;
+        assert!(last < first * 0.9, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_learning() {
+        // replica-worker invariance: final model identical across worker
+        // counts (the sum aggregation is exchange-law compliant; MeanModel
+        // arithmetic is deterministic).
+        let out1 = build_backend(1, 6).run(vec![1.0; 3], &mut []).unwrap();
+        let out4 = build_backend(4, 6).run(vec![1.0; 3], &mut []).unwrap();
+        for (a, b) in out1.central.iter().zip(&out4.central) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn outcome_series_and_final_metric() {
+        let mut b = build_backend(1, 4);
+        let out = b.run(vec![0.0; 3], &mut []).unwrap();
+        let series = out.series("sys/cohort");
+        assert_eq!(series.len(), 4);
+        assert_eq!(out.final_metric("sys/cohort"), Some(8.0));
+        assert!(out.final_metric("does-not-exist").is_none());
+    }
+}

@@ -1,0 +1,499 @@
+//! Training-process callbacks (paper App. B.1 "Callback"): hooks into the
+//! central loop, invoked after the central model has been updated. A
+//! callback never alters learning; it evaluates, reports, checkpoints or
+//! stops.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::metrics::{mean_average_precision, Metrics};
+use super::model::{Model, ScoreSink};
+use crate::data::UserData;
+
+pub trait Callback {
+    /// Called after every central iteration; return `true` to stop
+    /// training (early stopping, time budget...).
+    fn after_central_iteration(
+        &mut self,
+        central: &[f32],
+        t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool>;
+
+    fn on_train_end(&mut self, _central: &[f32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Central evaluation on held-out shards (paper §4.3: "evaluation is done
+/// on the validation data partitions ... without any federated splits").
+/// Owns its own model instance — the analogue of the evaluation happening
+/// on the worker's resident model without re-allocation.
+pub struct CentralEvalCallback {
+    model: Box<dyn Model>,
+    shards: Vec<UserData>,
+    pub every: u64,
+    /// "accuracy" | "perplexity" | "map": how `stat`/`loss` become the
+    /// headline benchmark metric.
+    pub headline: &'static str,
+}
+
+impl CentralEvalCallback {
+    pub fn new(
+        model: Box<dyn Model>,
+        shards: Vec<UserData>,
+        every: u64,
+        headline: &'static str,
+    ) -> Self {
+        CentralEvalCallback { model, shards, every: every.max(1), headline }
+    }
+
+    /// Evaluate `central` over all shards; returns the metric bag.
+    pub fn evaluate(&mut self, central: &[f32]) -> Result<Metrics> {
+        self.model.set_central(central);
+        let mut agg = Metrics::new();
+        let mut sink = ScoreSink::default();
+        let want_scores = self.headline == "map";
+        for shard in &self.shards {
+            let m = self
+                .model
+                .evaluate(shard, if want_scores { Some(&mut sink) } else { None })?;
+            agg.merge(&m);
+        }
+        let mut out = Metrics::new();
+        let loss = agg.get("loss").unwrap_or(f64::NAN);
+        out.add_central("centraleval/loss", loss, 1.0);
+        match self.headline {
+            "accuracy" => {
+                out.add_central("centraleval/accuracy", agg.get("stat").unwrap_or(0.0), 1.0)
+            }
+            "perplexity" => out.add_central("centraleval/perplexity", loss.exp(), 1.0),
+            "map" => {
+                let map = mean_average_precision(&sink.scores, &sink.targets, sink.labels);
+                out.add_central("centraleval/map", map, 1.0);
+            }
+            _ => {}
+        }
+        Ok(out)
+    }
+}
+
+impl Callback for CentralEvalCallback {
+    fn after_central_iteration(
+        &mut self,
+        central: &[f32],
+        t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool> {
+        if t % self.every == 0 {
+            let m = self.evaluate(central)?;
+            metrics.merge(&m);
+        }
+        Ok(false)
+    }
+
+    fn on_train_end(&mut self, _central: &[f32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Stop when a metric stops improving (paper's "stopping criterion"
+/// callback).
+pub struct EarlyStopping {
+    pub metric: String,
+    /// `true` if larger is better.
+    pub maximize: bool,
+    pub patience: u64,
+    pub min_delta: f64,
+    best: Option<f64>,
+    since_best: u64,
+}
+
+impl EarlyStopping {
+    pub fn new(metric: impl Into<String>, maximize: bool, patience: u64) -> Self {
+        EarlyStopping {
+            metric: metric.into(),
+            maximize,
+            patience,
+            min_delta: 0.0,
+            best: None,
+            since_best: 0,
+        }
+    }
+}
+
+impl Callback for EarlyStopping {
+    fn after_central_iteration(
+        &mut self,
+        _central: &[f32],
+        _t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool> {
+        let Some(v) = metrics.get(&self.metric) else {
+            return Ok(false); // metric not reported this round
+        };
+        let improved = match self.best {
+            None => true,
+            Some(b) => {
+                if self.maximize {
+                    v > b + self.min_delta
+                } else {
+                    v < b - self.min_delta
+                }
+            }
+        };
+        if improved {
+            self.best = Some(v);
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+        }
+        Ok(self.since_best > self.patience)
+    }
+}
+
+/// Exponential moving average of the central model (paper's "exponential
+/// moving average of model" callback). `ema()` exposes the shadow weights
+/// for evaluation.
+pub struct EmaCallback {
+    pub decay: f32,
+    ema: Vec<f32>,
+}
+
+impl EmaCallback {
+    pub fn new(decay: f32) -> Self {
+        EmaCallback { decay, ema: Vec::new() }
+    }
+
+    pub fn ema(&self) -> &[f32] {
+        &self.ema
+    }
+}
+
+impl Callback for EmaCallback {
+    fn after_central_iteration(
+        &mut self,
+        central: &[f32],
+        _t: u64,
+        _metrics: &mut Metrics,
+    ) -> Result<bool> {
+        if self.ema.len() != central.len() {
+            self.ema = central.to_vec();
+        } else {
+            let d = self.decay;
+            for (e, c) in self.ema.iter_mut().zip(central) {
+                *e = d * *e + (1.0 - d) * c;
+            }
+        }
+        Ok(false)
+    }
+}
+
+/// Fault-tolerant training (paper's "fault-tolerant training procedure"):
+/// checkpoint the central model + iteration every `every` rounds; a new
+/// run resumes via [`load_checkpoint`].
+pub struct CheckpointCallback {
+    pub path: PathBuf,
+    pub every: u64,
+    last_t: u64,
+}
+
+impl CheckpointCallback {
+    pub fn new(path: impl Into<PathBuf>, every: u64) -> Self {
+        CheckpointCallback { path: path.into(), every: every.max(1), last_t: 0 }
+    }
+
+    fn save(&self, central: &[f32], t: u64) -> Result<()> {
+        let mut buf = Vec::with_capacity(16 + central.len() * 4);
+        buf.extend_from_slice(b"PFLCKPT1");
+        buf.extend_from_slice(&t.to_le_bytes());
+        buf.extend_from_slice(&(central.len() as u64).to_le_bytes());
+        for x in central {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, &buf).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(())
+    }
+}
+
+/// Load a checkpoint written by [`CheckpointCallback`]: (params, next_t).
+pub fn load_checkpoint(path: impl Into<PathBuf>) -> Result<(Vec<f32>, u64)> {
+    let path = path.into();
+    let buf = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(buf.len() >= 24 && &buf[..8] == b"PFLCKPT1", "bad checkpoint header");
+    let t = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let n = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    anyhow::ensure!(buf.len() == 24 + n * 4, "truncated checkpoint");
+    let mut params = Vec::with_capacity(n);
+    for chunk in buf[24..].chunks_exact(4) {
+        params.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((params, t + 1))
+}
+
+impl Callback for CheckpointCallback {
+    fn after_central_iteration(
+        &mut self,
+        central: &[f32],
+        t: u64,
+        _metrics: &mut Metrics,
+    ) -> Result<bool> {
+        self.last_t = t;
+        if t % self.every == 0 {
+            self.save(central, t)?;
+        }
+        Ok(false)
+    }
+
+    fn on_train_end(&mut self, central: &[f32]) -> Result<()> {
+        self.save(central, self.last_t)
+    }
+}
+
+/// CSV metric reporter (paper: "reporting intermediate results (csv
+/// files, TensorBoard and Weights & Biases)"). Columns are fixed by the
+/// first reported round; later metrics missing a column print empty.
+pub struct CsvReporter {
+    path: PathBuf,
+    columns: Vec<String>,
+    rows: Vec<(u64, Vec<Option<f64>>)>,
+}
+
+impl CsvReporter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        CsvReporter { path: path.into(), columns: Vec::new(), rows: Vec::new() }
+    }
+}
+
+impl Callback for CsvReporter {
+    fn after_central_iteration(
+        &mut self,
+        _central: &[f32],
+        t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool> {
+        if self.columns.is_empty() {
+            self.columns = metrics.names().map(|s| s.to_string()).collect();
+        }
+        let row = self.columns.iter().map(|c| metrics.get(c)).collect();
+        self.rows.push((t, row));
+        Ok(false)
+    }
+
+    fn on_train_end(&mut self, _central: &[f32]) -> Result<()> {
+        let mut f = std::fs::File::create(&self.path)
+            .with_context(|| format!("creating {:?}", self.path))?;
+        write!(f, "round")?;
+        for c in &self.columns {
+            write!(f, ",{c}")?;
+        }
+        writeln!(f)?;
+        for (t, row) in &self.rows {
+            write!(f, "{t}")?;
+            for v in row {
+                match v {
+                    Some(x) => write!(f, ",{x}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// JSONL metric reporter: one JSON object per central iteration, written
+/// incrementally (survives crashes, greppable).
+pub struct JsonlReporter {
+    file: std::fs::File,
+}
+
+impl JsonlReporter {
+    pub fn new(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        let file = std::fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        Ok(JsonlReporter { file })
+    }
+}
+
+impl Callback for JsonlReporter {
+    fn after_central_iteration(
+        &mut self,
+        _central: &[f32],
+        t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool> {
+        use crate::util::json::{num, obj, Value};
+        let mut pairs: Vec<(&str, Value)> = vec![("round", num(t as f64))];
+        let names: Vec<String> = metrics.names().map(|s| s.to_string()).collect();
+        for n in &names {
+            pairs.push((n.as_str(), num(metrics.get(n).unwrap())));
+        }
+        writeln!(self.file, "{}", obj(pairs).to_json())?;
+        Ok(false)
+    }
+}
+
+/// Stop after a wall-clock budget (keeps benchmark sweeps bounded).
+pub struct TimeBudget {
+    deadline: std::time::Instant,
+}
+
+impl TimeBudget {
+    pub fn new(budget: std::time::Duration) -> Self {
+        TimeBudget { deadline: std::time::Instant::now() + budget }
+    }
+}
+
+impl Callback for TimeBudget {
+    fn after_central_iteration(
+        &mut self,
+        _central: &[f32],
+        _t: u64,
+        _metrics: &mut Metrics,
+    ) -> Result<bool> {
+        Ok(std::time::Instant::now() >= self.deadline)
+    }
+}
+
+/// Collects the per-round straggler series the backend reports (Table 5 /
+/// Fig. 5 harness).
+#[derive(Default)]
+pub struct StragglerRecorder {
+    pub gaps_secs: Vec<f64>,
+}
+
+impl StragglerRecorder {
+    pub fn mean(&self) -> f64 {
+        if self.gaps_secs.is_empty() {
+            0.0
+        } else {
+            self.gaps_secs.iter().sum::<f64>() / self.gaps_secs.len() as f64
+        }
+    }
+}
+
+impl Callback for StragglerRecorder {
+    fn after_central_iteration(
+        &mut self,
+        _central: &[f32],
+        _t: u64,
+        metrics: &mut Metrics,
+    ) -> Result<bool> {
+        if let Some(g) = metrics.get("sys/straggler-secs") {
+            self.gaps_secs.push(g);
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_stopping_patience() {
+        let mut es = EarlyStopping::new("loss", false, 2);
+        let mut m = Metrics::new();
+        m.add_central("loss", 1.0, 1.0);
+        assert!(!es.after_central_iteration(&[], 0, &mut m).unwrap());
+        // three non-improving rounds -> stop on the third
+        for t in 1..=2 {
+            let mut m = Metrics::new();
+            m.add_central("loss", 1.5, 1.0);
+            assert!(!es.after_central_iteration(&[], t, &mut m).unwrap());
+        }
+        let mut m = Metrics::new();
+        m.add_central("loss", 1.5, 1.0);
+        assert!(es.after_central_iteration(&[], 3, &mut m).unwrap());
+    }
+
+    #[test]
+    fn early_stopping_ignores_missing_metric() {
+        let mut es = EarlyStopping::new("loss", false, 0);
+        let mut m = Metrics::new();
+        assert!(!es.after_central_iteration(&[], 0, &mut m).unwrap());
+    }
+
+    #[test]
+    fn ema_tracks_params() {
+        let mut ema = EmaCallback::new(0.5);
+        let mut m = Metrics::new();
+        ema.after_central_iteration(&[2.0, 4.0], 0, &mut m).unwrap();
+        assert_eq!(ema.ema(), &[2.0, 4.0]);
+        ema.after_central_iteration(&[0.0, 0.0], 1, &mut m).unwrap();
+        assert_eq!(ema.ema(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pfl_test_ckpt_{}", std::process::id()));
+        let mut cb = CheckpointCallback::new(&dir, 1);
+        let mut m = Metrics::new();
+        cb.after_central_iteration(&[1.0, -2.5, 3.0], 7, &mut m).unwrap();
+        let (params, next_t) = load_checkpoint(&dir).unwrap();
+        assert_eq!(params, vec![1.0, -2.5, 3.0]);
+        assert_eq!(next_t, 8);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("pfl_test_bad_{}", std::process::id()));
+        std::fs::write(&dir, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&dir).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn csv_reporter_writes_rows() {
+        let path = std::env::temp_dir().join(format!("pfl_test_csv_{}", std::process::id()));
+        let mut cb = CsvReporter::new(&path);
+        for t in 0..3 {
+            let mut m = Metrics::new();
+            m.add_central("loss", t as f64, 1.0);
+            cb.after_central_iteration(&[], t, &mut m).unwrap();
+        }
+        cb.on_train_end(&[]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,loss"));
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_reporter_emits_valid_json() {
+        let path = std::env::temp_dir().join(format!("pfl_test_jsonl_{}", std::process::id()));
+        {
+            let mut cb = JsonlReporter::new(&path).unwrap();
+            let mut m = Metrics::new();
+            m.add_central("x", 0.5, 1.0);
+            cb.after_central_iteration(&[], 0, &mut m).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::Value::parse(text.trim()).unwrap();
+        assert_eq!(v.req("x").unwrap().as_f64().unwrap(), 0.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn time_budget_stops() {
+        let mut tb = TimeBudget::new(std::time::Duration::from_millis(0));
+        let mut m = Metrics::new();
+        assert!(tb.after_central_iteration(&[], 0, &mut m).unwrap());
+    }
+
+    #[test]
+    fn straggler_recorder_collects() {
+        let mut sr = StragglerRecorder::default();
+        let mut m = Metrics::new();
+        m.add_central("sys/straggler-secs", 0.25, 1.0);
+        sr.after_central_iteration(&[], 0, &mut m).unwrap();
+        assert_eq!(sr.gaps_secs, vec![0.25]);
+        assert_eq!(sr.mean(), 0.25);
+    }
+}

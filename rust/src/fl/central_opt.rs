@@ -1,0 +1,140 @@
+//! Central (server) optimizers: consume the aggregated pseudo-gradient Δ
+//! and update the central model (paper App. A; FedAdam from Reddi et al.
+//! [70] is "a tunable component of these algorithms", §4.3).
+
+/// A server optimizer over the flat central parameter vector.
+pub trait CentralOptimizer: Send {
+    /// θ ← Opt(θ, Δ) with the pseudo-gradient Δ (the *averaged* model
+    /// update; note Δ = θ − θ′ so descent is θ ← θ − lr·Δ̂).
+    fn apply(&mut self, params: &mut [f32], delta: &[f32], lr: f64);
+    fn name(&self) -> &'static str;
+    /// Reset optimizer state (new run with the same instance).
+    fn reset(&mut self);
+}
+
+/// Plain SGD: θ ← θ − lr·Δ. With lr = 1 this is exactly FedAvg's
+/// "replace by the average" (paper Table 8 uses central SGD, lr 1.0).
+#[derive(Debug, Default)]
+pub struct Sgd;
+
+impl CentralOptimizer for Sgd {
+    fn apply(&mut self, params: &mut [f32], delta: &[f32], lr: f64) {
+        crate::util::axpy(params, -(lr as f32), delta);
+    }
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+    fn reset(&mut self) {}
+}
+
+/// FedAdam (Reddi et al. [70]) with the *adaptivity degree* τ added to
+/// √v̂ (paper Tables 9–11 set τ = 0.1 or 1e-4). Moments are allocated
+/// lazily at first apply and reused (no per-round allocation).
+#[derive(Debug)]
+pub struct Adam {
+    pub beta1: f64,
+    pub beta2: f64,
+    /// Adaptivity degree τ (plays epsilon's role but is a first-class
+    /// hyperparameter in federated Adam).
+    pub adaptivity: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(beta1: f64, beta2: f64, adaptivity: f64) -> Self {
+        Adam { beta1, beta2, adaptivity, m: Vec::new(), v: Vec::new(), t: 0 }
+    }
+
+    /// The paper's benchmark configuration (Tables 9–10).
+    pub fn paper(adaptivity: f64) -> Self {
+        Self::new(0.9, 0.99, adaptivity)
+    }
+}
+
+impl CentralOptimizer for Adam {
+    fn apply(&mut self, params: &mut [f32], delta: &[f32], lr: f64) {
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let tau = self.adaptivity as f32;
+        let step = lr as f32;
+        for i in 0..params.len() {
+            let g = delta[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1 as f32;
+            let vhat = self.v[i] / bc2 as f32;
+            params[i] -= step * mhat / (vhat.sqrt() + tau);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn reset(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_descends() {
+        let mut p = vec![1.0f32, 1.0];
+        Sgd.apply(&mut p, &[0.5, -0.5], 1.0);
+        assert_eq!(p, vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn adam_moves_against_gradient_sign() {
+        let mut opt = Adam::paper(0.1);
+        let mut p = vec![0.0f32, 0.0];
+        for _ in 0..10 {
+            opt.apply(&mut p, &[1.0, -1.0], 0.1);
+        }
+        assert!(p[0] < 0.0 && p[1] > 0.0);
+        // roughly symmetric
+        assert!((p[0] + p[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adam_adaptivity_bounds_step() {
+        // With constant unit gradient the per-step move approaches
+        // lr·1/(1+τ); τ large → smaller steps.
+        let mut small_tau = Adam::paper(0.01);
+        let mut big_tau = Adam::paper(10.0);
+        let mut p1 = vec![0.0f32];
+        let mut p2 = vec![0.0f32];
+        for _ in 0..50 {
+            small_tau.apply(&mut p1, &[1.0], 0.1);
+            big_tau.apply(&mut p2, &[1.0], 0.1);
+        }
+        assert!(p1[0].abs() > p2[0].abs() * 5.0);
+    }
+
+    #[test]
+    fn adam_reset_clears_state() {
+        let mut opt = Adam::paper(0.1);
+        let mut p = vec![0.0f32];
+        opt.apply(&mut p, &[1.0], 0.1);
+        let after_one = p[0];
+        opt.reset();
+        let mut q = vec![0.0f32];
+        opt.apply(&mut q, &[1.0], 0.1);
+        assert_eq!(after_one, q[0]);
+    }
+}

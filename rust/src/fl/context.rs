@@ -1,0 +1,105 @@
+//! Central contexts: the per-iteration "recipe" an algorithm constructs
+//! (paper App. B.2). A context targets one population, carries the local
+//! optimization hyperparameters for that iteration (already resolved from
+//! any `HyperParam` schedules), and tells the backend how big a cohort to
+//! sample.
+
+/// Which federated population a context targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Population {
+    /// Training users; local optimization returns statistics.
+    Train,
+    /// Held-out users; federated evaluation only (no statistics).
+    Val,
+}
+
+/// Local optimization hyperparameters, resolved to static values for one
+/// central iteration (paper App. B.1 "Hyperparameters").
+#[derive(Debug, Clone)]
+pub struct LocalParams {
+    /// Number of passes over the user's data.
+    pub epochs: usize,
+    /// Local minibatch size.
+    pub batch_size: usize,
+    /// Local (client) learning rate.
+    pub lr: f32,
+    /// FedProx proximal coefficient µ (0 recovers FedAvg). Lowered into
+    /// the unified train artifact, so switching algorithms does not
+    /// require a different executable.
+    pub mu: f32,
+    /// Cap on the number of local steps (0 = unlimited); some setups
+    /// bound local work per round.
+    pub max_steps: usize,
+}
+
+impl Default for LocalParams {
+    fn default() -> Self {
+        LocalParams { epochs: 1, batch_size: 10, lr: 0.1, mu: 0.0, max_steps: 0 }
+    }
+}
+
+/// The recipe for gathering one aggregated result (paper Alg. 1, `c_i`).
+#[derive(Debug, Clone)]
+pub struct CentralContext {
+    /// Central iteration index t.
+    pub iteration: u64,
+    pub population: Population,
+    /// Number of users to sample for this context.
+    pub cohort_size: usize,
+    /// Local training (or evaluation) parameters for this iteration.
+    pub local: LocalParams,
+    /// Seed stream for this iteration (cohort sampling, DP noise).
+    pub seed: u64,
+    /// Algorithm tag for diagnostics.
+    pub algorithm: &'static str,
+}
+
+impl CentralContext {
+    pub fn train(iteration: u64, cohort_size: usize, local: LocalParams, seed: u64) -> Self {
+        CentralContext {
+            iteration,
+            population: Population::Train,
+            cohort_size,
+            local,
+            seed,
+            algorithm: "",
+        }
+    }
+
+    pub fn eval(iteration: u64, cohort_size: usize, seed: u64) -> Self {
+        CentralContext {
+            iteration,
+            population: Population::Val,
+            cohort_size,
+            local: LocalParams::default(),
+            seed,
+            algorithm: "",
+        }
+    }
+
+    pub fn is_train(&self) -> bool {
+        self.population == Population::Train
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_population() {
+        let c = CentralContext::train(3, 50, LocalParams::default(), 7);
+        assert!(c.is_train());
+        assert_eq!(c.iteration, 3);
+        let e = CentralContext::eval(3, 20, 7);
+        assert_eq!(e.population, Population::Val);
+        assert!(!e.is_train());
+    }
+
+    #[test]
+    fn default_local_params_are_fedavg() {
+        let p = LocalParams::default();
+        assert_eq!(p.mu, 0.0);
+        assert_eq!(p.epochs, 1);
+    }
+}

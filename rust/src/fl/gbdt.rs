@@ -1,0 +1,473 @@
+//! Federated gradient-boosted decision trees (paper §1 "Non-gradient-
+//! descent training"; [27]).
+//!
+//! The histogram-based federated GBDT: each round, clients compute
+//! gradient/hessian histograms of the current ensemble's residuals over a
+//! shared feature binning; the server aggregates the histograms and grows
+//! one regression tree, appended to the ensemble. The *model state* is
+//! the flat-encoded ensemble, so the generic broadcast/aggregate
+//! machinery (and DP postprocessors — histograms are just vectors)
+//! applies unchanged.
+//!
+//! With one communication round per tree the clients histogram at the
+//! root only, which makes multi-feature deep trees inexact. We therefore
+//! grow *single-feature* trees: the split feature is chosen greedily at
+//! the root and refined recursively on its bin ranges — exact with root
+//! histograms — and boosting across rounds composes different features
+//! (GAM-style additive boosting). Documented in DESIGN.md §2.
+//!
+//! Flat encoding: `[num_trees, lr, tree_0 ..., tree_1 ...]`; each tree is
+//! `max_nodes × 4` floats `(feature|leaf flag, threshold|value, left,
+//! right)`. Capacity is fixed at construction, so the state length never
+//! changes during training.
+
+use anyhow::{bail, Result};
+
+use super::algorithm::{FederatedAlgorithm, RunSpec};
+use super::context::{CentralContext, Population};
+use super::metrics::Metrics;
+use super::model::{Model, ScoreSink, TrainOutput};
+use super::stats::Statistics;
+use crate::data::UserData;
+
+/// Histogram bins per feature (uniform binning over a fixed range shared
+/// by all clients).
+pub const BINS: usize = 16;
+/// Floats per tree node in the flat encoding.
+const NODE_F: usize = 4;
+
+/// GBDT hyperparameters shared by model and algorithm.
+#[derive(Debug, Clone)]
+pub struct GbdtParams {
+    pub max_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f32,
+    /// L2 regularization on leaf values (xgboost λ).
+    pub lambda: f64,
+    /// Feature value range for the shared binning.
+    pub feat_min: f32,
+    pub feat_max: f32,
+    pub num_features: usize,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            max_trees: 20,
+            max_depth: 3,
+            learning_rate: 0.3,
+            lambda: 1.0,
+            feat_min: -3.0,
+            feat_max: 3.0,
+            num_features: 8,
+        }
+    }
+}
+
+impl GbdtParams {
+    pub fn max_nodes(&self) -> usize {
+        (1 << (self.max_depth + 1)) - 1
+    }
+
+    /// Flat state length: header (2) + trees.
+    pub fn state_len(&self) -> usize {
+        2 + self.max_trees * self.max_nodes() * NODE_F
+    }
+
+    /// Histogram vector length: (grad, hess) per (feature, bin).
+    pub fn hist_len(&self) -> usize {
+        self.num_features * BINS * 2
+    }
+
+    pub fn bin_of(&self, x: f32) -> usize {
+        let t = ((x - self.feat_min) / (self.feat_max - self.feat_min)).clamp(0.0, 1.0);
+        ((t * BINS as f32) as usize).min(BINS - 1)
+    }
+
+    /// Upper edge of a bin = the split threshold "x ≤ edge".
+    pub fn bin_upper_edge(&self, bin: usize) -> f32 {
+        self.feat_min + (bin + 1) as f32 * (self.feat_max - self.feat_min) / BINS as f32
+    }
+}
+
+/// Evaluate the flat-encoded ensemble on one feature row.
+pub fn predict(state: &[f32], x: &[f32], p: &GbdtParams) -> f32 {
+    let num_trees = state[0] as usize;
+    let lr = state[1];
+    let mut out = 0.0;
+    for t in 0..num_trees.min(p.max_trees) {
+        let mut node = 0usize;
+        loop {
+            let off = 2 + (t * p.max_nodes() + node) * NODE_F;
+            let feature = state[off];
+            if feature < 0.0 {
+                out += lr * state[off + 1];
+                break;
+            }
+            let f = (feature as usize).min(x.len() - 1);
+            node = if x[f] <= state[off + 1] {
+                state[off + 2] as usize
+            } else {
+                state[off + 3] as usize
+            };
+        }
+    }
+    out
+}
+
+/// The client-side GBDT "model": computes residual gradient histograms.
+/// Regression with squared loss: g = pred − y, h = 1.
+pub struct GbdtModel {
+    pub p: GbdtParams,
+    state: Vec<f32>,
+}
+
+impl GbdtModel {
+    pub fn new(p: GbdtParams) -> Self {
+        let state = initial_state(&p);
+        GbdtModel { p, state }
+    }
+}
+
+/// Fresh flat state (no trees yet).
+pub fn initial_state(p: &GbdtParams) -> Vec<f32> {
+    let mut s = vec![0.0; p.state_len()];
+    s[1] = p.learning_rate;
+    s
+}
+
+impl Model for GbdtModel {
+    fn param_count(&self) -> usize {
+        self.state.len()
+    }
+
+    fn set_central(&mut self, central: &[f32]) {
+        self.state.copy_from_slice(central);
+    }
+
+    fn central(&self) -> &[f32] {
+        &self.state
+    }
+
+    /// "Local training" for GBDT = gradient/hessian histograms of the
+    /// current ensemble's residuals over this user's rows.
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        _p: &super::context::LocalParams,
+        _c_diff: Option<&[f32]>,
+        _seed: u64,
+    ) -> Result<TrainOutput> {
+        let (x, y, dim) = match data {
+            UserData::Tabular { x, y, dim } => (x, y, *dim),
+            _ => bail!("GbdtModel wants Tabular data"),
+        };
+        let p = &self.p;
+        let mut hist = vec![0.0f32; p.hist_len()];
+        let mut loss_sum = 0f64;
+        for (row, &target) in x.chunks(dim).zip(y) {
+            let pred = predict(&self.state, row, p);
+            let g = pred - target;
+            loss_sum += 0.5 * ((pred - target) as f64).powi(2);
+            for (f, &v) in row.iter().enumerate().take(p.num_features) {
+                let off = ((f * BINS) + p.bin_of(v)) * 2;
+                hist[off] += g;
+                hist[off + 1] += 1.0;
+            }
+        }
+        Ok(TrainOutput {
+            update: hist,
+            loss_sum,
+            stat_sum: 0.0,
+            wsum: y.len() as f64,
+            steps: 1,
+        })
+    }
+
+    fn evaluate(&mut self, data: &UserData, _sink: Option<&mut ScoreSink>) -> Result<Metrics> {
+        let (x, y, dim) = match data {
+            UserData::Tabular { x, y, dim } => (x, y, *dim),
+            _ => bail!("GbdtModel wants Tabular data"),
+        };
+        let mut loss = 0f64;
+        for (row, &target) in x.chunks(dim).zip(y) {
+            let pred = predict(&self.state, row, &self.p);
+            loss += 0.5 * ((pred - target) as f64).powi(2);
+        }
+        let mut m = Metrics::new();
+        m.add_central("loss", loss, y.len() as f64);
+        Ok(m)
+    }
+
+    fn name(&self) -> &str {
+        "gbdt"
+    }
+}
+
+/// The federated GBDT algorithm: one tree per central iteration, grown
+/// from the aggregated histograms.
+pub struct FedGbdt {
+    pub spec: RunSpec,
+    pub p: GbdtParams,
+}
+
+impl FedGbdt {
+    pub fn new(spec: RunSpec, p: GbdtParams) -> Self {
+        FedGbdt { spec, p }
+    }
+
+    /// Grow one single-feature tree from the aggregated histograms:
+    /// choose the feature with the best root gain, then recursively
+    /// partition its bin range (exact with root histograms).
+    fn grow_tree(&self, hist: &[f32]) -> Vec<f32> {
+        let p = &self.p;
+        let mut nodes = vec![[-1.0f32, 0.0, 0.0, 0.0]; p.max_nodes()];
+        let gh = |f: usize, b: usize| {
+            let off = ((f * BINS) + b) * 2;
+            (hist[off] as f64, hist[off + 1] as f64)
+        };
+        let range_gh = |f: usize, lo: usize, hi: usize| {
+            let (mut g, mut h) = (0f64, 0f64);
+            for b in lo..=hi {
+                let (gb, hb) = gh(f, b);
+                g += gb;
+                h += hb;
+            }
+            (g, h)
+        };
+        // best split of feature f over bins [lo, hi): (gain, bin)
+        let best_split = |f: usize, lo: usize, hi: usize| -> Option<(f64, usize)> {
+            let (gf, hf) = range_gh(f, lo, hi);
+            let mut best: Option<(f64, usize)> = None;
+            let (mut gl, mut hl) = (0f64, 0f64);
+            for b in lo..hi {
+                let (gb, hb) = gh(f, b);
+                gl += gb;
+                hl += hb;
+                let (gr, hr) = (gf - gl, hf - hl);
+                if hl < 1.0 || hr < 1.0 {
+                    continue;
+                }
+                let gain = gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda)
+                    - gf * gf / (hf + p.lambda);
+                if gain > best.map(|(g, _)| g).unwrap_or(1e-9) {
+                    best = Some((gain, b));
+                }
+            }
+            best
+        };
+
+        // pick the tree's feature by root gain
+        let feature = (0..p.num_features)
+            .filter_map(|f| best_split(f, 0, BINS - 1).map(|(g, _)| (g, f)))
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|(_, f)| f);
+
+        // recursively split that feature's bin ranges
+        let mut stack: Vec<(usize, usize, usize, usize)> = vec![(0, 0, 0, BINS - 1)];
+        while let Some((node, depth, lo, hi)) = stack.pop() {
+            let (g, h) = match feature {
+                Some(f) => range_gh(f, lo, hi),
+                None => range_gh(0, lo, hi),
+            };
+            let can_split = depth < p.max_depth && 2 * node + 2 < p.max_nodes();
+            let split = match (feature, can_split) {
+                (Some(f), true) => best_split(f, lo, hi),
+                _ => None,
+            };
+            match split {
+                Some((_gain, bin)) => {
+                    let f = feature.unwrap();
+                    let (l, r) = (2 * node + 1, 2 * node + 2);
+                    nodes[node] = [f as f32, p.bin_upper_edge(bin), l as f32, r as f32];
+                    stack.push((l, depth + 1, lo, bin));
+                    stack.push((r, depth + 1, bin + 1, hi));
+                }
+                None => {
+                    nodes[node] = [-1.0, (-g / (h + p.lambda)) as f32, 0.0, 0.0];
+                }
+            }
+        }
+
+        nodes.into_iter().flatten().collect()
+    }
+}
+
+impl FederatedAlgorithm for FedGbdt {
+    fn name(&self) -> &'static str {
+        "fed-gbdt"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        if t >= self.spec.iterations.min(self.p.max_trees as u64) {
+            return Vec::new();
+        }
+        let mut ctxs = vec![CentralContext::train(
+            t,
+            self.spec.cohort_size,
+            self.spec.local.clone(),
+            self.spec.seed.wrapping_add(t),
+        )];
+        if self.spec.val_cohort_size > 0 && t % self.spec.eval_every.max(1) == 0 {
+            ctxs.push(CentralContext::eval(t, self.spec.val_cohort_size, self.spec.seed ^ t));
+        }
+        ctxs
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        _uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            let m = model.evaluate(data, None)?;
+            return Ok((None, m));
+        }
+        let out = model.train_local(data, &ctx.local, None, 0)?;
+        let mut m = Metrics::new();
+        m.add_central("train/loss", out.loss_sum, out.wsum);
+        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+    }
+
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        _ctx: &CentralContext,
+        aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        let hist = aggregate.update();
+        anyhow::ensure!(hist.len() == self.p.hist_len(), "histogram length mismatch");
+        let tree = self.grow_tree(hist);
+        let num_trees = central[0] as usize;
+        anyhow::ensure!(num_trees < self.p.max_trees, "ensemble is full");
+        let off = 2 + num_trees * self.p.max_nodes() * NODE_F;
+        central[off..off + tree.len()].copy_from_slice(&tree);
+        central[0] = (num_trees + 1) as f32;
+        metrics.add_central("gbdt/trees", central[0] as f64, 1.0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::context::LocalParams;
+    use crate::fl::aggregator::Aggregator as _;
+
+    fn params() -> GbdtParams {
+        GbdtParams { num_features: 4, max_depth: 2, max_trees: 8, ..Default::default() }
+    }
+
+    fn user(n: usize, seed: u64, p: &GbdtParams) -> UserData {
+        // y = 2·1[x0 > 0] − 1 (deterministic given the features)
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let mut x = Vec::with_capacity(n * p.num_features);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut row = Vec::with_capacity(p.num_features);
+            for _ in 0..p.num_features {
+                row.push(rng.normal() as f32);
+            }
+            y.push(if row[0] > 0.0 { 1.0 } else { -1.0 });
+            x.extend(row);
+        }
+        UserData::Tabular { x, y, dim: p.num_features }
+    }
+
+    #[test]
+    fn state_layout_roundtrip() {
+        let p = params();
+        let s = initial_state(&p);
+        assert_eq!(s.len(), p.state_len());
+        assert_eq!(s[0], 0.0);
+        assert_eq!(s[1], p.learning_rate);
+        // empty ensemble predicts 0
+        assert_eq!(predict(&s, &[1.0, 0.0, 0.0, 0.0], &p), 0.0);
+    }
+
+    #[test]
+    fn bins_cover_range() {
+        let p = params();
+        assert_eq!(p.bin_of(p.feat_min - 10.0), 0);
+        assert_eq!(p.bin_of(p.feat_max + 10.0), BINS - 1);
+        assert!(p.bin_of(0.0) > 0 && p.bin_of(0.0) < BINS - 1);
+    }
+
+    #[test]
+    fn histograms_sum_to_cohort_size() {
+        let p = params();
+        let mut model = GbdtModel::new(p.clone());
+        let data = user(32, 0, &p);
+        let out = model.train_local(&data, &LocalParams::default(), None, 0).unwrap();
+        assert_eq!(out.update.len(), p.hist_len());
+        // hessians per feature must sum to n
+        for f in 0..p.num_features {
+            let h: f32 = (0..BINS).map(|b| out.update[((f * BINS) + b) * 2 + 1]).sum();
+            assert!((h - 32.0).abs() < 1e-4, "feature {f}: {h}");
+        }
+    }
+
+    #[test]
+    fn boosting_reduces_loss_end_to_end() {
+        let p = params();
+        let spec = RunSpec { iterations: 8, cohort_size: 4, ..Default::default() };
+        let alg = FedGbdt::new(spec, p.clone());
+        let mut central = initial_state(&p);
+        let users: Vec<UserData> = (0..4).map(|i| user(64, i, &p)).collect();
+
+        let mut model = GbdtModel::new(p.clone());
+        let mut losses = Vec::new();
+        for t in 0..6u64 {
+            let ctx = alg.next_contexts(t).remove(0);
+            model.set_central(&central);
+            let mut acc: Option<Statistics> = None;
+            let mut loss = 0.0;
+            for (i, u) in users.iter().enumerate() {
+                let (s, m) = alg.simulate_one_user(&mut model, i, u, &ctx).unwrap();
+                loss += m.get("train/loss").unwrap();
+                crate::fl::SumAggregator.accumulate(&mut acc, s.unwrap());
+            }
+            losses.push(loss / users.len() as f64);
+            let mut metrics = Metrics::new();
+            alg.process_aggregated(&mut central, &ctx, acc.unwrap(), &mut metrics).unwrap();
+            assert_eq!(metrics.get("gbdt/trees"), Some((t + 1) as f64));
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.6),
+            "boosting failed to reduce loss: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn grown_tree_splits_informative_feature() {
+        let p = params();
+        let spec = RunSpec::default();
+        let alg = FedGbdt::new(spec, p.clone());
+        let mut model = GbdtModel::new(p.clone());
+        model.set_central(&initial_state(&p));
+        let out = model
+            .train_local(&user(256, 9, &p), &LocalParams::default(), None, 0)
+            .unwrap();
+        let tree = alg.grow_tree(&out.update);
+        // root must split feature 0 (the label-defining feature)
+        assert_eq!(tree[0], 0.0, "root split feature: {}", tree[0]);
+    }
+
+    #[test]
+    fn ensemble_capacity_enforced() {
+        let p = GbdtParams { max_trees: 1, ..params() };
+        let spec = RunSpec { iterations: 10, cohort_size: 1, ..Default::default() };
+        let alg = FedGbdt::new(spec, p.clone());
+        let mut central = initial_state(&p);
+        central[0] = 1.0; // full
+        let agg = Statistics::new_update(vec![0.0; p.hist_len()], 1.0);
+        let mut m = Metrics::new();
+        let ctx = CentralContext::train(0, 1, LocalParams::default(), 0);
+        assert!(alg.process_aggregated(&mut central, &ctx, agg, &mut m).is_err());
+        // and next_contexts stops at the tree budget
+        assert!(alg.next_contexts(1).is_empty());
+    }
+}

@@ -1,0 +1,385 @@
+//! Federated Gaussian mixture models (paper §1 "Non-gradient-descent
+//! training"): federated EM over sufficient statistics.
+//!
+//! Each round, clients run the E-step locally — responsibilities of the
+//! current mixture over their points — and contribute the sufficient
+//! statistics (Σ r_k, Σ r_k·x, Σ r_k·x²). The server's M-step re-estimates
+//! weights, means and (diagonal) variances from the aggregated sums.
+//! Statistics are plain vectors, so aggregation and DP postprocessors
+//! apply unchanged.
+//!
+//! Flat state layout (K components, D dims):
+//! `[weights (K), means (K·D), vars (K·D)]`.
+
+use anyhow::{bail, Result};
+
+use super::algorithm::{FederatedAlgorithm, RunSpec};
+use super::context::{CentralContext, Population};
+use super::metrics::Metrics;
+use super::model::{Model, ScoreSink, TrainOutput};
+use super::stats::Statistics;
+use crate::data::UserData;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GmmParams {
+    pub components: usize,
+    pub dim: usize,
+    /// Variance floor (numerical stability).
+    pub var_floor: f64,
+}
+
+impl Default for GmmParams {
+    fn default() -> Self {
+        GmmParams { components: 4, dim: 2, var_floor: 1e-3 }
+    }
+}
+
+impl GmmParams {
+    pub fn state_len(&self) -> usize {
+        self.components * (1 + 2 * self.dim)
+    }
+
+    /// Sufficient-statistics vector length: per component
+    /// (count, Σx (D), Σx² (D)).
+    pub fn stats_len(&self) -> usize {
+        self.components * (1 + 2 * self.dim)
+    }
+
+    fn weights<'a>(&self, s: &'a [f32]) -> &'a [f32] {
+        &s[..self.components]
+    }
+
+    fn means<'a>(&self, s: &'a [f32]) -> &'a [f32] {
+        &s[self.components..self.components * (1 + self.dim)]
+    }
+
+    fn vars<'a>(&self, s: &'a [f32]) -> &'a [f32] {
+        &s[self.components * (1 + self.dim)..]
+    }
+}
+
+/// Deterministic initial mixture: uniform weights, means spread on a
+/// seeded Gaussian, unit variances.
+pub fn initial_state(p: &GmmParams, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+    let mut s = vec![0.0f32; p.state_len()];
+    for k in 0..p.components {
+        s[k] = 1.0 / p.components as f32;
+    }
+    for m in &mut s[p.components..p.components * (1 + p.dim)] {
+        *m = (rng.normal() * 2.0) as f32;
+    }
+    for v in &mut s[p.components * (1 + p.dim)..] {
+        *v = 1.0;
+    }
+    s
+}
+
+/// Per-point log-likelihood of the mixture (diagonal covariances).
+pub fn log_likelihood(p: &GmmParams, state: &[f32], x: &[f32]) -> f64 {
+    let w = p.weights(state);
+    let means = p.means(state);
+    let vars = p.vars(state);
+    let mut ll = 0.0;
+    for point in x.chunks(p.dim) {
+        let mut best = f64::NEG_INFINITY;
+        let mut terms = Vec::with_capacity(p.components);
+        for k in 0..p.components {
+            let mut logp = (w[k].max(1e-12) as f64).ln();
+            for d in 0..p.dim {
+                let var = vars[k * p.dim + d].max(p.var_floor as f32) as f64;
+                let diff = (point[d] - means[k * p.dim + d]) as f64;
+                logp += -0.5 * (diff * diff / var + var.ln() + (2.0 * std::f64::consts::PI).ln());
+            }
+            best = best.max(logp);
+            terms.push(logp);
+        }
+        let sum: f64 = terms.iter().map(|t| (t - best).exp()).sum();
+        ll += best + sum.ln();
+    }
+    ll
+}
+
+/// Client-side GMM: local E-step producing sufficient statistics.
+pub struct GmmModel {
+    pub p: GmmParams,
+    state: Vec<f32>,
+}
+
+impl GmmModel {
+    pub fn new(p: GmmParams, seed: u64) -> Self {
+        let state = initial_state(&p, seed);
+        GmmModel { p, state }
+    }
+}
+
+impl Model for GmmModel {
+    fn param_count(&self) -> usize {
+        self.state.len()
+    }
+
+    fn set_central(&mut self, central: &[f32]) {
+        self.state.copy_from_slice(central);
+    }
+
+    fn central(&self) -> &[f32] {
+        &self.state
+    }
+
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        _lp: &super::context::LocalParams,
+        _c_diff: Option<&[f32]>,
+        _seed: u64,
+    ) -> Result<TrainOutput> {
+        let x = match data {
+            UserData::Points { x, dim } if *dim == self.p.dim => x,
+            UserData::Points { dim, .. } => bail!("GMM dim mismatch: {} vs {}", dim, self.p.dim),
+            _ => bail!("GmmModel wants Points data"),
+        };
+        let p = &self.p;
+        let w = p.weights(&self.state).to_vec();
+        let means = p.means(&self.state).to_vec();
+        let vars = p.vars(&self.state).to_vec();
+
+        let mut suff = vec![0.0f32; p.stats_len()];
+        let mut ll = 0.0f64;
+        let mut logps = vec![0f64; p.components];
+        for point in x.chunks(p.dim) {
+            let mut best = f64::NEG_INFINITY;
+            for k in 0..p.components {
+                let mut logp = (w[k].max(1e-12) as f64).ln();
+                for d in 0..p.dim {
+                    let var = vars[k * p.dim + d].max(p.var_floor as f32) as f64;
+                    let diff = (point[d] - means[k * p.dim + d]) as f64;
+                    logp +=
+                        -0.5 * (diff * diff / var + var.ln() + (2.0 * std::f64::consts::PI).ln());
+                }
+                logps[k] = logp;
+                best = best.max(logp);
+            }
+            let norm: f64 = logps.iter().map(|l| (l - best).exp()).sum();
+            ll += best + norm.ln();
+            for k in 0..p.components {
+                let r = ((logps[k] - best).exp() / norm) as f32;
+                // layout per component: [count, Σx, Σx²]
+                let off = k * (1 + 2 * p.dim);
+                suff[off] += r;
+                for d in 0..p.dim {
+                    suff[off + 1 + d] += r * point[d];
+                    suff[off + 1 + p.dim + d] += r * point[d] * point[d];
+                }
+            }
+        }
+        let n = (x.len() / p.dim) as f64;
+        Ok(TrainOutput {
+            update: suff,
+            loss_sum: -ll, // negative log-likelihood as the "loss"
+            stat_sum: 0.0,
+            wsum: n,
+            steps: 1,
+        })
+    }
+
+    fn evaluate(&mut self, data: &UserData, _sink: Option<&mut ScoreSink>) -> Result<Metrics> {
+        let x = match data {
+            UserData::Points { x, dim } if *dim == self.p.dim => x,
+            _ => bail!("GmmModel wants Points data of dim {}", self.p.dim),
+        };
+        let ll = log_likelihood(&self.p, &self.state, x);
+        let mut m = Metrics::new();
+        m.add_central("loss", -ll, (x.len() / self.p.dim) as f64);
+        Ok(m)
+    }
+
+    fn name(&self) -> &str {
+        "gmm"
+    }
+}
+
+/// Federated EM: the server M-step over aggregated sufficient statistics.
+pub struct FedGmm {
+    pub spec: RunSpec,
+    pub p: GmmParams,
+}
+
+impl FedGmm {
+    pub fn new(spec: RunSpec, p: GmmParams) -> Self {
+        FedGmm { spec, p }
+    }
+}
+
+impl FederatedAlgorithm for FedGmm {
+    fn name(&self) -> &'static str {
+        "fed-gmm"
+    }
+
+    fn next_contexts(&self, t: u64) -> Vec<CentralContext> {
+        if t >= self.spec.iterations {
+            return Vec::new();
+        }
+        let mut ctxs = vec![CentralContext::train(
+            t,
+            self.spec.cohort_size,
+            self.spec.local.clone(),
+            self.spec.seed.wrapping_add(t),
+        )];
+        if self.spec.val_cohort_size > 0 && t % self.spec.eval_every.max(1) == 0 {
+            ctxs.push(CentralContext::eval(t, self.spec.val_cohort_size, self.spec.seed ^ t));
+        }
+        ctxs
+    }
+
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        _uid: usize,
+        data: &UserData,
+        ctx: &CentralContext,
+    ) -> Result<(Option<Statistics>, Metrics)> {
+        if ctx.population == Population::Val {
+            let m = model.evaluate(data, None)?;
+            return Ok((None, m));
+        }
+        let out = model.train_local(data, &ctx.local, None, 0)?;
+        let mut m = Metrics::new();
+        m.add_central("train/nll", out.loss_sum, out.wsum);
+        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+    }
+
+    /// M-step: weights = counts/N, means = Σx/count,
+    /// vars = Σx²/count − mean² (floored).
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        _ctx: &CentralContext,
+        aggregate: Statistics,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        let p = &self.p;
+        let suff = aggregate.update();
+        anyhow::ensure!(suff.len() == p.stats_len(), "sufficient stats length mismatch");
+        let total: f64 = (0..p.components)
+            .map(|k| suff[k * (1 + 2 * p.dim)] as f64)
+            .sum();
+        if total <= 0.0 {
+            return Ok(()); // empty round; keep the current mixture
+        }
+        for k in 0..p.components {
+            let off = k * (1 + 2 * p.dim);
+            let count = suff[off] as f64;
+            central[k] = (count / total).max(1e-6) as f32;
+            if count < 1e-6 {
+                continue; // dead component: keep previous parameters
+            }
+            for d in 0..p.dim {
+                let mean = suff[off + 1 + d] as f64 / count;
+                let ex2 = suff[off + 1 + p.dim + d] as f64 / count;
+                let var = (ex2 - mean * mean).max(p.var_floor);
+                central[p.components + k * p.dim + d] = mean as f32;
+                central[p.components * (1 + p.dim) + k * p.dim + d] = var as f32;
+            }
+        }
+        metrics.add_central("gmm/total-resp", total, 1.0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::context::LocalParams;
+    use crate::fl::aggregator::Aggregator as _;
+
+    fn two_cluster_user(n: usize, seed: u64) -> UserData {
+        // clusters at (-2,-2) and (2,2)
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let mut x = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            let c = if i % 2 == 0 { -2.0 } else { 2.0 };
+            x.push((c + rng.normal() * 0.3) as f32);
+            x.push((c + rng.normal() * 0.3) as f32);
+        }
+        UserData::Points { x, dim: 2 }
+    }
+
+    #[test]
+    fn state_layout_sizes() {
+        let p = GmmParams { components: 3, dim: 4, var_floor: 1e-3 };
+        assert_eq!(p.state_len(), 3 * (1 + 8));
+        let s = initial_state(&p, 0);
+        assert_eq!(s.len(), p.state_len());
+        let wsum: f32 = p.weights(&s).iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-6);
+        assert!(p.vars(&s).iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn estep_responsibilities_sum_to_n() {
+        let p = GmmParams { components: 2, dim: 2, var_floor: 1e-3 };
+        let mut model = GmmModel::new(p, 1);
+        let data = two_cluster_user(40, 0);
+        let out = model.train_local(&data, &LocalParams::default(), None, 0).unwrap();
+        let counts: f64 = (0..2).map(|k| out.update[k * 5] as f64).sum();
+        assert!((counts - 40.0).abs() < 1e-3, "{counts}");
+    }
+
+    #[test]
+    fn federated_em_improves_likelihood_and_finds_clusters() {
+        let p = GmmParams { components: 2, dim: 2, var_floor: 1e-3 };
+        let spec = RunSpec { iterations: 20, cohort_size: 4, ..Default::default() };
+        let alg = FedGmm::new(spec, p);
+        let mut central = initial_state(&p, 3);
+        let users: Vec<UserData> = (0..4).map(|i| two_cluster_user(50, i)).collect();
+        let mut model = GmmModel::new(p, 3);
+
+        let mut nll = Vec::new();
+        for t in 0..15u64 {
+            let ctx = alg.next_contexts(t).remove(0);
+            model.set_central(&central);
+            let mut acc: Option<Statistics> = None;
+            let mut round_nll = 0.0;
+            for (i, u) in users.iter().enumerate() {
+                let (s, m) = alg.simulate_one_user(&mut model, i, u, &ctx).unwrap();
+                round_nll += m.get("train/nll").unwrap();
+                crate::fl::SumAggregator.accumulate(&mut acc, s.unwrap());
+            }
+            nll.push(round_nll);
+            let mut metrics = Metrics::new();
+            alg.process_aggregated(&mut central, &ctx, acc.unwrap(), &mut metrics).unwrap();
+        }
+        assert!(nll.last().unwrap() < &nll[0], "EM failed: {nll:?}");
+        // the two means should be near (±2, ±2) with opposite signs
+        let m0 = (central[2], central[3]);
+        let m1 = (central[4], central[5]);
+        assert!(
+            (m0.0 * m1.0) < 0.0,
+            "means did not separate: {m0:?} vs {m1:?}"
+        );
+        for &m in &[m0.0, m0.1, m1.0, m1.1] {
+            assert!((m.abs() - 2.0).abs() < 0.5, "mean {m}");
+        }
+    }
+
+    #[test]
+    fn empty_aggregate_keeps_mixture() {
+        let p = GmmParams::default();
+        let alg = FedGmm::new(RunSpec::default(), p);
+        let mut central = initial_state(&p, 0);
+        let before = central.clone();
+        let agg = Statistics::new_update(vec![0.0; p.stats_len()], 0.0);
+        let ctx = CentralContext::train(0, 1, LocalParams::default(), 0);
+        let mut m = Metrics::new();
+        alg.process_aggregated(&mut central, &ctx, agg, &mut m).unwrap();
+        assert_eq!(central, before);
+    }
+
+    #[test]
+    fn dim_mismatch_is_error() {
+        let p = GmmParams { components: 2, dim: 3, var_floor: 1e-3 };
+        let mut model = GmmModel::new(p, 0);
+        let data = UserData::Points { x: vec![0.0; 8], dim: 2 };
+        assert!(model.train_local(&data, &LocalParams::default(), None, 0).is_err());
+    }
+}

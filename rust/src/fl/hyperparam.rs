@@ -1,0 +1,108 @@
+//! Hyperparameters that can vary across central iterations (App. B.1
+//! "Hyperparameters"): at the start of each iteration the algorithm
+//! requests the current value, which is then static for that iteration.
+
+/// A scalar hyperparameter schedule.
+pub trait HyperParam: Send + Sync {
+    /// Value at central iteration `t`.
+    fn at(&self, t: u64) -> f64;
+    fn describe(&self) -> String;
+}
+
+/// Constant for the whole experiment.
+pub struct Constant(pub f64);
+
+impl HyperParam for Constant {
+    fn at(&self, _t: u64) -> f64 {
+        self.0
+    }
+    fn describe(&self) -> String {
+        format!("const({})", self.0)
+    }
+}
+
+/// Linear warmup to `base` over `warmup` iterations (paper Table 9:
+/// "Central lr warmup 50"), constant afterwards.
+pub struct Warmup {
+    pub base: f64,
+    pub warmup: u64,
+}
+
+impl HyperParam for Warmup {
+    fn at(&self, t: u64) -> f64 {
+        if self.warmup == 0 || t >= self.warmup {
+            self.base
+        } else {
+            self.base * (t + 1) as f64 / self.warmup as f64
+        }
+    }
+    fn describe(&self) -> String {
+        format!("warmup({}, {})", self.base, self.warmup)
+    }
+}
+
+/// Step decay: value = base * gamma^(t / every).
+pub struct StepDecay {
+    pub base: f64,
+    pub gamma: f64,
+    pub every: u64,
+}
+
+impl HyperParam for StepDecay {
+    fn at(&self, t: u64) -> f64 {
+        self.base * self.gamma.powi((t / self.every.max(1)) as i32)
+    }
+    fn describe(&self) -> String {
+        format!("step({}, x{}, every {})", self.base, self.gamma, self.every)
+    }
+}
+
+/// Exponential decay: value = base * exp(-rate * t).
+pub struct ExpDecay {
+    pub base: f64,
+    pub rate: f64,
+}
+
+impl HyperParam for ExpDecay {
+    fn at(&self, t: u64) -> f64 {
+        self.base * (-self.rate * t as f64).exp()
+    }
+    fn describe(&self) -> String {
+        format!("exp({}, {})", self.base, self.rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let h = Constant(0.3);
+        assert_eq!(h.at(0), 0.3);
+        assert_eq!(h.at(1_000_000), 0.3);
+    }
+
+    #[test]
+    fn warmup_ramps_then_holds() {
+        let h = Warmup { base: 1.0, warmup: 10 };
+        assert!(h.at(0) > 0.0 && h.at(0) < 0.2);
+        assert!(h.at(4) < h.at(8));
+        assert_eq!(h.at(10), 1.0);
+        assert_eq!(h.at(100), 1.0);
+        // degenerate warmup
+        let h0 = Warmup { base: 2.0, warmup: 0 };
+        assert_eq!(h0.at(0), 2.0);
+    }
+
+    #[test]
+    fn decays_are_monotone() {
+        let s = StepDecay { base: 1.0, gamma: 0.5, every: 5 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(5), 0.5);
+        assert_eq!(s.at(10), 0.25);
+        let e = ExpDecay { base: 1.0, rate: 0.1 };
+        assert!(e.at(1) < e.at(0));
+        assert!((e.at(10) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,208 @@
+//! A pure-Rust linear-regression [`Model`]: the smallest gradient-descent
+//! member of the model zoo. It implements the exact unified local step of
+//! the L2 artifacts — g = ∇L + µ(θ′−θ) + c_diff — so every algorithm
+//! (FedAvg/FedProx/SCAFFOLD) exercises identical semantics without a PJRT
+//! round-trip. Used by integration tests, docs and as a template for
+//! custom non-NN models (paper App. B.1: "the Model class can be extended
+//! to implement non-neural-network models").
+
+use anyhow::{bail, Result};
+
+use super::context::LocalParams;
+use super::metrics::Metrics;
+use super::model::{Model, ScoreSink, TrainOutput};
+use crate::data::UserData;
+use crate::util::rng::Rng;
+
+/// Linear regression on [`UserData::Tabular`]: params = [w (dim), b].
+pub struct LinearModel {
+    pub dim: usize,
+    central: Vec<f32>,
+    work: Vec<f32>,
+}
+
+impl LinearModel {
+    pub fn new(dim: usize) -> Self {
+        LinearModel { dim, central: vec![0.0; dim + 1], work: vec![0.0; dim + 1] }
+    }
+
+    pub fn param_len(dim: usize) -> usize {
+        dim + 1
+    }
+
+    fn predict(params: &[f32], row: &[f32]) -> f32 {
+        let dim = params.len() - 1;
+        let mut y = params[dim];
+        for (w, x) in params[..dim].iter().zip(row) {
+            y += w * x;
+        }
+        y
+    }
+}
+
+impl Model for LinearModel {
+    fn param_count(&self) -> usize {
+        self.central.len()
+    }
+
+    fn set_central(&mut self, central: &[f32]) {
+        self.central.copy_from_slice(central);
+    }
+
+    fn central(&self) -> &[f32] {
+        &self.central
+    }
+
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        p: &LocalParams,
+        c_diff: Option<&[f32]>,
+        seed: u64,
+    ) -> Result<TrainOutput> {
+        let (x, y, dim) = match data {
+            UserData::Tabular { x, y, dim } if *dim == self.dim => (x, y, *dim),
+            UserData::Tabular { dim, .. } => bail!("dim mismatch: {} vs {}", dim, self.dim),
+            _ => bail!("LinearModel wants Tabular data"),
+        };
+        let n = y.len();
+        if n == 0 {
+            return Ok(TrainOutput::default());
+        }
+        self.work.copy_from_slice(&self.central);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut out = TrainOutput::default();
+        let bs = p.batch_size.max(1);
+
+        for _ in 0..p.epochs.max(1) {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(bs) {
+                if p.max_steps > 0 && out.steps >= p.max_steps {
+                    break;
+                }
+                // batch gradient of 0.5*(pred-y)^2
+                let mut grad = vec![0.0f32; dim + 1];
+                let mut loss = 0f64;
+                for &i in chunk {
+                    let row = &x[i * dim..(i + 1) * dim];
+                    let err = Self::predict(&self.work, row) - y[i];
+                    loss += 0.5 * (err as f64) * (err as f64);
+                    for d in 0..dim {
+                        grad[d] += err * row[d];
+                    }
+                    grad[dim] += err;
+                }
+                let inv = 1.0 / chunk.len() as f32;
+                for g in grad.iter_mut() {
+                    *g *= inv;
+                }
+                // unified step: g += mu*(theta' - theta) + c_diff
+                for d in 0..=dim {
+                    let mut g = grad[d] + p.mu * (self.work[d] - self.central[d]);
+                    if let Some(c) = c_diff {
+                        g += c[d];
+                    }
+                    self.work[d] -= p.lr * g;
+                }
+                out.loss_sum += loss;
+                out.wsum += chunk.len() as f64;
+                out.steps += 1;
+            }
+        }
+        let mut delta = vec![0.0f32; dim + 1];
+        for d in 0..=dim {
+            delta[d] = self.central[d] - self.work[d];
+        }
+        out.update = delta;
+        Ok(out)
+    }
+
+    fn evaluate(&mut self, data: &UserData, _sink: Option<&mut ScoreSink>) -> Result<Metrics> {
+        let (x, y, dim) = match data {
+            UserData::Tabular { x, y, dim } if *dim == self.dim => (x, y, *dim),
+            _ => bail!("LinearModel wants Tabular data of dim {}", self.dim),
+        };
+        let mut loss = 0f64;
+        for (i, &target) in y.iter().enumerate() {
+            let err = Self::predict(&self.central, &x[i * dim..(i + 1) * dim]) - target;
+            loss += 0.5 * (err as f64) * (err as f64);
+        }
+        let mut m = Metrics::new();
+        m.add_central("loss", loss, y.len() as f64);
+        Ok(m)
+    }
+
+    fn name(&self) -> &str {
+        "linear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn user(n: usize, dim: usize, seed: u64) -> UserData {
+        // y = 2*x0 - x1 + 0.5
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            y.push(2.0 * row[0] - row[1] + 0.5);
+            x.extend(row);
+        }
+        UserData::Tabular { x, y, dim }
+    }
+
+    #[test]
+    fn local_sgd_reduces_loss() {
+        let mut m = LinearModel::new(3);
+        let data = user(64, 3, 0);
+        let p = LocalParams { epochs: 20, batch_size: 8, lr: 0.1, mu: 0.0, max_steps: 0 };
+        let before = m.evaluate(&data, None).unwrap().get("loss").unwrap();
+        let out = m.train_local(&data, &p, None, 1).unwrap();
+        // apply the delta as FedAvg would with lr 1
+        let new: Vec<f32> = m.central().iter().zip(&out.update).map(|(c, d)| c - d).collect();
+        m.set_central(&new);
+        let after = m.evaluate(&data, None).unwrap().get("loss").unwrap();
+        assert!(after < before * 0.2, "{before} -> {after}");
+    }
+
+    #[test]
+    fn prox_term_shrinks_delta() {
+        let data = user(64, 3, 0);
+        let p0 = LocalParams { epochs: 5, batch_size: 8, lr: 0.1, mu: 0.0, max_steps: 0 };
+        let p_mu = LocalParams { mu: 10.0, ..p0.clone() };
+        let mut m = LinearModel::new(3);
+        let d0 = m.train_local(&data, &p0, None, 1).unwrap();
+        let dmu = m.train_local(&data, &p_mu, None, 1).unwrap();
+        assert!(
+            crate::util::l2_norm(&dmu.update) < crate::util::l2_norm(&d0.update),
+            "prox did not shrink the update"
+        );
+    }
+
+    #[test]
+    fn c_diff_shifts_update() {
+        let data = user(32, 2, 0);
+        let p = LocalParams { epochs: 1, batch_size: 32, lr: 0.1, mu: 0.0, max_steps: 0 };
+        let mut m = LinearModel::new(2);
+        let base = m.train_local(&data, &p, None, 5).unwrap();
+        let c = vec![1.0f32; 3];
+        let shifted = m.train_local(&data, &p, Some(&c), 5).unwrap();
+        // one step of extra gradient c with lr 0.1 adds +0.1*c to delta
+        for (b, s) in base.update.iter().zip(&shifted.update) {
+            assert!((s - b - 0.1).abs() < 1e-5, "{s} vs {b}");
+        }
+    }
+
+    #[test]
+    fn max_steps_caps_work() {
+        let data = user(100, 2, 0);
+        let p = LocalParams { epochs: 10, batch_size: 10, lr: 0.01, mu: 0.0, max_steps: 3 };
+        let mut m = LinearModel::new(2);
+        let out = m.train_local(&data, &p, None, 0).unwrap();
+        assert_eq!(out.steps, 3);
+    }
+}

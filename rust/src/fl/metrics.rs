@@ -1,0 +1,293 @@
+//! Metrics with the paper's two aggregation semantics (App. B.4):
+//!
+//! * **Central** metrics — clients contribute aggregable *sufficient
+//!   statistics* (sum + weight); the metric is `sum / weight` after
+//!   aggregation. The right choice for central-model quality (accuracy
+//!   over all datapoints, perplexity over all tokens).
+//! * **Per-user** metrics — each client produces a finished value; the
+//!   aggregate is the mean over clients. The right choice for
+//!   personalization-style questions ("how many users do well").
+//!
+//! The worked example from App. B.4 is a unit test below.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricValue {
+    Central { sum: f64, weight: f64 },
+    PerUser { sum: f64, count: u64 },
+}
+
+impl MetricValue {
+    pub fn central(sum: f64, weight: f64) -> Self {
+        MetricValue::Central { sum, weight }
+    }
+
+    pub fn per_user(value: f64) -> Self {
+        MetricValue::PerUser { sum: value, count: 1 }
+    }
+
+    /// The finished scalar value of the metric.
+    pub fn value(&self) -> f64 {
+        match self {
+            MetricValue::Central { sum, weight } => {
+                if *weight == 0.0 {
+                    0.0
+                } else {
+                    sum / weight
+                }
+            }
+            MetricValue::PerUser { sum, count } => {
+                if *count == 0 {
+                    0.0
+                } else {
+                    sum / *count as f64
+                }
+            }
+        }
+    }
+
+    /// Merge two contributions of the same metric. Panics on kind
+    /// mismatch — mixing central and per-user semantics is a bug.
+    pub fn merge(&mut self, other: &MetricValue) {
+        match (self, other) {
+            (
+                MetricValue::Central { sum: s, weight: w },
+                MetricValue::Central { sum: os, weight: ow },
+            ) => {
+                *s += os;
+                *w += ow;
+            }
+            (
+                MetricValue::PerUser { sum: s, count: c },
+                MetricValue::PerUser { sum: os, count: oc },
+            ) => {
+                *s += os;
+                *c += oc;
+            }
+            (a, b) => panic!("metric kind mismatch: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+/// An ordered bag of named metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics(pub BTreeMap<String, MetricValue>);
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, v: MetricValue) {
+        let name = name.into();
+        match self.0.get_mut(&name) {
+            Some(existing) => existing.merge(&v),
+            None => {
+                self.0.insert(name, v);
+            }
+        }
+    }
+
+    pub fn add_central(&mut self, name: impl Into<String>, sum: f64, weight: f64) {
+        self.add(name, MetricValue::central(sum, weight));
+    }
+
+    pub fn add_per_user(&mut self, name: impl Into<String>, value: f64) {
+        self.add(name, MetricValue::per_user(value));
+    }
+
+    /// Overwrite (no merge) — for already-finished values like timings.
+    pub fn set(&mut self, name: impl Into<String>, v: MetricValue) {
+        self.0.insert(name.into(), v);
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.0 {
+            self.add(k.clone(), *v);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.0.get(name).map(|v| v.value())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.0.keys().map(|s| s.as_str())
+    }
+
+    /// A copy with every name prefixed (the backend namespaces federated
+    /// evaluation rounds as `val/...`).
+    pub fn prefixed(&self, prefix: &str) -> Metrics {
+        Metrics(
+            self.0
+                .iter()
+                .map(|(k, v)| (format!("{prefix}{k}"), *v))
+                .collect(),
+        )
+    }
+}
+
+/// Macro-averaged average precision over `labels` binary labels — the
+/// FLAIR benchmark's mAP ("C-AP" in [79]). `scores` and `targets` are
+/// row-major [n, labels]; labels with no positive example are skipped.
+pub fn mean_average_precision(scores: &[f32], targets: &[f32], labels: usize) -> f64 {
+    if labels == 0 || scores.is_empty() {
+        return 0.0;
+    }
+    let n = scores.len() / labels;
+    let mut ap_sum = 0.0;
+    let mut ap_count = 0usize;
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    for l in 0..labels {
+        order.clear();
+        order.extend(0..n);
+        order.sort_by(|&a, &b| {
+            scores[b * labels + l]
+                .partial_cmp(&scores[a * labels + l])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut tp = 0u64;
+        let mut precision_sum = 0.0;
+        for (rank, &i) in order.iter().enumerate() {
+            if targets[i * labels + l] > 0.5 {
+                tp += 1;
+                precision_sum += tp as f64 / (rank + 1) as f64;
+            }
+        }
+        if tp > 0 {
+            ap_sum += precision_sum / tp as f64;
+            ap_count += 1;
+        }
+    }
+    if ap_count == 0 {
+        0.0
+    } else {
+        ap_sum / ap_count as f64
+    }
+}
+
+impl fmt::Display for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (k, v) in &self.0 {
+            if !first {
+                write!(f, " ")?;
+            }
+            write!(f, "{k}={:.5}", v.value())?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact worked example from paper App. B.4: U1 has 1 datapoint
+    /// (all correct), U2 has 7 (all wrong).
+    #[test]
+    fn paper_example_central_vs_per_user() {
+        let mut m = Metrics::new();
+        // U1
+        m.add_central("acc/central", 1.0, 1.0);
+        m.add_per_user("acc/per-user", 1.0 / 1.0);
+        // U2
+        m.add_central("acc/central", 0.0, 7.0);
+        m.add_per_user("acc/per-user", 0.0 / 7.0);
+
+        assert!((m.get("acc/per-user").unwrap() - 0.5).abs() < 1e-12);
+        assert!((m.get("acc/central").unwrap() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let contribs: Vec<Metrics> = (0..4)
+            .map(|i| {
+                let mut m = Metrics::new();
+                m.add_central("loss", i as f64, 2.0);
+                m.add_per_user("score", i as f64 * 0.1);
+                m
+            })
+            .collect();
+
+        let mut forward = Metrics::new();
+        for c in &contribs {
+            forward.merge(c);
+        }
+        let mut backward = Metrics::new();
+        for c in contribs.iter().rev() {
+            backward.merge(c);
+        }
+        for name in ["loss", "score"] {
+            let f = forward.get(name).unwrap();
+            let b = backward.get(name).unwrap();
+            assert!((f - b).abs() < 1e-12, "{name}: {f} vs {b}");
+        }
+        assert!((forward.get("loss").unwrap() - (0.0 + 1.0 + 2.0 + 3.0) / 8.0).abs() < 1e-12);
+        assert!((forward.get("score").unwrap() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_weight_is_zero_not_nan() {
+        let mut m = Metrics::new();
+        m.add_central("x", 0.0, 0.0);
+        assert_eq!(m.get("x").unwrap(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "metric kind mismatch")]
+    fn kind_mismatch_panics() {
+        let mut m = Metrics::new();
+        m.add_central("x", 1.0, 1.0);
+        m.add_per_user("x", 1.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        let mut m = Metrics::new();
+        m.add_central("a", 1.0, 2.0);
+        let s = format!("{m}");
+        assert!(s.contains("a=0.5"));
+    }
+
+    #[test]
+    fn prefixed_renames() {
+        let mut m = Metrics::new();
+        m.add_central("loss", 2.0, 1.0);
+        let p = m.prefixed("val/");
+        assert_eq!(p.get("val/loss"), Some(2.0));
+        assert!(p.get("loss").is_none());
+    }
+
+    #[test]
+    fn map_perfect_ranking_is_one() {
+        // 3 examples, 2 labels; scores rank positives first everywhere
+        let scores = [0.9, 0.1, 0.8, 0.9, 0.1, 0.2];
+        let targets = [1.0, 0.0, 1.0, 1.0, 0.0, 0.0];
+        let map = mean_average_precision(&scores, &targets, 2);
+        assert!((map - 1.0).abs() < 1e-12, "{map}");
+    }
+
+    #[test]
+    fn map_worst_ranking_below_one() {
+        let scores = [0.1, 0.9, 0.8];
+        let targets = [1.0, 0.0, 0.0];
+        // positive ranked last of 3 -> AP = 1/3
+        let map = mean_average_precision(&scores, &targets, 1);
+        assert!((map - 1.0 / 3.0).abs() < 1e-12, "{map}");
+    }
+
+    #[test]
+    fn map_empty_inputs() {
+        assert_eq!(mean_average_precision(&[], &[], 0), 0.0);
+        // no positives at all
+        assert_eq!(mean_average_precision(&[0.5, 0.5], &[0.0, 0.0], 1), 0.0);
+    }
+}

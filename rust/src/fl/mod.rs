@@ -1,0 +1,43 @@
+//! The simulation framework (L3): the paper's system contribution.
+//!
+//! Modules map one-to-one onto the extension points of pfl-research's API
+//! (paper App. B.1): [`algorithm`] (FederatedAlgorithm), [`aggregator`]
+//! (Aggregator), [`backend`] (SimulatedBackend, paper Alg. 1),
+//! [`postprocess`] (Postprocessor — DP, weighting, compression),
+//! [`callbacks`] (TrainingProcessCallback), [`hyperparam`] (HyperParam),
+//! [`metrics`] (central vs per-user), [`model`] (Model adapters),
+//! [`scheduler`] (greedy user load balancing, App. B.6) and [`worker`]
+//! (replica worker pool, §3.1 / Fig. 1).
+
+pub mod aggregator;
+pub mod algorithm;
+pub mod backend;
+pub mod callbacks;
+pub mod central_opt;
+pub mod context;
+pub mod gbdt;
+pub mod gmm;
+pub mod hyperparam;
+pub mod linear;
+pub mod metrics;
+pub mod model;
+pub mod postprocess;
+pub mod scheduler;
+pub mod stats;
+pub mod worker;
+
+pub use aggregator::{Aggregator, CollectAggregator, SumAggregator};
+pub use algorithm::{AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, Scaffold};
+pub use backend::{RunOutcome, RunParams, SimulatedBackend};
+pub use callbacks::{
+    Callback, CentralEvalCallback, CsvReporter, EarlyStopping, EmaCallback, JsonlReporter,
+    StragglerRecorder, TimeBudget,
+};
+pub use central_opt::{Adam, CentralOptimizer, Sgd};
+pub use context::{CentralContext, LocalParams, Population};
+pub use linear::LinearModel;
+pub use metrics::{MetricValue, Metrics};
+pub use model::{ClipKernel, HloModel, Model, TrainOutput};
+pub use scheduler::{median, schedule, Schedule, SchedulerKind};
+pub use stats::{Statistics, C_DELTA, UPDATE};
+pub use worker::{RoundResult, WorkerPool};

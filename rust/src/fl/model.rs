@@ -1,0 +1,473 @@
+//! Model adapters (paper App. B.1 "Model").
+//!
+//! A [`Model`] connects a trainable object to the simulator. The NN
+//! benchmark models are [`HloModel`]s: thin wrappers over the AOT-lowered
+//! artifacts (L2 JAX step functions + L1 Pallas kernels) executed through
+//! the per-worker PJRT runtime. Non-neural models (federated GBDT / GMM,
+//! paper §1 "Non-gradient-descent training") implement the same trait in
+//! pure Rust — see [`super::gbdt`] and [`super::gmm`].
+//!
+//! The efficiency contract (paper §3, items 1–2): one model per worker,
+//! buffers allocated once, the central state cloned *into* preallocated
+//! tensors before each user, parameters updated in place. `HloModel`
+//! mirrors that: `central`, `work` and the batch staging buffers are
+//! allocated at construction and reused for every user of every round.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::context::LocalParams;
+use super::metrics::Metrics;
+use crate::data::UserData;
+use crate::runtime::{Arg, Compiled, ModelEntry, Out, Runtime};
+use crate::util::rng::Rng;
+
+/// Output of one user's local optimization.
+#[derive(Debug, Clone, Default)]
+pub struct TrainOutput {
+    /// The user's contribution for aggregation. For gradient-descent
+    /// models this is the model delta Δ = θ − θ′ (paper Alg. 2); for
+    /// GBDT it is gradient histograms, for GMM sufficient statistics.
+    pub update: Vec<f32>,
+    /// Σ per-example loss (sufficient statistic for the central metric).
+    pub loss_sum: f64,
+    /// Model-family "stat" sum (correct count / true positives).
+    pub stat_sum: f64,
+    /// Σ example weights (the denominator).
+    pub wsum: f64,
+    /// Local optimization steps executed.
+    pub steps: usize,
+}
+
+/// Collects per-example scores + targets during evaluation, for metrics
+/// that are not decomposable into sums (mAP on the FLAIR benchmark).
+#[derive(Debug, Default, Clone)]
+pub struct ScoreSink {
+    pub labels: usize,
+    pub scores: Vec<f32>,
+    pub targets: Vec<f32>,
+}
+
+/// The L1 Pallas `clip_scale` kernel as a callable: clips `v` to L2 norm
+/// `bound` in place and returns the pre-clip norm. The DP postprocessors
+/// call this through the worker's model so clipping runs in the same
+/// stack as training (paper §3: "DP mechanisms are implemented with GPU
+/// acceleration without data transferring between CPU and GPU").
+pub trait ClipKernel {
+    fn clip(&self, v: &mut Vec<f32>, bound: f32) -> Result<f64>;
+}
+
+/// A trainable model bound to one worker.
+pub trait Model {
+    /// Length of the central state vector.
+    fn param_count(&self) -> usize;
+
+    /// Clone the broadcast central state into the preallocated local
+    /// buffer (paper §3 item 2: "always cloned to already allocated
+    /// tensors").
+    fn set_central(&mut self, central: &[f32]);
+
+    /// The current central state.
+    fn central(&self) -> &[f32];
+
+    /// Run local optimization for one user and return its contribution.
+    /// `c_diff` is SCAFFOLD's control-variate correction (c − c_u),
+    /// lowered into the unified train artifact; `None` means zeros.
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        p: &LocalParams,
+        c_diff: Option<&[f32]>,
+        seed: u64,
+    ) -> Result<TrainOutput>;
+
+    /// Evaluate the current central state on `data`. When `sink` is given
+    /// and the model emits per-example scores, they are appended for
+    /// non-decomposable metrics (mAP).
+    fn evaluate(&mut self, data: &UserData, sink: Option<&mut ScoreSink>) -> Result<Metrics>;
+
+    /// The model's L1 clip kernel, when it has one.
+    fn clip_kernel(&self) -> Option<&dyn ClipKernel> {
+        None
+    }
+
+    /// Device busy-time consumed so far (for the simulated-device
+    /// accounting; 0 for pure-Rust models, which cost host time only).
+    fn busy_nanos(&self) -> u64 {
+        0
+    }
+
+    /// Model family tag for diagnostics.
+    fn name(&self) -> &str;
+}
+
+/// A NN benchmark model: AOT-lowered train/eval/clip artifacts plus the
+/// flat-parameter buffers, executed through the worker's PJRT runtime.
+pub struct HloModel {
+    model_name: String,
+    entry: ModelEntry,
+    train_exe: Rc<Compiled>,
+    eval_exe: Rc<Compiled>,
+    clip_exe: Rc<Compiled>,
+    /// Frozen base weights (LoRA models only) — a runtime *input*, never
+    /// trained or aggregated.
+    base: Option<Vec<f32>>,
+    /// Central (global) parameters θ for the current iteration.
+    central: Vec<f32>,
+    /// Local parameters θ′, trained in place.
+    work: Vec<f32>,
+    /// Zero vector reused as c_diff when the algorithm passes none.
+    zeros: Vec<f32>,
+    /// Batch staging buffers (train shape).
+    stage: BatchStage,
+    /// Batch staging buffers (eval shape).
+    eval_stage: BatchStage,
+    eval_emits_scores: bool,
+    /// Keeps the PJRT client alive for the executables' lifetime when the
+    /// model owns its runtime (worker-factory construction).
+    _runtime: Option<std::rc::Rc<Runtime>>,
+}
+
+/// Preallocated padded-batch staging buffers.
+struct BatchStage {
+    batch: usize,
+    xf: Vec<f32>,
+    xi: Vec<i32>,
+    yf: Vec<f32>,
+    yi: Vec<i32>,
+    w: Vec<f32>,
+}
+
+impl BatchStage {
+    fn new(batch: usize, x_elems: usize, y_elems: usize) -> Self {
+        BatchStage {
+            batch,
+            xf: vec![0.0; batch * x_elems],
+            xi: vec![0; batch * x_elems],
+            yf: vec![0.0; batch * y_elems],
+            yi: vec![0; batch * y_elems],
+            w: vec![0.0; batch],
+        }
+    }
+}
+
+impl HloModel {
+    /// Build a model from the manifest entry `name`, compiling (or reusing
+    /// the worker's cached) train/eval/clip executables.
+    pub fn new(rt: &Runtime, name: &str, init_seed: u64) -> Result<Self> {
+        let entry = rt.manifest.model(name)?.clone();
+        let train_key = entry
+            .artifacts
+            .get("train")
+            .with_context(|| format!("model {name} has no train artifact"))?;
+        let eval_key = entry.artifacts.get("eval").context("no eval artifact")?;
+        let clip_key = entry.artifacts.get("clip").context("no clip artifact")?;
+        let train_exe = rt.get(train_key)?;
+        let eval_exe = rt.get(eval_key)?;
+        let clip_exe = rt.get(clip_key)?;
+
+        let central = entry.init_params(init_seed);
+        let n = central.len();
+        let base = entry.init_base_params(init_seed ^ 0xBA5E);
+
+        // Staging sizes come from the artifact input specs: the batch
+        // input follows (params, [base,] global, c_diff) for train.
+        let skip = if base.is_some() { 4 } else { 3 };
+        let x_spec = &train_exe.spec.inputs[skip];
+        let x_per = x_spec.element_count() / entry.train_batch;
+        let y_per = if train_exe.spec.inputs.len() == skip + 5 {
+            // (x, y, w, lr, mu)
+            train_exe.spec.inputs[skip + 1].element_count() / entry.train_batch
+        } else {
+            0 // (tokens, w, lr, mu): loss is self-supervised
+        };
+        let eval_skip = if base.is_some() { 2 } else { 1 };
+        let ex_spec = &eval_exe.spec.inputs[eval_skip];
+        let ex_per = ex_spec.element_count() / entry.eval_batch;
+        let ey_per = if eval_exe.spec.inputs.len() == eval_skip + 3 {
+            eval_exe.spec.inputs[eval_skip + 1].element_count() / entry.eval_batch
+        } else {
+            0
+        };
+        let eval_emits_scores = eval_exe.spec.outputs.len() > 3;
+
+        Ok(HloModel {
+            model_name: name.to_string(),
+            train_exe,
+            eval_exe,
+            clip_exe,
+            base,
+            work: central.clone(),
+            zeros: vec![0.0; n],
+            stage: BatchStage::new(entry.train_batch, x_per, y_per),
+            eval_stage: BatchStage::new(entry.eval_batch, ex_per, ey_per),
+            central,
+            entry,
+            eval_emits_scores,
+            _runtime: None,
+        })
+    }
+
+    /// Build a model that owns its runtime (keeps the PJRT client alive;
+    /// the per-worker construction path).
+    pub fn new_owned(rt: std::rc::Rc<Runtime>, name: &str, init_seed: u64) -> Result<Self> {
+        let mut m = Self::new(&rt, name, init_seed)?;
+        m._runtime = Some(rt);
+        Ok(m)
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// Re-initialize the central parameters from the manifest init spec.
+    pub fn reinit(&mut self, seed: u64) {
+        self.central = self.entry.init_params(seed);
+    }
+
+    /// Stage examples `idx` of `data` into a padded batch; returns the
+    /// number of real (weight-1) examples staged.
+    fn stage_batch(stage: &mut BatchStage, data: &UserData, idx: &[usize]) -> Result<usize> {
+        let b = stage.batch;
+        let n = idx.len().min(b);
+        stage.w[..n].fill(1.0);
+        stage.w[n..].fill(0.0);
+        match data {
+            UserData::Image { x, y, hwc } => {
+                for (row, &i) in idx.iter().take(n).enumerate() {
+                    stage.xf[row * hwc..(row + 1) * hwc]
+                        .copy_from_slice(&x[i * hwc..(i + 1) * hwc]);
+                    stage.yi[row] = y[i];
+                }
+                for row in n..b {
+                    stage.xf[row * hwc..(row + 1) * hwc].fill(0.0);
+                    stage.yi[row] = 0;
+                }
+            }
+            UserData::Features { x, y, feat, labels } => {
+                for (row, &i) in idx.iter().take(n).enumerate() {
+                    stage.xf[row * feat..(row + 1) * feat]
+                        .copy_from_slice(&x[i * feat..(i + 1) * feat]);
+                    stage.yf[row * labels..(row + 1) * labels]
+                        .copy_from_slice(&y[i * labels..(i + 1) * labels]);
+                }
+                for row in n..b {
+                    stage.xf[row * feat..(row + 1) * feat].fill(0.0);
+                    stage.yf[row * labels..(row + 1) * labels].fill(0.0);
+                }
+            }
+            UserData::Tokens { seqs, seq_len } => {
+                for (row, &i) in idx.iter().take(n).enumerate() {
+                    stage.xi[row * seq_len..(row + 1) * seq_len]
+                        .copy_from_slice(&seqs[i * seq_len..(i + 1) * seq_len]);
+                }
+                for row in n..b {
+                    stage.xi[row * seq_len..(row + 1) * seq_len].fill(0);
+                }
+            }
+            other => bail!("HloModel cannot train on {other:?}"),
+        }
+        Ok(n)
+    }
+
+    /// Build the batch `Arg`s matching the artifact's input layout.
+    fn batch_args<'a>(stage: &'a BatchStage, data: &UserData) -> Vec<Arg<'a>> {
+        match data {
+            UserData::Image { .. } => vec![
+                Arg::F32(&stage.xf),
+                Arg::I32(&stage.yi),
+                Arg::F32(&stage.w),
+            ],
+            UserData::Features { .. } => vec![
+                Arg::F32(&stage.xf),
+                Arg::F32(&stage.yf),
+                Arg::F32(&stage.w),
+            ],
+            UserData::Tokens { .. } => vec![Arg::I32(&stage.xi), Arg::F32(&stage.w)],
+            _ => unreachable!("checked in stage_batch"),
+        }
+    }
+}
+
+impl Model for HloModel {
+    fn param_count(&self) -> usize {
+        self.central.len()
+    }
+
+    fn set_central(&mut self, central: &[f32]) {
+        self.central.copy_from_slice(central);
+    }
+
+    fn central(&self) -> &[f32] {
+        &self.central
+    }
+
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        p: &LocalParams,
+        c_diff: Option<&[f32]>,
+        seed: u64,
+    ) -> Result<TrainOutput> {
+        let n_examples = data.len();
+        if n_examples == 0 {
+            return Ok(TrainOutput::default());
+        }
+        // θ′ ← θ (clone into the work buffer; the buffer was moved out as
+        // the previous user's Δ, so restore capacity first — the only
+        // model-sized allocation per user besides PJRT's own output
+        // literal, which the xla-crate API forces).
+        self.work.resize(self.central.len(), 0.0);
+        self.work.copy_from_slice(&self.central);
+        let c_diff = c_diff.unwrap_or(&self.zeros);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut order: Vec<usize> = (0..n_examples).collect();
+        let mut out = TrainOutput { update: Vec::new(), ..Default::default() };
+
+        'epochs: for _epoch in 0..p.epochs.max(1) {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(self.stage.batch) {
+                if p.max_steps > 0 && out.steps >= p.max_steps {
+                    break 'epochs;
+                }
+                Self::stage_batch(&mut self.stage, data, chunk)?;
+                let mut args: Vec<Arg> = Vec::with_capacity(8);
+                args.push(Arg::F32(&self.work));
+                if let Some(base) = &self.base {
+                    args.push(Arg::F32(base));
+                }
+                args.push(Arg::F32(&self.central));
+                args.push(Arg::F32(c_diff));
+                args.extend(Self::batch_args(&self.stage, data));
+                args.push(Arg::ScalarF32(p.lr));
+                args.push(Arg::ScalarF32(p.mu));
+                let mut outs = self.train_exe.execute(&args)?;
+                // outputs: (new_flat, loss_sum, stat_sum, wsum)
+                out.wsum += outs[3].scalar_f32() as f64;
+                out.stat_sum += outs[2].scalar_f32() as f64;
+                out.loss_sum += outs[1].scalar_f32() as f64;
+                let new_flat = std::mem::replace(&mut outs[0], Out::F32(Vec::new())).into_f32();
+                debug_assert_eq!(new_flat.len(), self.work.len());
+                self.work = new_flat;
+                out.steps += 1;
+            }
+        }
+
+        // Δ = θ − θ′ (paper Alg. 2). Reuse the final work buffer as Δ to
+        // avoid a second model-sized allocation.
+        let mut delta = std::mem::take(&mut self.work);
+        for (d, c) in delta.iter_mut().zip(&self.central) {
+            *d = *c - *d;
+        }
+        out.update = delta;
+        Ok(out)
+    }
+
+    fn evaluate(&mut self, data: &UserData, mut sink: Option<&mut ScoreSink>) -> Result<Metrics> {
+        let n_examples = data.len();
+        let mut metrics = Metrics::new();
+        if n_examples == 0 {
+            return Ok(metrics);
+        }
+        let idx: Vec<usize> = (0..n_examples).collect();
+        let mut loss_sum = 0f64;
+        let mut stat_sum = 0f64;
+        let mut wsum = 0f64;
+        for chunk in idx.chunks(self.eval_stage.batch) {
+            let real = Self::stage_batch(&mut self.eval_stage, data, chunk)?;
+            let mut args: Vec<Arg> = Vec::with_capacity(5);
+            args.push(Arg::F32(&self.central));
+            if let Some(base) = &self.base {
+                args.push(Arg::F32(base));
+            }
+            args.extend(Self::batch_args(&self.eval_stage, data));
+            let outs = self.eval_exe.execute(&args)?;
+            loss_sum += outs[0].scalar_f32() as f64;
+            stat_sum += outs[1].scalar_f32() as f64;
+            wsum += outs[2].scalar_f32() as f64;
+            if self.eval_emits_scores {
+                if let Some(sink) = sink.as_deref_mut() {
+                    if let UserData::Features { y, labels, .. } = data {
+                        sink.labels = *labels;
+                        let scores = outs[3].as_f32();
+                        for (row, &i) in chunk.iter().take(real).enumerate() {
+                            sink.scores
+                                .extend_from_slice(&scores[row * labels..(row + 1) * labels]);
+                            sink.targets
+                                .extend_from_slice(&y[i * labels..(i + 1) * labels]);
+                        }
+                    }
+                }
+            }
+        }
+        metrics.add_central("loss", loss_sum, wsum);
+        metrics.add_central("stat", stat_sum, wsum);
+        Ok(metrics)
+    }
+
+    fn clip_kernel(&self) -> Option<&dyn ClipKernel> {
+        Some(self)
+    }
+
+    fn busy_nanos(&self) -> u64 {
+        self.train_exe.stats().exec_nanos
+            + self.eval_exe.stats().exec_nanos
+            + self.clip_exe.stats().exec_nanos
+    }
+
+    fn name(&self) -> &str {
+        &self.model_name
+    }
+}
+
+impl ClipKernel for HloModel {
+    /// Run the L1 Pallas `clip_scale` artifact: v ← v·min(1, bound/‖v‖₂),
+    /// returning the pre-clip norm.
+    fn clip(&self, v: &mut Vec<f32>, bound: f32) -> Result<f64> {
+        let args = [Arg::F32(v), Arg::ScalarF32(bound)];
+        let mut outs = self.clip_exe.execute(&args)?;
+        let norm = outs[1].scalar_f32() as f64;
+        *v = std::mem::replace(&mut outs[0], Out::F32(Vec::new())).into_f32();
+        Ok(norm)
+    }
+}
+
+/// Pure-Rust clip with identical semantics, used server-side and by
+/// non-NN models (and as the oracle in tests against the L1 kernel).
+pub struct RustClip;
+
+impl ClipKernel for RustClip {
+    fn clip(&self, v: &mut Vec<f32>, bound: f32) -> Result<f64> {
+        let norm = crate::util::l2_norm(v);
+        if norm > bound as f64 && norm > 0.0 {
+            let s = (bound as f64 / norm) as f32;
+            crate::util::scale(v, s);
+        }
+        Ok(norm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_clip_caps_norm() {
+        let mut v = vec![3.0f32, 4.0];
+        let norm = RustClip.clip(&mut v, 1.0).unwrap();
+        assert!((norm - 5.0).abs() < 1e-6);
+        assert!((crate::util::l2_norm(&v) - 1.0).abs() < 1e-6);
+        // below the bound: untouched
+        let mut u = vec![0.3f32, 0.4];
+        RustClip.clip(&mut u, 1.0).unwrap();
+        assert_eq!(u, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn train_output_default_is_empty() {
+        let t = TrainOutput::default();
+        assert!(t.update.is_empty());
+        assert_eq!(t.steps, 0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Postprocessors (paper App. B.1 "Postprocessor"): composable
+//! transformations of local statistics before aggregation and of the
+//! aggregate before the central update. DP mechanisms, weighting,
+//! sparsification and compression all plug in here, so they mix and match
+//! with any algorithm.
+//!
+//! Ordering matters (paper: server-side steps run in *reversed* order;
+//! DP clipping must be the last local step so nothing changes the
+//! sensitivity afterwards). The backend enforces the reversed-server
+//! convention; configs list postprocessors in local-application order.
+
+use anyhow::Result;
+
+use super::context::CentralContext;
+use super::metrics::Metrics;
+use super::model::ClipKernel;
+use super::stats::Statistics;
+use crate::util::rng::Rng;
+
+/// Execution environment handed to a postprocessor: the calling side's
+/// clip kernel (the worker's L1 Pallas artifact on the user path, a pure
+/// Rust implementation on the server path) and a deterministic RNG stream.
+pub struct PpEnv<'a> {
+    pub clip: &'a dyn ClipKernel,
+    pub rng: &'a mut Rng,
+    /// Number of datapoints of the user being processed (0 on the server
+    /// path) — the input to weighting policies.
+    pub user_len: usize,
+}
+
+pub trait Postprocessor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Transform one user's statistics on the worker (paper Alg. 1 l.14).
+    fn postprocess_one_user(
+        &self,
+        _stats: &mut Statistics,
+        _ctx: &CentralContext,
+        _env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        Ok(Metrics::new())
+    }
+
+    /// Transform the aggregate on the server (paper Alg. 1 l.18; invoked
+    /// in reversed list order by the backend).
+    fn postprocess_server(
+        &self,
+        _stats: &mut Statistics,
+        _ctx: &CentralContext,
+        _env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        Ok(Metrics::new())
+    }
+
+    /// Participation filter consulted during cohort sampling — the hook
+    /// the banded-MF mechanism uses to enforce min-separation (paper App.
+    /// C.4). Default: everyone may participate.
+    fn may_participate(&self, _uid: usize, _iteration: u64) -> bool {
+        true
+    }
+
+    /// Notification that `uid` was scheduled at `iteration`.
+    fn record_participation(&self, _uid: usize, _iteration: u64) {}
+}
+
+/// Weight a user's contribution by its number of datapoints (classic
+/// FedAvg weighting). Scales every vector by w and sets the aggregation
+/// weight, so the server-side average is the datapoint-weighted mean.
+/// DP presets omit this: equal weighting keeps per-user sensitivity
+/// uniform (DP-FedAvg).
+pub struct WeightByDatapoints {
+    /// Cap on the weight (paper-style "max participation weight"; 0 = no
+    /// cap). Bounds one user's influence even without DP.
+    pub cap: f64,
+}
+
+impl Postprocessor for WeightByDatapoints {
+    fn name(&self) -> &'static str {
+        "weight-by-datapoints"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut w = env.user_len as f64;
+        if self.cap > 0.0 {
+            w = w.min(self.cap);
+        }
+        // statistics arrive with weight 1; rescale vectors and weight
+        let scale = (w / stats.weight.max(1e-12)) as f32;
+        for v in stats.vecs.values_mut() {
+            crate::util::scale(v, scale);
+        }
+        stats.weight = w;
+        Ok(Metrics::new())
+    }
+}
+
+/// Clip each user's update to an L2 bound through the side's clip kernel
+/// (L1 Pallas artifact on workers). This is the sensitivity-control half
+/// of central DP; the noise half lives in `privacy::*` mechanisms, which
+/// *contain* a `NormClip` so bound and noise scale can never diverge
+/// (paper §3: "tight integration ... to prevent errors").
+pub struct NormClip {
+    pub bound: f32,
+}
+
+impl Postprocessor for NormClip {
+    fn name(&self) -> &'static str {
+        "norm-clip"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
+            let norm = env.clip.clip(update, self.bound)?;
+            m.add_central("clip/pre-norm", norm, 1.0);
+            m.add_central("clip/clipped-frac", (norm > self.bound as f64) as u8 as f64, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Keep only the top-k largest-magnitude coordinates of the update
+/// (sparsification for communication research). The zeroed mass is
+/// reported so experiments can trade sparsity against accuracy.
+pub struct TopKSparsifier {
+    pub k: usize,
+}
+
+impl Postprocessor for TopKSparsifier {
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        _env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
+            if self.k < update.len() {
+                let mut idx: Vec<usize> = (0..update.len()).collect();
+                idx.select_nth_unstable_by(self.k, |&a, &b| {
+                    update[b].abs().partial_cmp(&update[a].abs()).unwrap()
+                });
+                let mut dropped = 0f64;
+                for &i in &idx[self.k..] {
+                    dropped += (update[i] as f64).powi(2);
+                    update[i] = 0.0;
+                }
+                m.add_central("topk/dropped-l2", dropped.sqrt(), 1.0);
+            }
+            m.add_central("topk/kept", self.k.min(update.len()) as f64, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Uniform scalar quantization to `bits` bits over the update's dynamic
+/// range (compression emulation: quantize-dequantize, so downstream code
+/// sees the lossy values a real wire format would deliver).
+pub struct UniformQuantizer {
+    pub bits: u32,
+}
+
+impl Postprocessor for UniformQuantizer {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        _env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
+            let levels = (1u64 << self.bits.clamp(1, 24)) as f32 - 1.0;
+            let max = update.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            if max > 0.0 {
+                let step = 2.0 * max / levels;
+                let mut err = 0f64;
+                for v in update.iter_mut() {
+                    let q = ((*v + max) / step).round() * step - max;
+                    err += ((*v - q) as f64).powi(2);
+                    *v = q;
+                }
+                m.add_central("quant/mse", err, update.len() as f64);
+            }
+            m.add_central(
+                "quant/bits-per-coord",
+                self.bits as f64,
+                1.0,
+            );
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::context::LocalParams;
+    use crate::fl::model::RustClip;
+
+    fn ctx() -> CentralContext {
+        CentralContext::train(0, 4, LocalParams::default(), 1)
+    }
+
+    fn env(rng: &mut Rng, user_len: usize) -> PpEnv<'_> {
+        // rng borrowed; clip is the pure-Rust oracle
+        PpEnv { clip: &RustClip, rng, user_len }
+    }
+
+    #[test]
+    fn weighting_scales_vectors_and_weight() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![1.0, 2.0], 1.0);
+        let pp = WeightByDatapoints { cap: 0.0 };
+        pp.postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 5)).unwrap();
+        assert_eq!(s.weight, 5.0);
+        assert_eq!(s.update(), &[5.0, 10.0]);
+        // the weighted average recovers the original value
+        s.average_in_place();
+        assert_eq!(s.update(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn weighting_cap_applies() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![1.0], 1.0);
+        let pp = WeightByDatapoints { cap: 3.0 };
+        pp.postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 100)).unwrap();
+        assert_eq!(s.weight, 3.0);
+    }
+
+    #[test]
+    fn norm_clip_bounds_sensitivity() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![3.0, 4.0], 1.0);
+        let pp = NormClip { bound: 1.0 };
+        let m = pp.postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1)).unwrap();
+        assert!((crate::util::l2_norm(s.update()) - 1.0).abs() < 1e-6);
+        assert!((m.get("clip/pre-norm").unwrap() - 5.0).abs() < 1e-6);
+        assert_eq!(m.get("clip/clipped-frac").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![0.1, -5.0, 3.0, 0.2], 1.0);
+        TopKSparsifier { k: 2 }
+            .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
+            .unwrap();
+        assert_eq!(s.update(), &[0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_noop_when_k_ge_len() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![1.0, 2.0], 1.0);
+        TopKSparsifier { k: 10 }
+            .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
+            .unwrap();
+        assert_eq!(s.update(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn quantizer_bounded_error() {
+        let mut rng = Rng::seed_from_u64(0);
+        let orig = vec![0.5f32, -0.25, 0.125, 1.0];
+        let mut s = Statistics::new_update(orig.clone(), 1.0);
+        UniformQuantizer { bits: 8 }
+            .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
+            .unwrap();
+        let step = 2.0 * 1.0 / 255.0;
+        for (a, b) in s.update().iter().zip(&orig) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+}

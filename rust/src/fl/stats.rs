@@ -1,0 +1,82 @@
+//! Training statistics: what a user contributes for aggregation.
+//!
+//! The common case is a single weighted model-update vector ("update");
+//! SCAFFOLD adds a second vector ("c_delta"). Keeping named vectors keeps
+//! the aggregator, postprocessors and DP mechanisms algorithm-agnostic,
+//! matching the paper's separation of concerns (App. B.2).
+
+use std::collections::BTreeMap;
+
+/// Canonical key of the model-update vector.
+pub const UPDATE: &str = "update";
+/// SCAFFOLD's control-variate delta.
+pub const C_DELTA: &str = "c_delta";
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Statistics {
+    /// Aggregation weight (typically Σ user weights; used for averaging).
+    pub weight: f64,
+    pub vecs: BTreeMap<String, Vec<f32>>,
+}
+
+impl Statistics {
+    pub fn new_update(update: Vec<f32>, weight: f64) -> Self {
+        let mut vecs = BTreeMap::new();
+        vecs.insert(UPDATE.to_string(), update);
+        Statistics { weight, vecs }
+    }
+
+    pub fn update(&self) -> &[f32] {
+        self.vecs.get(UPDATE).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn update_mut(&mut self) -> &mut Vec<f32> {
+        self.vecs.get_mut(UPDATE).expect("no update vector")
+    }
+
+    pub fn insert(&mut self, key: &str, v: Vec<f32>) {
+        self.vecs.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&[f32]> {
+        self.vecs.get(key).map(|v| v.as_slice())
+    }
+
+    /// Total number of f32 elements across vectors (communication cost).
+    pub fn element_count(&self) -> usize {
+        self.vecs.values().map(|v| v.len()).sum()
+    }
+
+    /// Divide all vectors by the accumulated weight -> weighted average.
+    pub fn average_in_place(&mut self) {
+        if self.weight > 0.0 {
+            let inv = (1.0 / self.weight) as f32;
+            for v in self.vecs.values_mut() {
+                crate::util::scale(v, inv);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_roundtrip_and_average() {
+        let mut s = Statistics::new_update(vec![2.0, 4.0], 2.0);
+        s.insert(C_DELTA, vec![1.0, 1.0]);
+        assert_eq!(s.update(), &[2.0, 4.0]);
+        assert_eq!(s.element_count(), 4);
+        s.average_in_place();
+        assert_eq!(s.update(), &[1.0, 2.0]);
+        assert_eq!(s.get(C_DELTA).unwrap(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn zero_weight_average_is_noop() {
+        let mut s = Statistics::new_update(vec![3.0], 0.0);
+        s.average_in_place();
+        assert_eq!(s.update(), &[3.0]);
+    }
+}

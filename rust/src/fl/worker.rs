@@ -1,0 +1,598 @@
+//! Worker replicas (paper §3.1, Fig. 1a).
+//!
+//! Every worker process is a *replica* with a different distributed
+//! context — there is no dedicated coordinator or aggregator process.
+//! Here a "process" is a thread that owns its own PJRT runtime + model
+//! (the `Runtime` type is deliberately `!Send`, so each worker constructs
+//! its own — the exact replica model of the paper). Workers receive a
+//! per-round command (context + central state + their slice of the
+//! cohort), train their queue of users, locally accumulate statistics,
+//! and return one partial per round; the backend then performs the
+//! all-reduce-equivalent `worker_reduce`.
+//!
+//! The optional topology emulation (a dedicated coordinator thread that
+//! every per-user update is serialized through) exists only for the
+//! baseline comparisons (paper Tables 1–2); pfl-style runs never touch
+//! it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::aggregator::Aggregator;
+use super::algorithm::FederatedAlgorithm;
+use super::context::CentralContext;
+use super::metrics::Metrics;
+use super::model::{Model, RustClip};
+use super::postprocess::{Postprocessor, PpEnv};
+use super::stats::Statistics;
+use crate::baselines::OverheadProfile;
+use crate::data::FederatedDataset;
+use crate::simsys::{Counters, UserCost};
+use crate::util::rng::Rng;
+
+/// Builds one worker's model inside the worker thread (so `!Send` models
+/// like `HloModel` are constructed where they live).
+pub type ModelFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Model>> + Send + Sync>;
+
+/// One round command to a worker.
+enum Cmd {
+    Round {
+        ctx: CentralContext,
+        central: Arc<Vec<f32>>,
+        /// User ids assigned to this worker, in training order.
+        users: Vec<usize>,
+    },
+    Stop,
+}
+
+/// One worker's per-round result.
+pub struct RoundResult {
+    pub worker: usize,
+    pub partial: Option<Statistics>,
+    pub metrics: Metrics,
+    pub counters: Counters,
+    /// Measured per-user costs (Fig. 4a; virtual-cluster replay input).
+    pub costs: Vec<UserCost>,
+    pub error: Option<String>,
+}
+
+/// Shared immutable pieces each worker needs.
+pub struct WorkerShared {
+    pub dataset: Arc<dyn FederatedDataset>,
+    pub algorithm: Arc<dyn FederatedAlgorithm>,
+    pub postprocessors: Arc<Vec<Box<dyn Postprocessor>>>,
+    pub aggregator: Arc<dyn Aggregator>,
+    pub factory: ModelFactory,
+    pub profile: OverheadProfile,
+    pub seed: u64,
+    /// Use the model's L1 HLO clip kernel (paper-faithful on-device path)
+    /// instead of the native Rust clip. See `RunParams::clip_backend`.
+    pub use_hlo_clip: bool,
+}
+
+/// The replica pool: w worker threads plus (baselines only) a coordinator
+/// thread emulating explicit client→server topology.
+pub struct WorkerPool {
+    cmd_txs: Vec<Sender<Cmd>>,
+    res_rx: Receiver<RoundResult>,
+    handles: Vec<JoinHandle<()>>,
+    coordinator: Option<CoordinatorHandle>,
+    pub num_workers: usize,
+}
+
+struct CoordinatorHandle {
+    tx: Sender<CoordMsg>,
+    handle: JoinHandle<()>,
+    msgs: Arc<AtomicU64>,
+    bytes: Arc<AtomicU64>,
+}
+
+enum CoordMsg {
+    /// A serialized per-user update routed through the "server".
+    Update(Vec<u8>),
+    Stop,
+}
+
+impl WorkerPool {
+    pub fn new(num_workers: usize, shared: WorkerShared) -> Result<Self> {
+        let num_workers = num_workers.max(1);
+        let (res_tx, res_rx) = channel::<RoundResult>();
+        let shared = Arc::new(shared);
+
+        // Topology-emulating coordinator (baselines only): deserializes
+        // every message like the frameworks that simulate FL topology do.
+        let coordinator = if shared.profile.coordinator {
+            let (ctx, crx) = channel::<CoordMsg>();
+            let msgs = Arc::new(AtomicU64::new(0));
+            let bytes = Arc::new(AtomicU64::new(0));
+            let (m2, b2) = (msgs.clone(), bytes.clone());
+            let handle = std::thread::Builder::new()
+                .name("coordinator".into())
+                .spawn(move || coordinator_loop(crx, m2, b2))
+                .context("spawning coordinator")?;
+            Some(CoordinatorHandle { tx: ctx, handle, msgs, bytes })
+        } else {
+            None
+        };
+
+        let mut cmd_txs = Vec::with_capacity(num_workers);
+        let mut handles = Vec::with_capacity(num_workers);
+        for w in 0..num_workers {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_txs.push(tx);
+            let res_tx = res_tx.clone();
+            let shared = shared.clone();
+            let coord_tx = coordinator.as_ref().map(|c| c.tx.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || worker_loop(w, rx, res_tx, shared, coord_tx))
+                .with_context(|| format!("spawning worker {w}"))?;
+            handles.push(handle);
+        }
+
+        Ok(WorkerPool { cmd_txs, res_rx, handles, coordinator, num_workers })
+    }
+
+    /// Run one (context, cohort) round: distribute per-worker user queues,
+    /// wait for every worker, return the per-worker results in worker
+    /// order. `assignments[w]` is worker w's queue of user ids.
+    pub fn run_round(
+        &self,
+        ctx: &CentralContext,
+        central: Arc<Vec<f32>>,
+        assignments: Vec<Vec<usize>>,
+    ) -> Result<Vec<RoundResult>> {
+        assert_eq!(assignments.len(), self.num_workers);
+        for (tx, users) in self.cmd_txs.iter().zip(assignments) {
+            tx.send(Cmd::Round { ctx: ctx.clone(), central: central.clone(), users })
+                .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        let mut results: Vec<Option<RoundResult>> = (0..self.num_workers).map(|_| None).collect();
+        for _ in 0..self.num_workers {
+            let r = self.res_rx.recv().context("worker result channel closed")?;
+            let w = r.worker;
+            results[w] = Some(r);
+        }
+        let out: Vec<RoundResult> = results.into_iter().map(|r| r.unwrap()).collect();
+        if let Some(r) = out.iter().find(|r| r.error.is_some()) {
+            return Err(anyhow!("worker {} failed: {}", r.worker, r.error.clone().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Coordinator message/byte counters (baselines diagnostics).
+    pub fn coordinator_traffic(&self) -> (u64, u64) {
+        match &self.coordinator {
+            Some(c) => (c.msgs.load(Ordering::Relaxed), c.bytes.load(Ordering::Relaxed)),
+            None => (0, 0),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.coordinator.take() {
+            let _ = c.tx.send(CoordMsg::Stop);
+            let _ = c.handle.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.coordinator.take() {
+            let _ = c.tx.send(CoordMsg::Stop);
+            let _ = c.handle.join();
+        }
+    }
+}
+
+fn coordinator_loop(rx: Receiver<CoordMsg>, msgs: Arc<AtomicU64>, bytes: Arc<AtomicU64>) {
+    // The coordinator deserializes every update (the cost the paper's
+    // design deliberately avoids) and drops it — aggregation correctness
+    // still comes from the worker partials, so the emulation adds the
+    // topology's *cost* without forking its numerics.
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            CoordMsg::Update(buf) => {
+                let mut checksum = 0f32;
+                for chunk in buf.chunks_exact(4) {
+                    checksum += f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+                std::hint::black_box(checksum);
+                msgs.fetch_add(1, Ordering::Relaxed);
+                bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            }
+            CoordMsg::Stop => break,
+        }
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    rx: Receiver<Cmd>,
+    res_tx: Sender<RoundResult>,
+    shared: Arc<WorkerShared>,
+    coord_tx: Option<Sender<CoordMsg>>,
+) {
+    // Build this replica's model here: one model per worker, alive for
+    // the whole simulation (paper §3 item 1).
+    let mut model: Option<Box<dyn Model>> = None;
+    let mut rng = Rng::seed_from_u64(shared.seed ^ (id as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Stop => break,
+            Cmd::Round { ctx, central, users } => {
+                if model.is_none() {
+                    match (shared.factory)(id) {
+                        Ok(m) => model = Some(m),
+                        Err(e) => {
+                            let _ = res_tx.send(RoundResult {
+                                worker: id,
+                                partial: None,
+                                metrics: Metrics::new(),
+                                counters: Counters::default(),
+                                costs: Vec::new(),
+                                error: Some(format!("model factory: {e:#}")),
+                            });
+                            continue;
+                        }
+                    }
+                }
+                let result = run_worker_round(
+                    id,
+                    model.as_deref_mut().unwrap(),
+                    &shared,
+                    &ctx,
+                    &central,
+                    &users,
+                    &mut rng,
+                    coord_tx.as_ref(),
+                );
+                let result = match result {
+                    Ok(r) => r,
+                    Err(e) => RoundResult {
+                        worker: id,
+                        partial: None,
+                        metrics: Metrics::new(),
+                        counters: Counters::default(),
+                        costs: Vec::new(),
+                        error: Some(format!("{e:#}")),
+                    },
+                };
+                if res_tx.send(result).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Busy-wait for `ns` nanoseconds (emulates interpreter/dispatch tax in
+/// the baseline profiles; sleeping would under-represent CPU contention).
+fn spin_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_worker_round(
+    id: usize,
+    model: &mut dyn Model,
+    shared: &WorkerShared,
+    ctx: &CentralContext,
+    central: &[f32],
+    users: &[usize],
+    rng: &mut Rng,
+    coord_tx: Option<&Sender<CoordMsg>>,
+) -> Result<RoundResult> {
+    let mut counters = Counters::default();
+    let mut metrics = Metrics::new();
+    let mut costs = Vec::with_capacity(users.len());
+    let mut partial: Option<Statistics> = None;
+    let profile = &shared.profile;
+
+    let busy0 = model.busy_nanos();
+    model.set_central(central);
+
+    for &uid in users {
+        let t0 = Instant::now();
+        let dev0 = model.busy_nanos();
+
+        if profile.realloc_per_user {
+            // Flower/FedML-style: re-materialize model-sized tensors for
+            // every client instead of reusing the resident model.
+            let fresh: Vec<f32> = central.to_vec();
+            counters.loop_alloc_bytes += (fresh.len() * 4) as u64;
+            std::hint::black_box(&fresh);
+            model.set_central(&fresh);
+            drop(fresh);
+        }
+        spin_ns(profile.per_user_overhead_ns);
+
+        let data = shared.dataset.user_data(uid);
+        let user_len = data.len();
+        let (stats, m) = shared
+            .algorithm
+            .simulate_one_user(model, uid, &data, ctx)
+            .with_context(|| format!("user {uid}"))?;
+        metrics.merge(&m);
+        counters.users_trained += 1;
+        counters.steps += m.get("train/steps").map(|s| s as u64).unwrap_or(0);
+        if profile.per_step_overhead_ns > 0 {
+            spin_ns(profile.per_step_overhead_ns * m.get("train/steps").unwrap_or(0.0) as u64);
+        }
+
+        if let Some(mut stats) = stats {
+            // per-user postprocessors (DP clipping through the model's L1
+            // kernel when it has one)
+            let rust_clip = RustClip;
+            {
+                let clip = if shared.use_hlo_clip {
+                    model.clip_kernel().unwrap_or(&rust_clip)
+                } else {
+                    &rust_clip as &dyn crate::fl::model::ClipKernel
+                };
+                let mut env = PpEnv { clip, rng, user_len };
+                for pp in shared.postprocessors.iter() {
+                    let pm = pp.postprocess_one_user(&mut stats, ctx, &mut env)?;
+                    metrics.merge(&pm);
+                }
+            }
+
+            if profile.cpu_roundtrip {
+                // NumPy-outer-loop emulation: bounce the update through a
+                // host staging buffer (device→host→device copies).
+                for v in stats.vecs.values_mut() {
+                    let staged = v.clone();
+                    counters.copy_bytes += (staged.len() * 4) as u64 * 2;
+                    v.copy_from_slice(&staged);
+                }
+            }
+            if let Some(tx) = coord_tx {
+                // explicit topology: serialize and route via coordinator
+                for v in stats.vecs.values() {
+                    let mut buf = Vec::with_capacity(v.len() * 4);
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                    counters.wire_bytes += buf.len() as u64;
+                    counters.coordinator_msgs += 1;
+                    let _ = tx.send(CoordMsg::Update(buf));
+                }
+            }
+
+            shared.aggregator.accumulate(&mut partial, stats);
+        }
+
+        costs.push(UserCost {
+            datapoints: user_len,
+            nanos: t0.elapsed().as_nanos() as u64,
+            device_nanos: model.busy_nanos() - dev0,
+        });
+    }
+
+    counters.busy_nanos = model.busy_nanos() - busy0;
+    Ok(RoundResult { worker: id, partial, metrics, counters, costs, error: None })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::data::UserData;
+    use crate::fl::algorithm::RunSpec;
+    use crate::fl::central_opt::Sgd;
+    use crate::fl::FedAvg;
+
+    /// A trivial linear model trained in pure Rust: params = mean of user
+    /// targets (delta = central − mean). Lets worker/backend tests run
+    /// without PJRT.
+    pub struct MeanModel {
+        central: Vec<f32>,
+    }
+
+    impl MeanModel {
+        pub fn new(dim: usize) -> Self {
+            MeanModel { central: vec![0.0; dim] }
+        }
+    }
+
+    impl Model for MeanModel {
+        fn param_count(&self) -> usize {
+            self.central.len()
+        }
+        fn set_central(&mut self, central: &[f32]) {
+            self.central.copy_from_slice(central);
+        }
+        fn central(&self) -> &[f32] {
+            &self.central
+        }
+        fn train_local(
+            &mut self,
+            data: &UserData,
+            p: &crate::fl::context::LocalParams,
+            _c_diff: Option<&[f32]>,
+            _seed: u64,
+        ) -> Result<super::super::model::TrainOutput> {
+            let (x, dim) = match data {
+                UserData::Points { x, dim } => (x, *dim),
+                _ => anyhow::bail!("MeanModel wants Points"),
+            };
+            let n = x.len() / dim;
+            let mut mean = vec![0.0f32; dim];
+            for row in x.chunks(dim) {
+                crate::util::add_assign(&mut mean, row);
+            }
+            crate::util::scale(&mut mean, 1.0 / n.max(1) as f32);
+            // gradient step toward the mean: delta = lr * (central − mean)
+            let mut delta = vec![0.0f32; dim];
+            for i in 0..dim {
+                delta[i] = p.lr * (self.central[i] - mean[i]);
+            }
+            let loss: f64 = (0..dim).map(|i| ((self.central[i] - mean[i]) as f64).powi(2)).sum();
+            Ok(super::super::model::TrainOutput {
+                update: delta,
+                loss_sum: loss * n as f64,
+                stat_sum: 0.0,
+                wsum: n as f64,
+                steps: 1,
+            })
+        }
+        fn evaluate(
+            &mut self,
+            data: &UserData,
+            _sink: Option<&mut super::super::model::ScoreSink>,
+        ) -> Result<Metrics> {
+            let mut m = Metrics::new();
+            let (x, dim) = match data {
+                UserData::Points { x, dim } => (x, *dim),
+                _ => anyhow::bail!("MeanModel wants Points"),
+            };
+            let n = x.len() / dim;
+            let mut loss = 0f64;
+            for row in x.chunks(dim) {
+                for (c, v) in self.central.iter().zip(row) {
+                    loss += ((c - v) as f64).powi(2);
+                }
+            }
+            m.add_central("loss", loss, n as f64);
+            Ok(m)
+        }
+        fn name(&self) -> &str {
+            "mean"
+        }
+    }
+
+    pub fn mean_pool(workers: usize, dim: usize, dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
+        let spec = RunSpec { iterations: 10, cohort_size: 8, ..Default::default() };
+        let shared = WorkerShared {
+            dataset,
+            algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
+            postprocessors: Arc::new(Vec::new()),
+            aggregator: Arc::new(crate::fl::SumAggregator),
+            factory: Arc::new(move |_| Ok(Box::new(MeanModel::new(dim)) as Box<dyn Model>)),
+            profile: OverheadProfile::default(),
+            seed: 0,
+            use_hlo_clip: false,
+        };
+        WorkerPool::new(workers, shared).unwrap()
+    }
+
+    #[test]
+    fn pool_round_trains_all_users_once() {
+        let data = Arc::new(crate::data::SynthGmmPoints::new(16, 10, 3, 2, 0));
+        let pool = mean_pool(3, 3, data);
+        let ctx = CentralContext::train(0, 9, Default::default(), 1);
+        let central = Arc::new(vec![0.0f32; 3]);
+        let assignments = vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]];
+        let results = pool.run_round(&ctx, central, assignments).unwrap();
+        assert_eq!(results.len(), 3);
+        let total: u64 = results.iter().map(|r| r.counters.users_trained).sum();
+        assert_eq!(total, 9);
+        for r in &results {
+            assert!(r.partial.is_some());
+            assert_eq!(r.costs.len(), 3);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_empty_assignment_is_ok() {
+        let data = Arc::new(crate::data::SynthGmmPoints::new(4, 10, 2, 2, 0));
+        let pool = mean_pool(2, 2, data);
+        let ctx = CentralContext::train(0, 2, Default::default(), 1);
+        let results = pool
+            .run_round(&ctx, Arc::new(vec![0.0; 2]), vec![vec![0, 1], vec![]])
+            .unwrap();
+        assert!(results[1].partial.is_none());
+        assert_eq!(results[1].counters.users_trained, 0);
+    }
+
+    #[test]
+    fn pool_result_independent_of_worker_count() {
+        // replica workers + exchange-law aggregation => scheduling must
+        // not change the reduced statistics (the paper's correctness
+        // argument for ignoring topology).
+        let data: Arc<dyn FederatedDataset> =
+            Arc::new(crate::data::SynthGmmPoints::new(12, 10, 2, 2, 3));
+        let ctx = CentralContext::train(0, 12, Default::default(), 1);
+        let agg = crate::fl::SumAggregator;
+
+        let mut reduced = Vec::new();
+        for (w, chunks) in [
+            (1usize, vec![(0..12).collect::<Vec<_>>()]),
+            (3, vec![vec![0, 3, 6, 9], vec![1, 4, 7, 10], vec![2, 5, 8, 11]]),
+        ] {
+            let pool = mean_pool(w, 2, data.clone());
+            let results = pool
+                .run_round(&ctx, Arc::new(vec![0.0; 2]), chunks)
+                .unwrap();
+            let partials: Vec<Statistics> =
+                results.into_iter().filter_map(|r| r.partial).collect();
+            reduced.push(agg.worker_reduce(partials).unwrap());
+            pool.shutdown();
+        }
+        let a = &reduced[0];
+        let b = &reduced[1];
+        assert_eq!(a.weight, b.weight);
+        for (x, y) in a.update().iter().zip(b.update()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn overhead_profile_counters_tick() {
+        let data = Arc::new(crate::data::SynthGmmPoints::new(4, 10, 2, 2, 0));
+        let spec = RunSpec { iterations: 10, cohort_size: 4, ..Default::default() };
+        let shared = WorkerShared {
+            dataset: data,
+            algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
+            postprocessors: Arc::new(Vec::new()),
+            aggregator: Arc::new(crate::fl::SumAggregator),
+            factory: Arc::new(|_| Ok(Box::new(MeanModel::new(2)) as Box<dyn Model>)),
+            profile: OverheadProfile {
+                realloc_per_user: true,
+                cpu_roundtrip: true,
+                coordinator: true,
+                ..Default::default()
+            },
+            seed: 0,
+            use_hlo_clip: false,
+        };
+        let pool = WorkerPool::new(2, shared).unwrap();
+        let ctx = CentralContext::train(0, 4, Default::default(), 1);
+        let results = pool
+            .run_round(&ctx, Arc::new(vec![0.0; 2]), vec![vec![0, 1], vec![2, 3]])
+            .unwrap();
+        let mut c = Counters::default();
+        for r in &results {
+            c.merge(&r.counters);
+        }
+        assert!(c.loop_alloc_bytes > 0);
+        assert!(c.copy_bytes > 0);
+        assert!(c.wire_bytes > 0);
+        assert_eq!(c.coordinator_msgs, 4);
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,32 @@
+//! # pfl-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **pfl-research** (Granqvist et
+//! al., NeurIPS 2024): a fast, modular simulation framework for federated
+//! learning (FL) and private federated learning (PFL).
+//!
+//! Architecture (DESIGN.md):
+//! * **L3 (this crate)** — the simulation framework: the generalized PFL
+//!   loop (paper Alg. 1), algorithms, aggregation, DP mechanisms +
+//!   accountants, worker replicas with greedy load balancing, synthetic
+//!   federated datasets, metrics, callbacks, baseline-architecture
+//!   emulations and the benchmark CLI.
+//! * **L2 (python/compile)** — JAX benchmark models, AOT-lowered once to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (DP clipping, fused
+//!   linear) lowered into the same artifacts.
+//!
+//! Python never runs on the simulation path: the `runtime` module loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client and the whole
+//! simulation is a self-contained Rust binary.
+
+pub mod baselines;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod fl;
+pub mod privacy;
+pub mod runtime;
+pub mod simsys;
+pub mod util;
+
+pub use anyhow::Result;

@@ -1,0 +1,214 @@
+//! `pfl` — the simulation launcher + experiment harness CLI.
+//!
+//! ```text
+//! pfl run --preset cifar10-iid [--scale 0.05] [--workers 2] ...
+//! pfl run --config path.json
+//! pfl table1|table2|table3|table4|table5      # paper tables
+//! pfl fig2|fig3|fig4a|fig4b|fig5|fig6|fig7    # paper figures
+//! pfl calibrate                               # DP noise calibration
+//! pfl nonnn                                   # federated GBDT/GMM demo
+//! pfl presets [--dump]                        # hyperparameter tables
+//! ```
+//!
+//! Every experiment accepts `--scale f` (compute budget relative to the
+//! built-in CPU-sized default) and prints the rows/series of the
+//! corresponding paper table/figure.
+
+use anyhow::{bail, Context, Result};
+
+use pfl::baselines::EngineVariant;
+use pfl::experiments;
+use pfl::fl::callbacks::{Callback, CsvReporter, JsonlReporter};
+use pfl::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+pfl — Rust+JAX+Pallas reproduction of pfl-research (NeurIPS 2024)
+
+USAGE: pfl <command> [--key value]...
+
+COMMANDS
+  run        run one benchmark      --preset NAME | --config FILE
+                                    [--scale F] [--workers N]
+                                    [--algorithm A] [--mechanism M]
+                                    [--iterations N] [--cohort N] [--seed S]
+                                    [--csv PATH] [--jsonl PATH] [--log K]
+  table1     CIFAR10 speed vs baseline engines   [--scale F] [--p N]
+  table2     FLAIR speed (+DP overhead row)      [--scale F] [--p N]
+  table3     algorithm suite, no DP    [--benchmarks a,b] [--scale F] [--seeds N]
+  table4     algorithm suite, central DP (same options)
+  table5     straggler time per scheduler        [--scale F] [--workers N]
+  fig2       wall-clock vs processes/GPU         [--scale F] [--max-p N]
+  fig3       scaling #GPUs (+50k-cohort panel)   [--scale F] [--big-cohort N]
+  fig4a      user size vs wall-clock scatter     [--scale F]
+  fig4b      scheduling base-value sweep         [--scale F] [--workers N]
+  fig5       per-worker load histograms          [--scale F] [--workers N]
+  fig6       SNR/accuracy: cohort C vs noise r   [--scale F] [--seeds N]
+  fig7       system-metric timelines per engine  [--scale F]
+  calibrate  DP noise calibration per accountant
+  nonnn      federated GBDT + GMM convergence
+  presets    list benchmark presets  [--dump]
+  engines    list baseline engine emulations
+";
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.subcommand.clone() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let scale = args.get_f64("scale", 1.0)?;
+    match cmd.as_str() {
+        "help" | "--help" => print!("{HELP}"),
+        "run" => cmd_run(&args)?,
+        "table1" => {
+            experiments::speed::table1(scale, args.get_usize("p", 5)?)?;
+        }
+        "table2" => experiments::speed::table2(scale, args.get_usize("p", 5)?)?,
+        "table3" | "table4" => {
+            let benchmarks: Vec<String> = args
+                .get_str("benchmarks", "cifar10-iid,cifar10-noniid")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .collect();
+            let seeds = args.get_u64("seeds", 1)?;
+            let workers = args.get_usize("workers", 1)?;
+            let scale = args.get_f64("scale", 0.02)?;
+            if cmd == "table3" {
+                experiments::quality::table3(&benchmarks, scale, seeds, workers)?;
+            } else {
+                experiments::quality::table4(&benchmarks, scale, seeds, workers)?;
+            }
+        }
+        "table5" => experiments::sched::table5(scale, args.get_usize("workers", 5)?)?,
+        "fig2" => experiments::scaling::fig2(scale, args.get_usize("max-p", 6)?)?,
+        "fig3" => experiments::scaling::fig3(scale, args.get_usize("big-cohort", 50_000)?)?,
+        "fig4a" => experiments::sched::fig4a(scale)?,
+        "fig4b" => experiments::sched::fig4b(scale, args.get_usize("workers", 5)?)?,
+        "fig5" => experiments::sched::fig5(scale, args.get_usize("workers", 5)?)?,
+        "fig6" => experiments::privacy_fig::fig6(scale, args.get_u64("seeds", 1)?)?,
+        "fig7" | "fig8" => experiments::speed::fig7_fig8(scale)?,
+        "calibrate" => experiments::privacy_fig::calibrate()?,
+        "nonnn" => experiments::quality::nonnn(scale)?,
+        "presets" => {
+            if args.flag("dump") {
+                println!("{}", pfl::config::dump_presets());
+            } else {
+                for name in pfl::config::preset_names() {
+                    let c = pfl::config::preset(name)?;
+                    println!(
+                        "{name:<22} model={:<10} T={:<5} C={:<4} dp={}",
+                        c.model,
+                        c.iterations,
+                        c.cohort_size,
+                        if c.privacy.is_none() { "no" } else { "central" }
+                    );
+                }
+            }
+        }
+        "engines" => {
+            for e in EngineVariant::all() {
+                let p = e.profile();
+                println!(
+                    "{:<14} realloc={:<5} roundtrip={:<5} coordinator={:<5} user_tax={}us step_tax={}us",
+                    e.name(),
+                    p.realloc_per_user,
+                    p.cpu_roundtrip,
+                    p.coordinator,
+                    p.per_user_overhead_ns / 1000,
+                    p.per_step_overhead_ns / 1000,
+                );
+            }
+        }
+        other => bail!("unknown command {other:?}; run `pfl help`"),
+    }
+    Ok(())
+}
+
+/// `pfl run` — the config-driven launcher.
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        pfl::config::Config::from_json(&text)?
+    } else {
+        let name = args
+            .get("preset")
+            .context("run needs --preset NAME or --config FILE")?;
+        pfl::config::preset(name)?
+    };
+    let scale = args.get_f64("scale", 1.0)?;
+    cfg = cfg.scaled(scale);
+    if let Some(w) = args.get("workers") {
+        cfg.num_workers = w.parse()?;
+    }
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm.kind = a.into();
+    }
+    if let Some(m) = args.get("mechanism") {
+        if cfg.privacy.is_none() {
+            cfg.privacy = pfl::config::PrivacyConfig {
+                mechanism: m.into(),
+                accountant: "pld".into(),
+                clip_bound: 0.4,
+                epsilon: 2.0,
+                delta: 1e-6,
+                population_m: 1e6,
+                noise_cohort: cfg.cohort_size as f64 * 20.0,
+            };
+        } else {
+            cfg.privacy.mechanism = m.into();
+        }
+    }
+    if let Some(it) = args.get("iterations") {
+        cfg.iterations = it.parse()?;
+    }
+    if let Some(c) = args.get("cohort") {
+        cfg.cohort_size = c.parse()?;
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let log_every = args.get_u64("log", 1)?;
+
+    eprintln!(
+        "running {} (T={} C={} workers={})",
+        cfg.name, cfg.iterations, cfg.cohort_size, cfg.num_workers
+    );
+
+    let dataset = pfl::config::build::build_dataset(&cfg.dataset)?;
+    let mut backend =
+        pfl::config::build::build_backend(&cfg, EngineVariant::PflStyle.profile())?;
+    let init = pfl::config::build::init_params(&cfg)?;
+    let mut callbacks: Vec<Box<dyn Callback>> = Vec::new();
+    callbacks.push(Box::new(pfl::config::build::build_eval_callback(&cfg, &dataset)?));
+    if let Some(path) = args.get("csv") {
+        callbacks.push(Box::new(CsvReporter::new(path)));
+    }
+    if let Some(path) = args.get("jsonl") {
+        callbacks.push(Box::new(JsonlReporter::new(path)?));
+    }
+    let t0 = std::time::Instant::now();
+    let outcome = backend.run(init, &mut callbacks)?;
+    let metric = pfl::config::build::headline_metric(&cfg.model);
+    if log_every > 0 {
+        for (t, m) in &outcome.history {
+            if t % log_every == 0 {
+                println!("[round {t}] {m}");
+            }
+        }
+    }
+    println!(
+        "done: {} rounds in {:.1}s; final {metric} = {}",
+        outcome.rounds,
+        t0.elapsed().as_secs_f64(),
+        outcome
+            .final_metric(&format!("centraleval/{metric}"))
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+    );
+    Ok(())
+}

@@ -1,0 +1,492 @@
+//! Privacy accountants (paper App. A + B.5): compute the total privacy
+//! loss (ε, δ) of T compositions of the Poisson-subsampled Gaussian
+//! mechanism, and calibrate the noise multiplier σ for a target budget.
+//!
+//! Three accountants, as in pfl-research:
+//! * [`RdpAccountant`] — Rényi DP of the subsampled Gaussian (Mironov
+//!   [64], Zhu–Wang [94]) with the standard RDP→(ε,δ) conversion. Simple
+//!   and robust, but a looser bound.
+//! * [`PldAccountant`] — discretized privacy-loss distribution ([22, 62]):
+//!   the PLD of one step is convolved T times (exponentiation by
+//!   squaring), and δ(ε) is read off the composed distribution. Tighter
+//!   than RDP.
+//! * [`PrvAccountant`] — the PRV accountant of [32] shares the PLD's
+//!   convolution machinery; here it is the same pipeline on a 4× finer
+//!   grid with wider support, which is how it tightens the ε estimate in
+//!   practice. (Documented substitution: we do not reimplement [32]'s
+//!   error analysis.)
+//!
+//! All accountants assume Poisson sampling with rate q = C̃/M and
+//! add/remove adjacency (paper App. A).
+
+use anyhow::{bail, Result};
+
+/// Common accounting parameters (paper Table 7: M = 1e6, ε = 2, δ = 1/M).
+#[derive(Debug, Clone, Copy)]
+pub struct AccountantParams {
+    /// Poisson sampling rate q = cohort_size / population.
+    pub sampling_rate: f64,
+    /// Target δ.
+    pub delta: f64,
+    /// Number of composition steps (central iterations).
+    pub steps: u64,
+}
+
+/// A privacy accountant for the subsampled Gaussian mechanism.
+pub trait Accountant: Send + Sync {
+    /// ε spent after `p.steps` steps with noise multiplier σ (noise std =
+    /// σ × clip bound on the *sum*), at δ = p.delta.
+    fn epsilon(&self, sigma: f64, p: &AccountantParams) -> f64;
+
+    fn name(&self) -> &'static str;
+
+    /// Smallest σ achieving ε ≤ `target_epsilon` (bisection; the paper's
+    /// workflow: fix (ε, δ, T, q), derive σ).
+    fn calibrate_sigma(&self, target_epsilon: f64, p: &AccountantParams) -> Result<f64> {
+        if target_epsilon <= 0.0 {
+            bail!("target epsilon must be positive");
+        }
+        let mut lo = 0.05;
+        let mut hi = 1.0;
+        // grow hi until it satisfies the budget
+        while self.epsilon(hi, p) > target_epsilon {
+            hi *= 2.0;
+            if hi > 1e4 {
+                bail!("calibration diverged: eps({hi}) still above target");
+            }
+        }
+        while self.epsilon(lo, p) < target_epsilon && lo > 1e-6 {
+            lo /= 2.0;
+        }
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.epsilon(mid, p) > target_epsilon {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Ok(hi)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RDP
+// ---------------------------------------------------------------------
+
+/// Rényi-DP accountant for the Poisson-subsampled Gaussian.
+#[derive(Debug, Default)]
+pub struct RdpAccountant;
+
+/// log(a + b) given log a, log b.
+fn log_add(la: f64, lb: f64) -> f64 {
+    let (hi, lo) = if la > lb { (la, lb) } else { (lb, la) };
+    if hi == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// log C(n, k)
+fn log_binom(n: u64, k: u64) -> f64 {
+    lgamma((n + 1) as f64) - lgamma((k + 1) as f64) - lgamma((n - k + 1) as f64)
+}
+
+/// Lanczos log-gamma (no libm lgamma in core; matches to ~1e-13).
+fn lgamma(x: f64) -> f64 {
+    // Lanczos approximation, g = 7, n = 9
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().abs().ln() - lgamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+impl RdpAccountant {
+    /// RDP of one subsampled-Gaussian step at integer order α
+    /// (Mironov et al.'s binomial expansion, the standard upper bound):
+    ///
+    /// ε(α) = 1/(α−1) · log Σ_{k=0}^{α} C(α,k)(1−q)^{α−k} q^k e^{k(k−1)/(2σ²)}
+    pub fn rdp_step(q: f64, sigma: f64, alpha: u64) -> f64 {
+        if q == 0.0 {
+            return 0.0;
+        }
+        if q >= 1.0 {
+            // plain Gaussian: ε(α) = α / (2σ²)
+            return alpha as f64 / (2.0 * sigma * sigma);
+        }
+        let mut log_sum = f64::NEG_INFINITY;
+        for k in 0..=alpha {
+            let term = log_binom(alpha, k)
+                + (alpha - k) as f64 * (1.0 - q).ln()
+                + k as f64 * q.ln()
+                + (k * (k.saturating_sub(1))) as f64 / (2.0 * sigma * sigma);
+            log_sum = log_add(log_sum, term);
+        }
+        (log_sum / (alpha as f64 - 1.0)).max(0.0)
+    }
+}
+
+/// Orders scanned for the RDP→DP conversion.
+const ORDERS: &[u64] = &[
+    2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96, 128, 192, 256, 512,
+];
+
+impl Accountant for RdpAccountant {
+    fn epsilon(&self, sigma: f64, p: &AccountantParams) -> f64 {
+        let mut best = f64::INFINITY;
+        for &alpha in ORDERS {
+            let rdp = Self::rdp_step(p.sampling_rate, sigma, alpha) * p.steps as f64;
+            // standard conversion (Mironov Prop. 3)
+            let eps = rdp + (1.0 / p.delta).ln() / (alpha as f64 - 1.0);
+            best = best.min(eps);
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "rdp"
+    }
+}
+
+// ---------------------------------------------------------------------
+// PLD
+// ---------------------------------------------------------------------
+
+/// Discretized privacy-loss-distribution accountant.
+///
+/// Losses are binned to the *nearest* grid point (T-fold composition on
+/// a pessimistic ceil grid would inflate ε by T·grid, which dominates at
+/// the benchmark's thousands of rounds); with grid h the residual
+/// discretization error is O(h·√T) ≈ 0.02 at h = 2e-4, T = 5000 —
+/// recorded as a known approximation in DESIGN.md. Self-composition uses
+/// exponentiation by squaring with FFT convolutions (`util::fft`).
+pub struct PldAccountant {
+    /// Discretization step of the privacy-loss grid.
+    pub grid: f64,
+    /// Support half-width of the single-step PLD in privacy-loss units.
+    pub half_width: f64,
+}
+
+impl Default for PldAccountant {
+    fn default() -> Self {
+        PldAccountant { grid: 2e-4, half_width: 30.0 }
+    }
+}
+
+/// A discretized PLD: pmf over losses `min + i*grid`, plus the mass that
+/// escapes to +infinity (treated as a pure δ contribution).
+#[derive(Debug, Clone)]
+struct Pld {
+    min: f64,
+    grid: f64,
+    pmf: Vec<f64>,
+    inf_mass: f64,
+}
+
+impl Pld {
+    /// PLD of one Poisson-subsampled Gaussian step (add/remove adjacency,
+    /// "remove" direction which dominates):
+    ///   P = (1−q)·N(0,σ²) + q·N(1,σ²),  Q = N(0,σ²)
+    ///   ℓ(t) = log(1−q + q·e^{(2t−1)/(2σ²)}),  t ~ P.
+    fn subsampled_gaussian(q: f64, sigma: f64, grid: f64, half_width: f64) -> Pld {
+        // integrate t over a wide grid; map mass into loss bins with
+        // pessimistic (round-up) placement for a valid upper bound.
+        let t_lo = -12.0 * sigma;
+        let t_hi = 12.0 * sigma + 1.0;
+        let steps = 60_000usize;
+        let dt = (t_hi - t_lo) / steps as f64;
+
+        let loss_min = -half_width;
+        let n_bins = (2.0 * half_width / grid).ceil() as usize + 1;
+        let mut pmf = vec![0.0; n_bins];
+        let mut inf_mass = 0.0;
+
+        let inv2s2 = 1.0 / (2.0 * sigma * sigma);
+        let norm = 1.0 / (sigma * (2.0 * std::f64::consts::PI).sqrt());
+        for i in 0..steps {
+            let t = t_lo + (i as f64 + 0.5) * dt;
+            // density of P at t
+            let p0 = norm * (-t * t * inv2s2).exp();
+            let p1 = norm * (-(t - 1.0) * (t - 1.0) * inv2s2).exp();
+            let p = (1.0 - q) * p0 + q * p1;
+            if p <= 0.0 {
+                continue;
+            }
+            let ratio = 1.0 - q + q * ((2.0 * t - 1.0) * inv2s2).exp();
+            let loss = ratio.ln();
+            let mass = p * dt;
+            if loss >= half_width {
+                inf_mass += mass;
+            } else {
+                // nearest rounding (see type docs for the error budget)
+                let bin = ((loss - loss_min) / grid).round().clamp(0.0, (n_bins - 1) as f64);
+                pmf[bin as usize] += mass;
+            }
+        }
+        // normalize tiny integration error into the top bin (pessimistic)
+        let total: f64 = pmf.iter().sum::<f64>() + inf_mass;
+        if total < 1.0 {
+            inf_mass += 1.0 - total;
+        }
+        let mut out = Pld { min: loss_min, grid, pmf, inf_mass };
+        out.trim_tails(1e-15);
+        out
+    }
+
+    /// Convolution (independent composition: losses add), FFT-backed.
+    fn compose(&self, other: &Pld) -> Pld {
+        let pmf = crate::util::fft::convolve(&self.pmf, &other.pmf);
+        let inf_mass = self.inf_mass + other.inf_mass
+            - self.inf_mass * other.inf_mass;
+        let mut out = Pld {
+            min: self.min + other.min,
+            grid: self.grid,
+            pmf,
+            inf_mass,
+        };
+        out.trim_tails(1e-14);
+        out
+    }
+
+    /// Bound the support by trimming negligible tail mass, pessimistically:
+    /// low-tail mass folds into the lowest kept bin (raising its loss),
+    /// high-tail mass moves to `inf_mass` (counted fully in δ). With a
+    /// per-trim budget of 1e-14 and ≲64 trims the added δ is ≪ 1e-6.
+    fn trim_tails(&mut self, tail_mass: f64) {
+        // high end -> inf_mass
+        let mut cum = 0.0;
+        let mut hi_cut = self.pmf.len();
+        while hi_cut > 1 && cum + self.pmf[hi_cut - 1] <= tail_mass {
+            cum += self.pmf[hi_cut - 1];
+            hi_cut -= 1;
+        }
+        self.inf_mass += cum;
+        self.pmf.truncate(hi_cut);
+        // low end -> fold into lowest kept bin
+        let mut cum = 0.0;
+        let mut lo_cut = 0usize;
+        while lo_cut + 1 < self.pmf.len() && cum + self.pmf[lo_cut] <= tail_mass {
+            cum += self.pmf[lo_cut];
+            lo_cut += 1;
+        }
+        if lo_cut > 0 {
+            self.pmf.drain(0..lo_cut);
+            self.pmf[0] += cum;
+            self.min += lo_cut as f64 * self.grid;
+        }
+    }
+
+    /// T-fold self-composition by exponentiation by squaring.
+    fn self_compose(&self, t: u64) -> Pld {
+        assert!(t >= 1);
+        let mut result: Option<Pld> = None;
+        let mut base = self.clone();
+        let mut k = t;
+        loop {
+            if k & 1 == 1 {
+                result = Some(match result {
+                    None => base.clone(),
+                    Some(r) => r.compose(&base),
+                });
+            }
+            k >>= 1;
+            if k == 0 {
+                break;
+            }
+            base = base.compose(&base);
+        }
+        result.unwrap()
+    }
+
+    /// δ(ε) = inf_mass + Σ_{ℓ > ε} p(ℓ)·(1 − e^{ε−ℓ})
+    fn delta_at(&self, eps: f64) -> f64 {
+        let mut delta = self.inf_mass;
+        for (i, &p) in self.pmf.iter().enumerate() {
+            let loss = self.min + i as f64 * self.grid;
+            if loss > eps {
+                delta += p * (1.0 - (eps - loss).exp());
+            }
+        }
+        delta.clamp(0.0, 1.0)
+    }
+
+    /// Smallest ε with δ(ε) ≤ target (bisection; δ(ε) is decreasing).
+    fn epsilon_at(&self, target_delta: f64) -> f64 {
+        let mut lo = 0.0;
+        let mut hi = 400.0;
+        if self.delta_at(lo) <= target_delta {
+            return 0.0;
+        }
+        if self.delta_at(hi) > target_delta {
+            return f64::INFINITY;
+        }
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.delta_at(mid) > target_delta {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+}
+
+impl Accountant for PldAccountant {
+    fn epsilon(&self, sigma: f64, p: &AccountantParams) -> f64 {
+        let step = Pld::subsampled_gaussian(p.sampling_rate, sigma, self.grid, self.half_width);
+        let composed = step.self_compose(p.steps.max(1));
+        composed.epsilon_at(p.delta)
+    }
+
+    fn name(&self) -> &'static str {
+        "pld"
+    }
+}
+
+// ---------------------------------------------------------------------
+// PRV (PLD-backed, finer grid)
+// ---------------------------------------------------------------------
+
+/// PRV-style accountant: the PLD pipeline on a finer grid with wider
+/// support (see module docs for the substitution note).
+pub struct PrvAccountant {
+    inner: PldAccountant,
+}
+
+impl Default for PrvAccountant {
+    fn default() -> Self {
+        PrvAccountant { inner: PldAccountant { grid: 1e-4, half_width: 40.0 } }
+    }
+}
+
+impl Accountant for PrvAccountant {
+    fn epsilon(&self, sigma: f64, p: &AccountantParams) -> f64 {
+        self.inner.epsilon(sigma, p)
+    }
+
+    fn name(&self) -> &'static str {
+        "prv"
+    }
+}
+
+/// Look up an accountant by config name.
+pub fn accountant_by_name(name: &str) -> Result<Box<dyn Accountant>> {
+    Ok(match name {
+        "rdp" => Box::new(RdpAccountant),
+        "pld" => Box::new(PldAccountant::default()),
+        "prv" => Box::new(PrvAccountant::default()),
+        other => bail!("unknown accountant {other:?} (rdp|pld|prv)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(q: f64, steps: u64) -> AccountantParams {
+        AccountantParams { sampling_rate: q, delta: 1e-6, steps }
+    }
+
+    #[test]
+    fn lgamma_matches_factorials() {
+        for n in 1..10u64 {
+            let f: f64 = (1..=n).product::<u64>() as f64;
+            assert!((lgamma((n + 1) as f64) - f.ln()).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn log_binom_small_cases() {
+        assert!((log_binom(5, 2) - 10f64.ln()).abs() < 1e-9);
+        assert!((log_binom(10, 0) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rdp_unsubsampled_gaussian_matches_closed_form() {
+        // q = 1: ε(α) = α/(2σ²)
+        let e = RdpAccountant::rdp_step(1.0, 2.0, 8);
+        assert!((e - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rdp_epsilon_monotone_in_sigma_and_steps() {
+        let acc = RdpAccountant;
+        let p = params(0.01, 100);
+        assert!(acc.epsilon(1.0, &p) > acc.epsilon(2.0, &p));
+        let p2 = params(0.01, 1000);
+        assert!(acc.epsilon(1.0, &p2) > acc.epsilon(1.0, &p));
+    }
+
+    #[test]
+    fn subsampling_amplifies() {
+        // smaller q -> smaller epsilon at equal sigma
+        let acc = RdpAccountant;
+        assert!(acc.epsilon(1.0, &params(0.001, 100)) < acc.epsilon(1.0, &params(0.1, 100)));
+    }
+
+    #[test]
+    fn pld_single_step_plain_gaussian_sane() {
+        // q=1, σ=1, δ=1e-5: analytic Gaussian DP gives ε ≈ 4.2–4.9
+        let acc = PldAccountant::default();
+        let p = AccountantParams { sampling_rate: 1.0, delta: 1e-5, steps: 1 };
+        let e = acc.epsilon(1.0, &p);
+        assert!(e > 3.5 && e < 5.5, "eps = {e}");
+    }
+
+    #[test]
+    fn pld_tighter_than_rdp() {
+        let p = params(0.005, 200);
+        let rdp = RdpAccountant.epsilon(1.0, &p);
+        let pld = PldAccountant::default().epsilon(1.0, &p);
+        assert!(
+            pld <= rdp * 1.05,
+            "pld {pld} should not be much looser than rdp {rdp}"
+        );
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let acc = RdpAccountant;
+        let p = params(0.0005, 1500); // the CIFAR10 DP benchmark shape
+        let sigma = acc.calibrate_sigma(2.0, &p).unwrap();
+        let eps = acc.epsilon(sigma, &p);
+        assert!(eps <= 2.0 && eps > 1.8, "eps({sigma}) = {eps}");
+    }
+
+    #[test]
+    fn pld_composition_grows_epsilon() {
+        let acc = PldAccountant { grid: 5e-4, half_width: 20.0 };
+        let e1 = acc.epsilon(1.0, &params(0.01, 10));
+        let e2 = acc.epsilon(1.0, &params(0.01, 100));
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn accountant_lookup() {
+        assert!(accountant_by_name("rdp").is_ok());
+        assert!(accountant_by_name("pld").is_ok());
+        assert!(accountant_by_name("prv").is_ok());
+        assert!(accountant_by_name("nope").is_err());
+    }
+}

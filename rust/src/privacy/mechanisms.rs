@@ -1,0 +1,668 @@
+//! DP mechanisms (paper App. B.5). All implement
+//! [`Postprocessor`](crate::fl::postprocess::Postprocessor); per-user
+//! clipping runs through the side's [`ClipKernel`] (the L1 Pallas
+//! artifact on workers) and noise is added to the aggregate in place,
+//! once per central iteration.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::fl::context::CentralContext;
+use crate::fl::metrics::Metrics;
+use crate::fl::postprocess::{Postprocessor, PpEnv};
+use crate::fl::stats::{Statistics, UPDATE};
+
+/// No-op mechanism (the "no DP" arm of every benchmark).
+pub struct NoPrivacy;
+
+impl Postprocessor for NoPrivacy {
+    fn name(&self) -> &'static str {
+        "no-dp"
+    }
+}
+
+/// Shared noise bookkeeping: noise std on the *sum* of clipped updates is
+/// `noise_multiplier × clip_bound × r`, with r = C/C̃ the noise-cohort
+/// rescaling factor (paper App. C.4; r = 1 means no rescaling).
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseParams {
+    pub clip_bound: f32,
+    pub noise_multiplier: f64,
+    /// r = C/C̃ (simulated cohort / noise cohort).
+    pub rescale_r: f64,
+}
+
+impl NoiseParams {
+    pub fn noise_std(&self) -> f64 {
+        self.noise_multiplier * self.clip_bound as f64 * self.rescale_r
+    }
+}
+
+/// Central Gaussian mechanism [24]: clip each user's update to
+/// `clip_bound`, add N(0, σ²) per coordinate to the aggregate.
+pub struct GaussianMechanism {
+    pub p: NoiseParams,
+}
+
+impl GaussianMechanism {
+    pub fn new(clip_bound: f32, noise_multiplier: f64, rescale_r: f64) -> Self {
+        GaussianMechanism {
+            p: NoiseParams { clip_bound, noise_multiplier, rescale_r },
+        }
+    }
+}
+
+/// Add iid N(0, std²) noise to `v` in place and return the noise L2 norm
+/// (for SNR diagnostics, paper Fig. 6).
+fn add_gaussian_noise(v: &mut [f32], std: f64, rng: &mut crate::util::rng::Rng) -> f64 {
+    if std <= 0.0 {
+        return 0.0;
+    }
+    let mut sq = 0f64;
+    for x in v.iter_mut() {
+        let n = rng.normal() * std;
+        sq += n * n;
+        *x += n as f32;
+    }
+    sq.sqrt()
+}
+
+/// Signal-to-noise ratio as defined in paper Eq. (1):
+/// SNR = ‖Δ‖₂ / sqrt(d·σ²).
+pub fn snr(update_norm: f64, dim: usize, noise_std: f64) -> f64 {
+    if noise_std <= 0.0 || dim == 0 {
+        return f64::INFINITY;
+    }
+    update_norm / ((dim as f64).sqrt() * noise_std)
+}
+
+impl Postprocessor for GaussianMechanism {
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = env.clip.clip(update, self.p.clip_bound)?;
+            m.add_central("dp/pre-clip-norm", norm, 1.0);
+            m.add_central(
+                "dp/clipped-frac",
+                (norm > self.p.clip_bound as f64) as u8 as f64,
+                1.0,
+            );
+        }
+        Ok(m)
+    }
+
+    fn postprocess_server(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let signal = crate::util::l2_norm(update);
+            let std = self.p.noise_std();
+            add_gaussian_noise(update, std, env.rng);
+            m.add_central("dp/noise-std", std, 1.0);
+            m.add_central("dp/snr", snr(signal, update.len(), std), 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Central Laplace mechanism [24]: L1 clipping + Laplace(b) noise, with
+/// b = clip_bound × noise_multiplier × r (ε-DP per step with
+/// ε = 1/noise_multiplier under L1 sensitivity clip_bound).
+pub struct LaplaceMechanism {
+    pub p: NoiseParams,
+}
+
+impl LaplaceMechanism {
+    pub fn new(clip_bound: f32, noise_multiplier: f64, rescale_r: f64) -> Self {
+        LaplaceMechanism {
+            p: NoiseParams { clip_bound, noise_multiplier, rescale_r },
+        }
+    }
+
+    fn l1_clip(v: &mut [f32], bound: f32) -> f64 {
+        let norm: f64 = v.iter().map(|x| x.abs() as f64).sum();
+        if norm > bound as f64 && norm > 0.0 {
+            crate::util::scale(v, (bound as f64 / norm) as f32);
+        }
+        norm
+    }
+}
+
+impl Postprocessor for LaplaceMechanism {
+    fn name(&self) -> &'static str {
+        "laplace"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        _env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = Self::l1_clip(update, self.p.clip_bound);
+            m.add_central("dp/pre-clip-l1", norm, 1.0);
+        }
+        Ok(m)
+    }
+
+    fn postprocess_server(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let b = self.p.noise_std();
+            for x in update.iter_mut() {
+                *x += env.rng.laplace(b) as f32;
+            }
+            m.add_central("dp/laplace-scale", b, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Gaussian mechanism with adaptive clipping (Andrew et al. [5]): the
+/// clip bound tracks the γ-quantile of user update norms by geometric
+/// updates on the privately-estimated clipped fraction.
+pub struct AdaptiveClipGaussian {
+    pub noise_multiplier: f64,
+    pub rescale_r: f64,
+    /// Target quantile γ (0.5 in [5]).
+    pub quantile: f64,
+    /// Learning rate of the geometric bound update.
+    pub eta: f64,
+    /// Noise std for the clipped-count estimate (σ_b in [5]).
+    pub count_noise_std: f64,
+    state: Mutex<AdaptiveState>,
+}
+
+#[derive(Debug)]
+struct AdaptiveState {
+    bound: f64,
+}
+
+/// Key under which the per-user "was clipped" indicator travels.
+pub const CLIP_INDICATOR: &str = "clip_indicator";
+
+impl AdaptiveClipGaussian {
+    pub fn new(initial_bound: f64, noise_multiplier: f64, rescale_r: f64) -> Self {
+        AdaptiveClipGaussian {
+            noise_multiplier,
+            rescale_r,
+            quantile: 0.5,
+            eta: 0.2,
+            count_noise_std: 1.0,
+            state: Mutex::new(AdaptiveState { bound: initial_bound }),
+        }
+    }
+
+    pub fn current_bound(&self) -> f64 {
+        self.state.lock().unwrap().bound
+    }
+}
+
+impl Postprocessor for AdaptiveClipGaussian {
+    fn name(&self) -> &'static str {
+        "adaptive-clip-gaussian"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        let bound = self.current_bound() as f32;
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = env.clip.clip(update, bound)?;
+            let clipped = (norm > bound as f64) as u8 as f64;
+            // the indicator is itself aggregated (and noised server-side)
+            stats.insert(CLIP_INDICATOR, vec![clipped as f32]);
+            m.add_central("dp/pre-clip-norm", norm, 1.0);
+        }
+        Ok(m)
+    }
+
+    fn postprocess_server(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        let cohort = stats.weight.max(1.0);
+        let mut st = self.state.lock().unwrap();
+        // privately estimate the clipped fraction and adapt the bound:
+        // C ← C · exp(−η (b̂ − γ))
+        if let Some(ind) = stats.vecs.get_mut(CLIP_INDICATOR) {
+            let noisy = ind[0] as f64 + env.rng.normal() * self.count_noise_std;
+            let frac = (noisy / cohort).clamp(0.0, 1.0);
+            st.bound *= (-self.eta * (frac - self.quantile)).exp();
+            m.add_central("dp/clipped-frac-est", frac, 1.0);
+            // the indicator is bookkeeping, not part of the model update
+            stats.vecs.remove(CLIP_INDICATOR);
+        }
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let std = self.noise_multiplier * st.bound * self.rescale_r;
+            let signal = crate::util::l2_norm(update);
+            add_gaussian_noise(update, std, env.rng);
+            m.add_central("dp/noise-std", std, 1.0);
+            m.add_central("dp/snr", snr(signal, update.len(), std), 1.0);
+        }
+        m.add_central("dp/clip-bound", st.bound, 1.0);
+        Ok(m)
+    }
+}
+
+/// Banded matrix-factorization mechanism (Choquette-Choo et al. [20];
+/// DP-FTRL when applied to FL). Noise added at step t is the correlated
+/// combination Σ_{k<b} c_k·z_{t−k} with iid Gaussian buffers z and the
+/// first b coefficients of (1−x)^{−1/2} — the optimal Toeplitz factor for
+/// prefix-sum release, truncated to band b. Sensitivity under
+/// min-separation ≥ b participation is the column norm ‖c‖₂, by which the
+/// noise is normalized so the *privacy* noise multiplier matches the
+/// Gaussian mechanism's while the *error* on learning trajectories is
+/// lower (the Table 4 StackOverflow effect).
+pub struct BandedMatrixFactorization {
+    pub p: NoiseParams,
+    pub band: usize,
+    /// Minimum central iterations between two participations of one user
+    /// (paper App. C.4 sets 48). Enforced via a participation filter.
+    pub min_sep: u64,
+    coeffs: Vec<f64>,
+    state: Mutex<BmfState>,
+}
+
+#[derive(Default)]
+struct BmfState {
+    /// Ring buffer of the last `band` noise vectors z_{t−k}.
+    ring: Vec<Vec<f32>>,
+    next: usize,
+    /// Last participation iteration per user (min-separation filter).
+    last_seen: std::collections::HashMap<usize, u64>,
+}
+
+impl BandedMatrixFactorization {
+    pub fn new(clip_bound: f32, noise_multiplier: f64, rescale_r: f64, band: usize) -> Self {
+        // coefficients of (1−x)^{−1/2}: c_0 = 1, c_k = c_{k−1}·(2k−1)/(2k)
+        let mut coeffs = vec![1.0f64];
+        for k in 1..band.max(1) {
+            let prev = coeffs[k - 1];
+            coeffs.push(prev * (2.0 * k as f64 - 1.0) / (2.0 * k as f64));
+        }
+        BandedMatrixFactorization {
+            p: NoiseParams { clip_bound, noise_multiplier, rescale_r },
+            band: band.max(1),
+            min_sep: 48,
+            coeffs,
+            state: Mutex::new(BmfState::default()),
+        }
+    }
+
+    /// Column norm of the banded factor (the per-user sensitivity).
+    pub fn column_norm(&self) -> f64 {
+        self.coeffs.iter().map(|c| c * c).sum::<f64>().sqrt()
+    }
+}
+
+impl Postprocessor for BandedMatrixFactorization {
+    fn name(&self) -> &'static str {
+        "banded-mf"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = env.clip.clip(update, self.p.clip_bound)?;
+            m.add_central("dp/pre-clip-norm", norm, 1.0);
+        }
+        Ok(m)
+    }
+
+    fn postprocess_server(
+        &self,
+        stats: &mut Statistics,
+        ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let n = update.len();
+            let mut st = self.state.lock().unwrap();
+            if st.ring.len() != self.band || st.ring.first().map(|v| v.len()) != Some(n) {
+                st.ring = (0..self.band).map(|_| vec![0.0f32; n]).collect();
+                st.next = 0;
+            }
+            // fresh z_t
+            let std = self.p.noise_std() / self.column_norm();
+            {
+                let next = st.next;
+                let z = &mut st.ring[next];
+                env.rng.fill_normal_f32(z, std);
+            }
+            // noise_t = Σ_k c_k z_{t−k}
+            let signal = crate::util::l2_norm(update);
+            let t = st.next;
+            for (k, &c) in self.coeffs.iter().enumerate() {
+                let idx = (t + self.band - k) % self.band;
+                // only mix buffers that are "old enough" to exist
+                if ctx.iteration >= k as u64 {
+                    crate::util::axpy(update, c as f32, &st.ring[idx]);
+                }
+            }
+            st.next = (st.next + 1) % self.band;
+            m.add_central("dp/noise-std", std, 1.0);
+            m.add_central("dp/snr", snr(signal, n, std * self.column_norm()), 1.0);
+        }
+        Ok(m)
+    }
+
+    fn may_participate(&self, uid: usize, iteration: u64) -> bool {
+        self.may_participate_inner(uid, iteration)
+    }
+
+    fn record_participation(&self, uid: usize, iteration: u64) {
+        self.record_participation_inner(uid, iteration)
+    }
+}
+
+impl BandedMatrixFactorization {
+    /// Min-separation participation filter (paper App. C.4): true if the
+    /// user may participate at iteration t. The backend consults this for
+    /// BMF runs before scheduling a user (via the `Postprocessor` hook).
+    pub fn may_participate_inner(&self, uid: usize, t: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        match st.last_seen.get(&uid) {
+            Some(&last) => t.saturating_sub(last) >= self.min_sep,
+            None => true,
+        }
+    }
+
+    pub fn record_participation_inner(&self, uid: usize, t: u64) {
+        self.state.lock().unwrap().last_seen.insert(uid, t);
+    }
+}
+
+/// Local Gaussian mechanism: noise each user's (clipped) update on the
+/// worker. Slow in simulation (one noise draw per user) — exactly why
+/// the paper ships [`CltApproxLocal`].
+pub struct LocalGaussianMechanism {
+    pub p: NoiseParams,
+}
+
+impl LocalGaussianMechanism {
+    pub fn new(clip_bound: f32, noise_multiplier: f64) -> Self {
+        LocalGaussianMechanism {
+            p: NoiseParams { clip_bound, noise_multiplier, rescale_r: 1.0 },
+        }
+    }
+}
+
+impl Postprocessor for LocalGaussianMechanism {
+    fn name(&self) -> &'static str {
+        "local-gaussian"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = env.clip.clip(update, self.p.clip_bound)?;
+            add_gaussian_noise(update, self.p.noise_std(), env.rng);
+            m.add_central("dp/pre-clip-norm", norm, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Central-limit-theorem approximation of a local mechanism (paper App.
+/// B.5, `GaussianApproximatedPrivacyMechanism`): the sum of C local
+/// N(0, σ_l²) noises is N(0, C·σ_l²), so one central draw with std
+/// σ_l·√C reproduces the local mechanism's effect at a fraction of the
+/// cost. Simulation-only — a real deployment must noise locally.
+pub struct CltApproxLocal {
+    pub clip_bound: f32,
+    pub local_noise_std: f64,
+}
+
+impl Postprocessor for CltApproxLocal {
+    fn name(&self) -> &'static str {
+        "clt-approx-local"
+    }
+
+    fn postprocess_one_user(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let norm = env.clip.clip(update, self.clip_bound)?;
+            m.add_central("dp/pre-clip-norm", norm, 1.0);
+        }
+        Ok(m)
+    }
+
+    fn postprocess_server(
+        &self,
+        stats: &mut Statistics,
+        _ctx: &CentralContext,
+        env: &mut PpEnv,
+    ) -> Result<Metrics> {
+        let mut m = Metrics::new();
+        let cohort = stats.weight.max(1.0);
+        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+            let std = self.local_noise_std * cohort.sqrt();
+            add_gaussian_noise(update, std, env.rng);
+            m.add_central("dp/noise-std", std, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Look up a mechanism by config name with explicit parameters.
+pub fn mechanism_by_name(
+    name: &str,
+    clip_bound: f32,
+    noise_multiplier: f64,
+    rescale_r: f64,
+) -> Result<Box<dyn Postprocessor>> {
+    Ok(match name {
+        "none" => Box::new(NoPrivacy),
+        "gaussian" => Box::new(GaussianMechanism::new(clip_bound, noise_multiplier, rescale_r)),
+        "laplace" => Box::new(LaplaceMechanism::new(clip_bound, noise_multiplier, rescale_r)),
+        "adaptive-gaussian" => Box::new(AdaptiveClipGaussian::new(
+            clip_bound as f64,
+            noise_multiplier,
+            rescale_r,
+        )),
+        "banded-mf" => Box::new(BandedMatrixFactorization::new(
+            clip_bound,
+            noise_multiplier,
+            rescale_r,
+            8,
+        )),
+        "local-gaussian" => Box::new(LocalGaussianMechanism::new(clip_bound, noise_multiplier)),
+        "clt-local" => Box::new(CltApproxLocal {
+            clip_bound,
+            local_noise_std: noise_multiplier * clip_bound as f64,
+        }),
+        other => anyhow::bail!("unknown mechanism {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::context::LocalParams;
+    use crate::fl::model::RustClip;
+    use crate::util::rng::Rng;
+
+    fn ctx(t: u64) -> CentralContext {
+        CentralContext::train(t, 10, LocalParams::default(), 1)
+    }
+
+    fn run_user(pp: &dyn Postprocessor, v: Vec<f32>) -> Statistics {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 1 };
+        let mut s = Statistics::new_update(v, 1.0);
+        pp.postprocess_one_user(&mut s, &ctx(0), &mut env).unwrap();
+        s
+    }
+
+    #[test]
+    fn gaussian_clips_then_noises() {
+        let g = GaussianMechanism::new(1.0, 0.5, 1.0);
+        let mut s = run_user(&g, vec![3.0, 4.0]);
+        assert!((crate::util::l2_norm(s.update()) - 1.0).abs() < 1e-6);
+        let before = s.update().to_vec();
+        let mut rng = Rng::seed_from_u64(8);
+        let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
+        let m = g.postprocess_server(&mut s, &ctx(0), &mut env).unwrap();
+        assert_ne!(s.update(), &before[..]);
+        assert!((m.get("dp/noise-std").unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_rescaling_r() {
+        // r = C/C̃ scales the noise std (App. C.4)
+        let g = GaussianMechanism::new(2.0, 1.0, 0.1);
+        assert!((g.p.noise_std() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_noise_magnitude_statistics() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut v = vec![0.0f32; 20_000];
+        let norm = add_gaussian_noise(&mut v, 2.0, &mut rng);
+        // E||noise|| = sqrt(d)*std
+        let expect = (20_000f64).sqrt() * 2.0;
+        assert!((norm / expect - 1.0).abs() < 0.05, "{norm} vs {expect}");
+    }
+
+    #[test]
+    fn snr_definition() {
+        assert!((snr(10.0, 100, 0.5) - 10.0 / (10.0 * 0.5)).abs() < 1e-12);
+        assert_eq!(snr(1.0, 10, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn laplace_l1_clip() {
+        let l = LaplaceMechanism::new(1.0, 0.1, 1.0);
+        let s = run_user(&l, vec![1.0, -1.0, 2.0]);
+        let l1: f64 = s.update().iter().map(|x| x.abs() as f64).sum();
+        assert!((l1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adaptive_bound_moves_toward_quantile() {
+        let a = AdaptiveClipGaussian::new(1.0, 0.0, 1.0);
+        let start = a.current_bound();
+        // all users clipped -> fraction 1 > 0.5 -> bound must grow
+        for _ in 0..10 {
+            let mut s = run_user(&a, vec![30.0, 40.0]);
+            let mut rng = Rng::seed_from_u64(9);
+            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
+            a.postprocess_server(&mut s, &ctx(0), &mut env).unwrap();
+        }
+        assert!(a.current_bound() > start, "{} !> {start}", a.current_bound());
+        // indicator must not leak into the update stats
+        let mut s = run_user(&a, vec![1.0]);
+        let mut rng = Rng::seed_from_u64(9);
+        let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
+        a.postprocess_server(&mut s, &ctx(0), &mut env).unwrap();
+        assert!(s.get(CLIP_INDICATOR).is_none());
+    }
+
+    #[test]
+    fn bmf_coefficients_are_sqrt_series() {
+        let b = BandedMatrixFactorization::new(1.0, 1.0, 1.0, 4);
+        // (1-x)^{-1/2}: 1, 1/2, 3/8, 5/16
+        let expect = [1.0, 0.5, 0.375, 0.3125];
+        for (c, e) in b.coeffs.iter().zip(expect) {
+            assert!((c - e).abs() < 1e-12);
+        }
+        assert!(b.column_norm() > 1.0);
+    }
+
+    #[test]
+    fn bmf_noise_is_correlated_across_rounds() {
+        let b = BandedMatrixFactorization::new(1.0, 1.0, 1.0, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let d = 4096;
+        let mut prev: Option<Vec<f32>> = None;
+        let mut corr_sum = 0.0;
+        for t in 0..6u64 {
+            let mut s = Statistics::new_update(vec![0.0; d], 1.0);
+            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
+            b.postprocess_server(&mut s, &ctx(t), &mut env).unwrap();
+            let noise = s.update().to_vec();
+            if let Some(p) = &prev {
+                let dot: f64 = noise.iter().zip(p).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+                let na = crate::util::l2_norm(&noise);
+                let nb = crate::util::l2_norm(p);
+                corr_sum += dot / (na * nb);
+            }
+            prev = Some(noise);
+        }
+        // shared z-buffers make consecutive noise positively correlated
+        assert!(corr_sum / 5.0 > 0.3, "avg corr {}", corr_sum / 5.0);
+    }
+
+    #[test]
+    fn bmf_min_sep_filter() {
+        let b = BandedMatrixFactorization::new(1.0, 1.0, 1.0, 4);
+        assert!(b.may_participate_inner(7, 0));
+        b.record_participation_inner(7, 0);
+        assert!(!b.may_participate_inner(7, 10));
+        assert!(b.may_participate_inner(7, 48));
+        assert!(b.may_participate_inner(8, 10));
+    }
+
+    #[test]
+    fn clt_approx_scales_with_cohort() {
+        let c = CltApproxLocal { clip_bound: 1.0, local_noise_std: 0.1 };
+        let mut s = Statistics::new_update(vec![0.0; 10_000], 100.0);
+        let mut rng = Rng::seed_from_u64(11);
+        let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
+        let m = c.postprocess_server(&mut s, &ctx(0), &mut env).unwrap();
+        assert!((m.get("dp/noise-std").unwrap() - 1.0).abs() < 1e-9); // 0.1*sqrt(100)
+    }
+
+    #[test]
+    fn mechanism_lookup() {
+        for name in ["none", "gaussian", "laplace", "adaptive-gaussian", "banded-mf", "local-gaussian", "clt-local"] {
+            assert!(mechanism_by_name(name, 1.0, 1.0, 1.0).is_ok(), "{name}");
+        }
+        assert!(mechanism_by_name("bogus", 1.0, 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Differential privacy for PFL simulation (paper §3 "Privacy
+//! integration" + App. B.5).
+//!
+//! Mechanisms are [`Postprocessor`](crate::fl::postprocess::Postprocessor)s,
+//! so they compose with any algorithm and run in the same pipeline as
+//! weighting/compression. Each mechanism *owns* its clipping bound and
+//! derives its noise scale from it, so bound and noise can never diverge
+//! (the paper's "tight integration between the DP mechanisms and FL
+//! hyperparameters"). Clipping on the user path goes through the worker's
+//! L1 Pallas `clip_scale` kernel; noise is added once per central
+//! iteration on the aggregate, in place.
+//!
+//! The *noise cohort size* rescaling of App. C.4 is built in: simulate
+//! with cohort C but noise as if the cohort were C̃ by scaling the noise
+//! standard deviation by r = C/C̃.
+
+pub mod accountant;
+pub mod mechanisms;
+
+pub use accountant::{
+    accountant_by_name, Accountant, AccountantParams, PldAccountant, PrvAccountant,
+    RdpAccountant,
+};
+pub use mechanisms::{
+    AdaptiveClipGaussian, BandedMatrixFactorization, CltApproxLocal, GaussianMechanism,
+    LaplaceMechanism, LocalGaussianMechanism, NoPrivacy,
+};

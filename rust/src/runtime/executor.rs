@@ -1,0 +1,256 @@
+//! PJRT execution of AOT-lowered artifacts.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): load HLO *text*
+//! (`HloModuleProto::from_text_file` — the text parser reassigns the 64-bit
+//! instruction ids jax >= 0.5 emits, which the proto path rejects), compile
+//! once per worker, then execute from the simulation hot path.
+//!
+//! Each worker replica owns its own `Runtime` (client + executables),
+//! mirroring pfl-research's "only one model per worker process is
+//! initialized and preserved on the GPU at all times": the compiled
+//! executables and the flat parameter buffers live for the whole
+//! simulation; per-call allocations are bounded by batch size, not model
+//! size.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, IoSpec, Manifest};
+
+/// An input argument to an executable. Borrowed slices avoid staging
+/// copies on the rust side; the single host->device copy happens inside
+/// literal construction.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+impl Arg<'_> {
+    pub fn element_count(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+            Arg::ScalarF32(_) => 1,
+        }
+    }
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F32(_) | Arg::ScalarF32(_) => "f32",
+            Arg::I32(_) => "i32",
+        }
+    }
+}
+
+/// An output value decoded from the executable's result tuple.
+#[derive(Debug, Clone)]
+pub enum Out {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Out {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Out::F32(v) => v,
+            Out::I32(_) => panic!("expected f32 output"),
+        }
+    }
+    pub fn scalar_f32(&self) -> f32 {
+        let v = self.as_f32();
+        assert_eq!(v.len(), 1, "expected scalar output");
+        v[0]
+    }
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Out::F32(v) => v,
+            Out::I32(_) => panic!("expected f32 output"),
+        }
+    }
+}
+
+/// Execution statistics for the profiler / simulated-device accounting.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub exec_nanos: u64,
+    pub stage_nanos: u64,
+    pub fetch_nanos: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// One compiled artifact.
+pub struct Compiled {
+    pub key: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    stats: RefCell<ExecStats>,
+}
+
+fn mk_literal(arg: &Arg, spec: &IoSpec) -> Result<xla::Literal> {
+    if arg.dtype() != spec.dtype {
+        bail!("dtype mismatch: arg {} vs spec {}", arg.dtype(), spec.dtype);
+    }
+    if arg.element_count() != spec.element_count() {
+        bail!(
+            "shape mismatch: arg has {} elements, spec {:?} wants {}",
+            arg.element_count(),
+            spec.shape,
+            spec.element_count()
+        );
+    }
+    let dims: Vec<usize> = spec.shape.clone();
+    let lit = match arg {
+        Arg::F32(v) => {
+            let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+            lit.copy_raw_from::<f32>(v)?;
+            lit
+        }
+        Arg::ScalarF32(x) => {
+            let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+            lit.copy_raw_from::<f32>(&[*x])?;
+            lit
+        }
+        Arg::I32(v) => {
+            let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, &dims);
+            lit.copy_raw_from::<i32>(v)?;
+            lit
+        }
+    };
+    Ok(lit)
+}
+
+impl Compiled {
+    /// Execute with shape-checked args; returns the decoded output tuple.
+    pub fn execute(&self, args: &[Arg]) -> Result<Vec<Out>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, artifact wants {}",
+                self.key,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut literals = Vec::with_capacity(args.len());
+        let mut bytes_in = 0u64;
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            bytes_in += (spec.element_count() * 4) as u64;
+            literals.push(
+                mk_literal(arg, spec).with_context(|| format!("artifact {}", self.key))?,
+            );
+        }
+        let t1 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let t2 = Instant::now();
+        let parts = root.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.key,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        let mut bytes_out = 0u64;
+        for (lit, spec) in parts.iter().zip(&self.spec.outputs) {
+            bytes_out += (spec.element_count() * 4) as u64;
+            let out = match spec.dtype.as_str() {
+                "f32" => Out::F32(lit.to_vec::<f32>()?),
+                "i32" => Out::I32(lit.to_vec::<i32>()?),
+                other => bail!("unsupported dtype {other}"),
+            };
+            outs.push(out);
+        }
+        let t3 = Instant::now();
+        let mut s = self.stats.borrow_mut();
+        s.calls += 1;
+        s.stage_nanos += (t1 - t0).as_nanos() as u64;
+        s.exec_nanos += (t2 - t1).as_nanos() as u64;
+        s.fetch_nanos += (t3 - t2).as_nanos() as u64;
+        s.bytes_in += bytes_in;
+        s.bytes_out += bytes_out;
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+}
+
+/// Per-worker runtime: one PJRT client + a cache of compiled artifacts.
+///
+/// Deliberately `!Send`: each worker thread constructs its own `Runtime`,
+/// which is exactly the replica model of the paper (Fig. 1a).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+    pub compile_nanos: RefCell<u64>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_nanos: RefCell::new(0),
+        })
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn get(&self, key: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(key) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.artifact(key)?.clone();
+        let path = self.manifest.artifact_path(key)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compile_nanos.borrow_mut() += t0.elapsed().as_nanos() as u64;
+        let compiled = Rc::new(Compiled {
+            key: key.to_string(),
+            spec,
+            exe,
+            stats: RefCell::new(ExecStats::default()),
+        });
+        self.cache.borrow_mut().insert(key.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Aggregate execution stats across all compiled artifacts.
+    pub fn total_stats(&self) -> ExecStats {
+        let mut total = ExecStats::default();
+        for c in self.cache.borrow().values() {
+            let s = c.stats();
+            total.calls += s.calls;
+            total.exec_nanos += s.exec_nanos;
+            total.stage_nanos += s.stage_nanos;
+            total.fetch_nanos += s.fetch_nanos;
+            total.bytes_in += s.bytes_in;
+            total.bytes_out += s.bytes_out;
+        }
+        total
+    }
+}

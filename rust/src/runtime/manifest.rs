@@ -1,0 +1,304 @@
+//! Artifact manifest: the python->rust interchange contract.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! AOT-lowered HLO module: input/output shapes, the flat-parameter layout of
+//! each model (tensor names, offsets, init specs) and per-step FLOP
+//! estimates used by the simulated-device accounting.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(IoSpec {
+            shape: v.req("shape")?.usize_arr()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub sha256: String,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(ArtifactSpec {
+            file: v.req("file")?.as_str()?.to_string(),
+            inputs: v.req("inputs")?.as_arr()?.iter().map(IoSpec::from_json).collect::<Result<_>>()?,
+            outputs: v.req("outputs")?.as_arr()?.iter().map(IoSpec::from_json).collect::<Result<_>>()?,
+            sha256: v.get("sha256").and_then(|x| x.as_str().ok()).unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// One tensor inside a model's flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String, // "zeros" | "ones" | "normal"
+    pub std: f64,
+}
+
+impl TensorEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorEntry {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_arr()?,
+            offset: v.req("offset")?.as_usize()?,
+            size: v.req("size")?.as_usize()?,
+            init: v.req("init")?.as_str()?.to_string(),
+            std: v.req("std")?.as_f64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub param_count: usize,
+    pub layout: Vec<TensorEntry>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub flops_per_train_step: u64,
+    pub description: String,
+    /// step name -> artifact key ("train", "eval", "clip")
+    pub artifacts: BTreeMap<String, String>,
+    pub base_param_count: Option<usize>,
+    pub base_layout: Option<Vec<TensorEntry>>,
+}
+
+impl ModelEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let layout = v
+            .req("layout")?
+            .as_arr()?
+            .iter()
+            .map(TensorEntry::from_json)
+            .collect::<Result<_>>()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, val)| Ok((k.clone(), val.as_str()?.to_string())))
+            .collect::<Result<_>>()?;
+        let base_layout = match v.get("base_layout") {
+            Some(b) => Some(
+                b.as_arr()?
+                    .iter()
+                    .map(TensorEntry::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        Ok(ModelEntry {
+            param_count: v.req("param_count")?.as_usize()?,
+            layout,
+            train_batch: v.req("train_batch")?.as_usize()?,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            flops_per_train_step: v.req("flops_per_train_step")?.as_u64()?,
+            description: v
+                .get("description")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or("")
+                .to_string(),
+            artifacts,
+            base_param_count: match v.get("base_param_count") {
+                Some(x) => Some(x.as_usize()?),
+                None => None,
+            },
+            base_layout,
+        })
+    }
+
+    /// Look up a tensor by name in the flat layout.
+    pub fn tensor(&self, name: &str) -> Option<&TensorEntry> {
+        self.layout.iter().find(|t| t.name == name)
+    }
+
+    /// Deterministically initialize the flat parameter vector from the
+    /// manifest init specs (He/normal per tensor, zeros/ones for biases
+    /// and norms). Mirrors pfl-research's framework-side model init.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        init_from_layout(&self.layout, self.param_count, seed)
+    }
+
+    pub fn init_base_params(&self, seed: u64) -> Option<Vec<f32>> {
+        let layout = self.base_layout.as_ref()?;
+        Some(init_from_layout(layout, self.base_param_count?, seed))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = Value::parse(text).context("parsing manifest.json")?;
+        let models = v
+            .req("models")?
+            .as_obj()?
+            .iter()
+            .map(|(k, m)| Ok((k.clone(), ModelEntry::from_json(m).with_context(|| format!("model {k}"))?)))
+            .collect::<Result<_>>()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, a)| Ok((k.clone(), ArtifactSpec::from_json(a).with_context(|| format!("artifact {k}"))?)))
+            .collect::<Result<_>>()?;
+        Ok(Manifest {
+            format: v.req("format")?.as_str()?.to_string(),
+            models,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Default artifacts directory: $PFL_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("PFL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact {key:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(key)?.file))
+    }
+}
+
+pub fn init_from_layout(layout: &[TensorEntry], total: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = vec![0f32; total];
+    for t in layout {
+        let dst = &mut out[t.offset..t.offset + t.size];
+        match t.init.as_str() {
+            "zeros" => {}
+            "ones" => dst.fill(1.0),
+            _ => {
+                for v in dst.iter_mut() {
+                    *v = rng.normal_scaled(0.0, t.std) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+pub(crate) fn toy_manifest_json() -> &'static str {
+    r#"{
+      "format": "hlo-text",
+      "models": {
+        "toy": {
+          "param_count": 6,
+          "layout": [
+            {"name": "w", "shape": [2, 2], "offset": 0, "size": 4, "init": "normal", "std": 0.5},
+            {"name": "b", "shape": [2], "offset": 4, "size": 2, "init": "zeros", "std": 0.0}
+          ],
+          "train_batch": 4,
+          "eval_batch": 8,
+          "flops_per_train_step": 100,
+          "artifacts": {"train": "toy_train"}
+        }
+      },
+      "artifacts": {
+        "toy_train": {
+          "file": "toy_train.hlo.txt",
+          "inputs": [{"shape": [6], "dtype": "f32"}],
+          "outputs": [{"shape": [6], "dtype": "f32"}]
+        }
+      }
+    }"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Manifest {
+        Manifest::parse(toy_manifest_json(), PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = toy();
+        let t = m.models.get("toy").unwrap();
+        assert_eq!(t.param_count, 6);
+        assert_eq!(t.tensor("b").unwrap().offset, 4);
+        assert!(t.tensor("nope").is_none());
+        assert_eq!(m.artifacts["toy_train"].inputs[0].element_count(), 6);
+        assert_eq!(m.artifact_path("toy_train").unwrap(), PathBuf::from("/tmp/toy_train.hlo.txt"));
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let p = toy().models["toy"].init_params(7);
+        assert_eq!(p.len(), 6);
+        assert!(p[0..4].iter().any(|v| *v != 0.0));
+        assert_eq!(&p[4..6], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let m = toy();
+        assert_eq!(m.models["toy"].init_params(1), m.models["toy"].init_params(1));
+        assert_ne!(m.models["toy"].init_params(1), m.models["toy"].init_params(2));
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = toy();
+        assert!(m.model("missing").is_err());
+        assert!(m.model("toy").is_ok());
+    }
+}

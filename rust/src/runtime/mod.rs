@@ -1,0 +1,12 @@
+//! Runtime layer: load + execute AOT-compiled HLO artifacts via PJRT.
+//!
+//! See DESIGN.md — python/jax (+Pallas) runs only at `make artifacts` time;
+//! this module is the only place the simulator touches XLA.
+
+mod executor;
+mod manifest;
+
+pub use executor::{Arg, Compiled, ExecStats, Out, Runtime};
+pub use manifest::{
+    init_from_layout, ArtifactSpec, IoSpec, Manifest, ModelEntry, TensorEntry,
+};

@@ -1,0 +1,237 @@
+//! System metrics + simulated-device accounting (paper App. D.4.2,
+//! Figs. 7–8; and the substrate for the scaling studies Figs. 2–3).
+//!
+//! Two roles:
+//!
+//! 1. **Counters** — bytes allocated/copied in the round loop, device
+//!    busy/idle time, per-user timings. These are what Figs. 7–8 plot
+//!    (CPU/GPU memory + utilization over the run) and what the
+//!    "no model-sized alloc in the loop" invariant tests assert.
+//!
+//! 2. **Virtual cluster** — this testbed has a single CPU core, so
+//!    multi-GPU scaling (Figs. 2–3) is *simulated*: every user's local
+//!    training cost is **measured** (real wall-clock of its PJRT
+//!    executions), then users are replayed onto v virtual workers
+//!    according to the scheduler. Simulated round time = max over
+//!    workers of Σ assigned costs (+ per-round overheads); GPU-hours =
+//!    Σ busy time. This preserves exactly the quantities the paper's
+//!    scaling figures measure (scheduling quality, straggler gaps,
+//!    utilization) — see DESIGN.md §2 substitutions.
+
+use std::time::Duration;
+
+/// Lightweight event counters, one per worker (merged at round end).
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    /// Bytes of model-sized heap allocation in the training loop.
+    pub loop_alloc_bytes: u64,
+    /// Bytes memcpy'd between "host" and "device" staging buffers.
+    pub copy_bytes: u64,
+    /// Bytes serialized for topology-simulating transport (baselines).
+    pub wire_bytes: u64,
+    /// Count of model-update messages through a coordinator (baselines).
+    pub coordinator_msgs: u64,
+    /// Device busy time (executable execution).
+    pub busy_nanos: u64,
+    /// Users trained.
+    pub users_trained: u64,
+    /// Local optimization steps executed.
+    pub steps: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, o: &Counters) {
+        self.loop_alloc_bytes += o.loop_alloc_bytes;
+        self.copy_bytes += o.copy_bytes;
+        self.wire_bytes += o.wire_bytes;
+        self.coordinator_msgs += o.coordinator_msgs;
+        self.busy_nanos += o.busy_nanos;
+        self.users_trained += o.users_trained;
+        self.steps += o.steps;
+    }
+
+    pub fn busy(&self) -> Duration {
+        Duration::from_nanos(self.busy_nanos)
+    }
+}
+
+/// A measured per-user training record (feeds Fig. 4a and the virtual
+/// cluster replay).
+#[derive(Debug, Clone, Copy)]
+pub struct UserCost {
+    pub datapoints: usize,
+    /// Total wall-clock for the user (host + device).
+    pub nanos: u64,
+    /// Device-busy portion (executable execution time). The replay model
+    /// serializes device time among workers sharing a device and overlaps
+    /// the host portion — the mechanism behind the paper's "p > 1
+    /// processes per GPU increases utilization" (§4.2).
+    pub device_nanos: u64,
+}
+
+impl UserCost {
+    pub fn host_nanos(&self) -> u64 {
+        self.nanos.saturating_sub(self.device_nanos)
+    }
+}
+
+/// Simulated round time for a cluster of `gpus` devices with `per_gpu`
+/// workers each, given per-worker queues of user costs. Device time of
+/// co-located workers serializes; host time overlaps. Returns
+/// (round_nanos, per_device_busy_nanos).
+///
+/// Roofline model per device: round_d = max(Σ_w device_w,
+/// max_w (host_w + device_w)); the cluster round is max over devices.
+pub fn replay_cluster(
+    queues: &[Vec<UserCost>],
+    gpus: usize,
+    per_gpu: usize,
+    per_user_overhead_nanos: u64,
+) -> (u64, Vec<u64>) {
+    assert_eq!(queues.len(), gpus * per_gpu);
+    let mut round = 0u64;
+    let mut device_busy = Vec::with_capacity(gpus);
+    for g in 0..gpus {
+        let mut sum_device = 0u64;
+        let mut max_worker = 0u64;
+        for p in 0..per_gpu {
+            let q = &queues[g * per_gpu + p];
+            let dev: u64 = q.iter().map(|c| c.device_nanos).sum();
+            let host: u64 =
+                q.iter().map(|c| c.host_nanos() + per_user_overhead_nanos).sum();
+            sum_device += dev;
+            max_worker = max_worker.max(dev + host);
+        }
+        let dev_round = sum_device.max(max_worker);
+        device_busy.push(sum_device);
+        round = round.max(dev_round);
+    }
+    (round, device_busy)
+}
+
+/// Replay measured user costs onto a virtual cluster using a precomputed
+/// schedule; returns (round_nanos, busy_nanos_per_worker).
+pub fn replay_round(
+    costs: &[UserCost],
+    assignments: &[Vec<usize>],
+    per_user_overhead_nanos: u64,
+) -> (u64, Vec<u64>) {
+    let mut busy: Vec<u64> = Vec::with_capacity(assignments.len());
+    for a in assignments {
+        let mut t = 0u64;
+        for &i in a {
+            t += costs[i].nanos + per_user_overhead_nanos;
+        }
+        busy.push(t);
+    }
+    let round = busy.iter().copied().max().unwrap_or(0);
+    (round, busy)
+}
+
+/// Utilization of the virtual cluster for one round: Σ busy / (v * round).
+pub fn utilization(round_nanos: u64, busy: &[u64]) -> f64 {
+    if round_nanos == 0 || busy.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = busy.iter().sum();
+    total as f64 / (round_nanos as f64 * busy.len() as f64)
+}
+
+/// Straggler gap: difference between last and first worker to finish.
+pub fn straggler_gap_nanos(busy: &[u64]) -> u64 {
+    let max = busy.iter().copied().max().unwrap_or(0);
+    let min = busy.iter().copied().min().unwrap_or(0);
+    max - min
+}
+
+/// A time series sampled once per round — the Figs. 7/8 output format.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub rows: Vec<TimelineRow>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineRow {
+    pub round: u64,
+    pub wall_secs: f64,
+    pub rss_bytes: u64,
+    pub busy_frac: f64,
+    pub loop_alloc_bytes: u64,
+    pub copy_bytes: u64,
+}
+
+impl Timeline {
+    pub fn push(&mut self, row: TimelineRow) {
+        self.rows.push(row);
+    }
+
+    pub fn print_tsv(&self) {
+        println!("round\twall_s\trss_mb\tbusy_frac\talloc_mb\tcopy_mb");
+        for r in &self.rows {
+            println!(
+                "{}\t{:.2}\t{:.1}\t{:.3}\t{:.1}\t{:.1}",
+                r.round,
+                r.wall_secs,
+                r.rss_bytes as f64 / 1e6,
+                r.busy_frac,
+                r.loop_alloc_bytes as f64 / 1e6,
+                r.copy_bytes as f64 / 1e6
+            );
+        }
+    }
+}
+
+/// Current process RSS in bytes (linux; 0 elsewhere).
+pub fn current_rss_bytes() -> u64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(pages) = s.split_whitespace().nth(1) {
+            if let Ok(p) = pages.parse::<u64>() {
+                return p * 4096;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge() {
+        let mut a = Counters { busy_nanos: 5, users_trained: 1, ..Default::default() };
+        let b = Counters { busy_nanos: 7, steps: 3, copy_bytes: 10, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.busy_nanos, 12);
+        assert_eq!(a.users_trained, 1);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.copy_bytes, 10);
+    }
+
+    #[test]
+    fn replay_matches_hand_computation() {
+        let costs = vec![
+            UserCost { datapoints: 10, nanos: 100, device_nanos: 60 },
+            UserCost { datapoints: 20, nanos: 200, device_nanos: 120 },
+            UserCost { datapoints: 30, nanos: 300, device_nanos: 180 },
+        ];
+        let assignments = vec![vec![0, 1], vec![2]];
+        let (round, busy) = replay_round(&costs, &assignments, 10);
+        assert_eq!(busy, vec![320, 310]);
+        assert_eq!(round, 320);
+        assert_eq!(straggler_gap_nanos(&busy), 10);
+        let u = utilization(round, &busy);
+        assert!((u - (630.0 / 640.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_edge_cases() {
+        assert_eq!(utilization(0, &[1, 2]), 0.0);
+        assert_eq!(utilization(10, &[]), 0.0);
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(current_rss_bytes() > 0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Micro-benchmark harness (offline build: criterion is unavailable).
+//!
+//! Measures wall-clock over warmup + N timed iterations and reports
+//! median / mean / stddev / min, criterion-style. Used by every target in
+//! `benches/`.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} iters={:<4} median={:>12?} mean={:>12?} sd={:>10?} min={:>12?}",
+            self.name, self.iters, self.median, self.mean, self.stddev, self.min
+        );
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, samples)
+}
+
+/// Time a batch-style closure that runs `n` inner operations per call;
+/// reported durations are per-op.
+pub fn bench_per_op<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    ops_per_iter: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed() / ops_per_iter.max(1) as u32);
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    samples.sort();
+    let iters = samples.len();
+    let median = samples[iters / 2];
+    let mean_nanos: f64 =
+        samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / iters as f64;
+    let var: f64 = samples
+        .iter()
+        .map(|d| (d.as_nanos() as f64 - mean_nanos).powi(2))
+        .sum::<f64>()
+        / iters as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        mean: Duration::from_nanos(mean_nanos as u64),
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        min: samples[0],
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 9, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 9);
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.mean * 4);
+    }
+
+    #[test]
+    fn per_op_divides() {
+        let r = bench_per_op("per-op", 1, 5, 100, || {
+            black_box((0..10_000).sum::<u64>());
+        });
+        assert!(r.median.as_nanos() < 1_000_000);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (offline build: clap is unavailable).
+//!
+//! Supports `pfl <subcommand> [--key value]... [--flag]...` which is all
+//! the experiment harness needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn require_subcommand(&self) -> Result<&str> {
+        match &self.subcommand {
+            Some(s) => Ok(s),
+            None => bail!("missing subcommand"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NB: a bare `--x` followed by a non-dashed token is an option
+        // (`--x value`), so flags must be written last or as `--x=`.
+        let a = p("table1 extra --scale 0.1 --workers=4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get("scale"), Some("0.1"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = p("run --lr 0.5");
+        assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("mu", 0.25).unwrap(), 0.25);
+        assert!(a.require("missing").is_err());
+        let bad = p("run --n abc");
+        assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = p("run --check");
+        assert!(a.flag("check"));
+        assert_eq!(a.get("check"), None);
+    }
+}

@@ -1,0 +1,146 @@
+//! Iterative radix-2 FFT (f64) — offline build, so no external FFT crate.
+//! Used by the PLD privacy accountant for T-fold self-convolution of the
+//! privacy-loss pmf.
+
+use std::f64::consts::PI;
+
+/// In-place iterative Cooley–Tukey FFT over interleaved (re, im) pairs.
+/// `n` must be a power of two. `inverse` applies the conjugate transform
+/// (unnormalized — caller divides by n).
+fn fft_in_place(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    // bit reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cur_r, mut cur_i) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cur_r - vi0 * cur_i;
+                let vi = vr0 * cur_i + vi0 * cur_r;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Linear convolution of two non-negative pmfs via FFT. Output length is
+/// `a.len() + b.len() - 1`. Tiny negative round-off values are clamped.
+pub fn convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let out_len = a.len() + b.len() - 1;
+    // below this size plain O(n*m) is faster than three FFTs
+    if a.len().min(b.len()) <= 64 || out_len <= 1024 {
+        let mut out = vec![0.0; out_len];
+        for (i, &x) in a.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            for (j, &y) in b.iter().enumerate() {
+                out[i + j] += x * y;
+            }
+        }
+        return out;
+    }
+    let n = out_len.next_power_of_two();
+    let mut ar = vec![0.0; n];
+    let mut ai = vec![0.0; n];
+    let mut br = vec![0.0; n];
+    let mut bi = vec![0.0; n];
+    ar[..a.len()].copy_from_slice(a);
+    br[..b.len()].copy_from_slice(b);
+    fft_in_place(&mut ar, &mut ai, false);
+    fft_in_place(&mut br, &mut bi, false);
+    for i in 0..n {
+        let r = ar[i] * br[i] - ai[i] * bi[i];
+        let im = ar[i] * bi[i] + ai[i] * br[i];
+        ar[i] = r;
+        ai[i] = im;
+    }
+    fft_in_place(&mut ar, &mut ai, true);
+    let inv = 1.0 / n as f64;
+    ar.truncate(out_len);
+    for v in ar.iter_mut() {
+        *v = (*v * inv).max(0.0);
+    }
+    ar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn direct(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                out[i + j] += x * y;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn small_convolution_exact() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [0.5, 0.5];
+        assert_eq!(convolve(&a, &b), direct(&a, &b));
+    }
+
+    #[test]
+    fn fft_path_matches_direct() {
+        // sizes large enough to take the FFT path
+        let a: Vec<f64> = (0..700).map(|i| ((i * 37) % 11) as f64 / 11.0).collect();
+        let b: Vec<f64> = (0..900).map(|i| ((i * 17) % 7) as f64 / 7.0).collect();
+        let fast = convolve(&a, &b);
+        let slow = direct(&a, &b);
+        assert_eq!(fast.len(), slow.len());
+        let max: f64 = slow.iter().fold(0.0, |m, &x| m.max(x.abs()));
+        for (x, y) in fast.iter().zip(&slow) {
+            assert!((x - y).abs() < 1e-9 * max.max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pmf_mass_is_preserved() {
+        let a: Vec<f64> = (0..2048).map(|i| if i % 3 == 0 { 1.0 } else { 0.25 }).collect();
+        let sa: f64 = a.iter().sum();
+        let c = convolve(&a, &a);
+        let sc: f64 = c.iter().sum();
+        assert!((sc - sa * sa).abs() / (sa * sa) < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(convolve(&[], &[1.0]).is_empty());
+    }
+}

@@ -1,0 +1,72 @@
+//! In-tree infrastructure (offline build — see Cargo.toml): JSON, RNG +
+//! distributions, CLI parsing, bench harness, and small vector math
+//! helpers shared by the aggregation / privacy hot paths.
+
+pub mod bench;
+pub mod cli;
+pub mod fft;
+pub mod json;
+pub mod rng;
+
+/// y += x (the aggregation hot path; kept in one place so the perf pass
+/// can vectorize/tune a single site).
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += *b;
+    }
+}
+
+/// y += s * x
+#[inline]
+pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += s * *b;
+    }
+}
+
+/// y *= s
+#[inline]
+pub fn scale(y: &mut [f32], s: f32) {
+    for a in y {
+        *a *= s;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = *x - *y;
+    }
+}
+
+/// L2 norm (f64 accumulation).
+#[inline]
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+        axpy(&mut y, 2.0, &[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![4.0, 3.0, 2.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![2.0, 1.5, 1.0]);
+        let mut out = vec![0.0f32; 3];
+        sub_into(&mut out, &[3.0, 3.0, 3.0], &y);
+        assert_eq!(out, vec![1.0, 1.5, 2.0]);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

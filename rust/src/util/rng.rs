@@ -1,0 +1,401 @@
+//! Deterministic RNG + the distributions the simulator needs.
+//!
+//! (Offline build: the `rand`/`rand_distr` crates are not in the cargo
+//! cache, and DP noise generation wants explicit, auditable sampling
+//! anyway.) Core generator is splitmix64-seeded xoshiro256++ — fast,
+//! high-quality, and trivially reproducible across platforms.
+//!
+//! Distributions: uniform, normal (Box–Muller with caching), laplace
+//! (inverse CDF), poisson (Knuth for small mean, PTRS-style normal
+//! approximation fallback), gamma (Marsaglia–Tsang), dirichlet (via
+//! gamma), lognormal, zipf (rejection-inversion-free CDF table for the
+//! vocab sizes we use), and permutation/choose-k helpers for cohort
+//! sampling.
+
+#![allow(clippy::many_single_char_names)]
+
+/// xoshiro256++ with splitmix64 seeding.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    cached_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream (e.g. per worker / per user).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed_from_u64(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe for log().
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift with rejection for exactness.
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Laplace(0, scale) via inverse CDF.
+    pub fn laplace(&mut self, scale: f64) -> f64 {
+        let u = self.f64() - 0.5;
+        -scale * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Poisson(lambda).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            // Knuth
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // normal approximation with continuity correction (fine for the
+        // user-partitioning use cases where lambda >= 30)
+        let x = self.normal_scaled(lambda, lambda.sqrt());
+        x.round().max(0.0) as u64
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; k can be < 1.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        if k < 1.0 {
+            let u = self.f64_open();
+            return self.gamma(k + 1.0) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64_open();
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) over n categories.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let sum: f64 = g.iter().sum();
+        for x in &mut g {
+            *x /= sum;
+        }
+        g
+    }
+
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_scaled(mu, sigma).exp()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            v.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (Floyd's algorithm order-
+    /// randomized). Used for cohort sampling without replacement.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        self.shuffle(&mut out);
+        out
+    }
+
+    /// Bernoulli(p) per element over [0, n): Poisson sampling of cohorts.
+    pub fn poisson_subsample(&mut self, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| self.f64() < p).collect()
+    }
+
+    /// Fill a slice with iid N(0, std) f32 noise (DP mechanisms' hot path).
+    pub fn fill_normal_f32(&mut self, dst: &mut [f32], std: f64) {
+        for v in dst {
+            *v = self.normal_scaled(0.0, std) as f32;
+        }
+    }
+}
+
+/// Zipf sampler over {0, .., n-1} with exponent `s`, using a precomputed
+/// CDF (n is at most vocab-size ~1e4 in our datasets, so the table is
+/// cheap and sampling is a binary search).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_streams() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = Rng::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::seed_from_u64(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(2);
+        let n = 200_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Rng::seed_from_u64(3);
+        let scale = 2.0;
+        let n = 200_000;
+        let mut v = 0.0;
+        for _ in 0..n {
+            let x = r.laplace(scale);
+            v += x * x;
+        }
+        v /= n as f64;
+        // Var = 2 scale^2 = 8
+        assert!((v - 8.0).abs() < 0.3, "var {v}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::seed_from_u64(4);
+        for lambda in [0.5, 4.0, 16.0, 64.0] {
+            let n = 50_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                sum += r.poisson(lambda) as f64;
+            }
+            let mean = sum / n as f64;
+            assert!(
+                (mean - lambda).abs() < 0.1 * lambda.max(1.0),
+                "lambda {lambda} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::seed_from_u64(5);
+        for k in [0.3, 1.0, 2.5, 10.0] {
+            let n = 100_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                sum += r.gamma(k);
+            }
+            let mean = sum / n as f64;
+            assert!((mean - k).abs() < 0.05 * k.max(1.0), "k {k} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seed_from_u64(6);
+        for alpha in [0.1, 1.0, 10.0] {
+            let p = r.dirichlet(alpha, 10);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|x| *x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn choose_k_distinct_and_complete() {
+        let mut r = Rng::seed_from_u64(7);
+        let picks = r.choose_k(100, 30);
+        assert_eq!(picks.len(), 30);
+        let set: std::collections::HashSet<_> = picks.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(picks.iter().all(|&i| i < 100));
+        // k >= n returns a permutation
+        let all = r.choose_k(10, 10);
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn poisson_subsample_rate() {
+        let mut r = Rng::seed_from_u64(8);
+        let mut total = 0;
+        for _ in 0..100 {
+            total += r.poisson_subsample(1000, 0.05).len();
+        }
+        let rate = total as f64 / 100_000.0;
+        assert!((rate - 0.05).abs() < 0.005, "rate {rate}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::seed_from_u64(9);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[200]);
+    }
+
+    #[test]
+    fn below_is_exact_bounds() {
+        let mut r = Rng::seed_from_u64(10);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(11);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

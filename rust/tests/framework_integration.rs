@@ -1,0 +1,292 @@
+//! Integration tests over the full simulation framework (no PJRT): the
+//! generalized loop (Alg. 1), every algorithm on a shared linear task,
+//! DP postprocessor composition, engine-variant numeric consistency,
+//! checkpoint/resume fault tolerance, and callback control flow.
+
+use std::sync::Arc;
+
+use pfl::baselines::{EngineVariant, OverheadProfile};
+use pfl::config::{preset, Config};
+use pfl::data::{FederatedDataset, SynthTabular};
+use pfl::fl::algorithm::RunSpec;
+use pfl::fl::backend::{BackendBuilder, RunParams};
+use pfl::fl::callbacks::{load_checkpoint, Callback, CheckpointCallback, EarlyStopping};
+use pfl::fl::central_opt::{Adam, Sgd};
+use pfl::fl::context::LocalParams;
+use pfl::fl::postprocess::{NormClip, WeightByDatapoints};
+use pfl::fl::{
+    AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, LinearModel, Model, Scaffold,
+    SchedulerKind,
+};
+use pfl::privacy::{BandedMatrixFactorization, GaussianMechanism};
+
+const DIM: usize = 4;
+
+fn dataset(users: usize, seed: u64) -> Arc<dyn FederatedDataset> {
+    Arc::new(SynthTabular::new(users, 32, DIM, seed))
+}
+
+fn spec(iters: u64, users: usize) -> RunSpec {
+    RunSpec {
+        iterations: iters,
+        cohort_size: 8,
+        val_cohort_size: 4,
+        eval_every: 3,
+        local: LocalParams { epochs: 2, batch_size: 8, lr: 0.05, mu: 0.0, max_steps: 0 },
+        central_lr: 1.0,
+        central_lr_warmup: 0,
+        population: users,
+        seed: 3,
+    }
+}
+
+fn backend_for(
+    alg: Arc<dyn FederatedAlgorithm>,
+    users: usize,
+    workers: usize,
+    profile: OverheadProfile,
+    scheduler: SchedulerKind,
+    pps: Vec<Box<dyn pfl::fl::postprocess::Postprocessor>>,
+) -> pfl::fl::SimulatedBackend {
+    let mut b = BackendBuilder::new(
+        dataset(users, 42),
+        alg,
+        Arc::new(|_| Ok(Box::new(LinearModel::new(DIM)) as Box<dyn Model>)),
+    )
+    .params(RunParams { num_workers: workers, scheduler, profile, seed: 7, ..Default::default() });
+    for pp in pps {
+        b = b.postprocessor(pp);
+    }
+    b.build().unwrap()
+}
+
+fn final_loss(out: &pfl::fl::RunOutcome) -> f64 {
+    out.series("train/loss").last().unwrap().1
+}
+
+#[test]
+fn every_algorithm_learns_the_linear_task() {
+    let users = 32;
+    for (name, alg) in [
+        (
+            "fedavg",
+            Arc::new(FedAvg::new(spec(25, users), Box::new(Sgd))) as Arc<dyn FederatedAlgorithm>,
+        ),
+        ("fedprox", Arc::new(FedProx::new(spec(25, users), 0.1, Box::new(Sgd)))),
+        ("adafedprox", Arc::new(AdaFedProx::new(spec(25, users), Box::new(Sgd)))),
+        ("scaffold", Arc::new(Scaffold::new(spec(25, users), Box::new(Sgd)))),
+    ] {
+        let mut backend =
+            backend_for(alg, users, 2, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+        let out = backend
+            .run(vec![0.0; LinearModel::param_len(DIM)], &mut [])
+            .unwrap();
+        let series = out.series("train/loss");
+        let (first, last) = (series[0].1, series.last().unwrap().1);
+        assert!(
+            last < first * 0.5,
+            "{name}: loss {first:.4} -> {last:.4} did not halve"
+        );
+        // federated eval ran too
+        assert!(out.final_metric("val/loss").is_some(), "{name}: no val metrics");
+    }
+}
+
+#[test]
+fn fedadam_also_converges() {
+    let users = 32;
+    let alg = Arc::new(FedAvg::new(
+        RunSpec { central_lr: 0.05, ..spec(30, users) },
+        Box::new(Adam::paper(0.1)),
+    ));
+    let mut backend =
+        backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+    let out = backend.run(vec![0.0; DIM + 1], &mut []).unwrap();
+    assert!(final_loss(&out) < out.series("train/loss")[0].1 * 0.6);
+}
+
+#[test]
+fn engine_variants_agree_on_the_learned_model() {
+    // Same seeds, same cohorts: every overhead profile must produce the
+    // same final model (overheads shift time, never statistics) — the
+    // accuracy-consistency column of paper Table 1.
+    let users = 24;
+    let run = |variant: EngineVariant| {
+        let alg = Arc::new(FedAvg::new(spec(6, users), Box::new(Sgd)));
+        let mut backend = backend_for(
+            alg,
+            users,
+            2,
+            variant.profile(),
+            variant.scheduler(),
+            vec![],
+        );
+        backend.run(vec![0.0; DIM + 1], &mut []).unwrap().central
+    };
+    let reference = run(EngineVariant::PflStyle);
+    for v in [EngineVariant::FlowerLike, EngineVariant::TffLike, EngineVariant::FedScaleLike] {
+        let other = run(v);
+        for (a, b) in reference.iter().zip(&other) {
+            assert!((a - b).abs() < 1e-4, "{v:?} diverged: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn dp_pipeline_composes_with_weighting_and_clipping() {
+    let users = 24;
+    let alg = Arc::new(FedAvg::new(spec(10, users), Box::new(Sgd)));
+    let pps: Vec<Box<dyn pfl::fl::postprocess::Postprocessor>> = vec![
+        Box::new(WeightByDatapoints { cap: 64.0 }),
+        Box::new(NormClip { bound: 5.0 }),
+        Box::new(GaussianMechanism::new(1.0, 0.05, 1.0)),
+    ];
+    let mut backend =
+        backend_for(alg, users, 2, OverheadProfile::default(), SchedulerKind::Greedy, pps);
+    let out = backend.run(vec![0.0; DIM + 1], &mut []).unwrap();
+    // clip + noise metrics must have been reported
+    assert!(out.final_metric("dp/pre-clip-norm").is_some());
+    assert!(out.final_metric("dp/snr").is_some());
+    assert!(out.final_metric("clip/pre-norm").is_some());
+    // learning still happens under mild noise
+    let series = out.series("train/loss");
+    assert!(series.last().unwrap().1 < series[0].1);
+}
+
+#[test]
+fn bmf_min_separation_is_enforced_by_the_backend() {
+    let users = 6; // tiny population so the filter bites
+    let alg = Arc::new(FedAvg::new(
+        RunSpec { cohort_size: 4, val_cohort_size: 0, ..spec(8, users) },
+        Box::new(Sgd),
+    ));
+    let mut bmf = BandedMatrixFactorization::new(1.0, 0.0, 1.0, 4);
+    bmf.min_sep = 3;
+    let mut backend = backend_for(
+        alg,
+        users,
+        1,
+        OverheadProfile::default(),
+        SchedulerKind::Greedy,
+        vec![Box::new(bmf)],
+    );
+    let out = backend.run(vec![0.0; DIM + 1], &mut []).unwrap();
+    // after round 0 trains ~4 of 6 users, rounds 1-2 can only draw from
+    // the remaining pool -> cohorts shrink below the nominal size
+    let cohorts = out.series("sys/cohort");
+    assert!(cohorts.iter().skip(1).take(2).any(|(_, c)| *c < 4.0), "{cohorts:?}");
+}
+
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_run() {
+    let users = 16;
+    let path = std::env::temp_dir().join(format!("pfl_it_ckpt_{}", std::process::id()));
+
+    // uninterrupted run: 10 rounds
+    let alg = Arc::new(FedAvg::new(spec(10, users), Box::new(Sgd)));
+    let mut backend =
+        backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+    let full = backend.run(vec![0.0; DIM + 1], &mut []).unwrap();
+
+    // interrupted at 5 rounds (checkpointing every round)...
+    let alg = Arc::new(FedAvg::new(spec(5, users), Box::new(Sgd)));
+    let mut backend =
+        backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+    let mut cbs: Vec<Box<dyn Callback>> = vec![Box::new(CheckpointCallback::new(&path, 1))];
+    backend.run(vec![0.0; DIM + 1], &mut cbs).unwrap();
+
+    // ...resumed from the checkpoint for the remaining rounds.
+    let (params, next_t) = load_checkpoint(&path).unwrap();
+    assert_eq!(next_t, 5);
+    let alg = Arc::new(ResumeAt {
+        inner: FedAvg::new(spec(10, users), Box::new(Sgd)),
+        from: next_t,
+    });
+    let mut backend =
+        backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+    let resumed = backend.run(params, &mut []).unwrap();
+
+    for (a, b) in full.central.iter().zip(&resumed.central) {
+        assert!((a - b).abs() < 1e-5, "resume diverged: {a} vs {b}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Wraps an algorithm to start its iteration counter at `from` (resume).
+struct ResumeAt {
+    inner: FedAvg,
+    from: u64,
+}
+
+impl FederatedAlgorithm for ResumeAt {
+    fn name(&self) -> &'static str {
+        "resume"
+    }
+    fn next_contexts(&self, t: u64) -> Vec<pfl::fl::CentralContext> {
+        self.inner.next_contexts(t + self.from)
+    }
+    fn simulate_one_user(
+        &self,
+        model: &mut dyn Model,
+        uid: usize,
+        data: &pfl::data::UserData,
+        ctx: &pfl::fl::CentralContext,
+    ) -> anyhow::Result<(Option<pfl::fl::Statistics>, pfl::fl::Metrics)> {
+        self.inner.simulate_one_user(model, uid, data, ctx)
+    }
+    fn process_aggregated(
+        &self,
+        central: &mut [f32],
+        ctx: &pfl::fl::CentralContext,
+        aggregate: pfl::fl::Statistics,
+        metrics: &mut pfl::fl::Metrics,
+    ) -> anyhow::Result<()> {
+        self.inner.process_aggregated(central, ctx, aggregate, metrics)
+    }
+}
+
+#[test]
+fn early_stopping_halts_training() {
+    let users = 16;
+    let alg = Arc::new(FedAvg::new(spec(50, users), Box::new(Sgd)));
+    let mut backend =
+        backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, vec![]);
+    let mut cbs: Vec<Box<dyn Callback>> =
+        vec![Box::new(EarlyStopping::new("train/loss", false, 2))];
+    let out = backend.run(vec![0.0; DIM + 1], &mut cbs).unwrap();
+    assert!(out.rounds < 50, "early stopping never fired ({} rounds)", out.rounds);
+}
+
+#[test]
+fn config_json_file_roundtrip_through_launcher_types() {
+    // `pfl run --config file.json` path: serialize a preset, parse it back.
+    let cfg = preset("stackoverflow-dp").unwrap();
+    let path = std::env::temp_dir().join(format!("pfl_cfg_{}.json", std::process::id()));
+    std::fs::write(&path, cfg.to_json()).unwrap();
+    let parsed = Config::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(cfg, parsed);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn weighted_vs_equal_aggregation_differ() {
+    let users = 16;
+    let run = |weighted: bool| {
+        let alg = Arc::new(FedAvg::new(spec(5, users), Box::new(Sgd)));
+        let pps: Vec<Box<dyn pfl::fl::postprocess::Postprocessor>> = if weighted {
+            vec![Box::new(WeightByDatapoints { cap: 0.0 })]
+        } else {
+            vec![]
+        };
+        let mut backend =
+            backend_for(alg, users, 1, OverheadProfile::default(), SchedulerKind::Greedy, pps);
+        backend.run(vec![0.0; DIM + 1], &mut []).unwrap().central
+    };
+    let eq = run(false);
+    let wt = run(true);
+    // SynthTabular has varying user sizes, so the two weightings differ
+    assert!(
+        eq.iter().zip(&wt).any(|(a, b)| (a - b).abs() > 1e-7),
+        "weighting had no effect"
+    );
+}

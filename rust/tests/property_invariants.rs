@@ -1,0 +1,301 @@
+//! Property-based tests (hand-rolled generators — the offline build has
+//! no proptest crate): randomized inputs over many seeds asserting the
+//! framework's algebraic invariants:
+//!
+//! * the aggregator exchange law (paper App. B.2),
+//! * scheduler coverage / determinism / LPT dominance,
+//! * clip idempotence and norm bounds,
+//! * accountant monotonicity (σ, T, q) and RDP ≥ PLD orderings,
+//! * replay-model roofline bounds,
+//! * metrics merge commutativity.
+
+use pfl::fl::aggregator::{Aggregator, CollectAggregator, SumAggregator};
+use pfl::fl::model::{ClipKernel, RustClip};
+use pfl::fl::scheduler::{median, schedule, SchedulerKind};
+use pfl::fl::stats::Statistics;
+use pfl::fl::Metrics;
+use pfl::privacy::{Accountant, AccountantParams, PldAccountant, RdpAccountant};
+use pfl::simsys::{replay_cluster, replay_round, UserCost};
+use pfl::util::rng::Rng;
+
+const TRIALS: u64 = 25;
+
+fn rand_stats(rng: &mut Rng, dim: usize) -> Statistics {
+    let v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let mut s = Statistics::new_update(v, 1.0 + rng.below(5) as f64);
+    if rng.f64() < 0.5 {
+        s.insert("extra", (0..dim).map(|_| rng.normal() as f32).collect());
+    }
+    s
+}
+
+/// g({f(Sa, Δ), Sb}) = g({f(Sb, Δ), Sa}) = f(g({Sa, Sb}), Δ)
+#[test]
+fn sum_aggregator_exchange_law_randomized() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed);
+        let dim = 1 + rng.below(32);
+        let sa = rand_stats(&mut rng, dim);
+        let sb = rand_stats(&mut rng, dim);
+        let delta = rand_stats(&mut rng, dim);
+        let agg = SumAggregator;
+
+        let left = {
+            let mut acc = Some(sa.clone());
+            agg.accumulate(&mut acc, delta.clone());
+            agg.worker_reduce(vec![acc.unwrap(), sb.clone()]).unwrap()
+        };
+        let middle = {
+            let mut acc = Some(sb.clone());
+            agg.accumulate(&mut acc, delta.clone());
+            agg.worker_reduce(vec![acc.unwrap(), sa.clone()]).unwrap()
+        };
+        let right = {
+            let mut acc = agg.worker_reduce(vec![sa.clone(), sb.clone()]);
+            agg.accumulate(&mut acc, delta.clone());
+            acc.unwrap()
+        };
+        for pair in [(&left, &middle), (&left, &right)] {
+            assert_eq!(pair.0.weight, pair.1.weight, "seed {seed}");
+            assert_eq!(
+                pair.0.vecs.keys().collect::<Vec<_>>(),
+                pair.1.vecs.keys().collect::<Vec<_>>()
+            );
+            for (k, v) in &pair.0.vecs {
+                for (a, b) in v.iter().zip(&pair.1.vecs[k]) {
+                    assert!((a - b).abs() < 1e-4, "seed {seed} key {k}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn collect_aggregator_preserves_every_contribution() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC0);
+        let agg = CollectAggregator;
+        let n_workers = 1 + rng.below(4);
+        let mut partials = Vec::new();
+        let mut total_users = 0usize;
+        for _ in 0..n_workers {
+            let mut acc = None;
+            let users = 1 + rng.below(5);
+            total_users += users;
+            for _ in 0..users {
+                agg.accumulate(&mut acc, Statistics::new_update(vec![rng.normal() as f32], 1.0));
+            }
+            partials.push(acc.unwrap());
+        }
+        let reduced = agg.worker_reduce(partials).unwrap();
+        assert_eq!(reduced.vecs.len(), total_users, "seed {seed}");
+        assert_eq!(reduced.weight, total_users as f64);
+    }
+}
+
+#[test]
+fn scheduler_covers_partitions_and_dominates_uniform() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5C);
+        let n = 5 + rng.below(200);
+        let workers = 1 + rng.below(9);
+        let weights: Vec<f64> =
+            (0..n).map(|_| rng.lognormal(2.0, 1.3).ceil().max(1.0)).collect();
+
+        let uni = schedule(SchedulerKind::Uniform, &weights, workers);
+        let greedy = schedule(SchedulerKind::Greedy, &weights, workers);
+        let base = schedule(SchedulerKind::GreedyMedianBase, &weights, workers);
+
+        for s in [&uni, &greedy, &base] {
+            // exact partition
+            let mut seen = vec![false; n];
+            for a in &s.assignments {
+                for &i in a {
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "seed {seed}: unassigned user");
+        }
+        // LPT makespan never exceeds round-robin's
+        let makespan = |s: &pfl::fl::Schedule, kindless: bool| -> f64 {
+            // recompute raw (base-free) makespan from weights
+            let _ = kindless;
+            s.assignments
+                .iter()
+                .map(|a| a.iter().map(|&i| weights[i]).sum::<f64>())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(
+            makespan(&greedy, true) <= makespan(&uni, true) + 1e-9,
+            "seed {seed}: greedy worse than uniform"
+        );
+        // determinism
+        let again = schedule(SchedulerKind::Greedy, &weights, workers);
+        assert_eq!(greedy.assignments, again.assignments);
+    }
+}
+
+#[test]
+fn clip_is_idempotent_and_norm_bounded() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC11F);
+        let dim = 1 + rng.below(4096);
+        let mut v: Vec<f32> = (0..dim).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let bound = (0.1 + rng.f64() * 5.0) as f32;
+        let pre = pfl::util::l2_norm(&v);
+        let reported = RustClip.clip(&mut v, bound).unwrap();
+        assert!((reported - pre).abs() < 1e-3 * pre.max(1.0));
+        let post = pfl::util::l2_norm(&v);
+        assert!(post <= bound as f64 * (1.0 + 1e-5), "seed {seed}: {post} > {bound}");
+        // idempotence
+        let once = v.clone();
+        RustClip.clip(&mut v, bound).unwrap();
+        for (a, b) in v.iter().zip(&once) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn accountant_monotonicity_randomized() {
+    let acc = RdpAccountant;
+    for seed in 0..10 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xACC);
+        let q = 10f64.powf(-(1.0 + rng.f64() * 3.0)); // 1e-4 .. 1e-1
+        let steps = 10 + rng.below(3000) as u64;
+        let sigma = 0.5 + rng.f64() * 3.0;
+        let p = AccountantParams { sampling_rate: q, delta: 1e-6, steps };
+
+        let e = acc.epsilon(sigma, &p);
+        assert!(e.is_finite() && e > 0.0);
+        // more noise -> less epsilon
+        assert!(acc.epsilon(sigma * 1.5, &p) <= e + 1e-12);
+        // more steps -> more epsilon
+        let p2 = AccountantParams { steps: steps * 2, ..p };
+        assert!(acc.epsilon(sigma, &p2) >= e - 1e-12);
+        // more sampling -> more epsilon
+        let p3 = AccountantParams { sampling_rate: (q * 2.0).min(1.0), ..p };
+        assert!(acc.epsilon(sigma, &p3) >= e - 1e-9);
+    }
+}
+
+#[test]
+fn pld_never_much_looser_than_rdp() {
+    // PLD is the tighter accountant; allow 5% slack for discretization.
+    let pld = PldAccountant { grid: 5e-4, half_width: 20.0 };
+    let rdp = RdpAccountant;
+    for (q, steps, sigma) in [(1e-3, 100u64, 1.0), (5e-3, 300, 1.2), (1e-2, 50, 0.8)] {
+        let p = AccountantParams { sampling_rate: q, delta: 1e-6, steps };
+        let e_pld = pld.epsilon(sigma, &p);
+        let e_rdp = rdp.epsilon(sigma, &p);
+        assert!(
+            e_pld <= e_rdp * 1.05,
+            "pld {e_pld} vs rdp {e_rdp} at q={q} T={steps} sigma={sigma}"
+        );
+    }
+}
+
+#[test]
+fn replay_respects_rooflines_randomized() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x4EA1);
+        let n = 1 + rng.below(100);
+        let costs: Vec<UserCost> = (0..n)
+            .map(|_| {
+                let total = 1000 + rng.below(1_000_000) as u64;
+                UserCost {
+                    datapoints: 1 + rng.below(100),
+                    nanos: total,
+                    device_nanos: (total as f64 * rng.f64()) as u64,
+                }
+            })
+            .collect();
+        let workers = 1 + rng.below(8);
+        let weights: Vec<f64> = costs.iter().map(|c| c.datapoints as f64).collect();
+        let sched = schedule(SchedulerKind::Greedy, &weights, workers);
+        let (round, busy) = replay_round(&costs, &sched.assignments, 0);
+        // round is the max worker
+        assert_eq!(round, busy.iter().copied().max().unwrap_or(0));
+        // total busy conserved
+        let total: u64 = costs.iter().map(|c| c.nanos).sum();
+        assert_eq!(busy.iter().sum::<u64>(), total);
+
+        // cluster replay floors: >= device serial time per device and
+        // >= the largest single worker queue
+        let queues: Vec<Vec<UserCost>> = sched
+            .assignments
+            .iter()
+            .map(|a| a.iter().map(|&i| costs[i]).collect())
+            .collect();
+        let (cround, dev_busy) = replay_cluster(&queues, 1, workers, 0);
+        let device_total: u64 = costs.iter().map(|c| c.device_nanos).sum();
+        assert_eq!(dev_busy[0], device_total);
+        assert!(cround >= device_total);
+        // sharing a device can't be faster than the device-serial floor,
+        // and can't be slower than fully serial execution
+        assert!(cround <= total);
+    }
+}
+
+#[test]
+fn metrics_merge_commutes_randomized() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x3E7);
+        let parts: Vec<Metrics> = (0..4 + rng.below(6))
+            .map(|_| {
+                let mut m = Metrics::new();
+                m.add_central("a", rng.normal(), rng.f64() + 0.1);
+                m.add_per_user("b", rng.normal());
+                m
+            })
+            .collect();
+        let mut fwd = Metrics::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut perm = parts.clone();
+        // deterministic shuffle
+        let mut r2 = Rng::seed_from_u64(seed);
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, r2.below(i + 1));
+        }
+        let mut bwd = Metrics::new();
+        for p in &perm {
+            bwd.merge(p);
+        }
+        for k in ["a", "b"] {
+            assert!(
+                (fwd.get(k).unwrap() - bwd.get(k).unwrap()).abs() < 1e-10,
+                "seed {seed} metric {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn median_base_never_hurts_straggler_gap_much() {
+    // Table 5's qualitative ordering on random heavy-tailed cohorts:
+    // greedy(+median) beats uniform on the predicted straggler gap in
+    // aggregate.
+    let mut uni_total = 0.0;
+    let mut base_total = 0.0;
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7AB);
+        let n = 50 + rng.below(150);
+        let weights: Vec<f64> =
+            (0..n).map(|_| rng.lognormal(2.5, 1.2).ceil().max(1.0)).collect();
+        let workers = 2 + rng.below(7);
+        uni_total += schedule(SchedulerKind::Uniform, &weights, workers).predicted_straggler_gap();
+        base_total += schedule(
+            SchedulerKind::GreedyBase { base: median(&weights) },
+            &weights,
+            workers,
+        )
+        .predicted_straggler_gap();
+    }
+    assert!(
+        base_total < uni_total * 0.6,
+        "greedy+median {base_total} vs uniform {uni_total}"
+    );
+}

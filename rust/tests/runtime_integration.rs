@@ -1,0 +1,264 @@
+//! Integration: load real AOT artifacts through PJRT and check numerics.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise, like the
+//! python-side artifact tests).
+
+use pfl::runtime::{Arg, Manifest, Runtime};
+use pfl::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = std::env::var("PFL_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+#[test]
+fn clip_artifact_matches_rust_norm() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest.model("mlp_flair").unwrap().clone();
+    let clip_key = model.artifacts.get("clip").unwrap().clone();
+    let clip = rt.get(&clip_key).unwrap();
+
+    let mut rng = Rng::seed_from_u64(0);
+    let v: Vec<f32> = (0..model.param_count)
+        .map(|_| rng.normal_scaled(0.0, 0.01) as f32)
+        .collect();
+    let expected_norm = pfl::util::l2_norm(&v);
+
+    // bound below the norm -> scaled down to the bound
+    let bound = (expected_norm / 2.0) as f32;
+    let out = clip
+        .execute(&[Arg::F32(&v), Arg::ScalarF32(bound)])
+        .unwrap();
+    let clipped = out[0].as_f32();
+    let norm = out[1].scalar_f32() as f64;
+    assert!(
+        (norm - expected_norm).abs() / expected_norm < 1e-4,
+        "pallas norm {norm} vs rust {expected_norm}"
+    );
+    let clipped_norm = pfl::util::l2_norm(clipped);
+    assert!(
+        (clipped_norm - bound as f64).abs() / (bound as f64) < 1e-4,
+        "clipped to {clipped_norm}, wanted {bound}"
+    );
+
+    // bound above the norm -> unchanged
+    let out = clip
+        .execute(&[Arg::F32(&v), Arg::ScalarF32((expected_norm * 2.0) as f32)])
+        .unwrap();
+    let same = out[0].as_f32();
+    let max_diff = v
+        .iter()
+        .zip(same)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-6, "max diff {max_diff}");
+}
+
+#[test]
+fn train_step_reduces_loss_and_eval_agrees() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest.model("mlp_flair").unwrap().clone();
+    let train = rt.get(model.artifacts.get("train").unwrap()).unwrap();
+    let eval = rt.get(model.artifacts.get("eval").unwrap()).unwrap();
+
+    let mut params = model.init_params(3);
+    let zeros = vec![0f32; model.param_count];
+    let mut rng = Rng::seed_from_u64(1);
+
+    // synthetic batch: features + sparse multi-hot labels correlated with x
+    let b = model.train_batch;
+    let feat = 192;
+    let labels = 17;
+    let x: Vec<f32> = (0..b * feat).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0f32; b * labels];
+    for i in 0..b {
+        for l in 0..labels {
+            if x[i * feat + l] > 0.5 {
+                y[i * labels + l] = 1.0;
+            }
+        }
+    }
+    let w = vec![1f32; b];
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = train
+            .execute(&[
+                Arg::F32(&params),
+                Arg::F32(&zeros),
+                Arg::F32(&zeros),
+                Arg::F32(&x),
+                Arg::F32(&y),
+                Arg::F32(&w),
+                Arg::ScalarF32(0.5),
+                Arg::ScalarF32(0.0),
+            ])
+            .unwrap();
+        let loss_sum = out[1].scalar_f32();
+        let wsum = out[3].scalar_f32();
+        losses.push(loss_sum / wsum);
+        params = out[0].clone().into_f32();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "loss did not decrease: {losses:?}"
+    );
+
+    // eval on a batch built from the same generator runs and returns
+    // finite loss + scores with the right shape
+    let eb = model.eval_batch;
+    let ex: Vec<f32> = (0..eb * feat).map(|_| rng.normal() as f32).collect();
+    let ey = vec![0f32; eb * labels];
+    let ew = vec![1f32; eb];
+    let out = eval
+        .execute(&[Arg::F32(&params), Arg::F32(&ex), Arg::F32(&ey), Arg::F32(&ew)])
+        .unwrap();
+    assert!(out[0].scalar_f32().is_finite());
+    assert_eq!(out[3].as_f32().len(), eb * labels);
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest.model("mlp_flair").unwrap().clone();
+    let clip = rt.get(model.artifacts.get("clip").unwrap()).unwrap();
+    let v = vec![0.5f32; model.param_count];
+    clip.execute(&[Arg::F32(&v), Arg::ScalarF32(1.0)]).unwrap();
+    clip.execute(&[Arg::F32(&v), Arg::ScalarF32(1.0)]).unwrap();
+    let s = clip.stats();
+    assert_eq!(s.calls, 2);
+    assert!(s.exec_nanos > 0);
+    assert!(s.bytes_in > 0);
+    let total = rt.total_stats();
+    assert!(total.calls >= 2);
+}
+
+#[test]
+fn shape_and_dtype_mismatches_are_errors() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest.model("mlp_flair").unwrap().clone();
+    let clip = rt.get(model.artifacts.get("clip").unwrap()).unwrap();
+    let v = vec![0.5f32; 3]; // wrong length
+    assert!(clip.execute(&[Arg::F32(&v), Arg::ScalarF32(1.0)]).is_err());
+    let ok = vec![0.5f32; model.param_count];
+    let bad_ints = vec![1i32; model.param_count];
+    assert!(clip
+        .execute(&[Arg::I32(&bad_ints), Arg::ScalarF32(1.0)])
+        .is_err());
+    // wrong arity
+    assert!(clip.execute(&[Arg::F32(&ok)]).is_err());
+}
+
+// ---------------------------------------------------------------------
+// HloModel-level tests: the Model adapter over the artifacts.
+// ---------------------------------------------------------------------
+
+use pfl::data::{FederatedDataset, UserData};
+use pfl::fl::context::LocalParams;
+use pfl::fl::model::{ClipKernel, HloModel, RustClip, ScoreSink};
+use pfl::fl::Model;
+
+fn hlo_model(name: &str) -> Option<HloModel> {
+    let rt = runtime_or_skip()?;
+    Some(HloModel::new(&rt, name, 5).unwrap())
+}
+
+fn dataset_for(model: &str) -> Box<dyn FederatedDataset> {
+    match model {
+        "cnn_c10" => Box::new(pfl::data::SynthCifar::new(10, 30, None, 3)),
+        "mlp_flair" => Box::new(pfl::data::SynthFlair::new(10, None, 3)),
+        "lm_so" => Box::new(pfl::data::SynthText::new(10, 3)),
+        "lora_llm" => Box::new(pfl::data::SynthInstruct::new(
+            pfl::data::InstructFlavor::Alpaca,
+            300,
+            3,
+        )),
+        other => panic!("unknown model {other}"),
+    }
+}
+
+#[test]
+fn hlo_models_train_locally_and_apply() {
+    for name in ["cnn_c10", "mlp_flair", "lm_so", "lora_llm"] {
+        let Some(mut model) = hlo_model(name) else { return };
+        let data = dataset_for(name).user_data(0);
+        let p = LocalParams { epochs: 2, batch_size: 8, lr: 0.1, mu: 0.0, max_steps: 0 };
+        let central0 = model.central().to_vec();
+        let before = model.evaluate(&data, None).unwrap().get("loss").unwrap();
+        let out = model.train_local(&data, &p, None, 1).unwrap();
+        assert_eq!(out.update.len(), model.param_count(), "{name}");
+        assert!(out.steps > 0 && out.wsum > 0.0, "{name}");
+        assert!(pfl::util::l2_norm(&out.update) > 0.0, "{name}: zero update");
+        // central untouched by local training
+        assert_eq!(model.central(), &central0[..], "{name}: central mutated");
+        // apply the delta (FedAvg, central lr 1) and re-evaluate
+        let new: Vec<f32> = central0.iter().zip(&out.update).map(|(c, d)| c - d).collect();
+        model.set_central(&new);
+        let after = model.evaluate(&data, None).unwrap().get("loss").unwrap();
+        assert!(
+            after < before,
+            "{name}: local training did not improve local loss ({before} -> {after})"
+        );
+    }
+}
+
+#[test]
+fn hlo_clip_kernel_matches_rust_oracle() {
+    let Some(model) = hlo_model("cnn_c10") else { return };
+    let kernel = model.clip_kernel().unwrap();
+    let mut rng = Rng::seed_from_u64(2);
+    let mut v: Vec<f32> = (0..model.param_count()).map(|_| rng.normal() as f32 * 0.01).collect();
+    let mut v2 = v.clone();
+    let n1 = kernel.clip(&mut v, 0.5).unwrap();
+    let n2 = RustClip.clip(&mut v2, 0.5).unwrap();
+    assert!((n1 - n2).abs() / n2 < 1e-4, "norms {n1} vs {n2}");
+    let max_diff = v.iter().zip(&v2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "clipped vectors diverge by {max_diff}");
+}
+
+#[test]
+fn flair_eval_collects_scores_for_map() {
+    let Some(mut model) = hlo_model("mlp_flair") else { return };
+    let ds = dataset_for("mlp_flair");
+    let shards = ds.central_eval(128);
+    let mut sink = ScoreSink::default();
+    let mut total = 0usize;
+    for shard in shards.iter().take(2) {
+        model.evaluate(shard, Some(&mut sink)).unwrap();
+        total += shard.len();
+    }
+    assert_eq!(sink.labels, 17);
+    assert_eq!(sink.scores.len(), total * 17);
+    assert_eq!(sink.targets.len(), total * 17);
+    let map = pfl::fl::metrics::mean_average_precision(&sink.scores, &sink.targets, 17);
+    assert!(map > 0.0 && map <= 1.0, "mAP {map}");
+}
+
+#[test]
+fn lora_trains_adapters_only() {
+    let Some(mut model) = hlo_model("lora_llm") else { return };
+    // adapter vector is tiny relative to the frozen base
+    assert!(model.param_count() < 20_000, "{}", model.param_count());
+    let data = dataset_for("lora_llm").user_data(1);
+    let p = LocalParams { epochs: 1, batch_size: 4, lr: 0.1, mu: 0.0, max_steps: 2 };
+    let out = model.train_local(&data, &p, None, 0).unwrap();
+    assert_eq!(out.update.len(), model.param_count());
+    assert_eq!(out.steps, 2);
+}
+
+#[test]
+fn empty_user_data_is_a_noop() {
+    let Some(mut model) = hlo_model("cnn_c10") else { return };
+    let empty = UserData::Image { x: vec![], y: vec![], hwc: 3072 };
+    let out = model
+        .train_local(&empty, &LocalParams::default(), None, 0)
+        .unwrap();
+    assert!(out.update.is_empty());
+    assert_eq!(out.steps, 0);
+}
