@@ -1,36 +1,108 @@
 //! Bench: the aggregation hot path — per-user accumulate (runs cohort
 //! times per round) and the worker reduce (once per round), at the
 //! benchmark models' parameter counts. Paper §3 item 4: tensors stay in
-//! one buffer end-to-end; this is the Rust analogue (add_assign into the
-//! resident accumulator, no reallocation).
+//! one buffer end-to-end.
+//!
+//! Two accumulate variants are measured per dimension:
+//!
+//! * `accumulate/moved` — the pre-arena protocol: materialize one
+//!   `Statistics` per user (the aggregator takes ownership) and fold it
+//!   into an `Option<Statistics>` accumulator. Allocates one model-sized
+//!   vector per user.
+//! * `accumulate/arena` — the worker hot path since the tensor layer:
+//!   fold the user's statistics **by reference** into the resident
+//!   `StatsArena` buffers. Zero allocation per user in steady state.
+//!
+//! Results (ns/op + heap bytes/op, measured through `CountingAlloc`) are
+//! written to `BENCH_aggregation.json` so the perf trajectory is tracked
+//! across PRs.
 
 use pfl::fl::aggregator::{Aggregator, SumAggregator};
 use pfl::fl::stats::Statistics;
-use pfl::util::bench::{bench, bench_per_op, black_box};
+use pfl::tensor::StatsArena;
+use pfl::util::bench::{
+    bench_per_op_alloc, black_box, write_bench_json, BenchRecord, CountingAlloc,
+};
 
-fn main() {
-    for &d in &[119_569usize, 545_098, 1_964_640] {
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Benchmark model parameter counts (mlp_flair / cnn_c10 / lm_so).
+const DIMS: [usize; 3] = [119_569, 545_098, 1_964_640];
+
+fn main() -> anyhow::Result<()> {
+    let mut records = Vec::new();
+    for &d in &DIMS {
         let agg = SumAggregator;
         let users = 10;
-        bench_per_op(&format!("accumulate/user d={d}"), 2, 10, users, || {
-            let mut acc: Option<Statistics> = None;
-            for u in 0..users {
-                agg.accumulate(
-                    &mut acc,
-                    Statistics::new_update(vec![u as f32 * 1e-3; d], 1.0),
-                );
-            }
-            black_box(acc.map(|a| a.weight));
-        });
-        bench(&format!("worker_reduce/8 partials d={d}"), 2, 10, || {
-            let partials: Vec<Statistics> =
-                (0..8).map(|w| Statistics::new_update(vec![w as f32; d], 6.0)).collect();
-            black_box(agg.worker_reduce(partials).map(|a| a.weight));
-        });
-        bench(&format!("average_in_place d={d}"), 2, 10, || {
-            let mut s = Statistics::new_update(vec![1.0; d], 50.0);
-            s.average_in_place();
-            black_box(s.weight);
-        });
+
+        // pre-arena protocol: one model-sized Vec materialized + moved
+        // per user (accumulate consumes its argument)
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("accumulate/moved d={d}"), 2, 10, users, || {
+                let mut acc: Option<Statistics> = None;
+                for u in 0..users {
+                    agg.accumulate(
+                        &mut acc,
+                        Statistics::new_update(vec![u as f32 * 1e-3; d], 1.0),
+                    );
+                }
+                black_box(acc.map(|a| a.weight));
+            });
+        records.push(BenchRecord::new(&r, alloc));
+
+        // arena hot path: the user's statistics live in the model's
+        // resident buffer; the fold borrows them
+        let user = Statistics::new_update(vec![1e-3f32; d], 1.0);
+        let mut arena = StatsArena::new();
+        arena.fold(&user); // size the slots outside the timer
+        arena.take_partial();
+        let mut steady_grown = 0u64;
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("accumulate/arena d={d}"), 2, 10, users, || {
+                for _ in 0..users {
+                    arena.fold(&user);
+                }
+                black_box(arena.weight());
+                // capture growth before reset clears the bookkeeping
+                steady_grown += arena.drain_grown_bytes();
+                arena.reset();
+            });
+        records.push(BenchRecord::new(&r, alloc));
+        assert_eq!(steady_grown, 0, "steady-state arena fold must not allocate");
+
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("worker_reduce/8 partials d={d}"), 2, 10, 1, || {
+                let partials: Vec<Statistics> =
+                    (0..8).map(|w| Statistics::new_update(vec![w as f32; d], 6.0)).collect();
+                black_box(agg.worker_reduce(partials).map(|a| a.weight));
+            });
+        records.push(BenchRecord::new(&r, alloc));
+
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("average_in_place d={d}"), 2, 10, 1, || {
+                let mut s = Statistics::new_update(vec![1.0; d], 50.0);
+                s.average_in_place();
+                black_box(s.weight);
+            });
+        records.push(BenchRecord::new(&r, alloc));
     }
+
+    // headline ratio for the dense accumulate path
+    for d in DIMS {
+        let moved = records.iter().find(|r| r.name == format!("accumulate/moved d={d}"));
+        let arena = records.iter().find(|r| r.name == format!("accumulate/arena d={d}"));
+        if let (Some(m), Some(a)) = (moved, arena) {
+            println!(
+                "d={d}: arena speedup {:.2}x (alloc {:.0} -> {:.0} bytes/op)",
+                m.ns_per_op / a.ns_per_op.max(1.0),
+                m.alloc_bytes_per_op,
+                a.alloc_bytes_per_op
+            );
+        }
+    }
+
+    write_bench_json("BENCH_aggregation.json", &records)?;
+    println!("wrote BENCH_aggregation.json");
+    Ok(())
 }

@@ -3,19 +3,30 @@
 //! device costs the simulation wraps; everything in the speed tables sits
 //! on top of them. Paper analogue: the per-step GPU time underlying
 //! Tables 1–2.
+//!
+//! Emits `BENCH_hotpath.json` (ns/op + heap bytes/op via
+//! `CountingAlloc`) — written even when the HLO artifacts are absent, so
+//! downstream tooling can rely on the file existing.
 
 use pfl::fl::context::LocalParams;
 use pfl::fl::model::HloModel;
 use pfl::fl::Model;
 use pfl::runtime::{Manifest, Runtime};
-use pfl::util::bench::bench;
+use pfl::util::bench::{
+    bench_per_op_alloc, black_box, write_bench_json, BenchRecord, CountingAlloc,
+};
 use pfl::util::rng::Rng;
 
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
 fn main() -> anyhow::Result<()> {
+    let mut records: Vec<BenchRecord> = Vec::new();
     let manifest = match Manifest::load_default() {
         Ok(m) => m,
         Err(_) => {
             eprintln!("skipping runtime_hotpath: run `make artifacts` first");
+            write_bench_json("BENCH_hotpath.json", &records)?;
             return Ok(());
         }
     };
@@ -44,24 +55,40 @@ fn main() -> anyhow::Result<()> {
         };
         // one user's local optimization (epochs=1)
         let p = LocalParams { epochs: 1, batch_size: 16, lr: 0.1, mu: 0.0, max_steps: 0 };
-        bench(&format!("{name}/train_local(1 user)"), 2, 10, || {
-            let out = model.train_local(&data, &p, None, 7).unwrap();
-            pfl::util::bench::black_box(out.loss_sum);
-        });
-        bench(&format!("{name}/evaluate(1 user)"), 2, 10, || {
-            let m = model.evaluate(&data, None).unwrap();
-            pfl::util::bench::black_box(m.get("loss"));
-        });
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("{name}/train_local(1 user)"), 2, 10, 1, || {
+                let out = model.train_local(&data, &p, None, 7).unwrap();
+                black_box(out.loss_sum);
+            });
+        records.push(BenchRecord::new(&r, alloc));
+
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("{name}/evaluate(1 user)"), 2, 10, 1, || {
+                let m = model.evaluate(&data, None).unwrap();
+                black_box(m.get("loss"));
+            });
+        records.push(BenchRecord::new(&r, alloc));
+
         // the L1 Pallas clip kernel on a param-sized vector
         let mut rng = Rng::seed_from_u64(0);
         let template: Vec<f32> =
             (0..model.param_count()).map(|_| rng.normal() as f32 * 0.01).collect();
         let kernel = model.clip_kernel().unwrap();
-        bench(&format!("{name}/clip_kernel({} params)", template.len()), 2, 10, || {
-            let mut v = template.clone();
-            let norm = kernel.clip(&mut v, 0.5).unwrap();
-            pfl::util::bench::black_box(norm);
-        });
+        let (r, alloc) = bench_per_op_alloc(
+            &format!("{name}/clip_kernel({} params)", template.len()),
+            2,
+            10,
+            1,
+            || {
+                let mut v = template.clone();
+                let norm = kernel.clip(&mut v, 0.5).unwrap();
+                black_box(norm);
+            },
+        );
+        records.push(BenchRecord::new(&r, alloc));
     }
+
+    write_bench_json("BENCH_hotpath.json", &records)?;
+    println!("wrote BENCH_hotpath.json");
     Ok(())
 }

@@ -3,8 +3,15 @@
 //! matrix-factorization mechanism** (DP-FTRL) — only the 9k-parameter
 //! adapter vector is ever trained, aggregated, clipped or noised.
 //!
+//! With `--topk k` each user additionally top-k sparsifies its adapter
+//! delta before the DP clip; the surviving coordinates travel as sparse
+//! statistics to aggregation (communication research on top of DP —
+//! watch `sys/user-update-elems` shrink; the reduced aggregate itself
+//! stays dense in the arena by design).
+//!
 //! ```sh
 //! cargo run --release --example llm_lora_dp -- --rounds 40 --flavor aya
+//! cargo run --release --example llm_lora_dp -- --rounds 40 --topk 1024
 //! ```
 
 use pfl::baselines::EngineVariant;
@@ -25,10 +32,16 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = (rounds / 8).max(1);
     cfg.privacy.mechanism = "banded-mf".into();
     cfg.privacy.noise_cohort = cohort as f64 * 25.0;
+    cfg.privacy.sparse_top_k = args.get_usize("topk", 0)?;
 
     let sigma = pfl::config::build::calibrated_noise_multiplier(&cfg)?;
     println!(
-        "LLM ({flavor}) LoRA-r8 + banded-MF: T={rounds} C={cohort} sigma={sigma:.4} min-sep=48"
+        "LLM ({flavor}) LoRA-r8 + banded-MF: T={rounds} C={cohort} sigma={sigma:.4} min-sep=48{}",
+        if cfg.privacy.sparse_top_k > 0 {
+            format!(" topk={} (sparse updates)", cfg.privacy.sparse_top_k)
+        } else {
+            String::new()
+        }
     );
 
     let s = run_benchmark(&cfg, EngineVariant::PflStyle.profile(), EvalMode::Periodic, 0)?;

@@ -117,9 +117,20 @@ pub fn calibrated_noise_multiplier(cfg: &Config) -> Result<f64> {
 /// noise, with the noise-cohort rescaling r = C/C̃ applied on top of the
 /// calibrated multiplier (σ is per-user-sum; the mechanism divides by C̃
 /// implicitly through r when the simulation averages over C).
+///
+/// With `sparse_top_k > 0`, a top-k sparsifier runs *before* the DP clip
+/// (so clipping remains the last local step and the sensitivity bound is
+/// unaffected) and the surviving coordinates travel as sparse statistics.
 pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>> {
+    let mut pps: Vec<Box<dyn Postprocessor>> = Vec::new();
+    if cfg.privacy.sparse_top_k > 0 {
+        pps.push(Box::new(crate::fl::postprocess::TopKSparsifier {
+            k: cfg.privacy.sparse_top_k,
+            emit_sparse: true,
+        }));
+    }
     if cfg.privacy.is_none() {
-        return Ok(Vec::new());
+        return Ok(pps);
     }
     let sigma = calibrated_noise_multiplier(cfg)?;
     let r = if cfg.privacy.noise_cohort > 0.0 {
@@ -127,13 +138,13 @@ pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>>
     } else {
         1.0
     };
-    let pp = mechanism_by_name(
+    pps.push(mechanism_by_name(
         &cfg.privacy.mechanism,
         cfg.privacy.clip_bound as f32,
         sigma,
         r,
-    )?;
-    Ok(vec![pp])
+    )?);
+    Ok(pps)
 }
 
 /// Model factory: each worker constructs its own PJRT runtime + model

@@ -66,6 +66,9 @@ pub struct PrivacyConfig {
     pub population_m: f64,
     /// Noise cohort size C̃ (paper App. C.4).
     pub noise_cohort: f64,
+    /// Top-k sparsification of user updates before the DP clip (0 = keep
+    /// dense). Surviving coordinates travel as sparse statistics.
+    pub sparse_top_k: usize,
 }
 
 impl PrivacyConfig {
@@ -78,6 +81,7 @@ impl PrivacyConfig {
             delta: 0.0,
             population_m: 1e6,
             noise_cohort: 0.0,
+            sparse_top_k: 0,
         }
     }
 
@@ -191,6 +195,7 @@ impl Config {
                     ("delta", num(p.delta)),
                     ("population_m", num(p.population_m)),
                     ("noise_cohort", num(p.noise_cohort)),
+                    ("sparse_top_k", num(p.sparse_top_k as f64)),
                 ]),
             ),
             (
@@ -259,6 +264,11 @@ impl Config {
                 delta: p.req("delta")?.as_f64()?,
                 population_m: p.req("population_m")?.as_f64()?,
                 noise_cohort: p.req("noise_cohort")?.as_f64()?,
+                // optional for configs written before sparse statistics
+                sparse_top_k: match p.get("sparse_top_k") {
+                    Some(x) => x.as_usize()?,
+                    None => 0,
+                },
             },
             iterations: r.req("iterations")?.as_u64()?,
             cohort_size: r.req("cohort_size")?.as_usize()?,
@@ -289,6 +299,7 @@ fn central_dp(clip: f64, noise_cohort: f64) -> PrivacyConfig {
         delta: 1e-6,
         population_m: 1e6,
         noise_cohort,
+        sparse_top_k: 0,
     }
 }
 

@@ -12,7 +12,6 @@
 //! for every aggregator we ship.
 
 use super::stats::Statistics;
-use crate::util::add_assign;
 
 pub trait Aggregator: Send + Sync {
     /// Fold one user's statistics into the worker-local accumulator.
@@ -21,6 +20,16 @@ pub trait Aggregator: Send + Sync {
     /// Combine worker partials (all-reduce equivalent; in-process this is
     /// a tree reduce over the worker results).
     fn worker_reduce(&self, partials: Vec<Statistics>) -> Option<Statistics>;
+
+    /// True when `accumulate` is a plain pointwise sum, so the worker
+    /// may fold user statistics into its resident
+    /// [`crate::tensor::StatsArena`] buffers by reference instead of
+    /// moving per-user `Vec`s — the allocation-free hot path. Aggregators
+    /// with other semantics (e.g. [`CollectAggregator`]) keep the
+    /// move-based `accumulate` path.
+    fn arena_compatible(&self) -> bool {
+        false
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -37,7 +46,7 @@ impl Aggregator for SumAggregator {
                 state.weight += user.weight;
                 for (key, v) in user.vecs {
                     match state.vecs.get_mut(&key) {
-                        Some(dst) => add_assign(dst, &v),
+                        Some(dst) => dst.add_value(&v),
                         None => {
                             state.vecs.insert(key, v);
                         }
@@ -53,6 +62,10 @@ impl Aggregator for SumAggregator {
             self.accumulate(&mut acc, p);
         }
         acc
+    }
+
+    fn arena_compatible(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -176,5 +189,28 @@ mod tests {
     fn empty_reduce_is_none() {
         assert!(SumAggregator.worker_reduce(vec![]).is_none());
         assert!(CollectAggregator.worker_reduce(vec![]).is_none());
+    }
+
+    #[test]
+    fn sum_mixes_sparse_and_dense() {
+        use crate::fl::stats::StatValue;
+        let agg = SumAggregator;
+        let mut acc = None;
+        agg.accumulate(&mut acc, stat(vec![1.0, 0.0, 1.0], 1.0));
+        agg.accumulate(
+            &mut acc,
+            Statistics::new_update_value(StatValue::sparse(3, vec![1], vec![5.0]), 1.0),
+        );
+        let a = acc.unwrap();
+        assert_eq!(a.update(), &[1.0, 5.0, 1.0]);
+        assert_eq!(a.weight, 2.0);
+
+        // all-sparse stays sparse through the reduce
+        let s1 = Statistics::new_update_value(StatValue::sparse(4, vec![0], vec![1.0]), 1.0);
+        let s2 = Statistics::new_update_value(StatValue::sparse(4, vec![2], vec![2.0]), 1.0);
+        let r = agg.worker_reduce(vec![s1, s2]).unwrap();
+        let v = r.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }));
+        assert_eq!(v.to_dense_vec(), vec![1.0, 0.0, 2.0, 0.0]);
     }
 }

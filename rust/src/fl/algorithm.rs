@@ -202,6 +202,7 @@ impl FederatedAlgorithm for FedAvg {
         mut aggregate: Statistics,
         metrics: &mut Metrics,
     ) -> Result<()> {
+        // the backend densifies the aggregate before this call
         aggregate.average_in_place();
         let lr = self.spec.central_lr_at(ctx.iteration);
         self.opt.lock().unwrap().apply(central, aggregate.update(), lr);
@@ -429,9 +430,7 @@ impl FederatedAlgorithm for Scaffold {
         }
         let c_u_old: Option<Vec<f32>> = self.c_users.lock().unwrap().get(&uid).cloned();
         if let Some(cu) = &c_u_old {
-            for (d, u) in c_diff.iter_mut().zip(cu) {
-                *d -= *u;
-            }
+            crate::tensor::ops::sub_assign(&mut c_diff, cu);
         }
 
         let (out, m) = train_user(model, uid, data, ctx, 0.0, Some(&c_diff))?;
@@ -439,13 +438,14 @@ impl FederatedAlgorithm for Scaffold {
         let inv = 1.0 / (k * ctx.local.lr);
 
         // c_u' = c_u − c + Δ/(K·lr); c_delta = c_u' − c_u = Δ/(K·lr) − c
-        // Reuse c_diff's buffer for c_delta = Δ·inv − c = Δ·inv − (c_diff + c_u)
+        // Reuse c_diff's buffer for c_delta = Δ·inv − c
         let mut c_delta = c_diff;
+        c_delta.copy_from_slice(&out.update);
+        crate::util::scale(&mut c_delta, inv);
         {
             let cg = self.c_global.lock().unwrap();
-            for i in 0..n {
-                let c_i = if cg.is_empty() { 0.0 } else { cg[i] };
-                c_delta[i] = out.update[i] * inv - c_i;
+            if !cg.is_empty() {
+                crate::tensor::ops::sub_assign(&mut c_delta, &cg);
             }
         }
         // store c_u' = c_u + c_delta

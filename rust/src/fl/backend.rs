@@ -244,7 +244,12 @@ impl SimulatedBackend {
                 match ctx.population {
                     Population::Train => {
                         round_metrics.merge(&metrics);
-                        if let Some(agg) = agg {
+                        if let Some(mut agg) = agg {
+                            // densify once at the chokepoint: algorithms
+                            // consume the aggregate through dense slices,
+                            // and a sparse aggregate reaching one that
+                            // forgot densify_all() would silently no-op
+                            agg.densify_all();
                             self.algorithm
                                 .process_aggregated(&mut central, ctx, agg, &mut round_metrics)?;
                         }
@@ -360,8 +365,10 @@ impl SimulatedBackend {
         let mut metrics = Metrics::new();
         let mut partials = Vec::with_capacity(results.len());
         let mut worker_busy: Vec<u64> = Vec::with_capacity(results.len());
+        let mut round_stat_elements = 0u64;
         for r in results {
             metrics.merge(&r.metrics);
+            round_stat_elements += r.counters.stat_elements;
             outcome.counters.merge(&r.counters);
             let busy: u64 = r.costs.iter().map(|c| c.nanos).sum();
             worker_busy.push(busy);
@@ -379,10 +386,21 @@ impl SimulatedBackend {
             outcome.straggler_nanos.push(gap);
             metrics.add_central("sys/straggler-secs", gap as f64 / 1e9, 1.0);
             metrics.add_central("sys/cohort", cohort.len() as f64, 1.0);
+            // user→server wire volume this round, in f32-equivalents
+            // (sparse updates count idx + val per nonzero)
+            metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
         }
 
         // --- worker_reduce (all-reduce equivalent) ----------------------
         let mut agg = self.aggregator.worker_reduce(partials);
+        if ctx.population == Population::Train {
+            if let Some(a) = agg.as_ref() {
+                // stored f32s in the reduced aggregate (dense after an
+                // arena round by design; the per-user communication
+                // saving shows up in sys/user-update-elems instead)
+                metrics.add_central("sys/agg-elements", a.element_count() as f64, 1.0);
+            }
+        }
 
         // --- server postprocessors, reversed (paper Alg. 1 l.18) --------
         if let Some(agg) = agg.as_mut() {

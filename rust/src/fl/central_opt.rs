@@ -61,20 +61,18 @@ impl CentralOptimizer for Adam {
             self.t = 0;
         }
         self.t += 1;
-        let b1 = self.beta1 as f32;
-        let b2 = self.beta2 as f32;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let tau = self.adaptivity as f32;
-        let step = lr as f32;
-        for i in 0..params.len() {
-            let g = delta[i];
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let mhat = self.m[i] / bc1 as f32;
-            let vhat = self.v[i] / bc2 as f32;
-            params[i] -= step * mhat / (vhat.sqrt() + tau);
-        }
+        crate::tensor::ops::adam_step(
+            params,
+            delta,
+            &mut self.m,
+            &mut self.v,
+            self.beta1 as f32,
+            self.beta2 as f32,
+            (1.0 - self.beta1.powi(self.t as i32)) as f32,
+            (1.0 - self.beta2.powi(self.t as i32)) as f32,
+            self.adaptivity as f32,
+            lr as f32,
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -27,7 +27,7 @@ use super::algorithm::{FederatedAlgorithm, RunSpec};
 use super::context::{CentralContext, Population};
 use super::metrics::Metrics;
 use super::model::{Model, ScoreSink, TrainOutput};
-use super::stats::Statistics;
+use super::stats::{StatValue, Statistics};
 use crate::data::UserData;
 
 /// Histogram bins per feature (uniform binning over a fixed range shared
@@ -328,16 +328,24 @@ impl FederatedAlgorithm for FedGbdt {
         let out = model.train_local(data, &ctx.local, None, 0)?;
         let mut m = Metrics::new();
         m.add_central("train/loss", out.loss_sum, out.wsum);
-        Ok((Some(Statistics::new_update(out.update, 1.0)), m))
+        // Users with few datapoints touch few (feature, bin) cells, so
+        // the histogram is mostly zeros — ship it sparse when that is
+        // smaller; aggregation handles the mix transparently.
+        let hist = StatValue::Dense(out.update).compact();
+        Ok((Some(Statistics::new_update_value(hist, 1.0)), m))
     }
 
     fn process_aggregated(
         &self,
         central: &mut [f32],
         _ctx: &CentralContext,
-        aggregate: Statistics,
+        mut aggregate: Statistics,
         metrics: &mut Metrics,
     ) -> Result<()> {
+        // unlike the gradient algorithms, GBDT aggregates are consumed
+        // sparse in direct-call paths (tests, library users) too — the
+        // backend chokepoint densifies, but this must stay self-reliant
+        aggregate.densify_all();
         let hist = aggregate.update();
         anyhow::ensure!(hist.len() == self.p.hist_len(), "histogram length mismatch");
         let tree = self.grow_tree(hist);

@@ -39,5 +39,5 @@ pub use linear::LinearModel;
 pub use metrics::{MetricValue, Metrics};
 pub use model::{ClipKernel, HloModel, Model, TrainOutput};
 pub use scheduler::{median, schedule, Schedule, SchedulerKind};
-pub use stats::{Statistics, C_DELTA, UPDATE};
+pub use stats::{StatValue, Statistics, C_DELTA, UPDATE};
 pub use worker::{RoundResult, WorkerPool};

@@ -357,9 +357,7 @@ impl Model for HloModel {
         // Δ = θ − θ′ (paper Alg. 2). Reuse the final work buffer as Δ to
         // avoid a second model-sized allocation.
         let mut delta = std::mem::take(&mut self.work);
-        for (d, c) in delta.iter_mut().zip(&self.central) {
-            *d = *c - *d;
-        }
+        crate::tensor::ops::sub_rev_assign(&mut delta, &self.central);
         out.update = delta;
         Ok(out)
     }
@@ -439,12 +437,7 @@ pub struct RustClip;
 
 impl ClipKernel for RustClip {
     fn clip(&self, v: &mut Vec<f32>, bound: f32) -> Result<f64> {
-        let norm = crate::util::l2_norm(v);
-        if norm > bound as f64 && norm > 0.0 {
-            let s = (bound as f64 / norm) as f32;
-            crate::util::scale(v, s);
-        }
-        Ok(norm)
+        Ok(crate::tensor::ops::l2_clip(v, bound))
     }
 }
 

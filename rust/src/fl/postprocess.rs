@@ -14,7 +14,8 @@ use anyhow::Result;
 use super::context::CentralContext;
 use super::metrics::Metrics;
 use super::model::ClipKernel;
-use super::stats::Statistics;
+use super::stats::{StatValue, Statistics};
+use crate::tensor::ops;
 use crate::util::rng::Rng;
 
 /// Execution environment handed to a postprocessor: the calling side's
@@ -26,6 +27,19 @@ pub struct PpEnv<'a> {
     /// Number of datapoints of the user being processed (0 on the server
     /// path) — the input to weighting policies.
     pub user_len: usize,
+}
+
+/// Clip a statistic value to an L2 bound through the side's clip kernel.
+/// Dense values run through `env.clip` (the L1 Pallas artifact on
+/// workers); sparse values are clipped on their nonzeros via
+/// [`ops::l2_clip`], which is exact for the L2 norm (absent coordinates
+/// are zero) and avoids padding a sparse update to the kernel's fixed
+/// input shape. Returns the pre-clip norm.
+pub(crate) fn clip_value(env: &mut PpEnv, v: &mut StatValue, bound: f32) -> Result<f64> {
+    match v {
+        StatValue::Dense(d) => env.clip.clip(d, bound),
+        StatValue::Sparse { val, .. } => Ok(ops::l2_clip(val, bound)),
+    }
 }
 
 pub trait Postprocessor: Send + Sync {
@@ -89,10 +103,10 @@ impl Postprocessor for WeightByDatapoints {
         if self.cap > 0.0 {
             w = w.min(self.cap);
         }
-        // statistics arrive with weight 1; rescale vectors and weight
+        // statistics arrive with weight 1; rescale values and weight
         let scale = (w / stats.weight.max(1e-12)) as f32;
         for v in stats.vecs.values_mut() {
-            crate::util::scale(v, scale);
+            v.scale(scale);
         }
         stats.weight = w;
         Ok(Metrics::new())
@@ -121,7 +135,7 @@ impl Postprocessor for NormClip {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
-            let norm = env.clip.clip(update, self.bound)?;
+            let norm = clip_value(env, update, self.bound)?;
             m.add_central("clip/pre-norm", norm, 1.0);
             m.add_central("clip/clipped-frac", (norm > self.bound as f64) as u8 as f64, 1.0);
         }
@@ -131,9 +145,15 @@ impl Postprocessor for NormClip {
 
 /// Keep only the top-k largest-magnitude coordinates of the update
 /// (sparsification for communication research). The zeroed mass is
-/// reported so experiments can trade sparsity against accuracy.
+/// reported so experiments can trade sparsity against accuracy. With
+/// `emit_sparse` the surviving coordinates are re-encoded as a sparse
+/// [`StatValue`], so the compact form travels through aggregation and
+/// the wire-cost metrics end-to-end.
 pub struct TopKSparsifier {
     pub k: usize,
+    /// Re-encode the sparsified update as `StatValue::Sparse` when that
+    /// is smaller than the dense form.
+    pub emit_sparse: bool,
 }
 
 impl Postprocessor for TopKSparsifier {
@@ -148,7 +168,8 @@ impl Postprocessor for TopKSparsifier {
         _env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
+        if let Some(value) = stats.vecs.get_mut(super::stats::UPDATE) {
+            let update = value.values_mut();
             if self.k < update.len() {
                 let mut idx: Vec<usize> = (0..update.len()).collect();
                 idx.select_nth_unstable_by(self.k, |&a, &b| {
@@ -162,6 +183,10 @@ impl Postprocessor for TopKSparsifier {
                 m.add_central("topk/dropped-l2", dropped.sqrt(), 1.0);
             }
             m.add_central("topk/kept", self.k.min(update.len()) as f64, 1.0);
+            if self.emit_sparse {
+                let taken = std::mem::take(value);
+                *value = taken.compact();
+            }
         }
         Ok(m)
     }
@@ -186,7 +211,8 @@ impl Postprocessor for UniformQuantizer {
         _env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(super::stats::UPDATE) {
+        if let Some(value) = stats.vecs.get_mut(super::stats::UPDATE) {
+            let update = value.values_mut();
             let levels = (1u64 << self.bits.clamp(1, 24)) as f32 - 1.0;
             let max = update.iter().fold(0f32, |a, &x| a.max(x.abs()));
             if max > 0.0 {
@@ -261,7 +287,7 @@ mod tests {
     fn topk_keeps_largest() {
         let mut rng = Rng::seed_from_u64(0);
         let mut s = Statistics::new_update(vec![0.1, -5.0, 3.0, 0.2], 1.0);
-        TopKSparsifier { k: 2 }
+        TopKSparsifier { k: 2, emit_sparse: false }
             .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
             .unwrap();
         assert_eq!(s.update(), &[0.0, -5.0, 3.0, 0.0]);
@@ -271,10 +297,29 @@ mod tests {
     fn topk_noop_when_k_ge_len() {
         let mut rng = Rng::seed_from_u64(0);
         let mut s = Statistics::new_update(vec![1.0, 2.0], 1.0);
-        TopKSparsifier { k: 10 }
+        TopKSparsifier { k: 10, emit_sparse: false }
             .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
             .unwrap();
         assert_eq!(s.update(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn topk_emit_sparse_ships_compact_update() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut s = Statistics::new_update(vec![0.1, -5.0, 3.0, 0.2, 0.0, 0.0, 0.0, 0.0], 1.0);
+        TopKSparsifier { k: 2, emit_sparse: true }
+            .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
+            .unwrap();
+        let v = s.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "expected sparse, got {v:?}");
+        assert_eq!(s.element_count(), 2);
+        assert_eq!(v.to_dense_vec(), vec![0.0, -5.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        // and the sparse update still clips exactly
+        let m = NormClip { bound: 1.0 }
+            .postprocess_one_user(&mut s, &ctx(), &mut env(&mut rng, 1))
+            .unwrap();
+        assert!((m.get("clip/pre-norm").unwrap() - (34.0f64).sqrt()).abs() < 1e-5);
+        assert!((s.update_value().unwrap().l2_norm() - 1.0).abs() < 1e-6);
     }
 
     #[test]

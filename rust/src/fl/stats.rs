@@ -1,11 +1,17 @@
 //! Training statistics: what a user contributes for aggregation.
 //!
 //! The common case is a single weighted model-update vector ("update");
-//! SCAFFOLD adds a second vector ("c_delta"). Keeping named vectors keeps
+//! SCAFFOLD adds a second vector ("c_delta"). Keeping named values keeps
 //! the aggregator, postprocessors and DP mechanisms algorithm-agnostic,
 //! matching the paper's separation of concerns (App. B.2).
+//!
+//! Each named value is a [`StatValue`] — dense, or sparse with sorted
+//! indices — so LoRA-/GBDT-style scenarios ship compact updates through
+//! the same aggregation and privacy machinery (see `crate::tensor`).
 
 use std::collections::BTreeMap;
+
+pub use crate::tensor::StatValue;
 
 /// Canonical key of the model-update vector.
 pub const UPDATE: &str = "update";
@@ -16,43 +22,91 @@ pub const C_DELTA: &str = "c_delta";
 pub struct Statistics {
     /// Aggregation weight (typically Σ user weights; used for averaging).
     pub weight: f64,
-    pub vecs: BTreeMap<String, Vec<f32>>,
+    pub vecs: BTreeMap<String, StatValue>,
 }
 
 impl Statistics {
     pub fn new_update(update: Vec<f32>, weight: f64) -> Self {
+        Self::new_update_value(StatValue::Dense(update), weight)
+    }
+
+    pub fn new_update_value(update: StatValue, weight: f64) -> Self {
         let mut vecs = BTreeMap::new();
         vecs.insert(UPDATE.to_string(), update);
         Statistics { weight, vecs }
     }
 
+    /// Dense view of the update vector; empty when missing or sparse
+    /// (use [`Self::update_value`] or densify first for sparse access).
     pub fn update(&self) -> &[f32] {
-        self.vecs.get(UPDATE).map(|v| v.as_slice()).unwrap_or(&[])
+        self.vecs.get(UPDATE).and_then(|v| v.as_dense()).unwrap_or(&[])
     }
 
+    pub fn update_value(&self) -> Option<&StatValue> {
+        self.vecs.get(UPDATE)
+    }
+
+    /// Entry-style mutable access to the dense update buffer: inserts an
+    /// empty vector when the key is missing and densifies a sparse
+    /// update in place, so it never panics.
     pub fn update_mut(&mut self) -> &mut Vec<f32> {
-        self.vecs.get_mut(UPDATE).expect("no update vector")
+        self.entry_dense(UPDATE)
+    }
+
+    /// Entry-style mutable access to any key's dense buffer (inserting
+    /// an empty dense vector when missing).
+    pub fn entry_dense(&mut self, key: &str) -> &mut Vec<f32> {
+        if !self.vecs.contains_key(key) {
+            self.vecs.insert(key.to_string(), StatValue::Dense(Vec::new()));
+        }
+        self.vecs.get_mut(key).expect("just inserted").densify()
+    }
+
+    /// Mutable dense buffer for `key`, densifying a sparse value in
+    /// place; `None` when the key is absent. Mechanisms that must touch
+    /// every coordinate (additive noise) use this.
+    pub fn dense_mut(&mut self, key: &str) -> Option<&mut Vec<f32>> {
+        self.vecs.get_mut(key).map(|v| v.densify())
     }
 
     pub fn insert(&mut self, key: &str, v: Vec<f32>) {
+        self.vecs.insert(key.to_string(), StatValue::Dense(v));
+    }
+
+    pub fn insert_value(&mut self, key: &str, v: StatValue) {
         self.vecs.insert(key.to_string(), v);
     }
 
+    /// Dense slice for `key`; `None` when absent or sparse.
     pub fn get(&self, key: &str) -> Option<&[f32]> {
-        self.vecs.get(key).map(|v| v.as_slice())
+        self.vecs.get(key).and_then(|v| v.as_dense())
     }
 
-    /// Total number of f32 elements across vectors (communication cost).
+    pub fn value(&self, key: &str) -> Option<&StatValue> {
+        self.vecs.get(key)
+    }
+
+    /// Total number of stored f32 elements across values (communication
+    /// cost; nonzeros only for sparse values).
     pub fn element_count(&self) -> usize {
-        self.vecs.values().map(|v| v.len()).sum()
+        self.vecs.values().map(|v| v.element_count()).sum()
     }
 
-    /// Divide all vectors by the accumulated weight -> weighted average.
+    /// Convert every value to its dense form in place (no-op when all
+    /// are already dense). Algorithms call this before consuming the
+    /// aggregate through dense slices.
+    pub fn densify_all(&mut self) {
+        for v in self.vecs.values_mut() {
+            v.densify();
+        }
+    }
+
+    /// Divide all values by the accumulated weight -> weighted average.
     pub fn average_in_place(&mut self) {
         if self.weight > 0.0 {
             let inv = (1.0 / self.weight) as f32;
             for v in self.vecs.values_mut() {
-                crate::util::scale(v, inv);
+                v.scale(inv);
             }
         }
     }
@@ -78,5 +132,41 @@ mod tests {
         let mut s = Statistics::new_update(vec![3.0], 0.0);
         s.average_in_place();
         assert_eq!(s.update(), &[3.0]);
+    }
+
+    #[test]
+    fn update_mut_inserts_missing_key() {
+        // regression: used to panic with "no update vector"
+        let mut s = Statistics::default();
+        assert!(s.update().is_empty());
+        s.update_mut().extend_from_slice(&[1.0, 2.0]);
+        assert_eq!(s.update(), &[1.0, 2.0]);
+        // and keeps working as plain mutable access afterwards
+        s.update_mut()[0] = 5.0;
+        assert_eq!(s.update(), &[5.0, 2.0]);
+    }
+
+    #[test]
+    fn update_mut_densifies_sparse() {
+        let mut s = Statistics::new_update_value(
+            StatValue::sparse(4, vec![1, 3], vec![2.0, 4.0]),
+            1.0,
+        );
+        assert!(s.update().is_empty()); // dense view of a sparse value
+        assert_eq!(s.update_mut().as_slice(), &[0.0, 2.0, 0.0, 4.0]);
+        assert_eq!(s.update(), &[0.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn sparse_update_average_and_count() {
+        let mut s = Statistics::new_update_value(
+            StatValue::sparse(100, vec![7, 42], vec![2.0, 8.0]),
+            2.0,
+        );
+        assert_eq!(s.element_count(), 2);
+        s.average_in_place();
+        let v = s.update_value().unwrap().to_dense_vec();
+        assert_eq!(v[7], 1.0);
+        assert_eq!(v[42], 4.0);
     }
 }

@@ -33,6 +33,7 @@ use super::stats::Statistics;
 use crate::baselines::OverheadProfile;
 use crate::data::FederatedDataset;
 use crate::simsys::{Counters, UserCost};
+use crate::tensor::StatsArena;
 use crate::util::rng::Rng;
 
 /// Builds one worker's model inside the worker thread (so `!Send` models
@@ -234,6 +235,9 @@ fn worker_loop(
     // the whole simulation (paper §3 item 1).
     let mut model: Option<Box<dyn Model>> = None;
     let mut rng = Rng::seed_from_u64(shared.seed ^ (id as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    // Worker-local accumulation arena, resident for the whole simulation
+    // so steady-state rounds fold user statistics with zero allocation.
+    let mut arena = StatsArena::new();
 
     while let Ok(cmd) = rx.recv() {
         match cmd {
@@ -263,6 +267,7 @@ fn worker_loop(
                     &central,
                     &users,
                     &mut rng,
+                    &mut arena,
                     coord_tx.as_ref(),
                 );
                 let result = match result {
@@ -305,12 +310,19 @@ fn run_worker_round(
     central: &[f32],
     users: &[usize],
     rng: &mut Rng,
+    arena: &mut StatsArena,
     coord_tx: Option<&Sender<CoordMsg>>,
 ) -> Result<RoundResult> {
     let mut counters = Counters::default();
     let mut metrics = Metrics::new();
     let mut costs = Vec::with_capacity(users.len());
     let mut partial: Option<Statistics> = None;
+    // Plain-sum aggregators fold into the resident arena buffers by
+    // reference (no per-user move/insert); others keep the generic path.
+    let use_arena = shared.aggregator.arena_compatible();
+    // Re-arm defensively: a previous round that erred out mid-loop may
+    // have left folded state behind (normal rounds reset on take_partial).
+    arena.reset();
     let profile = &shared.profile;
 
     let busy0 = model.busy_nanos();
@@ -365,16 +377,29 @@ fn run_worker_round(
                 // NumPy-outer-loop emulation: bounce the update through a
                 // host staging buffer (device→host→device copies).
                 for v in stats.vecs.values_mut() {
-                    let staged = v.clone();
+                    let vals = v.values_mut();
+                    let staged = vals.clone();
                     counters.copy_bytes += (staged.len() * 4) as u64 * 2;
-                    v.copy_from_slice(&staged);
+                    vals.copy_from_slice(&staged);
                 }
             }
             if let Some(tx) = coord_tx {
                 // explicit topology: serialize and route via coordinator
+                // (sparse values ship idx + val, like a real wire format)
                 for v in stats.vecs.values() {
-                    let mut buf = Vec::with_capacity(v.len() * 4);
-                    for x in v {
+                    let vals = v.values();
+                    let cap = match v {
+                        // sparse ships idx (u32) + val (f32) per nonzero
+                        crate::fl::stats::StatValue::Sparse { .. } => v.element_count() * 8,
+                        crate::fl::stats::StatValue::Dense(_) => v.element_count() * 4,
+                    };
+                    let mut buf = Vec::with_capacity(cap);
+                    if let crate::fl::stats::StatValue::Sparse { idx, .. } = v {
+                        for i in idx {
+                            buf.extend_from_slice(&i.to_le_bytes());
+                        }
+                    }
+                    for x in vals {
                         buf.extend_from_slice(&x.to_le_bytes());
                     }
                     counters.wire_bytes += buf.len() as u64;
@@ -383,7 +408,17 @@ fn run_worker_round(
                 }
             }
 
-            shared.aggregator.accumulate(&mut partial, stats);
+            // user→server communication volume, after all local
+            // postprocessing (so sparsification is reflected); sparse
+            // values count idx + val, matching the wire serialization
+            counters.stat_elements +=
+                stats.vecs.values().map(|v| v.wire_elements()).sum::<usize>() as u64;
+
+            if use_arena {
+                arena.fold(&stats);
+            } else {
+                shared.aggregator.accumulate(&mut partial, stats);
+            }
         }
 
         costs.push(UserCost {
@@ -393,6 +428,10 @@ fn run_worker_round(
         });
     }
 
+    counters.arena_grow_bytes = arena.drain_grown_bytes();
+    if use_arena {
+        partial = arena.take_partial();
+    }
     counters.busy_nanos = model.busy_nanos() - busy0;
     Ok(RoundResult { worker: id, partial, metrics, counters, costs, error: None })
 }
@@ -447,9 +486,8 @@ pub(crate) mod tests {
             crate::util::scale(&mut mean, 1.0 / n.max(1) as f32);
             // gradient step toward the mean: delta = lr * (central − mean)
             let mut delta = vec![0.0f32; dim];
-            for i in 0..dim {
-                delta[i] = p.lr * (self.central[i] - mean[i]);
-            }
+            crate::util::sub_into(&mut delta, &self.central, &mean);
+            crate::util::scale(&mut delta, p.lr);
             let loss: f64 = (0..dim).map(|i| ((self.central[i] - mean[i]) as f64).powi(2)).sum();
             Ok(super::super::model::TrainOutput {
                 update: delta,
@@ -593,6 +631,8 @@ pub(crate) mod tests {
         assert!(c.copy_bytes > 0);
         assert!(c.wire_bytes > 0);
         assert_eq!(c.coordinator_msgs, 4);
+        // 4 users × 2-dim dense update
+        assert_eq!(c.stat_elements, 8);
         pool.shutdown();
     }
 }

@@ -27,6 +27,7 @@ pub mod fl;
 pub mod privacy;
 pub mod runtime;
 pub mod simsys;
+pub mod tensor;
 pub mod util;
 
 pub use anyhow::Result;

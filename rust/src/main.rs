@@ -160,6 +160,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 delta: 1e-6,
                 population_m: 1e6,
                 noise_cohort: cfg.cohort_size as f64 * 20.0,
+                sparse_top_k: 0,
             };
         } else {
             cfg.privacy.mechanism = m.into();

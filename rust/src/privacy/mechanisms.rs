@@ -3,6 +3,11 @@
 //! clipping runs through the side's [`ClipKernel`] (the L1 Pallas
 //! artifact on workers) and noise is added to the aggregate in place,
 //! once per central iteration.
+//!
+//! All vector math routes through [`crate::tensor::ops`] — no mechanism
+//! carries its own scalar loops — and sparse updates clip exactly on
+//! their nonzeros, densifying only where additive noise requires full
+//! coordinate coverage.
 
 use std::sync::Mutex;
 
@@ -10,8 +15,9 @@ use anyhow::Result;
 
 use crate::fl::context::CentralContext;
 use crate::fl::metrics::Metrics;
-use crate::fl::postprocess::{Postprocessor, PpEnv};
+use crate::fl::postprocess::{clip_value, Postprocessor, PpEnv};
 use crate::fl::stats::{Statistics, UPDATE};
+use crate::tensor::ops;
 
 /// No-op mechanism (the "no DP" arm of every benchmark).
 pub struct NoPrivacy;
@@ -53,21 +59,6 @@ impl GaussianMechanism {
     }
 }
 
-/// Add iid N(0, std²) noise to `v` in place and return the noise L2 norm
-/// (for SNR diagnostics, paper Fig. 6).
-fn add_gaussian_noise(v: &mut [f32], std: f64, rng: &mut crate::util::rng::Rng) -> f64 {
-    if std <= 0.0 {
-        return 0.0;
-    }
-    let mut sq = 0f64;
-    for x in v.iter_mut() {
-        let n = rng.normal() * std;
-        sq += n * n;
-        *x += n as f32;
-    }
-    sq.sqrt()
-}
-
 /// Signal-to-noise ratio as defined in paper Eq. (1):
 /// SNR = ‖Δ‖₂ / sqrt(d·σ²).
 pub fn snr(update_norm: f64, dim: usize, noise_std: f64) -> f64 {
@@ -90,7 +81,7 @@ impl Postprocessor for GaussianMechanism {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let norm = env.clip.clip(update, self.p.clip_bound)?;
+            let norm = clip_value(env, update, self.p.clip_bound)?;
             m.add_central("dp/pre-clip-norm", norm, 1.0);
             m.add_central(
                 "dp/clipped-frac",
@@ -108,10 +99,12 @@ impl Postprocessor for GaussianMechanism {
         env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let signal = crate::util::l2_norm(update);
+        // additive noise must cover every coordinate, so a sparse
+        // aggregate densifies here (the DP release is dense by design)
+        if let Some(update) = stats.dense_mut(UPDATE) {
+            let signal = ops::l2_norm(update);
             let std = self.p.noise_std();
-            add_gaussian_noise(update, std, env.rng);
+            ops::add_gaussian_noise(update, std, env.rng);
             m.add_central("dp/noise-std", std, 1.0);
             m.add_central("dp/snr", snr(signal, update.len(), std), 1.0);
         }
@@ -132,14 +125,6 @@ impl LaplaceMechanism {
             p: NoiseParams { clip_bound, noise_multiplier, rescale_r },
         }
     }
-
-    fn l1_clip(v: &mut [f32], bound: f32) -> f64 {
-        let norm: f64 = v.iter().map(|x| x.abs() as f64).sum();
-        if norm > bound as f64 && norm > 0.0 {
-            crate::util::scale(v, (bound as f64 / norm) as f32);
-        }
-        norm
-    }
 }
 
 impl Postprocessor for LaplaceMechanism {
@@ -155,7 +140,8 @@ impl Postprocessor for LaplaceMechanism {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let norm = Self::l1_clip(update, self.p.clip_bound);
+            // exact for sparse too: absent coordinates contribute 0 to L1
+            let norm = ops::l1_clip(update.values_mut(), self.p.clip_bound);
             m.add_central("dp/pre-clip-l1", norm, 1.0);
         }
         Ok(m)
@@ -168,11 +154,9 @@ impl Postprocessor for LaplaceMechanism {
         env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+        if let Some(update) = stats.dense_mut(UPDATE) {
             let b = self.p.noise_std();
-            for x in update.iter_mut() {
-                *x += env.rng.laplace(b) as f32;
-            }
+            ops::add_laplace_noise(update, b, env.rng);
             m.add_central("dp/laplace-scale", b, 1.0);
         }
         Ok(m)
@@ -233,7 +217,7 @@ impl Postprocessor for AdaptiveClipGaussian {
         let mut m = Metrics::new();
         let bound = self.current_bound() as f32;
         if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let norm = env.clip.clip(update, bound)?;
+            let norm = clip_value(env, update, bound)?;
             let clipped = (norm > bound as f64) as u8 as f64;
             // the indicator is itself aggregated (and noised server-side)
             stats.insert(CLIP_INDICATOR, vec![clipped as f32]);
@@ -254,17 +238,17 @@ impl Postprocessor for AdaptiveClipGaussian {
         // privately estimate the clipped fraction and adapt the bound:
         // C ← C · exp(−η (b̂ − γ))
         if let Some(ind) = stats.vecs.get_mut(CLIP_INDICATOR) {
-            let noisy = ind[0] as f64 + env.rng.normal() * self.count_noise_std;
+            let noisy = ind.values()[0] as f64 + env.rng.normal() * self.count_noise_std;
             let frac = (noisy / cohort).clamp(0.0, 1.0);
             st.bound *= (-self.eta * (frac - self.quantile)).exp();
             m.add_central("dp/clipped-frac-est", frac, 1.0);
             // the indicator is bookkeeping, not part of the model update
             stats.vecs.remove(CLIP_INDICATOR);
         }
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+        if let Some(update) = stats.dense_mut(UPDATE) {
             let std = self.noise_multiplier * st.bound * self.rescale_r;
-            let signal = crate::util::l2_norm(update);
-            add_gaussian_noise(update, std, env.rng);
+            let signal = ops::l2_norm(update);
+            ops::add_gaussian_noise(update, std, env.rng);
             m.add_central("dp/noise-std", std, 1.0);
             m.add_central("dp/snr", snr(signal, update.len(), std), 1.0);
         }
@@ -337,7 +321,7 @@ impl Postprocessor for BandedMatrixFactorization {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let norm = env.clip.clip(update, self.p.clip_bound)?;
+            let norm = clip_value(env, update, self.p.clip_bound)?;
             m.add_central("dp/pre-clip-norm", norm, 1.0);
         }
         Ok(m)
@@ -350,7 +334,7 @@ impl Postprocessor for BandedMatrixFactorization {
         env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+        if let Some(update) = stats.dense_mut(UPDATE) {
             let n = update.len();
             let mut st = self.state.lock().unwrap();
             if st.ring.len() != self.band || st.ring.first().map(|v| v.len()) != Some(n) {
@@ -365,13 +349,13 @@ impl Postprocessor for BandedMatrixFactorization {
                 env.rng.fill_normal_f32(z, std);
             }
             // noise_t = Σ_k c_k z_{t−k}
-            let signal = crate::util::l2_norm(update);
+            let signal = ops::l2_norm(update);
             let t = st.next;
             for (k, &c) in self.coeffs.iter().enumerate() {
                 let idx = (t + self.band - k) % self.band;
                 // only mix buffers that are "old enough" to exist
                 if ctx.iteration >= k as u64 {
-                    crate::util::axpy(update, c as f32, &st.ring[idx]);
+                    ops::axpy(update, c as f32, &st.ring[idx]);
                 }
             }
             st.next = (st.next + 1) % self.band;
@@ -434,9 +418,11 @@ impl Postprocessor for LocalGaussianMechanism {
         env: &mut PpEnv,
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+        // local noise covers every coordinate, so a sparse update
+        // densifies before the worker-side clip + noise
+        if let Some(update) = stats.dense_mut(UPDATE) {
             let norm = env.clip.clip(update, self.p.clip_bound)?;
-            add_gaussian_noise(update, self.p.noise_std(), env.rng);
+            ops::add_gaussian_noise(update, self.p.noise_std(), env.rng);
             m.add_central("dp/pre-clip-norm", norm, 1.0);
         }
         Ok(m)
@@ -466,7 +452,7 @@ impl Postprocessor for CltApproxLocal {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         if let Some(update) = stats.vecs.get_mut(UPDATE) {
-            let norm = env.clip.clip(update, self.clip_bound)?;
+            let norm = clip_value(env, update, self.clip_bound)?;
             m.add_central("dp/pre-clip-norm", norm, 1.0);
         }
         Ok(m)
@@ -480,9 +466,9 @@ impl Postprocessor for CltApproxLocal {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         let cohort = stats.weight.max(1.0);
-        if let Some(update) = stats.vecs.get_mut(UPDATE) {
+        if let Some(update) = stats.dense_mut(UPDATE) {
             let std = self.local_noise_std * cohort.sqrt();
-            add_gaussian_noise(update, std, env.rng);
+            ops::add_gaussian_noise(update, std, env.rng);
             m.add_central("dp/noise-std", std, 1.0);
         }
         Ok(m)
@@ -563,10 +549,31 @@ mod tests {
     fn gaussian_noise_magnitude_statistics() {
         let mut rng = Rng::seed_from_u64(3);
         let mut v = vec![0.0f32; 20_000];
-        let norm = add_gaussian_noise(&mut v, 2.0, &mut rng);
+        let norm = ops::add_gaussian_noise(&mut v, 2.0, &mut rng);
         // E||noise|| = sqrt(d)*std
         let expect = (20_000f64).sqrt() * 2.0;
         assert!((norm / expect - 1.0).abs() < 0.05, "{norm} vs {expect}");
+    }
+
+    #[test]
+    fn sparse_update_clips_and_noises_dense() {
+        use crate::fl::stats::StatValue;
+        let g = GaussianMechanism::new(1.0, 0.5, 1.0);
+        let mut s = Statistics::new_update_value(
+            StatValue::sparse(10, vec![2, 7], vec![3.0, 4.0]),
+            1.0,
+        );
+        let mut rng = Rng::seed_from_u64(7);
+        let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 1 };
+        g.postprocess_one_user(&mut s, &ctx(0), &mut env).unwrap();
+        // clip is exact on the nonzeros and preserves sparsity
+        let v = s.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }));
+        assert!((v.l2_norm() - 1.0).abs() < 1e-6);
+        // server noise densifies to the logical dimension
+        g.postprocess_server(&mut s, &ctx(0), &mut env).unwrap();
+        assert_eq!(s.update().len(), 10);
+        assert!(s.update().iter().filter(|x| **x != 0.0).count() > 2);
     }
 
     #[test]

@@ -25,12 +25,21 @@ use std::time::Duration;
 pub struct Counters {
     /// Bytes of model-sized heap allocation in the training loop.
     pub loop_alloc_bytes: u64,
+    /// Bytes allocated growing the workers' accumulation arenas (sized
+    /// once on first use; 0 in steady-state rounds — the observable form
+    /// of the "no model-sized alloc in the loop" invariant).
+    pub arena_grow_bytes: u64,
     /// Bytes memcpy'd between "host" and "device" staging buffers.
     pub copy_bytes: u64,
     /// Bytes serialized for topology-simulating transport (baselines).
     pub wire_bytes: u64,
     /// Count of model-update messages through a coordinator (baselines).
     pub coordinator_msgs: u64,
+    /// f32-equivalents shipped by users after local postprocessing
+    /// (sparse statistics count u32 idx + f32 val per nonzero) — the
+    /// user→server communication volume, which sparsification shrinks
+    /// even though the arena-reduced aggregate stays dense.
+    pub stat_elements: u64,
     /// Device busy time (executable execution).
     pub busy_nanos: u64,
     /// Users trained.
@@ -42,9 +51,11 @@ pub struct Counters {
 impl Counters {
     pub fn merge(&mut self, o: &Counters) {
         self.loop_alloc_bytes += o.loop_alloc_bytes;
+        self.arena_grow_bytes += o.arena_grow_bytes;
         self.copy_bytes += o.copy_bytes;
         self.wire_bytes += o.wire_bytes;
         self.coordinator_msgs += o.coordinator_msgs;
+        self.stat_elements += o.stat_elements;
         self.busy_nanos += o.busy_nanos;
         self.users_trained += o.users_trained;
         self.steps += o.steps;

@@ -1,0 +1,222 @@
+//! [`StatsArena`] — the worker-local accumulation arena.
+//!
+//! One arena lives in each worker thread for the whole simulation. Per
+//! round, the worker folds every user's statistics into the arena's
+//! resident dense buffers by reference; at round end `take_partial`
+//! emits one `Statistics` (the per-worker partial handed to
+//! `worker_reduce`) and re-arms the buffers for the next round without
+//! dropping their capacity.
+//!
+//! Steady-state guarantee: after the first round sizes the slots, `fold`
+//! performs **zero heap allocation** — dense contributions are a chunked
+//! `add_assign` (or a `copy_from_slice` for the round's first
+//! contribution), sparse contributions a `scatter_add`. Growth bytes are
+//! tracked and drained into `Counters::arena_grow_bytes`, so the
+//! `loop_alloc_bytes == 0` invariant is observable, not aspirational.
+
+use std::collections::BTreeMap;
+
+use super::ops;
+use super::value::StatValue;
+use crate::fl::stats::Statistics;
+
+#[derive(Debug, Default)]
+struct Slot {
+    buf: Vec<f32>,
+    /// Whether this round has already written into the slot (the first
+    /// contribution overwrites; later ones add).
+    live: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct StatsArena {
+    weight: f64,
+    /// True once any user was folded this round (so an all-empty round
+    /// yields `None`, matching `Aggregator::accumulate` semantics).
+    active: bool,
+    slots: BTreeMap<String, Slot>,
+    /// Bytes allocated growing slot buffers since the last drain.
+    grown_bytes: u64,
+}
+
+impl StatsArena {
+    pub fn new() -> Self {
+        StatsArena::default()
+    }
+
+    /// Accumulated weight this round.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Fold one user's statistics into the resident buffers (summation
+    /// semantics — the `SumAggregator` hot path). Borrows the user's
+    /// statistics; nothing is moved or inserted per user.
+    pub fn fold(&mut self, user: &Statistics) {
+        self.active = true;
+        self.weight += user.weight;
+        for (key, value) in &user.vecs {
+            self.fold_value(key, value);
+        }
+    }
+
+    fn fold_value(&mut self, key: &str, value: &StatValue) {
+        if !self.slots.contains_key(key) {
+            // key names are bounded by the statistic schema (a handful),
+            // so this path runs O(keys) times per run, not per user
+            self.slots.insert(key.to_string(), Slot::default());
+        }
+        let slot = self.slots.get_mut(key).expect("just inserted");
+        let need = value.len();
+        if slot.buf.len() < need {
+            self.grown_bytes += ((need - slot.buf.len()) * std::mem::size_of::<f32>()) as u64;
+            slot.buf.resize(need, 0.0);
+        }
+        if slot.live {
+            match value {
+                StatValue::Dense(v) => ops::add_assign(&mut slot.buf[..v.len()], v),
+                StatValue::Sparse { idx, val, .. } => ops::scatter_add(&mut slot.buf, idx, val),
+            }
+        } else {
+            match value {
+                StatValue::Dense(v) => {
+                    slot.buf[..v.len()].copy_from_slice(v);
+                    slot.buf[v.len()..].fill(0.0);
+                }
+                StatValue::Sparse { idx, val, .. } => {
+                    slot.buf.fill(0.0);
+                    ops::scatter_add(&mut slot.buf, idx, val);
+                }
+            }
+            slot.live = true;
+        }
+    }
+
+    /// Emit this round's partial (one dense vector clone per live slot —
+    /// the per-round hand-off to `worker_reduce`, not a per-user cost)
+    /// and re-arm the buffers, keeping their capacity.
+    pub fn take_partial(&mut self) -> Option<Statistics> {
+        if !self.active {
+            return None;
+        }
+        let mut stats = Statistics { weight: self.weight, vecs: BTreeMap::new() };
+        for (key, slot) in &mut self.slots {
+            if slot.live {
+                stats.vecs.insert(key.clone(), StatValue::Dense(slot.buf.clone()));
+            }
+        }
+        self.reset();
+        Some(stats)
+    }
+
+    /// Re-arm for the next round without dropping buffer capacity.
+    /// Also clears undrained growth bookkeeping so an error-aborted
+    /// round cannot misattribute its allocations to the next round
+    /// (the worker drains *before* `take_partial` in normal flow).
+    pub fn reset(&mut self) {
+        self.weight = 0.0;
+        self.active = false;
+        self.grown_bytes = 0;
+        for slot in self.slots.values_mut() {
+            slot.live = false;
+        }
+    }
+
+    /// Bytes allocated growing the arena since the last call (0 in
+    /// steady state). The worker drains this into
+    /// `Counters::arena_grow_bytes` every round.
+    pub fn drain_grown_bytes(&mut self) -> u64 {
+        std::mem::take(&mut self.grown_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_matches_sum_aggregator() {
+        use crate::fl::aggregator::{Aggregator, SumAggregator};
+        let users: Vec<Statistics> = (0..5)
+            .map(|u| {
+                let mut s = Statistics::new_update(vec![u as f32, 1.0, -2.0], 1.0 + u as f64);
+                if u % 2 == 0 {
+                    s.insert("extra", vec![u as f32; 2]);
+                }
+                s
+            })
+            .collect();
+
+        let mut arena = StatsArena::new();
+        for u in &users {
+            arena.fold(u);
+        }
+        let a = arena.take_partial().unwrap();
+
+        let agg = SumAggregator;
+        let mut acc = None;
+        for u in users {
+            agg.accumulate(&mut acc, u);
+        }
+        let b = acc.unwrap();
+
+        assert_eq!(a.weight, b.weight);
+        assert_eq!(a.update(), b.update());
+        assert_eq!(a.get("extra"), b.get("extra"));
+    }
+
+    #[test]
+    fn sparse_and_dense_fold_together() {
+        let mut arena = StatsArena::new();
+        arena.fold(&Statistics::new_update(vec![1.0; 4], 1.0));
+        arena.fold(&Statistics::new_update_value(
+            StatValue::sparse(4, vec![0, 3], vec![2.0, -1.0]),
+            1.0,
+        ));
+        let p = arena.take_partial().unwrap();
+        assert_eq!(p.update(), &[3.0, 1.0, 1.0, 0.0]);
+        assert_eq!(p.weight, 2.0);
+    }
+
+    #[test]
+    fn all_sparse_round_densifies_to_dim() {
+        let mut arena = StatsArena::new();
+        arena.fold(&Statistics::new_update_value(
+            StatValue::sparse(6, vec![5], vec![1.0]),
+            1.0,
+        ));
+        let p = arena.take_partial().unwrap();
+        assert_eq!(p.update().len(), 6);
+        assert_eq!(p.update()[5], 1.0);
+    }
+
+    #[test]
+    fn steady_state_needs_no_growth() {
+        let mut arena = StatsArena::new();
+        let user = Statistics::new_update(vec![1.0; 128], 1.0);
+        arena.fold(&user);
+        assert!(arena.drain_grown_bytes() > 0); // first round sizes slots
+        arena.take_partial().unwrap();
+        for _ in 0..3 {
+            arena.fold(&user);
+            arena.fold(&user);
+            assert_eq!(arena.drain_grown_bytes(), 0, "steady-state fold must not grow");
+            let p = arena.take_partial().unwrap();
+            assert_eq!(p.update(), &[2.0f32; 128][..]);
+        }
+    }
+
+    #[test]
+    fn empty_round_yields_none() {
+        let mut arena = StatsArena::new();
+        assert!(arena.take_partial().is_none());
+        arena.fold(&Statistics::new_update(vec![1.0], 1.0));
+        assert!(arena.take_partial().is_some());
+        // arena re-armed: next empty round is again None
+        assert!(arena.take_partial().is_none());
+    }
+}

@@ -1,0 +1,58 @@
+//! The unified tensor/statistics layer.
+//!
+//! Every model-sized vector in the simulator — user updates, worker
+//! partials, control variates, DP noise buffers — flows through this
+//! module. It exists so the hot loop stays free of model-sized
+//! allocations and so new statistic shapes (sparse LoRA adapters, GBDT
+//! histograms) drop into aggregation, privacy and the worker path
+//! without touching the runtime (paper §3.1, App. B.2).
+//!
+//! # Architecture
+//!
+//! Three pieces, stacked bottom-up:
+//!
+//! * [`ops`] — the scalar/SIMD kernel layer. Chunked, auto-vectorizable
+//!   implementations of the vector math every other layer uses:
+//!   [`ops::add_assign`], [`ops::axpy`], [`ops::scale`],
+//!   [`ops::sub_into`], [`ops::l2_norm`], [`ops::l1_norm`],
+//!   [`ops::l2_clip`], [`ops::l1_clip`], [`ops::scatter_add`],
+//!   [`ops::add_gaussian_noise`], [`ops::add_laplace_noise`]. This is the
+//!   **only** place in the crate that writes raw `f32` arithmetic loops;
+//!   `crate::util` re-exports the common names for backwards
+//!   compatibility, and `fl/` + `privacy/` call them via either path.
+//!
+//! * [`value`] — [`StatValue`], the statistic payload: `Dense(Vec<f32>)`
+//!   or `Sparse { dim, idx, val }` (sorted unique `idx`). Sums of any
+//!   mix of shapes are well-defined and order-independent (sparse+sparse
+//!   stays sparse via a sorted merge; any dense operand densifies the
+//!   result), which preserves the aggregator exchange law — see the
+//!   randomized property tests in `rust/tests/property_invariants.rs`.
+//!
+//! * [`arena`] — [`StatsArena`], the worker-local accumulation arena.
+//!   Pre-sized dense buffers, one per statistic key, that persist across
+//!   rounds; `fold` adds a user's statistics **by reference** (dense add
+//!   or sparse scatter-add) instead of moving/inserting per-user `Vec`s
+//!   into a fresh accumulator. This is what makes the
+//!   `Counters::loop_alloc_bytes == 0` steady-state invariant hold under
+//!   aggregation: after the first round sizes the slots, the per-user
+//!   loop performs zero heap allocation (arena growth is reported
+//!   separately via `Counters::arena_grow_bytes`).
+//!
+//! # Who uses what
+//!
+//! * `fl::stats::Statistics` stores `BTreeMap<String, StatValue>`.
+//! * `fl::worker` folds each user's statistics into its `StatsArena`
+//!   whenever the aggregator is arena-compatible (plain summation), and
+//!   hands one dense partial per round to `worker_reduce`.
+//! * `fl::aggregator::SumAggregator` uses `StatValue::add_value` for the
+//!   reduce, so dense and sparse partials mix freely.
+//! * `privacy::mechanisms` and `fl::postprocess` clip/scale/noise
+//!   through `ops`, densifying sparse aggregates only where a mechanism
+//!   mathematically requires full coverage (additive noise).
+
+pub mod arena;
+pub mod ops;
+pub mod value;
+
+pub use arena::StatsArena;
+pub use value::StatValue;

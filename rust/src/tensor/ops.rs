@@ -1,0 +1,357 @@
+//! SIMD-friendly chunked vector kernels — the single home of raw `f32`
+//! arithmetic in the crate.
+//!
+//! Every function processes fixed-width lanes (`LANES` elements) through
+//! plain indexed loops over `chunks_exact`, the shape LLVM reliably
+//! auto-vectorizes on stable Rust without `unsafe` or intrinsics, plus a
+//! short scalar tail. Norm reductions accumulate in `f64` across
+//! independent partial sums so vectorization is not serialized by a
+//! single dependency chain.
+//!
+//! Callers: `fl::aggregator` / `tensor::arena` (accumulate),
+//! `fl::postprocess` + `privacy::mechanisms` (clip / noise / quantize),
+//! `fl::algorithm` (SCAFFOLD control variates), `fl::central_opt`
+//! (central step), and `crate::util`, which re-exports the common names.
+
+use crate::util::rng::Rng;
+
+/// Lane width the kernels are written for (f32x8 — one AVX2 register).
+pub const LANES: usize = 8;
+
+/// y += x (the aggregation hot path).
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len().min(x.len());
+    let split = n - n % LANES;
+    let (yh, yt) = y[..n].split_at_mut(split);
+    let (xh, xt) = x[..n].split_at(split);
+    for (ys, xs) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            ys[i] += xs[i];
+        }
+    }
+    for (a, b) in yt.iter_mut().zip(xt) {
+        *a += *b;
+    }
+}
+
+/// y += s * x
+#[inline]
+pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len().min(x.len());
+    let split = n - n % LANES;
+    let (yh, yt) = y[..n].split_at_mut(split);
+    let (xh, xt) = x[..n].split_at(split);
+    for (ys, xs) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            ys[i] += s * xs[i];
+        }
+    }
+    for (a, b) in yt.iter_mut().zip(xt) {
+        *a += s * *b;
+    }
+}
+
+/// y *= s
+#[inline]
+pub fn scale(y: &mut [f32], s: f32) {
+    for chunk in y.chunks_exact_mut(LANES) {
+        for v in chunk {
+            *v *= s;
+        }
+    }
+    let tail = y.len() - y.len() % LANES;
+    for v in &mut y[tail..] {
+        *v *= s;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let n = out.len().min(a.len()).min(b.len());
+    for i in 0..n {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// y -= x
+#[inline]
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len().min(x.len());
+    for i in 0..n {
+        y[i] -= x[i];
+    }
+}
+
+/// y = a - y (in-place reversed subtraction; the Δ = θ − θ′ shape that
+/// reuses the trained buffer as the update).
+#[inline]
+pub fn sub_rev_assign(y: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(y.len(), a.len());
+    let n = y.len().min(a.len());
+    for i in 0..n {
+        y[i] = a[i] - y[i];
+    }
+}
+
+/// One fused (Fed)Adam step over flat buffers (Reddi et al.; τ plays
+/// epsilon's role as the adaptivity degree):
+/// m ← β₁m + (1−β₁)g, v ← β₂v + (1−β₂)g², θ −= step·m̂/(√v̂ + τ)
+/// with m̂ = m/bc₁, v̂ = v/bc₂.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step(
+    params: &mut [f32],
+    delta: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    tau: f32,
+    step: f32,
+) {
+    debug_assert_eq!(params.len(), delta.len());
+    debug_assert_eq!(params.len(), m.len());
+    debug_assert_eq!(params.len(), v.len());
+    let n = params.len().min(delta.len()).min(m.len()).min(v.len());
+    for i in 0..n {
+        let g = delta[i];
+        m[i] = b1 * m[i] + (1.0 - b1) * g;
+        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        params[i] -= step * mhat / (vhat.sqrt() + tau);
+    }
+}
+
+/// Σ v², accumulated in f64 across `LANES` independent partial sums.
+#[inline]
+pub fn l2_norm_sq(v: &[f32]) -> f64 {
+    let mut acc = [0f64; LANES];
+    let chunks = v.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        for i in 0..LANES {
+            let x = chunk[i] as f64;
+            acc[i] += x * x;
+        }
+    }
+    let mut s: f64 = acc.iter().sum();
+    for &x in tail {
+        s += (x as f64) * (x as f64);
+    }
+    s
+}
+
+/// L2 norm (f64 accumulation).
+#[inline]
+pub fn l2_norm(v: &[f32]) -> f64 {
+    l2_norm_sq(v).sqrt()
+}
+
+/// L1 norm (f64 accumulation).
+#[inline]
+pub fn l1_norm(v: &[f32]) -> f64 {
+    let mut acc = [0f64; LANES];
+    let chunks = v.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        for i in 0..LANES {
+            acc[i] += chunk[i].abs() as f64;
+        }
+    }
+    let mut s: f64 = acc.iter().sum();
+    for &x in tail {
+        s += x.abs() as f64;
+    }
+    s
+}
+
+/// Clip `v` to L2 norm `bound` in place; returns the pre-clip norm.
+/// Semantics match the L1 Pallas `clip_scale` kernel (`RustClip` is the
+/// oracle in `runtime_integration.rs`).
+#[inline]
+pub fn l2_clip(v: &mut [f32], bound: f32) -> f64 {
+    let norm = l2_norm(v);
+    if norm > bound as f64 && norm > 0.0 {
+        scale(v, (bound as f64 / norm) as f32);
+    }
+    norm
+}
+
+/// Clip `v` to L1 norm `bound` in place; returns the pre-clip L1 norm.
+#[inline]
+pub fn l1_clip(v: &mut [f32], bound: f32) -> f64 {
+    let norm = l1_norm(v);
+    if norm > bound as f64 && norm > 0.0 {
+        scale(v, (bound as f64 / norm) as f32);
+    }
+    norm
+}
+
+/// y[idx[j]] += val[j] — the sparse-statistic fold. Indices must be in
+/// bounds; `StatValue` guarantees `idx < dim` and callers size `y` to
+/// the sparse value's `dim`.
+#[inline]
+pub fn scatter_add(y: &mut [f32], idx: &[u32], val: &[f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (i, v) in idx.iter().zip(val) {
+        y[*i as usize] += *v;
+    }
+}
+
+/// Add iid N(0, std²) noise to `v` in place; returns the noise L2 norm
+/// (for SNR diagnostics, paper Fig. 6).
+pub fn add_gaussian_noise(v: &mut [f32], std: f64, rng: &mut Rng) -> f64 {
+    if std <= 0.0 {
+        return 0.0;
+    }
+    let mut sq = 0f64;
+    for x in v.iter_mut() {
+        let n = rng.normal() * std;
+        sq += n * n;
+        *x += n as f32;
+    }
+    sq.sqrt()
+}
+
+/// Add iid Laplace(0, scale) noise to `v` in place; returns the noise L2
+/// norm.
+pub fn add_laplace_noise(v: &mut [f32], scale: f64, rng: &mut Rng) -> f64 {
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    let mut sq = 0f64;
+    for x in v.iter_mut() {
+        let n = rng.laplace(scale);
+        sq += n * n;
+        *x += n as f32;
+    }
+    sq.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_ops_match_scalar_reference() {
+        // lengths straddling the lane width, including 0 and tails
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 100] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+
+            let mut y = a.clone();
+            add_assign(&mut y, &b);
+            for i in 0..n {
+                assert_eq!(y[i], a[i] + b[i]);
+            }
+
+            let mut y = a.clone();
+            axpy(&mut y, 2.5, &b);
+            for i in 0..n {
+                assert!((y[i] - (a[i] + 2.5 * b[i])).abs() < 1e-6);
+            }
+
+            let mut y = a.clone();
+            scale(&mut y, -0.25);
+            for i in 0..n {
+                assert_eq!(y[i], a[i] * -0.25);
+            }
+
+            let mut out = vec![0.0; n];
+            sub_into(&mut out, &a, &b);
+            for i in 0..n {
+                assert_eq!(out[i], a[i] - b[i]);
+            }
+
+            let mut y = a.clone();
+            sub_assign(&mut y, &b);
+            for i in 0..n {
+                assert_eq!(y[i], a[i] - b[i]);
+            }
+
+            let mut y = b.clone();
+            sub_rev_assign(&mut y, &a);
+            for i in 0..n {
+                assert_eq!(y[i], a[i] - b[i]);
+            }
+
+            let ref_l2: f64 = a.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+            assert!((l2_norm(&a) - ref_l2).abs() < 1e-9 * ref_l2.max(1.0));
+            let ref_l1: f64 = a.iter().map(|x| x.abs() as f64).sum();
+            assert!((l1_norm(&a) - ref_l1).abs() < 1e-9 * ref_l1.max(1.0));
+        }
+    }
+
+    #[test]
+    fn clips_bound_norms() {
+        let mut v = vec![3.0f32, 4.0];
+        let pre = l2_clip(&mut v, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((l2_norm(&v) - 1.0).abs() < 1e-6);
+
+        let mut u = vec![1.0f32, -1.0, 2.0];
+        let pre = l1_clip(&mut u, 1.0);
+        assert!((pre - 4.0).abs() < 1e-6);
+        assert!((l1_norm(&u) - 1.0).abs() < 1e-6);
+
+        // below the bound: untouched
+        let mut w = vec![0.3f32, 0.4];
+        l2_clip(&mut w, 1.0);
+        assert_eq!(w, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn adam_step_matches_reference() {
+        let (b1, b2, tau, step) = (0.9f32, 0.99, 0.1, 0.1);
+        let delta = [1.0f32, -2.0, 0.5];
+        let mut params = [0.0f32; 3];
+        let mut m = [0.0f32; 3];
+        let mut v = [0.0f32; 3];
+        let (bc1, bc2) = (1.0 - b1, 1.0 - b2); // t = 1
+        adam_step(&mut params, &delta, &mut m, &mut v, b1, b2, bc1, bc2, tau, step);
+        for i in 0..3 {
+            let g = delta[i];
+            let mhat = ((1.0 - b1) * g) / bc1; // = g at t=1
+            let vhat = ((1.0 - b2) * g * g) / bc2; // = g² at t=1
+            let expect = -step * mhat / (vhat.sqrt() + tau);
+            assert!((params[i] - expect).abs() < 1e-6, "{} vs {}", params[i], expect);
+        }
+    }
+
+    #[test]
+    fn scatter_add_hits_indices() {
+        let mut y = vec![0.0f32; 6];
+        scatter_add(&mut y, &[1, 3, 5], &[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+        scatter_add(&mut y, &[1], &[0.5]);
+        assert_eq!(y[1], 1.5);
+    }
+
+    #[test]
+    fn noise_magnitudes() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut v = vec![0.0f32; 20_000];
+        let norm = add_gaussian_noise(&mut v, 2.0, &mut rng);
+        let expect = (20_000f64).sqrt() * 2.0; // E‖noise‖ = √d·σ
+        assert!((norm / expect - 1.0).abs() < 0.05, "{norm} vs {expect}");
+        // zero std is a no-op
+        let mut w = vec![1.0f32; 4];
+        assert_eq!(add_gaussian_noise(&mut w, 0.0, &mut rng), 0.0);
+        assert_eq!(w, vec![1.0; 4]);
+        assert_eq!(add_laplace_noise(&mut w, 0.0, &mut rng), 0.0);
+        // laplace noise perturbs
+        let mut u = vec![0.0f32; 1000];
+        let n = add_laplace_noise(&mut u, 1.0, &mut rng);
+        assert!(n > 0.0);
+        assert!(u.iter().any(|x| *x != 0.0));
+    }
+}

@@ -1,0 +1,334 @@
+//! [`StatValue`] — the payload of one named statistic: a dense vector or
+//! a sorted-index sparse vector with an explicit logical dimension.
+//!
+//! Sparse values are how LoRA-style and GBDT-style scenarios ship
+//! compact updates end-to-end: `element_count` (the communication cost)
+//! is the number of stored nonzeros, and aggregation sums any mix of
+//! shapes without an intermediate densify (sparse+sparse merges sorted
+//! indices; sparse+dense scatter-adds into the dense operand). The shape
+//! of a sum depends only on the *set* of operands, never their order, so
+//! the aggregator exchange law holds across mixes.
+
+use super::ops;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StatValue {
+    /// A plain vector; index i is coordinate i.
+    Dense(Vec<f32>),
+    /// Coordinates `idx` (sorted, unique, all `< dim`) with values `val`.
+    /// `dim` is the logical dense length, so densification and
+    /// mixed-shape sums are well-defined even when every contribution is
+    /// sparse.
+    Sparse { dim: u32, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl Default for StatValue {
+    fn default() -> Self {
+        StatValue::Dense(Vec::new())
+    }
+}
+
+impl StatValue {
+    /// Sparse constructor; debug-asserts the index invariants.
+    pub fn sparse(dim: u32, idx: Vec<u32>, val: Vec<f32>) -> StatValue {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
+        debug_assert!(idx.last().map(|&i| i < dim).unwrap_or(true), "index out of bounds");
+        StatValue::Sparse { dim, idx, val }
+    }
+
+    /// Build a sparse value from the nonzeros of a dense slice.
+    pub fn from_dense_nonzeros(v: &[f32]) -> StatValue {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        StatValue::Sparse { dim: v.len() as u32, idx, val }
+    }
+
+    /// Compact the stored representation: a mostly-zero dense value
+    /// converts to sparse when the sparse encoding (idx + val per
+    /// nonzero) is smaller, and a sparse value drops explicitly-stored
+    /// zeros (e.g. introduced by top-k masking).
+    pub fn compact(self) -> StatValue {
+        match self {
+            StatValue::Dense(v) => {
+                let nnz = v.iter().filter(|x| **x != 0.0).count();
+                if nnz * 2 < v.len() {
+                    StatValue::from_dense_nonzeros(&v)
+                } else {
+                    StatValue::Dense(v)
+                }
+            }
+            StatValue::Sparse { dim, mut idx, mut val } => {
+                if val.iter().any(|x| *x == 0.0) {
+                    let mut ni = Vec::with_capacity(val.len());
+                    let mut nv = Vec::with_capacity(val.len());
+                    for (i, v) in idx.iter().zip(val.iter()) {
+                        if *v != 0.0 {
+                            ni.push(*i);
+                            nv.push(*v);
+                        }
+                    }
+                    idx = ni;
+                    val = nv;
+                }
+                StatValue::Sparse { dim, idx, val }
+            }
+        }
+    }
+
+    /// Logical dense length.
+    pub fn len(&self) -> usize {
+        match self {
+            StatValue::Dense(v) => v.len(),
+            StatValue::Sparse { dim, .. } => *dim as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored f32 count — the communication cost of this value (nonzeros
+    /// for sparse, full length for dense).
+    pub fn element_count(&self) -> usize {
+        match self {
+            StatValue::Dense(v) => v.len(),
+            StatValue::Sparse { val, .. } => val.len(),
+        }
+    }
+
+    /// Wire cost in f32-equivalents: dense ships one f32 per
+    /// coordinate; sparse ships a u32 index plus an f32 value per
+    /// nonzero (2 f32-equivalents). This is the honest basis for
+    /// communication metrics — near the compact threshold a "sparse"
+    /// update costs the same as dense, and `compact()` only converts
+    /// when this number shrinks.
+    pub fn wire_elements(&self) -> usize {
+        match self {
+            StatValue::Dense(v) => v.len(),
+            StatValue::Sparse { val, .. } => 2 * val.len(),
+        }
+    }
+
+    /// The backing values: all coordinates for dense, the nonzeros for
+    /// sparse. Norms and uniform scaling over this slice are exact for
+    /// both shapes (absent coordinates are zero).
+    pub fn values(&self) -> &[f32] {
+        match self {
+            StatValue::Dense(v) => v,
+            StatValue::Sparse { val, .. } => val,
+        }
+    }
+
+    /// Mutable backing values (see [`Self::values`]); a full `Vec` so
+    /// clip kernels with a `&mut Vec<f32>` interface apply directly.
+    pub fn values_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            StatValue::Dense(v) => v,
+            StatValue::Sparse { val, .. } => val,
+        }
+    }
+
+    /// Dense view, `None` when sparse.
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            StatValue::Dense(v) => Some(v),
+            StatValue::Sparse { .. } => None,
+        }
+    }
+
+    /// Materialize the dense form (clones for dense input).
+    pub fn to_dense_vec(&self) -> Vec<f32> {
+        match self {
+            StatValue::Dense(v) => v.clone(),
+            StatValue::Sparse { dim, idx, val } => {
+                let mut out = vec![0.0f32; *dim as usize];
+                ops::scatter_add(&mut out, idx, val);
+                out
+            }
+        }
+    }
+
+    /// Convert to dense in place and return the buffer. No-op for dense.
+    pub fn densify(&mut self) -> &mut Vec<f32> {
+        if let StatValue::Sparse { dim, idx, val } = self {
+            let mut out = vec![0.0f32; *dim as usize];
+            ops::scatter_add(&mut out, idx, val);
+            *self = StatValue::Dense(out);
+        }
+        match self {
+            StatValue::Dense(v) => v,
+            StatValue::Sparse { .. } => unreachable!("densified above"),
+        }
+    }
+
+    /// self += other, for any mix of shapes. The result is sparse only
+    /// when both operands are sparse; any dense operand densifies.
+    pub fn add_value(&mut self, other: &StatValue) {
+        match other {
+            StatValue::Dense(x) => {
+                let dst = self.densify();
+                if dst.len() < x.len() {
+                    dst.resize(x.len(), 0.0);
+                }
+                ops::add_assign(&mut dst[..x.len()], x);
+            }
+            StatValue::Sparse { dim, idx, val } => match self {
+                StatValue::Dense(dst) => {
+                    if dst.len() < *dim as usize {
+                        dst.resize(*dim as usize, 0.0);
+                    }
+                    ops::scatter_add(dst, idx, val);
+                }
+                StatValue::Sparse { dim: d0, idx: i0, val: v0 } => {
+                    *d0 = (*d0).max(*dim);
+                    if i0.as_slice() == idx.as_slice() {
+                        // identical sparsity pattern (common when users
+                        // share a mask): plain vector add, no merge
+                        ops::add_assign(v0, val);
+                    } else {
+                        let (mi, mv) = merge_sparse(i0, v0, idx, val);
+                        *i0 = mi;
+                        *v0 = mv;
+                    }
+                }
+            },
+        }
+    }
+
+    /// Uniform scale (exact for both shapes).
+    pub fn scale(&mut self, s: f32) {
+        ops::scale(self.values_mut(), s);
+    }
+
+    /// L2 norm (exact for both shapes).
+    pub fn l2_norm(&self) -> f64 {
+        ops::l2_norm(self.values())
+    }
+}
+
+/// Merge two sorted sparse (idx, val) streams, summing shared indices.
+fn merge_sparse(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let cap = ia.len() + ib.len();
+    let mut idx = Vec::with_capacity(cap);
+    let mut val = Vec::with_capacity(cap);
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ia.len() && j < ib.len() {
+        if ia[i] == ib[j] {
+            idx.push(ia[i]);
+            val.push(va[i] + vb[j]);
+            i += 1;
+            j += 1;
+        } else if ia[i] < ib[j] {
+            idx.push(ia[i]);
+            val.push(va[i]);
+            i += 1;
+        } else {
+            idx.push(ib[j]);
+            val.push(vb[j]);
+            j += 1;
+        }
+    }
+    while i < ia.len() {
+        idx.push(ia[i]);
+        val.push(va[i]);
+        i += 1;
+    }
+    while j < ib.len() {
+        idx.push(ib[j]);
+        val.push(vb[j]);
+        j += 1;
+    }
+    (idx, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(dim: u32, pairs: &[(u32, f32)]) -> StatValue {
+        StatValue::sparse(
+            dim,
+            pairs.iter().map(|p| p.0).collect(),
+            pairs.iter().map(|p| p.1).collect(),
+        )
+    }
+
+    #[test]
+    fn densify_and_roundtrip() {
+        let mut v = sp(5, &[(1, 2.0), (4, -1.0)]);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.element_count(), 2);
+        assert_eq!(v.to_dense_vec(), vec![0.0, 2.0, 0.0, 0.0, -1.0]);
+        let d = v.densify();
+        assert_eq!(d, &vec![0.0, 2.0, 0.0, 0.0, -1.0]);
+        assert!(v.as_dense().is_some());
+    }
+
+    #[test]
+    fn compact_only_when_beneficial() {
+        let mostly_zero = StatValue::Dense(vec![0.0, 0.0, 0.0, 0.0, 0.0, 7.0]);
+        match mostly_zero.compact() {
+            StatValue::Sparse { dim, idx, val } => {
+                assert_eq!(dim, 6);
+                assert_eq!(idx, vec![5]);
+                assert_eq!(val, vec![7.0]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        let dense = StatValue::Dense(vec![1.0, 2.0, 3.0]);
+        assert!(matches!(dense.compact(), StatValue::Dense(_)));
+
+        // sparse input drops stored zeros (top-k masking aftermath)
+        let masked = StatValue::sparse(8, vec![1, 3, 5], vec![2.0, 0.0, -1.0]);
+        let c = masked.compact();
+        assert_eq!(c.element_count(), 2);
+        assert_eq!(c.to_dense_vec(), vec![0.0, 2.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn add_value_all_shape_mixes() {
+        // dense += dense
+        let mut a = StatValue::Dense(vec![1.0, 2.0]);
+        a.add_value(&StatValue::Dense(vec![3.0, 4.0]));
+        assert_eq!(a.to_dense_vec(), vec![4.0, 6.0]);
+
+        // dense += sparse
+        let mut a = StatValue::Dense(vec![1.0, 1.0, 1.0]);
+        a.add_value(&sp(3, &[(2, 5.0)]));
+        assert_eq!(a.to_dense_vec(), vec![1.0, 1.0, 6.0]);
+
+        // sparse += dense (densifies)
+        let mut a = sp(3, &[(0, 1.0)]);
+        a.add_value(&StatValue::Dense(vec![1.0, 1.0, 1.0]));
+        assert!(a.as_dense().is_some());
+        assert_eq!(a.to_dense_vec(), vec![2.0, 1.0, 1.0]);
+
+        // sparse += sparse, disjoint + shared indices (stays sparse)
+        let mut a = sp(6, &[(1, 1.0), (3, 1.0)]);
+        a.add_value(&sp(6, &[(3, 2.0), (5, 4.0)]));
+        assert!(matches!(a, StatValue::Sparse { .. }));
+        assert_eq!(a.to_dense_vec(), vec![0.0, 1.0, 0.0, 3.0, 0.0, 4.0]);
+
+        // identical pattern fast path
+        let mut a = sp(4, &[(0, 1.0), (2, 2.0)]);
+        a.add_value(&sp(4, &[(0, 10.0), (2, 20.0)]));
+        assert_eq!(a.element_count(), 2);
+        assert_eq!(a.to_dense_vec(), vec![11.0, 0.0, 22.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_and_norm_exact_for_sparse() {
+        let mut v = sp(100, &[(10, 3.0), (90, 4.0)]);
+        assert!((v.l2_norm() - 5.0).abs() < 1e-9);
+        v.scale(0.5);
+        assert_eq!(v.to_dense_vec()[10], 1.5);
+        assert_eq!(v.to_dense_vec()[90], 2.0);
+    }
+}

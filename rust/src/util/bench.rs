@@ -3,7 +3,14 @@
 //! Measures wall-clock over warmup + N timed iterations and reports
 //! median / mean / stddev / min, criterion-style. Used by every target in
 //! `benches/`.
+//!
+//! Bench binaries additionally install [`CountingAlloc`] as their global
+//! allocator and emit machine-readable `BENCH_*.json` files (ns/op +
+//! alloc bytes/op) via [`write_bench_json`], so the perf trajectory is
+//! tracked across PRs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -49,18 +56,9 @@ pub fn bench_per_op<F: FnMut()>(
     warmup: usize,
     iters: usize,
     ops_per_iter: usize,
-    mut f: F,
+    f: F,
 ) -> BenchResult {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t = Instant::now();
-        f();
-        samples.push(t.elapsed() / ops_per_iter.max(1) as u32);
-    }
-    summarize(name, samples)
+    bench_per_op_alloc(name, warmup, iters, ops_per_iter, f).0
 }
 
 fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
@@ -90,6 +88,105 @@ fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+// ----------------------------------------------------------------------
+// Allocation accounting + machine-readable output
+// ----------------------------------------------------------------------
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Byte-counting global allocator for bench binaries. Install with
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: pfl::util::bench::CountingAlloc = pfl::util::bench::CountingAlloc;
+/// ```
+///
+/// Only allocation (and realloc growth) is counted — the interesting
+/// signal for the "no alloc in the hot loop" invariant; frees are not
+/// subtracted.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES
+            .fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Bytes allocated so far through [`CountingAlloc`] (0 when the binary
+/// did not install it).
+pub fn alloc_bytes_now() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// Like [`bench_per_op`] but also reports heap bytes allocated per op
+/// during the timed iterations (requires [`CountingAlloc`]).
+pub fn bench_per_op_alloc<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    ops_per_iter: usize,
+    mut f: F,
+) -> (BenchResult, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let a0 = alloc_bytes_now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed() / ops_per_iter.max(1) as u32);
+    }
+    let alloc_per_op =
+        (alloc_bytes_now() - a0) as f64 / (iters.max(1) * ops_per_iter.max(1)) as f64;
+    (summarize(name, samples), alloc_per_op)
+}
+
+/// One machine-readable bench record.
+pub struct BenchRecord {
+    pub name: String,
+    pub ns_per_op: f64,
+    pub alloc_bytes_per_op: f64,
+}
+
+impl BenchRecord {
+    pub fn new(r: &BenchResult, alloc_bytes_per_op: f64) -> Self {
+        BenchRecord {
+            name: r.name.clone(),
+            ns_per_op: r.median.as_nanos() as f64,
+            alloc_bytes_per_op,
+        }
+    }
+}
+
+/// Write `BENCH_*.json`: `{"schema": "pfl-bench-v1", "benches": [...]}`.
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    use crate::util::json::{arr, num, obj, s};
+    let benches: Vec<_> = records
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", s(r.name.clone())),
+                ("ns_per_op", num(r.ns_per_op)),
+                ("alloc_bytes_per_op", num(r.alloc_bytes_per_op)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![("schema", s("pfl-bench-v1")), ("benches", arr(benches))]);
+    std::fs::write(path, doc.to_string_pretty())
 }
 
 #[cfg(test)]

@@ -1,6 +1,9 @@
 //! In-tree infrastructure (offline build — see Cargo.toml): JSON, RNG +
-//! distributions, CLI parsing, bench harness, and small vector math
-//! helpers shared by the aggregation / privacy hot paths.
+//! distributions, CLI parsing, bench harness.
+//!
+//! The small-vector math helpers formerly defined here moved to
+//! [`crate::tensor::ops`] (the unified SIMD-chunked kernel layer); the
+//! common names are re-exported so existing call sites keep compiling.
 
 pub mod bench;
 pub mod cli;
@@ -8,55 +11,14 @@ pub mod fft;
 pub mod json;
 pub mod rng;
 
-/// y += x (the aggregation hot path; kept in one place so the perf pass
-/// can vectorize/tune a single site).
-#[inline]
-pub fn add_assign(y: &mut [f32], x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (a, b) in y.iter_mut().zip(x) {
-        *a += *b;
-    }
-}
-
-/// y += s * x
-#[inline]
-pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (a, b) in y.iter_mut().zip(x) {
-        *a += s * *b;
-    }
-}
-
-/// y *= s
-#[inline]
-pub fn scale(y: &mut [f32], s: f32) {
-    for a in y {
-        *a *= s;
-    }
-}
-
-/// out = a - b
-#[inline]
-pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
-    debug_assert_eq!(out.len(), a.len());
-    debug_assert_eq!(out.len(), b.len());
-    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
-        *o = *x - *y;
-    }
-}
-
-/// L2 norm (f64 accumulation).
-#[inline]
-pub fn l2_norm(v: &[f32]) -> f64 {
-    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
-}
+pub use crate::tensor::ops::{add_assign, axpy, l2_norm, scale, sub_assign, sub_into};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn vector_ops() {
+    fn vector_ops_reexports() {
         let mut y = vec![1.0f32, 2.0, 3.0];
         add_assign(&mut y, &[1.0, 1.0, 1.0]);
         assert_eq!(y, vec![2.0, 3.0, 4.0]);

@@ -2,7 +2,8 @@
 //! no proptest crate): randomized inputs over many seeds asserting the
 //! framework's algebraic invariants:
 //!
-//! * the aggregator exchange law (paper App. B.2),
+//! * the aggregator exchange law (paper App. B.2), for dense statistics
+//!   and for every sparse/dense shape mix of the `StatValue` path,
 //! * scheduler coverage / determinism / LPT dominance,
 //! * clip idempotence and norm bounds,
 //! * accountant monotonicity (σ, T, q) and RDP ≥ PLD orderings,
@@ -12,10 +13,11 @@
 use pfl::fl::aggregator::{Aggregator, CollectAggregator, SumAggregator};
 use pfl::fl::model::{ClipKernel, RustClip};
 use pfl::fl::scheduler::{median, schedule, SchedulerKind};
-use pfl::fl::stats::Statistics;
+use pfl::fl::stats::{StatValue, Statistics};
 use pfl::fl::Metrics;
 use pfl::privacy::{Accountant, AccountantParams, PldAccountant, RdpAccountant};
 use pfl::simsys::{replay_cluster, replay_round, UserCost};
+use pfl::tensor::StatsArena;
 use pfl::util::rng::Rng;
 
 const TRIALS: u64 = 25;
@@ -27,6 +29,43 @@ fn rand_stats(rng: &mut Rng, dim: usize) -> Statistics {
         s.insert("extra", (0..dim).map(|_| rng.normal() as f32).collect());
     }
     s
+}
+
+/// A random sparse value of logical length `dim` (possibly empty).
+fn rand_sparse(rng: &mut Rng, dim: usize) -> StatValue {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for i in 0..dim {
+        if rng.f64() < 0.3 {
+            idx.push(i as u32);
+            val.push(rng.normal() as f32);
+        }
+    }
+    StatValue::sparse(dim as u32, idx, val)
+}
+
+/// A statistics record whose update is randomly dense or sparse.
+fn rand_mixed_stats(rng: &mut Rng, dim: usize) -> Statistics {
+    let value = if rng.f64() < 0.5 {
+        StatValue::Dense((0..dim).map(|_| rng.normal() as f32).collect())
+    } else {
+        rand_sparse(rng, dim)
+    };
+    Statistics::new_update_value(value, 1.0 + rng.below(5) as f64)
+}
+
+/// Canonical dense view of a statistic value, padded to `dim`.
+fn dense_of(s: &Statistics, key: &str, dim: usize) -> Vec<f32> {
+    let mut v = s.value(key).map(|x| x.to_dense_vec()).unwrap_or_default();
+    v.resize(dim, 0.0);
+    v
+}
+
+fn assert_close(a: &[f32], b: &[f32], msg: &str) {
+    assert_eq!(a.len(), b.len(), "{msg}: length {} vs {}", a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-4, "{msg}: {x} vs {y}");
+    }
 }
 
 /// g({f(Sa, Δ), Sb}) = g({f(Sb, Δ), Sa}) = f(g({Sa, Sb}), Δ)
@@ -61,12 +100,146 @@ fn sum_aggregator_exchange_law_randomized() {
                 pair.0.vecs.keys().collect::<Vec<_>>(),
                 pair.1.vecs.keys().collect::<Vec<_>>()
             );
-            for (k, v) in &pair.0.vecs {
-                for (a, b) in v.iter().zip(&pair.1.vecs[k]) {
-                    assert!((a - b).abs() < 1e-4, "seed {seed} key {k}: {a} vs {b}");
-                }
+            for k in pair.0.vecs.keys() {
+                assert_close(
+                    &dense_of(pair.0, k, dim),
+                    &dense_of(pair.1, k, dim),
+                    &format!("seed {seed} key {k}"),
+                );
             }
         }
+    }
+}
+
+/// The exchange law over every sparse/dense mix of (Sa, Sb, Δ):
+/// g({f(Sa, Δ), Sb}) = g({f(Sb, Δ), Sa}) = f(g({Sa, Sb}), Δ).
+#[test]
+fn sum_aggregator_sparse_exchange_law_randomized() {
+    for seed in 0..TRIALS * 4 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5AB5);
+        let dim = 1 + rng.below(48);
+        let sa = rand_mixed_stats(&mut rng, dim);
+        let sb = rand_mixed_stats(&mut rng, dim);
+        let delta = rand_mixed_stats(&mut rng, dim);
+        let agg = SumAggregator;
+
+        let left = {
+            let mut acc = Some(sa.clone());
+            agg.accumulate(&mut acc, delta.clone());
+            agg.worker_reduce(vec![acc.unwrap(), sb.clone()]).unwrap()
+        };
+        let middle = {
+            let mut acc = Some(sb.clone());
+            agg.accumulate(&mut acc, delta.clone());
+            agg.worker_reduce(vec![acc.unwrap(), sa.clone()]).unwrap()
+        };
+        let right = {
+            let mut acc = agg.worker_reduce(vec![sa.clone(), sb.clone()]);
+            agg.accumulate(&mut acc, delta.clone());
+            acc.unwrap()
+        };
+
+        // reference: densify everything and sum coordinatewise
+        let mut expect = vec![0.0f32; dim];
+        for s in [&sa, &sb, &delta] {
+            for (e, x) in expect.iter_mut().zip(dense_of(s, "update", dim)) {
+                *e += x;
+            }
+        }
+        let w = sa.weight + sb.weight + delta.weight;
+        for (name, got) in [("left", &left), ("middle", &middle), ("right", &right)] {
+            assert_eq!(got.weight, w, "seed {seed} {name}");
+            assert_close(
+                &dense_of(got, "update", dim),
+                &expect,
+                &format!("seed {seed} {name}"),
+            );
+        }
+    }
+}
+
+/// The worker's arena fold must agree with the move-based accumulate on
+/// any sparse/dense user mix, including all-sparse rounds.
+#[test]
+fn arena_fold_matches_accumulate_on_mixes() {
+    for seed in 0..TRIALS * 2 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA4E);
+        let dim = 1 + rng.below(64);
+        let users: Vec<Statistics> =
+            (0..1 + rng.below(12)).map(|_| rand_mixed_stats(&mut rng, dim)).collect();
+
+        let mut arena = StatsArena::new();
+        for u in &users {
+            arena.fold(u);
+        }
+        let a = arena.take_partial().unwrap();
+
+        let agg = SumAggregator;
+        let mut acc = None;
+        for u in users.clone() {
+            agg.accumulate(&mut acc, u);
+        }
+        let b = acc.unwrap();
+
+        assert_eq!(a.weight, b.weight, "seed {seed}");
+        assert_close(
+            &dense_of(&a, "update", dim),
+            &dense_of(&b, "update", dim),
+            &format!("seed {seed}"),
+        );
+    }
+}
+
+/// CollectAggregator must preserve sparse contributions individually
+/// (shape and values) across accumulate + worker_reduce.
+#[test]
+fn collect_aggregator_preserves_sparse_contributions() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC011);
+        let dim = 4 + rng.below(32);
+        let agg = CollectAggregator;
+        let mut partials = Vec::new();
+        let mut expected: Vec<Vec<f32>> = Vec::new();
+        let mut sparse_count = 0usize;
+        for _ in 0..1 + rng.below(3) {
+            let mut acc = None;
+            for _ in 0..1 + rng.below(4) {
+                let s = rand_mixed_stats(&mut rng, dim);
+                if matches!(s.update_value(), Some(StatValue::Sparse { .. })) {
+                    sparse_count += 1;
+                }
+                expected.push(dense_of(&s, "update", dim));
+                agg.accumulate(&mut acc, s);
+            }
+            partials.push(acc.unwrap());
+        }
+        let reduced = agg.worker_reduce(partials).unwrap();
+        assert_eq!(reduced.vecs.len(), expected.len(), "seed {seed}");
+        // every contribution's dense image must appear among the
+        // collected entries exactly as shipped
+        let mut collected: Vec<Vec<f32>> = reduced
+            .vecs
+            .values()
+            .map(|v| {
+                let mut d = v.to_dense_vec();
+                d.resize(dim, 0.0);
+                d
+            })
+            .collect();
+        for e in &expected {
+            let pos = collected
+                .iter()
+                .position(|c| c.iter().zip(e).all(|(a, b)| (a - b).abs() < 1e-6));
+            let pos = pos.unwrap_or_else(|| panic!("seed {seed}: contribution lost"));
+            collected.swap_remove(pos);
+        }
+        // sparse inputs stay sparse through collection (no silent densify)
+        let reduced_sparse = reduced
+            .vecs
+            .values()
+            .filter(|v| matches!(v, StatValue::Sparse { .. }))
+            .count();
+        assert_eq!(reduced_sparse, sparse_count, "seed {seed}");
     }
 }
 
