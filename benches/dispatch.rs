@@ -1,0 +1,255 @@
+//! Bench: the dispatch engines (ISSUE 3) on a heavy-tailed synthetic
+//! cohort — log-normal user sizes, 4 workers, a model whose per-user
+//! cost is proportional to its datapoints (busy-wait emulated, so the
+//! measured gap is deterministic up to OS jitter).
+//!
+//! Emits `BENCH_dispatch.json`:
+//! * `dispatch/{static,worksteal}/straggler_ns` — measured per-round
+//!   straggler gap (max − min worker busy). WorkStealing must report a
+//!   strictly smaller gap than Static on this workload.
+//! * `dispatch/worksteal/steals` — users migrated off stragglers.
+//! * `dispatch/async/{rounds,wall_ns}` — the async engine completes its
+//!   round budget with no all-worker barrier (round count independent of
+//!   the slowest worker).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pfl::baselines::OverheadProfile;
+use pfl::data::{FederatedDataset, UserData};
+use pfl::fl::algorithm::RunSpec;
+use pfl::fl::backend::{BackendBuilder, RunParams};
+use pfl::fl::central_opt::Sgd;
+use pfl::fl::context::{CentralContext, DispatchSpec, LocalParams};
+use pfl::fl::dispatch::{steal_count, Dispatcher, StaticDispatcher, WorkStealingDispatcher};
+use pfl::fl::model::{ScoreSink, TrainOutput};
+use pfl::fl::worker::{WorkerPool, WorkerShared};
+use pfl::fl::{FedAvg, Metrics, Model, SchedulerKind, SumAggregator};
+use pfl::simsys::straggler_gap_nanos;
+use pfl::util::bench::{write_bench_json, BenchRecord, CountingAlloc};
+use pfl::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const DIM: usize = 4;
+const WORKERS: usize = 4;
+/// Busy-wait per datapoint: a median (~e^3 ≈ 20 point) user costs ~1 ms.
+const NS_PER_POINT: u64 = 50_000;
+
+/// Log-normal user sizes (FLAIR-like dispersion), data itself is dummy.
+struct LogNormalUsers {
+    sizes: Vec<usize>,
+}
+
+impl LogNormalUsers {
+    fn new(users: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        LogNormalUsers {
+            sizes: (0..users).map(|_| rng.lognormal(3.0, 1.2).ceil().max(1.0) as usize).collect(),
+        }
+    }
+}
+
+impl FederatedDataset for LogNormalUsers {
+    fn name(&self) -> &str {
+        "lognormal-spin"
+    }
+    fn num_users(&self) -> usize {
+        self.sizes.len()
+    }
+    fn user_data(&self, uid: usize) -> UserData {
+        UserData::Points { x: vec![0.0; self.sizes[uid] * DIM], dim: DIM }
+    }
+    fn user_len(&self, uid: usize) -> usize {
+        self.sizes[uid]
+    }
+    fn central_eval(&self, _shard_size: usize) -> Vec<UserData> {
+        Vec::new()
+    }
+}
+
+/// A model whose local training cost is `datapoints × NS_PER_POINT`
+/// (busy-wait, like the baseline overhead emulation in `worker.rs`).
+struct SpinModel {
+    central: Vec<f32>,
+}
+
+fn spin_ns(ns: u64) {
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+impl Model for SpinModel {
+    fn param_count(&self) -> usize {
+        self.central.len()
+    }
+    fn set_central(&mut self, central: &[f32]) {
+        self.central.copy_from_slice(central);
+    }
+    fn central(&self) -> &[f32] {
+        &self.central
+    }
+    fn train_local(
+        &mut self,
+        data: &UserData,
+        _p: &LocalParams,
+        _c_diff: Option<&[f32]>,
+        _seed: u64,
+    ) -> anyhow::Result<TrainOutput> {
+        let n = data.len();
+        spin_ns(n as u64 * NS_PER_POINT);
+        Ok(TrainOutput {
+            update: vec![0.001; DIM],
+            loss_sum: n as f64,
+            stat_sum: 0.0,
+            wsum: n as f64,
+            steps: 1,
+        })
+    }
+    fn evaluate(&mut self, _data: &UserData, _sink: Option<&mut ScoreSink>) -> anyhow::Result<Metrics> {
+        Ok(Metrics::new())
+    }
+    fn name(&self) -> &str {
+        "spin"
+    }
+}
+
+fn spin_pool(dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
+    let spec = RunSpec { iterations: 100, cohort_size: 16, ..Default::default() };
+    WorkerPool::new(
+        WORKERS,
+        WorkerShared {
+            dataset,
+            algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
+            postprocessors: Arc::new(Vec::new()),
+            aggregator: Arc::new(SumAggregator),
+            factory: Arc::new(|_| Ok(Box::new(SpinModel { central: vec![0.0; DIM] }) as Box<dyn Model>)),
+            profile: OverheadProfile::default(),
+            seed: 0,
+            use_hlo_clip: false,
+        },
+    )
+    .unwrap()
+}
+
+fn median(mut xs: Vec<u64>) -> u64 {
+    xs.sort();
+    xs[xs.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let dataset: Arc<dyn FederatedDataset> = Arc::new(LogNormalUsers::new(48, 9));
+    let cohort: Vec<usize> = (0..dataset.num_users()).collect();
+    let weights: Vec<f64> = cohort.iter().map(|&u| dataset.user_len(u) as f64).collect();
+    let pool = spin_pool(dataset.clone());
+    let ctx = CentralContext::train(0, cohort.len(), LocalParams::default(), 1);
+    let central = Arc::new(vec![0.0f32; DIM]);
+
+    let sched = SchedulerKind::GreedyMedianBase;
+    let (mut gaps_static, mut gaps_ws, mut rounds_static, mut rounds_ws) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut steals_total = 0u64;
+    for _ in 0..5 {
+        // --- static (paper App. B.6) --------------------------------
+        let plan = StaticDispatcher { scheduler: sched }.plan(&cohort, &weights, WORKERS);
+        let t0 = Instant::now();
+        let results = pool.run_round(&ctx, central.clone(), plan.sources)?;
+        rounds_static.push(t0.elapsed().as_nanos() as u64);
+        let busy: Vec<u64> =
+            results.iter().map(|r| r.costs.iter().map(|c| c.nanos).sum()).collect();
+        gaps_static.push(straggler_gap_nanos(&busy));
+
+        // --- work-stealing (shared pull queue) ----------------------
+        let plan = WorkStealingDispatcher { scheduler: sched }.plan(&cohort, &weights, WORKERS);
+        let t0 = Instant::now();
+        let results = pool.run_round(&ctx, central.clone(), plan.sources)?;
+        rounds_ws.push(t0.elapsed().as_nanos() as u64);
+        let busy: Vec<u64> =
+            results.iter().map(|r| r.costs.iter().map(|c| c.nanos).sum()).collect();
+        let pulled: Vec<u64> = results.iter().map(|r| r.counters.users_trained).collect();
+        steals_total += steal_count(&pulled);
+        gaps_ws.push(straggler_gap_nanos(&busy));
+    }
+    pool.shutdown();
+
+    let (gap_static, gap_ws) = (median(gaps_static), median(gaps_ws));
+    println!("straggler gap (median of 5 rounds, 4 workers, lognormal cohort 48):");
+    println!("  static       {:>10.3} ms  (round {:.3} ms)", gap_static as f64 / 1e6, median(rounds_static) as f64 / 1e6);
+    println!("  work-steal   {:>10.3} ms  (round {:.3} ms, steals {steals_total})", gap_ws as f64 / 1e6, median(rounds_ws) as f64 / 1e6);
+    if gap_ws < gap_static {
+        println!("  -> work-stealing gap is {:.1}x smaller", gap_static as f64 / gap_ws.max(1) as f64);
+    } else {
+        println!("  WARNING: work-stealing gap not smaller than static on this run");
+    }
+
+    // --- async: no all-worker barrier -------------------------------
+    let spec = RunSpec {
+        iterations: 4,
+        cohort_size: 16,
+        val_cohort_size: 0,
+        eval_every: 0,
+        population: dataset.num_users(),
+        dispatch: DispatchSpec::async_mode(2, 0.5),
+        ..Default::default()
+    };
+    let alg = Arc::new(FedAvg::new(spec, Box::new(Sgd)));
+    let mut backend = BackendBuilder::new(
+        dataset,
+        alg,
+        Arc::new(|_| Ok(Box::new(SpinModel { central: vec![0.0; DIM] }) as Box<dyn Model>)),
+    )
+    .params(RunParams {
+        num_workers: WORKERS,
+        scheduler: sched,
+        dispatch: DispatchSpec::async_mode(2, 0.5),
+        ..Default::default()
+    })
+    .build()?;
+    let t0 = Instant::now();
+    let out = backend.run(vec![0.0; DIM], &mut [])?;
+    let async_wall = t0.elapsed().as_nanos() as u64;
+    println!(
+        "async: {} rounds in {:.3} ms, stale folds {}, dropped {} (no barrier; gap series all zero: {})",
+        out.rounds,
+        async_wall as f64 / 1e6,
+        out.counters.stale_updates,
+        out.counters.dropped_updates,
+        out.straggler_nanos.iter().all(|&g| g == 0),
+    );
+
+    write_bench_json(
+        "BENCH_dispatch.json",
+        &[
+            BenchRecord {
+                name: "dispatch/static/straggler_ns".into(),
+                ns_per_op: gap_static as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/worksteal/straggler_ns".into(),
+                ns_per_op: gap_ws as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/worksteal/steals".into(),
+                ns_per_op: steals_total as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/async/rounds".into(),
+                ns_per_op: out.rounds as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/async/wall_ns".into(),
+                ns_per_op: async_wall as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+        ],
+    )?;
+    println!("wrote BENCH_dispatch.json");
+    Ok(())
+}

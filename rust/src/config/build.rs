@@ -16,12 +16,15 @@ use crate::fl::backend::{BackendBuilder, RunParams, SimulatedBackend};
 use crate::fl::callbacks::CentralEvalCallback;
 use crate::fl::central_opt::{Adam, CentralOptimizer, Sgd};
 use crate::fl::context::LocalParams;
+#[cfg(feature = "hlo")]
 use crate::fl::model::HloModel;
 use crate::fl::postprocess::Postprocessor;
 use crate::fl::worker::ModelFactory;
 use crate::fl::{AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, Scaffold};
 use crate::privacy::{accountant_by_name, mechanisms::mechanism_by_name, AccountantParams};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::Manifest;
+#[cfg(feature = "hlo")]
+use crate::runtime::Runtime;
 
 pub fn build_dataset(cfg: &DatasetConfig) -> Result<Arc<dyn FederatedDataset>> {
     Ok(match cfg.kind.as_str() {
@@ -81,6 +84,9 @@ pub fn run_spec(cfg: &Config, population: usize) -> RunSpec {
         central_lr_warmup: cfg.central_opt.warmup,
         population,
         seed: cfg.seed,
+        // invalid dispatcher strings surface in build_backend; contexts
+        // fall back to the engine default here
+        dispatch: cfg.dispatch_spec().unwrap_or_default(),
     }
 }
 
@@ -149,11 +155,24 @@ pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>>
 
 /// Model factory: each worker constructs its own PJRT runtime + model
 /// from the artifacts directory (one resident model per worker).
+#[cfg(feature = "hlo")]
 pub fn hlo_factory(model: String, init_seed: u64) -> ModelFactory {
     Arc::new(move |_worker| {
         let rt = std::rc::Rc::new(Runtime::new(Manifest::load_default()?)?);
         let m = HloModel::new_owned(rt, &model, init_seed)?;
         Ok(Box::new(m) as Box<dyn crate::fl::Model>)
+    })
+}
+
+/// Without the `hlo` feature the NN-model factory is a stub that errors
+/// at model-construction time (the first round), so the launcher and
+/// experiment harness stay buildable on runners without the PJRT stack.
+#[cfg(not(feature = "hlo"))]
+pub fn hlo_factory(model: String, _init_seed: u64) -> ModelFactory {
+    Arc::new(move |_worker| {
+        anyhow::bail!(
+            "model {model:?} needs the PJRT runtime; rebuild with `--features hlo`"
+        )
     })
 }
 
@@ -174,6 +193,7 @@ pub fn headline_metric(model: &str) -> &'static str {
 }
 
 /// Central-eval callback over the dataset's held-out shards.
+#[cfg(feature = "hlo")]
 pub fn build_eval_callback(
     cfg: &Config,
     dataset: &Arc<dyn FederatedDataset>,
@@ -191,6 +211,19 @@ pub fn build_eval_callback(
     ))
 }
 
+/// Without the `hlo` feature central evaluation of NN models is
+/// unavailable — error out with the rebuild hint.
+#[cfg(not(feature = "hlo"))]
+pub fn build_eval_callback(
+    cfg: &Config,
+    _dataset: &Arc<dyn FederatedDataset>,
+) -> Result<CentralEvalCallback> {
+    anyhow::bail!(
+        "central eval of model {:?} needs the PJRT runtime; rebuild with `--features hlo`",
+        cfg.model
+    )
+}
+
 /// Assemble the full backend for a config.
 pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<SimulatedBackend> {
     let dataset = build_dataset(&cfg.dataset)?;
@@ -199,6 +232,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
     let mut builder = BackendBuilder::new(dataset, algorithm, factory).params(RunParams {
         num_workers: cfg.num_workers,
         scheduler: cfg.scheduler_kind()?,
+        dispatch: cfg.dispatch_spec()?,
         profile,
         seed: cfg.seed,
         log_every: 0,

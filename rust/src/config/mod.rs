@@ -112,6 +112,12 @@ pub struct Config {
     pub num_workers: usize,
     /// "uniform" | "greedy" | "greedy-median"
     pub scheduler: String,
+    /// "static" | "work-stealing" | "async" (see `fl::dispatch`).
+    pub dispatcher: String,
+    /// Async dispatch: staleness bound (rounds) before an update drops.
+    pub max_staleness: u64,
+    /// Async dispatch: fraction of the cohort that closes the buffer.
+    pub buffer_frac: f64,
     pub seed: u64,
 }
 
@@ -142,6 +148,20 @@ impl Config {
             "greedy" => crate::fl::SchedulerKind::Greedy,
             "greedy-median" => crate::fl::SchedulerKind::GreedyMedianBase,
             other => bail!("unknown scheduler {other:?}"),
+        })
+    }
+
+    pub fn dispatch_spec(&self) -> Result<crate::fl::DispatchSpec> {
+        let mode = match self.dispatcher.as_str() {
+            "static" => crate::fl::DispatchMode::Static,
+            "work-stealing" | "worksteal" => crate::fl::DispatchMode::WorkStealing,
+            "async" => crate::fl::DispatchMode::Async,
+            other => bail!("unknown dispatcher {other:?} (static | work-stealing | async)"),
+        };
+        Ok(crate::fl::DispatchSpec {
+            mode,
+            max_staleness: self.max_staleness,
+            buffer_frac: self.buffer_frac,
         })
     }
 
@@ -216,6 +236,9 @@ impl Config {
                 obj(vec![
                     ("num_workers", num(self.num_workers as f64)),
                     ("scheduler", s(self.scheduler.clone())),
+                    ("dispatcher", s(self.dispatcher.clone())),
+                    ("max_staleness", num(self.max_staleness as f64)),
+                    ("buffer_frac", num(self.buffer_frac)),
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
@@ -280,6 +303,19 @@ impl Config {
             local_max_steps: r.req("local_max_steps")?.as_usize()?,
             num_workers: e.req("num_workers")?.as_usize()?,
             scheduler: e.req("scheduler")?.as_str()?.to_string(),
+            // optional for configs written before the dispatch engine
+            dispatcher: match e.get("dispatcher") {
+                Some(x) => x.as_str()?.to_string(),
+                None => "static".into(),
+            },
+            max_staleness: match e.get("max_staleness") {
+                Some(x) => x.as_u64()?,
+                None => 2,
+            },
+            buffer_frac: match e.get("buffer_frac") {
+                Some(x) => x.as_f64()?,
+                None => 0.5,
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -340,6 +376,9 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         local_max_steps: 0,
         num_workers: 1,
         scheduler: "greedy-median".into(),
+        dispatcher: "static".into(),
+        max_staleness: 2,
+        buffer_frac: 0.5,
         seed: 0,
     }
 }
@@ -378,6 +417,9 @@ fn stackoverflow(dp: bool) -> Config {
         local_max_steps: 0,
         num_workers: 1,
         scheduler: "greedy-median".into(),
+        dispatcher: "static".into(),
+        max_staleness: 2,
+        buffer_frac: 0.5,
         seed: 0,
     }
 }
@@ -419,6 +461,9 @@ fn flair(iid: bool, dp: bool) -> Config {
         local_max_steps: 0,
         num_workers: 1,
         scheduler: "greedy-median".into(),
+        dispatcher: "static".into(),
+        max_staleness: 2,
+        buffer_frac: 0.5,
         seed: 0,
     }
 }
@@ -456,6 +501,9 @@ fn llm(flavor: &str, dp: bool) -> Config {
         local_max_steps: 0,
         num_workers: 1,
         scheduler: "greedy-median".into(),
+        dispatcher: "static".into(),
+        max_staleness: 2,
+        buffer_frac: 0.5,
         seed: 0,
     }
 }
@@ -590,5 +638,40 @@ mod tests {
         assert!(c.scheduler_kind().is_ok());
         c.scheduler = "bogus".into();
         assert!(c.scheduler_kind().is_err());
+    }
+
+    #[test]
+    fn dispatch_spec_parses_and_defaults() {
+        let mut c = preset("cifar10-iid").unwrap();
+        assert_eq!(c.dispatch_spec().unwrap().mode, crate::fl::DispatchMode::Static);
+        c.dispatcher = "work-stealing".into();
+        assert_eq!(c.dispatch_spec().unwrap().mode, crate::fl::DispatchMode::WorkStealing);
+        c.dispatcher = "async".into();
+        c.max_staleness = 3;
+        c.buffer_frac = 0.25;
+        let spec = c.dispatch_spec().unwrap();
+        assert_eq!(spec.mode, crate::fl::DispatchMode::Async);
+        assert_eq!(spec.max_staleness, 3);
+        assert_eq!(spec.buffer_frac, 0.25);
+        c.dispatcher = "bogus".into();
+        assert!(c.dispatch_spec().is_err());
+    }
+
+    #[test]
+    fn old_configs_without_dispatch_fields_parse() {
+        // engine section written before the dispatch engine existed
+        let json = preset("cifar10-iid").unwrap().to_json();
+        let stripped = json
+            .lines()
+            .filter(|l| {
+                !l.contains("dispatcher") && !l.contains("max_staleness")
+                    && !l.contains("buffer_frac")
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let parsed = Config::from_json(&stripped).unwrap();
+        assert_eq!(parsed.dispatcher, "static");
+        assert_eq!(parsed.max_staleness, 2);
+        assert_eq!(parsed.buffer_frac, 0.5);
     }
 }

@@ -12,6 +12,7 @@
 //! `simsys::replay_cluster`) — the documented substitution for multi-GPU
 //! scaling on this testbed.
 
+pub mod dispatch;
 pub mod privacy_fig;
 pub mod quality;
 pub mod scaling;

@@ -21,6 +21,21 @@ pub trait Aggregator: Send + Sync {
     /// a tree reduce over the worker results).
     fn worker_reduce(&self, partials: Vec<Statistics>) -> Option<Statistics>;
 
+    /// Fold one contribution scaled by `scale` — the staleness-weighted
+    /// fold of async buffered aggregation (see
+    /// [`crate::fl::dispatch::staleness_weight`]). Both the vectors and
+    /// the aggregation weight scale, so the downstream weighted average
+    /// stays consistent: a half-weighted update contributes half a user.
+    fn accumulate_scaled(&self, acc: &mut Option<Statistics>, mut user: Statistics, scale: f32) {
+        if scale != 1.0 {
+            for v in user.vecs.values_mut() {
+                v.scale(scale);
+            }
+            user.weight *= scale as f64;
+        }
+        self.accumulate(acc, user);
+    }
+
     /// True when `accumulate` is a plain pointwise sum, so the worker
     /// may fold user statistics into its resident
     /// [`crate::tensor::StatsArena`] buffers by reference instead of
@@ -183,6 +198,22 @@ mod tests {
             .unwrap();
         assert_eq!(r.vecs.len(), 3);
         assert_eq!(r.weight, 3.0);
+    }
+
+    #[test]
+    fn accumulate_scaled_discounts_vectors_and_weight() {
+        let agg = SumAggregator;
+        let mut acc = None;
+        agg.accumulate_scaled(&mut acc, stat(vec![2.0, 4.0], 1.0), 1.0);
+        agg.accumulate_scaled(&mut acc, stat(vec![2.0, 4.0], 1.0), 0.5);
+        let a = acc.unwrap();
+        assert_eq!(a.update(), &[3.0, 6.0]);
+        assert_eq!(a.weight, 1.5);
+        // scaled average equals the unscaled user's update: the discount
+        // shrinks the *influence*, not the direction
+        let mut avg = a.clone();
+        avg.average_in_place();
+        assert_eq!(avg.update(), &[2.0, 4.0]);
     }
 
     #[test]

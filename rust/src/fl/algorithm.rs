@@ -17,7 +17,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use super::central_opt::CentralOptimizer;
-use super::context::{CentralContext, LocalParams, Population};
+use super::context::{CentralContext, DispatchSpec, LocalParams, Population};
 use super::metrics::Metrics;
 use super::model::Model;
 use super::stats::{Statistics, C_DELTA};
@@ -46,6 +46,13 @@ pub struct RunSpec {
     pub population: usize,
     /// Seed stream.
     pub seed: u64,
+    /// Cohort dispatch policy stamped onto train contexts. The default
+    /// spec means "inherit `RunParams::dispatch`" (see
+    /// [`DispatchSpec`]); a non-default Static/WorkStealing spec pins
+    /// the mode per context, while Async must be selected engine-wide
+    /// through `RunParams::dispatch` (the synchronous engine errors on
+    /// async-requesting contexts rather than silently degrading).
+    pub dispatch: DispatchSpec,
 }
 
 impl Default for RunSpec {
@@ -60,6 +67,7 @@ impl Default for RunSpec {
             central_lr_warmup: 0,
             population: 1000,
             seed: 0,
+            dispatch: DispatchSpec::default(),
         }
     }
 }
@@ -77,8 +85,10 @@ impl RunSpec {
         if t >= self.iterations {
             return Vec::new(); // signal: training complete
         }
-        let mut ctxs =
-            vec![CentralContext::train(t, self.cohort_size, local, self.seed.wrapping_add(t))];
+        let mut train =
+            CentralContext::train(t, self.cohort_size, local, self.seed.wrapping_add(t));
+        train.dispatch = self.dispatch;
+        let mut ctxs = vec![train];
         if self.val_cohort_size > 0 && self.eval_every > 0 && t % self.eval_every == 0 {
             ctxs.push(CentralContext::eval(
                 t,

@@ -13,6 +13,73 @@ pub enum Population {
     Val,
 }
 
+/// How a context's cohort is distributed across worker replicas (see
+/// [`crate::fl::dispatch`] for the execution engines behind each mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Pre-computed per-worker assignments (greedy LPT schedule), barrier
+    /// on all workers — the paper's design (App. B.6), kept for baseline
+    /// comparisons and virtual-cluster replay.
+    Static,
+    /// Workers pull user ids one at a time from a shared LPT-ordered
+    /// queue; no per-cohort assignment allocation, and the straggler gap
+    /// collapses to at most one user's tail.
+    WorkStealing,
+    /// Staleness-bounded buffered aggregation (FedBuff-style extension):
+    /// workers stream per-user statistics as they finish; the server
+    /// folds the first K arrivals weighted by staleness and launches the
+    /// next context without waiting for stragglers.
+    Async,
+}
+
+/// Dispatch policy carried by a [`CentralContext`]: the mode plus the
+/// async-mode knobs.
+///
+/// The **default spec is the "inherit the engine policy" sentinel**:
+/// the backend stamps `RunParams::dispatch` over contexts that carry
+/// it, so a context cannot distinguish "unset" from a deliberate
+/// default-Static override — set a non-default spec (e.g. a different
+/// `max_staleness`) to pin Static or WorkStealing per context. Async
+/// can only be selected engine-wide via `RunParams::dispatch` (the
+/// synchronous engine rejects async-requesting contexts with an
+/// error), and the async engine stamps its own spec over every
+/// context.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchSpec {
+    pub mode: DispatchMode,
+    /// Async: drop an in-flight update once it lags the current round by
+    /// more than this many iterations.
+    pub max_staleness: u64,
+    /// Async: fraction of the cohort whose arrival closes the round's
+    /// buffer (K = ⌈frac·cohort⌉).
+    pub buffer_frac: f64,
+}
+
+impl Default for DispatchSpec {
+    fn default() -> Self {
+        DispatchSpec { mode: DispatchMode::Static, max_staleness: 2, buffer_frac: 0.5 }
+    }
+}
+
+impl DispatchSpec {
+    pub fn work_stealing() -> Self {
+        DispatchSpec { mode: DispatchMode::WorkStealing, ..Default::default() }
+    }
+
+    pub fn async_mode(max_staleness: u64, buffer_frac: f64) -> Self {
+        DispatchSpec { mode: DispatchMode::Async, max_staleness, buffer_frac }
+    }
+
+    /// Async buffer size K for a cohort of `cohort` users: ⌈frac·n⌉,
+    /// clamped into [1, n].
+    pub fn buffer_k(&self, cohort: usize) -> usize {
+        if cohort == 0 {
+            return 0;
+        }
+        ((self.buffer_frac * cohort as f64).ceil() as usize).clamp(1, cohort)
+    }
+}
+
 /// Local optimization hyperparameters, resolved to static values for one
 /// central iteration (paper App. B.1 "Hyperparameters").
 #[derive(Debug, Clone)]
@@ -50,6 +117,9 @@ pub struct CentralContext {
     pub local: LocalParams,
     /// Seed stream for this iteration (cohort sampling, DP noise).
     pub seed: u64,
+    /// How the cohort is distributed across workers (stamped from
+    /// `RunParams::dispatch` when left at the default).
+    pub dispatch: DispatchSpec,
     /// Algorithm tag for diagnostics.
     pub algorithm: &'static str,
 }
@@ -62,6 +132,7 @@ impl CentralContext {
             cohort_size,
             local,
             seed,
+            dispatch: DispatchSpec::default(),
             algorithm: "",
         }
     }
@@ -73,6 +144,7 @@ impl CentralContext {
             cohort_size,
             local: LocalParams::default(),
             seed,
+            dispatch: DispatchSpec::default(),
             algorithm: "",
         }
     }
@@ -101,5 +173,24 @@ mod tests {
         let p = LocalParams::default();
         assert_eq!(p.mu, 0.0);
         assert_eq!(p.epochs, 1);
+    }
+
+    #[test]
+    fn default_dispatch_is_static() {
+        let c = CentralContext::train(0, 10, LocalParams::default(), 0);
+        assert_eq!(c.dispatch.mode, DispatchMode::Static);
+        assert_eq!(DispatchSpec::work_stealing().mode, DispatchMode::WorkStealing);
+    }
+
+    #[test]
+    fn buffer_k_clamps() {
+        let spec = DispatchSpec::async_mode(2, 0.5);
+        assert_eq!(spec.buffer_k(0), 0);
+        assert_eq!(spec.buffer_k(1), 1);
+        assert_eq!(spec.buffer_k(10), 5);
+        assert_eq!(spec.buffer_k(11), 6);
+        // frac > 1 clamps to the full cohort; frac <= 0 to one arrival
+        assert_eq!(DispatchSpec::async_mode(2, 5.0).buffer_k(8), 8);
+        assert_eq!(DispatchSpec::async_mode(2, 0.0).buffer_k(8), 1);
     }
 }

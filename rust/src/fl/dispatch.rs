@@ -1,0 +1,385 @@
+//! Pull-based round dispatch: how a sampled cohort reaches the worker
+//! replicas.
+//!
+//! The paper's distributed deployment (App. B.6) pre-computes per-worker
+//! assignments because its worker *processes* cannot cheaply pull user
+//! ids from a central queue; static greedy LPT scheduling recovers ~19%
+//! on FLAIR. Our workers are in-process replica threads, so that
+//! constraint does not apply and the dispatcher becomes a pluggable
+//! policy with three modes ([`crate::fl::context::DispatchMode`]):
+//!
+//! * **Static** — the paper-faithful design: [`super::scheduler`] packs
+//!   the cohort into owned per-worker queues, the backend barriers on
+//!   all workers. Keep this for baseline comparisons (Tables 1–2, 5) and
+//!   for the virtual-cluster replay, whose roofline model assumes
+//!   precomputed queues.
+//! * **WorkStealing** — an extension the paper's architecture cannot
+//!   express: one shared [`CohortQueue`] in LPT order, consumed through
+//!   an atomic cursor. No per-cohort assignment allocation, and the
+//!   measured straggler gap (`sys/straggler-secs`) collapses to at most
+//!   one user's tail because a worker that finishes early keeps pulling.
+//! * **Async** — staleness-bounded buffered aggregation (FedBuff-style;
+//!   also an extension — none of the frameworks the paper compares
+//!   simulate it). Workers stream per-user statistics; the server folds
+//!   the first K arrivals weighted by [`staleness_weight`] and opens the
+//!   next context without waiting for stragglers. The async engine lives
+//!   in `backend::run_async`; this module supplies its drain/eval plans.
+//!
+//! Statistics invariance: under an exchange-law aggregator (e.g.
+//! `SumAggregator`) Static and WorkStealing produce identical reduced
+//! statistics — only *which worker* folds a user changes, never the sum
+//! (property-tested in this module and in `worker.rs`). This holds even
+//! with per-user DP postprocessors because the worker derives their RNG
+//! from (run seed, context seed, uid), never from a worker-thread
+//! stream — the thread race over the pull queue cannot leak into the
+//! noise. Async changes
+//! the learning dynamics by design (partial cohorts, staleness
+//! discounts) and is therefore *not* paper-faithful; it opens a workload
+//! class, not a faster path to the same numbers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::context::{DispatchMode, DispatchSpec};
+use super::scheduler::{order, schedule, SchedulerKind};
+
+/// A shared pull queue over one cohort: user ids in dispatch order,
+/// consumed lock-free through an atomic cursor. Cloning the `Arc` hands
+/// the same queue to every worker.
+#[derive(Debug)]
+pub struct CohortQueue {
+    users: Vec<usize>,
+    cursor: AtomicUsize,
+}
+
+impl CohortQueue {
+    pub fn new(users: Vec<usize>) -> Self {
+        CohortQueue { users, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Claim the next user id, or `None` once the cohort is exhausted.
+    pub fn pop(&self) -> Option<usize> {
+        // Relaxed is enough: the slot index is the only shared state and
+        // fetch_add makes each index claimed exactly once; `users` is
+        // immutable and published by the channel send of the command.
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.users.get(i).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.users.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.users.is_empty()
+    }
+
+    /// Users not yet claimed (approximate under concurrency; used only
+    /// as a capacity hint).
+    pub fn remaining(&self) -> usize {
+        self.users.len().saturating_sub(self.cursor.load(Ordering::Relaxed))
+    }
+}
+
+/// One worker's work for one round: an owned queue (static schedule) or
+/// a shared pull queue (work-stealing / async drain).
+pub enum WorkSource {
+    Owned(Vec<usize>),
+    Shared(Arc<CohortQueue>),
+}
+
+impl WorkSource {
+    /// Capacity hint for per-user bookkeeping: exact for owned queues,
+    /// 0 for shared queues (a shared source *could* yield the whole
+    /// remaining cohort, but reserving that much in every worker would
+    /// allocate W× the cohort; amortized Vec growth is cheaper).
+    pub fn len_hint(&self) -> usize {
+        match self {
+            WorkSource::Owned(v) => v.len(),
+            WorkSource::Shared(_) => 0,
+        }
+    }
+
+    /// Convert into a draining pull iterator.
+    pub fn into_pull(self) -> WorkIter {
+        match self {
+            WorkSource::Owned(v) => WorkIter::Owned(v.into_iter()),
+            WorkSource::Shared(q) => WorkIter::Shared(q),
+        }
+    }
+}
+
+/// Draining iterator over a [`WorkSource`]; for shared sources every
+/// `next` is a fresh claim against the cohort-wide cursor.
+pub enum WorkIter {
+    Owned(std::vec::IntoIter<usize>),
+    Shared(Arc<CohortQueue>),
+}
+
+impl Iterator for WorkIter {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            WorkIter::Owned(it) => it.next(),
+            WorkIter::Shared(q) => q.pop(),
+        }
+    }
+}
+
+/// The per-cohort distribution produced by a [`Dispatcher`].
+pub struct DispatchPlan {
+    /// One source per worker, in worker order.
+    pub sources: Vec<WorkSource>,
+    /// True when the sources share one pull queue (enables steal
+    /// accounting in the backend).
+    pub shared: bool,
+}
+
+/// Cohort distribution policy: turns (cohort, weights) into per-worker
+/// work sources. Consumes [`super::scheduler`] as the ordering policy.
+pub trait Dispatcher: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn mode(&self) -> DispatchMode;
+
+    /// Distribute one cohort across `num_workers` workers. `weights[i]`
+    /// is the scheduling weight of `cohort[i]`.
+    fn plan(&self, cohort: &[usize], weights: &[f64], num_workers: usize) -> DispatchPlan;
+}
+
+/// Paper-faithful static dispatch: greedy LPT packing into owned
+/// per-worker queues (App. B.6).
+pub struct StaticDispatcher {
+    pub scheduler: SchedulerKind,
+}
+
+impl Dispatcher for StaticDispatcher {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn mode(&self) -> DispatchMode {
+        DispatchMode::Static
+    }
+
+    fn plan(&self, cohort: &[usize], weights: &[f64], num_workers: usize) -> DispatchPlan {
+        let sched = schedule(self.scheduler, weights, num_workers);
+        let sources = sched
+            .assignments
+            .iter()
+            .map(|idxs| WorkSource::Owned(idxs.iter().map(|&i| cohort[i]).collect()))
+            .collect();
+        DispatchPlan { sources, shared: false }
+    }
+}
+
+/// Pull-based dispatch: one shared queue in scheduler order, every
+/// worker claims users until the cohort is dry.
+pub struct WorkStealingDispatcher {
+    pub scheduler: SchedulerKind,
+}
+
+impl Dispatcher for WorkStealingDispatcher {
+    fn name(&self) -> &'static str {
+        "work-stealing"
+    }
+
+    fn mode(&self) -> DispatchMode {
+        DispatchMode::WorkStealing
+    }
+
+    fn plan(&self, cohort: &[usize], weights: &[f64], num_workers: usize) -> DispatchPlan {
+        let users: Vec<usize> =
+            order(self.scheduler, weights).into_iter().map(|i| cohort[i]).collect();
+        let q = Arc::new(CohortQueue::new(users));
+        let sources = (0..num_workers.max(1)).map(|_| WorkSource::Shared(q.clone())).collect();
+        DispatchPlan { sources, shared: true }
+    }
+}
+
+/// The dispatcher implementing a [`DispatchSpec`]. `Async` maps to the
+/// pull-queue dispatcher: the async engine (`backend::run_async`) drives
+/// its own per-user streaming and uses this plan only for the barrier
+/// phases it still needs (federated eval, drains).
+pub fn dispatcher_for(spec: DispatchSpec, scheduler: SchedulerKind) -> Box<dyn Dispatcher> {
+    match spec.mode {
+        DispatchMode::Static => Box::new(StaticDispatcher { scheduler }),
+        DispatchMode::WorkStealing | DispatchMode::Async => {
+            Box::new(WorkStealingDispatcher { scheduler })
+        }
+    }
+}
+
+/// FedBuff-style staleness discount for an update that lags the current
+/// round by `staleness` iterations: 1/(1+s). Pure in `s`, so async
+/// aggregation is deterministic given the arrival order.
+pub fn staleness_weight(staleness: u64) -> f32 {
+    1.0 / (1.0 + staleness as f32)
+}
+
+/// Steal accounting for a shared-queue round: given per-worker pull
+/// counts, the number of users pulled beyond the even ⌈n/w⌉ share — the
+/// load the pull queue migrated relative to a uniform split (0 when the
+/// cohort happens to divide evenly across equally-fast workers).
+pub fn steal_count(pulled: &[u64]) -> u64 {
+    if pulled.is_empty() {
+        return 0;
+    }
+    let n: u64 = pulled.iter().sum();
+    let share = n.div_ceil(pulled.len() as u64);
+    pulled.iter().map(|&p| p.saturating_sub(share)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_pops_each_user_once() {
+        let q = CohortQueue::new(vec![7, 8, 9]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.remaining(), 3);
+        let mut seen = vec![q.pop(), q.pop(), q.pop()];
+        seen.sort();
+        assert_eq!(seen, vec![Some(7), Some(8), Some(9)]);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // stays exhausted
+        assert_eq!(q.remaining(), 0);
+    }
+
+    #[test]
+    fn queue_is_unique_under_concurrency() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let q = Arc::new(CohortQueue::new((0..1000).collect()));
+        let seen = Arc::new(Mutex::new(HashSet::new()));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(u) = q.pop() {
+                    assert!(seen.lock().unwrap().insert(u), "user {u} claimed twice");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.lock().unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn static_plan_partitions_the_cohort() {
+        let cohort = vec![10, 11, 12, 13, 14];
+        let weights = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        let plan = StaticDispatcher { scheduler: SchedulerKind::Greedy }.plan(&cohort, &weights, 2);
+        assert!(!plan.shared);
+        assert_eq!(plan.sources.len(), 2);
+        let mut all: Vec<usize> = plan
+            .sources
+            .into_iter()
+            .flat_map(|s| match s {
+                WorkSource::Owned(v) => v,
+                WorkSource::Shared(_) => panic!("static plan must own its queues"),
+            })
+            .collect();
+        all.sort();
+        assert_eq!(all, cohort);
+    }
+
+    #[test]
+    fn worksteal_plan_shares_one_lpt_queue() {
+        let cohort = vec![10, 11, 12];
+        let weights = vec![1.0, 9.0, 5.0];
+        let plan =
+            WorkStealingDispatcher { scheduler: SchedulerKind::Greedy }.plan(&cohort, &weights, 3);
+        assert!(plan.shared);
+        assert_eq!(plan.sources.len(), 3);
+        let q = match &plan.sources[0] {
+            WorkSource::Shared(q) => q.clone(),
+            WorkSource::Owned(_) => panic!("worksteal plan must share"),
+        };
+        // heaviest first
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), Some(12));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), None);
+        // the other sources drain the same (now exhausted) queue
+        assert_eq!(q.remaining(), 0);
+        // shared sources never reserve cohort-sized bookkeeping
+        assert_eq!(plan.sources[1].len_hint(), 0);
+    }
+
+    #[test]
+    fn dispatcher_for_maps_modes() {
+        let k = SchedulerKind::Greedy;
+        assert_eq!(dispatcher_for(DispatchSpec::default(), k).mode(), DispatchMode::Static);
+        assert_eq!(
+            dispatcher_for(DispatchSpec::work_stealing(), k).mode(),
+            DispatchMode::WorkStealing
+        );
+        // async uses the pull queue for its barrier phases
+        assert_eq!(
+            dispatcher_for(DispatchSpec::async_mode(2, 0.5), k).mode(),
+            DispatchMode::WorkStealing
+        );
+    }
+
+    #[test]
+    fn staleness_weight_decays_from_one() {
+        assert_eq!(staleness_weight(0), 1.0);
+        assert_eq!(staleness_weight(1), 0.5);
+        assert!(staleness_weight(2) < staleness_weight(1));
+    }
+
+    #[test]
+    fn steal_count_measures_imbalance() {
+        assert_eq!(steal_count(&[]), 0);
+        assert_eq!(steal_count(&[3, 3, 3]), 0); // even split
+        assert_eq!(steal_count(&[4, 3, 2]), 1); // 9 users / 3 -> share 3
+        assert_eq!(steal_count(&[9, 0, 0]), 6);
+        assert_eq!(steal_count(&[4, 3]), 0); // 7 users / 2 -> share 4
+    }
+
+    #[test]
+    fn worksteal_matches_static_reduction() {
+        // Exchange-law extension of `pool_result_independent_of_worker
+        // _count`: pulling from a shared queue must produce the same
+        // reduced statistics as the precomputed LPT assignment.
+        use crate::data::FederatedDataset;
+        use crate::fl::aggregator::Aggregator;
+        use crate::fl::context::CentralContext;
+        use crate::fl::worker::tests::mean_pool;
+
+        let data: std::sync::Arc<dyn FederatedDataset> =
+            std::sync::Arc::new(crate::data::SynthGmmPoints::new(12, 10, 2, 2, 3));
+        let cohort: Vec<usize> = (0..12).collect();
+        let weights: Vec<f64> = cohort.iter().map(|&u| data.user_len(u) as f64).collect();
+        let ctx = CentralContext::train(0, 12, Default::default(), 1);
+        let agg = crate::fl::SumAggregator;
+
+        let mut reduced = Vec::new();
+        for dispatcher in [
+            Box::new(StaticDispatcher { scheduler: SchedulerKind::Greedy }) as Box<dyn Dispatcher>,
+            Box::new(WorkStealingDispatcher { scheduler: SchedulerKind::Greedy }),
+        ] {
+            let pool = mean_pool(3, 2, data.clone());
+            let plan = dispatcher.plan(&cohort, &weights, pool.num_workers);
+            let results = pool
+                .run_round(&ctx, std::sync::Arc::new(vec![0.0; 2]), plan.sources)
+                .unwrap();
+            let trained: u64 = results.iter().map(|r| r.counters.users_trained).sum();
+            assert_eq!(trained, 12, "{} trained the wrong user count", dispatcher.name());
+            let partials: Vec<_> = results.into_iter().filter_map(|r| r.partial).collect();
+            reduced.push(agg.worker_reduce(partials).unwrap());
+            pool.shutdown();
+        }
+        let (a, b) = (&reduced[0], &reduced[1]);
+        assert_eq!(a.weight, b.weight);
+        for (x, y) in a.update().iter().zip(b.update()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+}

@@ -6,7 +6,8 @@
 //! [`postprocess`] (Postprocessor — DP, weighting, compression),
 //! [`callbacks`] (TrainingProcessCallback), [`hyperparam`] (HyperParam),
 //! [`metrics`] (central vs per-user), [`model`] (Model adapters),
-//! [`scheduler`] (greedy user load balancing, App. B.6) and [`worker`]
+//! [`scheduler`] (cohort ordering policy, App. B.6), [`dispatch`]
+//! (static / work-stealing / async cohort distribution) and [`worker`]
 //! (replica worker pool, §3.1 / Fig. 1).
 
 pub mod aggregator;
@@ -15,6 +16,7 @@ pub mod backend;
 pub mod callbacks;
 pub mod central_opt;
 pub mod context;
+pub mod dispatch;
 pub mod gbdt;
 pub mod gmm;
 pub mod hyperparam;
@@ -34,10 +36,16 @@ pub use callbacks::{
     StragglerRecorder, TimeBudget,
 };
 pub use central_opt::{Adam, CentralOptimizer, Sgd};
-pub use context::{CentralContext, LocalParams, Population};
+pub use context::{CentralContext, DispatchMode, DispatchSpec, LocalParams, Population};
+pub use dispatch::{
+    dispatcher_for, staleness_weight, CohortQueue, DispatchPlan, Dispatcher, StaticDispatcher,
+    WorkSource, WorkStealingDispatcher,
+};
 pub use linear::LinearModel;
 pub use metrics::{MetricValue, Metrics};
-pub use model::{ClipKernel, HloModel, Model, TrainOutput};
-pub use scheduler::{median, schedule, Schedule, SchedulerKind};
+#[cfg(feature = "hlo")]
+pub use model::HloModel;
+pub use model::{ClipKernel, Model, TrainOutput};
+pub use scheduler::{median, order, schedule, Schedule, SchedulerKind};
 pub use stats::{StatValue, Statistics, C_DELTA, UPDATE};
 pub use worker::{RoundResult, WorkerPool};

@@ -13,14 +13,19 @@
 //! mirrors that: `central`, `work` and the batch staging buffers are
 //! allocated at construction and reused for every user of every round.
 
+#[cfg(feature = "hlo")]
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "hlo")]
+use anyhow::{bail, Context};
+use anyhow::Result;
 
 use super::context::LocalParams;
 use super::metrics::Metrics;
 use crate::data::UserData;
+#[cfg(feature = "hlo")]
 use crate::runtime::{Arg, Compiled, ModelEntry, Out, Runtime};
+#[cfg(feature = "hlo")]
 use crate::util::rng::Rng;
 
 /// Output of one user's local optimization.
@@ -104,6 +109,8 @@ pub trait Model {
 
 /// A NN benchmark model: AOT-lowered train/eval/clip artifacts plus the
 /// flat-parameter buffers, executed through the worker's PJRT runtime.
+/// Requires the `hlo` cargo feature (the `xla` crate).
+#[cfg(feature = "hlo")]
 pub struct HloModel {
     model_name: String,
     entry: ModelEntry,
@@ -130,6 +137,7 @@ pub struct HloModel {
 }
 
 /// Preallocated padded-batch staging buffers.
+#[cfg(feature = "hlo")]
 struct BatchStage {
     batch: usize,
     xf: Vec<f32>,
@@ -139,6 +147,7 @@ struct BatchStage {
     w: Vec<f32>,
 }
 
+#[cfg(feature = "hlo")]
 impl BatchStage {
     fn new(batch: usize, x_elems: usize, y_elems: usize) -> Self {
         BatchStage {
@@ -152,6 +161,7 @@ impl BatchStage {
     }
 }
 
+#[cfg(feature = "hlo")]
 impl HloModel {
     /// Build a model from the manifest entry `name`, compiling (or reusing
     /// the worker's cached) train/eval/clip executables.
@@ -290,6 +300,7 @@ impl HloModel {
     }
 }
 
+#[cfg(feature = "hlo")]
 impl Model for HloModel {
     fn param_count(&self) -> usize {
         self.central.len()
@@ -419,6 +430,7 @@ impl Model for HloModel {
     }
 }
 
+#[cfg(feature = "hlo")]
 impl ClipKernel for HloModel {
     /// Run the L1 Pallas `clip_scale` artifact: v ← v·min(1, bound/‖v‖₂),
     /// returning the pre-clip norm.

@@ -1,13 +1,20 @@
-//! Worker scheduling of training users (paper §3.1 + App. B.6).
+//! Cohort **ordering policy** for worker dispatch (paper §3.1 + App. B.6).
 //!
-//! To minimize latency, workers cannot pull user IDs from a central queue;
-//! the assignment is pre-calculated per cohort. Users are sorted by weight
-//! (descending) and greedily assigned to the worker with the smallest
-//! accumulated total — classic LPT bin packing. The weight is a proxy for
-//! per-user wall-clock (the number of datapoints: Fig. 4a shows the
-//! correlation), and adding a small **base value** (≈ the median user
-//! size) to every weight models the fixed per-user overhead, which App.
-//! B.6 shows buys an extra ~3% (19% total vs no scheduling on FLAIR).
+//! The paper's distributed deployment pre-calculates per-cohort
+//! assignments because its worker *processes* cannot cheaply pull user
+//! ids from a central queue. Our in-process replica threads don't share
+//! that constraint, so this module is now the policy layer consumed by
+//! [`crate::fl::dispatch`]: [`order`] yields the dispatch order (LPT —
+//! largest effective weight first — for the greedy kinds, arrival order
+//! for `Uniform`), and [`schedule`] packs that order into static
+//! per-worker assignments (classic greedy LPT bin packing) for the
+//! paper-faithful `Static` mode and the virtual-cluster replay.
+//!
+//! The weight is a proxy for per-user wall-clock (the number of
+//! datapoints: Fig. 4a shows the correlation), and adding a small **base
+//! value** (≈ the median user size) to every weight models the fixed
+//! per-user overhead, which App. B.6 shows buys an extra ~3% (19% total
+//! vs no scheduling on FLAIR).
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SchedulerKind {
@@ -46,13 +53,38 @@ impl Schedule {
     }
 }
 
-/// Compute the per-cohort assignment. `weights[i]` is the scheduling
-/// weight of cohort member i (user dataset length).
-pub fn schedule(kind: SchedulerKind, weights: &[f64], num_workers: usize) -> Schedule {
-    let kind = match kind {
+/// Resolve per-cohort kinds (`GreedyMedianBase` computes its base from
+/// the cohort at hand) into a concrete kind.
+fn resolve(kind: SchedulerKind, weights: &[f64]) -> SchedulerKind {
+    match kind {
         SchedulerKind::GreedyMedianBase => SchedulerKind::GreedyBase { base: median(weights) },
         k => k,
-    };
+    }
+}
+
+/// The ordering policy consumed by dispatchers: indices of cohort
+/// members in dispatch order — largest effective weight first (LPT) for
+/// the greedy kinds, arrival order for `Uniform`. Pull-based dispatchers
+/// enqueue users in this order so the heaviest users start earliest and
+/// the straggler tail is at most one (small) user long.
+pub fn order(kind: SchedulerKind, weights: &[f64]) -> Vec<usize> {
+    let kind = resolve(kind, weights);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    if kind != SchedulerKind::Uniform {
+        // stable sort by effective weight, largest first (LPT)
+        order.sort_by(|&a, &b| {
+            effective(kind, weights[b])
+                .partial_cmp(&effective(kind, weights[a]))
+                .unwrap()
+        });
+    }
+    order
+}
+
+/// Compute the per-cohort static assignment. `weights[i]` is the
+/// scheduling weight of cohort member i (user dataset length).
+pub fn schedule(kind: SchedulerKind, weights: &[f64], num_workers: usize) -> Schedule {
+    let kind = resolve(kind, weights);
     let n = num_workers.max(1);
     let mut assignments = vec![Vec::new(); n];
     let mut totals = vec![0f64; n];
@@ -66,17 +98,10 @@ pub fn schedule(kind: SchedulerKind, weights: &[f64], num_workers: usize) -> Sch
             }
         }
         SchedulerKind::Greedy | SchedulerKind::GreedyBase { .. } | SchedulerKind::GreedyMedianBase => {
-            let mut order: Vec<usize> = (0..weights.len()).collect();
-            // sort by effective weight, largest first (LPT)
-            order.sort_by(|&a, &b| {
-                effective(kind, weights[b])
-                    .partial_cmp(&effective(kind, weights[a]))
-                    .unwrap()
-            });
             // binary heap of (total, worker) would be O(n log w); with the
             // worker counts used in simulations a linear argmin is fine and
             // branch-predictable. Perf pass: see benches/scheduler.rs.
-            for i in order {
+            for i in order(kind, weights) {
                 let w = effective(kind, weights[i]);
                 let (worker, _) = totals
                     .iter()
@@ -207,6 +232,17 @@ mod tests {
         let a = schedule(SchedulerKind::Greedy, &w, 4);
         let b = schedule(SchedulerKind::Greedy, &w, 4);
         assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn order_is_lpt_for_greedy_and_fifo_for_uniform() {
+        let w = vec![2.0, 9.0, 4.0];
+        assert_eq!(order(SchedulerKind::Greedy, &w), vec![1, 2, 0]);
+        assert_eq!(order(SchedulerKind::Uniform, &w), vec![0, 1, 2]);
+        // a constant base shifts every weight equally: same order
+        assert_eq!(order(SchedulerKind::GreedyBase { base: 100.0 }, &w), vec![1, 2, 0]);
+        assert_eq!(order(SchedulerKind::GreedyMedianBase, &w), vec![1, 2, 0]);
+        assert!(order(SchedulerKind::Greedy, &[]).is_empty());
     }
 
     #[test]

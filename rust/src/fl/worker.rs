@@ -5,10 +5,13 @@
 //! Here a "process" is a thread that owns its own PJRT runtime + model
 //! (the `Runtime` type is deliberately `!Send`, so each worker constructs
 //! its own — the exact replica model of the paper). Workers receive a
-//! per-round command (context + central state + their slice of the
-//! cohort), train their queue of users, locally accumulate statistics,
-//! and return one partial per round; the backend then performs the
-//! all-reduce-equivalent `worker_reduce`.
+//! per-round command (context + central state + a [`WorkSource`]: an
+//! owned queue from the static LPT schedule, or a shared pull queue they
+//! drain user-by-user — unlike the paper's distributed processes, our
+//! in-process replicas *can* pull from a central queue, see
+//! [`super::dispatch`]), train the users they claim, locally accumulate
+//! statistics, and return one partial per command; the backend then
+//! performs the all-reduce-equivalent `worker_reduce`.
 //!
 //! The optional topology emulation (a dedicated coordinator thread that
 //! every per-user update is serialized through) exists only for the
@@ -26,6 +29,7 @@ use anyhow::{anyhow, Context, Result};
 use super::aggregator::Aggregator;
 use super::algorithm::FederatedAlgorithm;
 use super::context::CentralContext;
+use super::dispatch::WorkSource;
 use super::metrics::Metrics;
 use super::model::{Model, RustClip};
 use super::postprocess::{Postprocessor, PpEnv};
@@ -45,8 +49,9 @@ enum Cmd {
     Round {
         ctx: CentralContext,
         central: Arc<Vec<f32>>,
-        /// User ids assigned to this worker, in training order.
-        users: Vec<usize>,
+        /// This worker's work: an owned queue (static schedule) or a
+        /// shared pull queue it drains user-by-user.
+        work: WorkSource,
     },
     Stop,
 }
@@ -54,6 +59,9 @@ enum Cmd {
 /// One worker's per-round result.
 pub struct RoundResult {
     pub worker: usize,
+    /// Central iteration the command was issued for (async mode computes
+    /// staleness from this when the result arrives rounds later).
+    pub round: u64,
     pub partial: Option<Statistics>,
     pub metrics: Metrics,
     pub counters: Counters,
@@ -139,18 +147,19 @@ impl WorkerPool {
         Ok(WorkerPool { cmd_txs, res_rx, handles, coordinator, num_workers })
     }
 
-    /// Run one (context, cohort) round: distribute per-worker user queues,
-    /// wait for every worker, return the per-worker results in worker
-    /// order. `assignments[w]` is worker w's queue of user ids.
+    /// Run one (context, cohort) round: hand each worker its
+    /// [`WorkSource`] (a [`crate::fl::dispatch::DispatchPlan`]'s
+    /// sources), wait for every worker, return the per-worker results in
+    /// worker order — the barrier used by Static and WorkStealing modes.
     pub fn run_round(
         &self,
         ctx: &CentralContext,
         central: Arc<Vec<f32>>,
-        assignments: Vec<Vec<usize>>,
+        sources: Vec<WorkSource>,
     ) -> Result<Vec<RoundResult>> {
-        assert_eq!(assignments.len(), self.num_workers);
-        for (tx, users) in self.cmd_txs.iter().zip(assignments) {
-            tx.send(Cmd::Round { ctx: ctx.clone(), central: central.clone(), users })
+        assert_eq!(sources.len(), self.num_workers);
+        for (tx, work) in self.cmd_txs.iter().zip(sources) {
+            tx.send(Cmd::Round { ctx: ctx.clone(), central: central.clone(), work })
                 .map_err(|_| anyhow!("worker channel closed"))?;
         }
         let mut results: Vec<Option<RoundResult>> = (0..self.num_workers).map(|_| None).collect();
@@ -166,6 +175,26 @@ impl WorkerPool {
         Ok(out)
     }
 
+    /// Dispatch a single user to one worker without waiting (async mode).
+    /// Exactly one [`RoundResult`] will later arrive via
+    /// [`Self::recv_result`] for every dispatched command.
+    pub fn send_user(
+        &self,
+        worker: usize,
+        ctx: &CentralContext,
+        central: Arc<Vec<f32>>,
+        uid: usize,
+    ) -> Result<()> {
+        self.cmd_txs[worker]
+            .send(Cmd::Round { ctx: ctx.clone(), central, work: WorkSource::Owned(vec![uid]) })
+            .map_err(|_| anyhow!("worker channel closed"))
+    }
+
+    /// Block until the next worker result arrives (async mode).
+    pub fn recv_result(&self) -> Result<RoundResult> {
+        self.res_rx.recv().context("worker result channel closed")
+    }
+
     /// Coordinator message/byte counters (baselines diagnostics).
     pub fn coordinator_traffic(&self) -> (u64, u64) {
         match &self.coordinator {
@@ -174,7 +203,10 @@ impl WorkerPool {
         }
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop every worker (and the coordinator) and join their threads.
+    /// Idempotent: the explicit [`Self::shutdown`] and the `Drop` both
+    /// funnel here.
+    fn join_all(&mut self) {
         for tx in &self.cmd_txs {
             let _ = tx.send(Cmd::Stop);
         }
@@ -186,20 +218,15 @@ impl WorkerPool {
             let _ = c.handle.join();
         }
     }
+
+    pub fn shutdown(mut self) {
+        self.join_all();
+    }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        for tx in &self.cmd_txs {
-            let _ = tx.send(Cmd::Stop);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-        if let Some(c) = self.coordinator.take() {
-            let _ = c.tx.send(CoordMsg::Stop);
-            let _ = c.handle.join();
-        }
+        self.join_all();
     }
 }
 
@@ -234,7 +261,6 @@ fn worker_loop(
     // Build this replica's model here: one model per worker, alive for
     // the whole simulation (paper §3 item 1).
     let mut model: Option<Box<dyn Model>> = None;
-    let mut rng = Rng::seed_from_u64(shared.seed ^ (id as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
     // Worker-local accumulation arena, resident for the whole simulation
     // so steady-state rounds fold user statistics with zero allocation.
     let mut arena = StatsArena::new();
@@ -242,13 +268,14 @@ fn worker_loop(
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::Stop => break,
-            Cmd::Round { ctx, central, users } => {
+            Cmd::Round { ctx, central, work } => {
                 if model.is_none() {
                     match (shared.factory)(id) {
                         Ok(m) => model = Some(m),
                         Err(e) => {
                             let _ = res_tx.send(RoundResult {
                                 worker: id,
+                                round: ctx.iteration,
                                 partial: None,
                                 metrics: Metrics::new(),
                                 counters: Counters::default(),
@@ -265,8 +292,7 @@ fn worker_loop(
                     &shared,
                     &ctx,
                     &central,
-                    &users,
-                    &mut rng,
+                    work,
                     &mut arena,
                     coord_tx.as_ref(),
                 );
@@ -274,6 +300,7 @@ fn worker_loop(
                     Ok(r) => r,
                     Err(e) => RoundResult {
                         worker: id,
+                        round: ctx.iteration,
                         partial: None,
                         metrics: Metrics::new(),
                         counters: Counters::default(),
@@ -308,14 +335,13 @@ fn run_worker_round(
     shared: &WorkerShared,
     ctx: &CentralContext,
     central: &[f32],
-    users: &[usize],
-    rng: &mut Rng,
+    work: WorkSource,
     arena: &mut StatsArena,
     coord_tx: Option<&Sender<CoordMsg>>,
 ) -> Result<RoundResult> {
     let mut counters = Counters::default();
     let mut metrics = Metrics::new();
-    let mut costs = Vec::with_capacity(users.len());
+    let mut costs = Vec::with_capacity(work.len_hint());
     let mut partial: Option<Statistics> = None;
     // Plain-sum aggregators fold into the resident arena buffers by
     // reference (no per-user move/insert); others keep the generic path.
@@ -328,7 +354,9 @@ fn run_worker_round(
     let busy0 = model.busy_nanos();
     model.set_central(central);
 
-    for &uid in users {
+    // Owned sources iterate the precomputed queue; shared sources claim
+    // the next user from the cohort-wide pull queue on every step.
+    for uid in work.into_pull() {
         let t0 = Instant::now();
         let dev0 = model.busy_nanos();
 
@@ -366,7 +394,19 @@ fn run_worker_round(
                 } else {
                     &rust_clip as &dyn crate::fl::model::ClipKernel
                 };
-                let mut env = PpEnv { clip, rng, user_len };
+                // The postprocessor RNG (local-DP noise) is derived from
+                // (run seed, context seed, uid) — NOT from a worker-thread
+                // stream — so which worker claims a user (pull-based
+                // dispatch is a thread race) never changes the statistics
+                // and runs stay seed-reproducible under every dispatcher.
+                let mut user_rng = Rng::seed_from_u64(
+                    shared
+                        .seed
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ ctx.seed.rotate_left(17)
+                        ^ (uid as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+                );
+                let mut env = PpEnv { clip, rng: &mut user_rng, user_len };
                 for pp in shared.postprocessors.iter() {
                     let pm = pp.postprocess_one_user(&mut stats, ctx, &mut env)?;
                     metrics.merge(&pm);
@@ -433,7 +473,15 @@ fn run_worker_round(
         partial = arena.take_partial();
     }
     counters.busy_nanos = model.busy_nanos() - busy0;
-    Ok(RoundResult { worker: id, partial, metrics, counters, costs, error: None })
+    Ok(RoundResult {
+        worker: id,
+        round: ctx.iteration,
+        partial,
+        metrics,
+        counters,
+        costs,
+        error: None,
+    })
 }
 
 #[cfg(test)]
@@ -522,6 +570,11 @@ pub(crate) mod tests {
         }
     }
 
+    /// Wrap precomputed per-worker queues as owned work sources.
+    pub fn owned(assignments: Vec<Vec<usize>>) -> Vec<WorkSource> {
+        assignments.into_iter().map(WorkSource::Owned).collect()
+    }
+
     pub fn mean_pool(workers: usize, dim: usize, dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
         let spec = RunSpec { iterations: 10, cohort_size: 8, ..Default::default() };
         let shared = WorkerShared {
@@ -543,7 +596,7 @@ pub(crate) mod tests {
         let pool = mean_pool(3, 3, data);
         let ctx = CentralContext::train(0, 9, Default::default(), 1);
         let central = Arc::new(vec![0.0f32; 3]);
-        let assignments = vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]];
+        let assignments = owned(vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]]);
         let results = pool.run_round(&ctx, central, assignments).unwrap();
         assert_eq!(results.len(), 3);
         let total: u64 = results.iter().map(|r| r.counters.users_trained).sum();
@@ -551,6 +604,7 @@ pub(crate) mod tests {
         for r in &results {
             assert!(r.partial.is_some());
             assert_eq!(r.costs.len(), 3);
+            assert_eq!(r.round, 0);
         }
         pool.shutdown();
     }
@@ -561,10 +615,43 @@ pub(crate) mod tests {
         let pool = mean_pool(2, 2, data);
         let ctx = CentralContext::train(0, 2, Default::default(), 1);
         let results = pool
-            .run_round(&ctx, Arc::new(vec![0.0; 2]), vec![vec![0, 1], vec![]])
+            .run_round(&ctx, Arc::new(vec![0.0; 2]), owned(vec![vec![0, 1], vec![]]))
             .unwrap();
         assert!(results[1].partial.is_none());
         assert_eq!(results[1].counters.users_trained, 0);
+    }
+
+    #[test]
+    fn pool_shared_queue_trains_all_users_once() {
+        use crate::fl::dispatch::CohortQueue;
+        let data = Arc::new(crate::data::SynthGmmPoints::new(9, 10, 3, 2, 0));
+        let pool = mean_pool(3, 3, data);
+        let ctx = CentralContext::train(0, 9, Default::default(), 1);
+        let q = Arc::new(CohortQueue::new((0..9).collect()));
+        let sources = (0..3).map(|_| WorkSource::Shared(q.clone())).collect();
+        let results = pool.run_round(&ctx, Arc::new(vec![0.0; 3]), sources).unwrap();
+        let total: u64 = results.iter().map(|r| r.counters.users_trained).sum();
+        assert_eq!(total, 9, "shared queue must hand out each user exactly once");
+        assert_eq!(q.pop(), None);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_single_user_dispatch_streams_results() {
+        let data = Arc::new(crate::data::SynthGmmPoints::new(4, 10, 2, 2, 0));
+        let pool = mean_pool(2, 2, data);
+        let ctx = CentralContext::train(3, 4, Default::default(), 1);
+        let central = Arc::new(vec![0.0f32; 2]);
+        pool.send_user(0, &ctx, central.clone(), 0).unwrap();
+        pool.send_user(1, &ctx, central, 1).unwrap();
+        let (a, b) = (pool.recv_result().unwrap(), pool.recv_result().unwrap());
+        for r in [&a, &b] {
+            assert_eq!(r.round, 3);
+            assert_eq!(r.counters.users_trained, 1);
+            assert!(r.partial.is_some());
+        }
+        assert_ne!(a.worker, b.worker);
+        pool.shutdown();
     }
 
     #[test]
@@ -584,7 +671,7 @@ pub(crate) mod tests {
         ] {
             let pool = mean_pool(w, 2, data.clone());
             let results = pool
-                .run_round(&ctx, Arc::new(vec![0.0; 2]), chunks)
+                .run_round(&ctx, Arc::new(vec![0.0; 2]), owned(chunks))
                 .unwrap();
             let partials: Vec<Statistics> =
                 results.into_iter().filter_map(|r| r.partial).collect();
@@ -621,7 +708,7 @@ pub(crate) mod tests {
         let pool = WorkerPool::new(2, shared).unwrap();
         let ctx = CentralContext::train(0, 4, Default::default(), 1);
         let results = pool
-            .run_round(&ctx, Arc::new(vec![0.0; 2]), vec![vec![0, 1], vec![2, 3]])
+            .run_round(&ctx, Arc::new(vec![0.0; 2]), owned(vec![vec![0, 1], vec![2, 3]]))
             .unwrap();
         let mut c = Counters::default();
         for r in &results {

@@ -37,6 +37,8 @@ COMMANDS
   run        run one benchmark      --preset NAME | --config FILE
                                     [--scale F] [--workers N]
                                     [--algorithm A] [--mechanism M]
+                                    [--dispatch static|work-stealing|async]
+                                    [--max-staleness N] [--buffer-frac F]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
   table1     CIFAR10 speed vs baseline engines   [--scale F] [--p N]
@@ -51,6 +53,8 @@ COMMANDS
   fig5       per-worker load histograms          [--scale F] [--workers N]
   fig6       SNR/accuracy: cohort C vs noise r   [--scale F] [--seeds N]
   fig7       system-metric timelines per engine  [--scale F]
+  dispatch   straggler gap + round time per dispatch mode
+                                    [--scale F] [--workers N]
   calibrate  DP noise calibration per accountant
   nonnn      federated GBDT + GMM convergence
   presets    list benchmark presets  [--dump]
@@ -92,6 +96,9 @@ fn real_main() -> Result<()> {
         "fig4a" => experiments::sched::fig4a(scale)?,
         "fig4b" => experiments::sched::fig4b(scale, args.get_usize("workers", 5)?)?,
         "fig5" => experiments::sched::fig5(scale, args.get_usize("workers", 5)?)?,
+        "dispatch" => {
+            experiments::dispatch::compare(scale, args.get_usize("workers", 4)?)?;
+        }
         "fig6" => experiments::privacy_fig::fig6(scale, args.get_u64("seeds", 1)?)?,
         "fig7" | "fig8" => experiments::speed::fig7_fig8(scale)?,
         "calibrate" => experiments::privacy_fig::calibrate()?,
@@ -166,6 +173,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.privacy.mechanism = m.into();
         }
     }
+    if let Some(d) = args.get("dispatch") {
+        cfg.dispatcher = d.into();
+    }
+    cfg.max_staleness = args.get_u64("max-staleness", cfg.max_staleness)?;
+    cfg.buffer_frac = args.get_f64("buffer-frac", cfg.buffer_frac)?;
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }

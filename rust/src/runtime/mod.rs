@@ -1,11 +1,16 @@
 //! Runtime layer: load + execute AOT-compiled HLO artifacts via PJRT.
 //!
 //! See DESIGN.md — python/jax (+Pallas) runs only at `make artifacts` time;
-//! this module is the only place the simulator touches XLA.
+//! this module is the only place the simulator touches XLA. The PJRT
+//! executor (and with it the `xla` crate) is behind the optional `hlo`
+//! cargo feature; the manifest layer is pure Rust and always available,
+//! so configs, presets and the pure-Rust model zoo build everywhere.
 
+#[cfg(feature = "hlo")]
 mod executor;
 mod manifest;
 
+#[cfg(feature = "hlo")]
 pub use executor::{Arg, Compiled, ExecStats, Out, Runtime};
 pub use manifest::{
     init_from_layout, ArtifactSpec, IoSpec, Manifest, ModelEntry, TensorEntry,

@@ -46,6 +46,14 @@ pub struct Counters {
     pub users_trained: u64,
     /// Local optimization steps executed.
     pub steps: u64,
+    /// Work-stealing rounds: users pulled beyond the even per-worker
+    /// share (load the shared queue migrated off stragglers).
+    pub steal_count: u64,
+    /// Async rounds: updates folded with staleness ≥ 1 (discounted).
+    pub stale_updates: u64,
+    /// Async rounds: updates discarded — staler than the bound, or still
+    /// in flight when the run (or an eval barrier) drained the engine.
+    pub dropped_updates: u64,
 }
 
 impl Counters {
@@ -59,6 +67,9 @@ impl Counters {
         self.busy_nanos += o.busy_nanos;
         self.users_trained += o.users_trained;
         self.steps += o.steps;
+        self.steal_count += o.steal_count;
+        self.stale_updates += o.stale_updates;
+        self.dropped_updates += o.dropped_updates;
     }
 
     pub fn busy(&self) -> Duration {

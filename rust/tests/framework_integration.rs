@@ -37,6 +37,7 @@ fn spec(iters: u64, users: usize) -> RunSpec {
         central_lr_warmup: 0,
         population: users,
         seed: 3,
+        ..Default::default()
     }
 }
 
