@@ -18,7 +18,7 @@
 //! across PRs.
 
 use pfl::fl::aggregator::{Aggregator, SumAggregator};
-use pfl::fl::stats::Statistics;
+use pfl::fl::stats::{StatValue, Statistics};
 use pfl::tensor::StatsArena;
 use pfl::util::bench::{
     bench_per_op_alloc, black_box, write_bench_json, BenchRecord, CountingAlloc,
@@ -70,6 +70,40 @@ fn main() -> anyhow::Result<()> {
             });
         records.push(BenchRecord::new(&r, alloc));
         assert_eq!(steady_grown, 0, "steady-state arena fold must not allocate");
+
+        // sparse arena path (GBDT-style tiny users): 64-nnz updates of a
+        // d-dim model stay in the slot's sorted sparse accumulator — no
+        // model-sized buffer is ever allocated in the loop
+        let nnz = 64usize;
+        let sparse_users: Vec<Statistics> = (0..users)
+            .map(|u| {
+                let mut idx: Vec<u32> =
+                    (0..nnz).map(|i| ((i * (d / nnz) + u) % d) as u32).collect();
+                idx.sort_unstable();
+                idx.dedup();
+                let val = vec![1e-3f32; idx.len()];
+                Statistics::new_update_value(StatValue::sparse(d as u32, idx, val), 1.0)
+            })
+            .collect();
+        let mut sarena = StatsArena::new();
+        for u in &sparse_users {
+            sarena.fold(u); // size the ping-pong buffers outside the timer
+        }
+        sarena.drain_grown_bytes();
+        sarena.take_partial();
+        let mut sparse_grown = 0u64;
+        let (r, alloc) =
+            bench_per_op_alloc(&format!("accumulate/sparse-arena d={d}"), 2, 10, users, || {
+                for u in &sparse_users {
+                    sarena.fold(u);
+                }
+                black_box(sarena.weight());
+                sparse_grown += sarena.drain_grown_bytes();
+                sarena.reset();
+            });
+        records.push(BenchRecord::new(&r, alloc));
+        assert_eq!(sparse_grown, 0, "steady-state sparse fold must not allocate");
+        assert_eq!(sarena.drain_spill_count(), 0, "all-sparse cohort must not spill");
 
         let (r, alloc) =
             bench_per_op_alloc(&format!("worker_reduce/8 partials d={d}"), 2, 10, 1, || {

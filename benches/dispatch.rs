@@ -130,6 +130,7 @@ fn spin_pool(dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
             profile: OverheadProfile::default(),
             seed: 0,
             use_hlo_clip: false,
+            arena: pfl::tensor::ArenaConfig::default(),
         },
     )
     .unwrap()
@@ -220,6 +221,44 @@ fn main() -> anyhow::Result<()> {
         out.straggler_nanos.iter().all(|&g| g == 0),
     );
 
+    // --- async deterministic replay: reorder buffer enabled ----------
+    let replay = |workers: usize| -> anyhow::Result<(Vec<f32>, u64)> {
+        let spec = RunSpec {
+            iterations: 4,
+            cohort_size: 16,
+            val_cohort_size: 0,
+            eval_every: 0,
+            population: 48,
+            dispatch: DispatchSpec::async_replay(2, 0.5, 8),
+            ..Default::default()
+        };
+        let ds: Arc<dyn FederatedDataset> = Arc::new(LogNormalUsers::new(48, 9));
+        let alg = Arc::new(FedAvg::new(spec, Box::new(Sgd)));
+        let mut backend = BackendBuilder::new(
+            ds,
+            alg,
+            Arc::new(|_| Ok(Box::new(SpinModel { central: vec![0.0; DIM] }) as Box<dyn Model>)),
+        )
+        .params(RunParams {
+            num_workers: workers,
+            scheduler: sched,
+            dispatch: DispatchSpec::async_replay(2, 0.5, 8),
+            ..Default::default()
+        })
+        .build()?;
+        let t0 = Instant::now();
+        let out = backend.run(vec![0.0; DIM], &mut [])?;
+        Ok((out.central, t0.elapsed().as_nanos() as u64))
+    };
+    let (c1, _) = replay(1)?;
+    let (c4, replay_wall) = replay(WORKERS)?;
+    let replay_identical = c1 == c4;
+    println!(
+        "async replay (window 8): {:.3} ms on {WORKERS} workers; bit-identical to 1 worker: {replay_identical}",
+        replay_wall as f64 / 1e6,
+    );
+    assert!(replay_identical, "replay run diverged across worker counts");
+
     write_bench_json(
         "BENCH_dispatch.json",
         &[
@@ -246,6 +285,16 @@ fn main() -> anyhow::Result<()> {
             BenchRecord {
                 name: "dispatch/async/wall_ns".into(),
                 ns_per_op: async_wall as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/async-replay/wall_ns".into(),
+                ns_per_op: replay_wall as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "dispatch/async-replay/bit_identical".into(),
+                ns_per_op: replay_identical as u64 as f64,
                 alloc_bytes_per_op: 0.0,
             },
         ],

@@ -236,6 +236,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         profile,
         seed: cfg.seed,
         log_every: 0,
+        arena: cfg.arena_config(),
         ..Default::default()
     });
     for pp in build_postprocessors(cfg)? {

@@ -118,6 +118,13 @@ pub struct Config {
     pub max_staleness: u64,
     /// Async dispatch: fraction of the cohort that closes the buffer.
     pub buffer_frac: f64,
+    /// Async dispatch: deterministic-replay window (0 = physical arrival
+    /// order; > 0 folds in dispatch order through a bounded
+    /// arrival-reorder buffer, bit-identical across worker counts).
+    pub reorder_window: usize,
+    /// Worker arena: sparse slots spill to dense once union nnz exceeds
+    /// this fraction of the dimension (`ArenaConfig::sparse_spill_frac`).
+    pub sparse_spill_frac: f64,
     pub seed: u64,
 }
 
@@ -151,6 +158,10 @@ impl Config {
         })
     }
 
+    pub fn arena_config(&self) -> crate::tensor::ArenaConfig {
+        crate::tensor::ArenaConfig { sparse_spill_frac: self.sparse_spill_frac }
+    }
+
     pub fn dispatch_spec(&self) -> Result<crate::fl::DispatchSpec> {
         let mode = match self.dispatcher.as_str() {
             "static" => crate::fl::DispatchMode::Static,
@@ -162,6 +173,7 @@ impl Config {
             mode,
             max_staleness: self.max_staleness,
             buffer_frac: self.buffer_frac,
+            reorder_window: self.reorder_window,
         })
     }
 
@@ -239,6 +251,8 @@ impl Config {
                     ("dispatcher", s(self.dispatcher.clone())),
                     ("max_staleness", num(self.max_staleness as f64)),
                     ("buffer_frac", num(self.buffer_frac)),
+                    ("reorder_window", num(self.reorder_window as f64)),
+                    ("sparse_spill_frac", num(self.sparse_spill_frac)),
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
@@ -316,6 +330,16 @@ impl Config {
                 Some(x) => x.as_f64()?,
                 None => 0.5,
             },
+            // optional for configs written before deterministic replay /
+            // the sparse arena
+            reorder_window: match e.get("reorder_window") {
+                Some(x) => x.as_usize()?,
+                None => 0,
+            },
+            sparse_spill_frac: match e.get("sparse_spill_frac") {
+                Some(x) => x.as_f64()?,
+                None => crate::tensor::ArenaConfig::default().sparse_spill_frac,
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -379,6 +403,8 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         dispatcher: "static".into(),
         max_staleness: 2,
         buffer_frac: 0.5,
+        reorder_window: 0,
+        sparse_spill_frac: 0.25,
         seed: 0,
     }
 }
@@ -420,6 +446,8 @@ fn stackoverflow(dp: bool) -> Config {
         dispatcher: "static".into(),
         max_staleness: 2,
         buffer_frac: 0.5,
+        reorder_window: 0,
+        sparse_spill_frac: 0.25,
         seed: 0,
     }
 }
@@ -464,6 +492,8 @@ fn flair(iid: bool, dp: bool) -> Config {
         dispatcher: "static".into(),
         max_staleness: 2,
         buffer_frac: 0.5,
+        reorder_window: 0,
+        sparse_spill_frac: 0.25,
         seed: 0,
     }
 }
@@ -504,6 +534,8 @@ fn llm(flavor: &str, dp: bool) -> Config {
         dispatcher: "static".into(),
         max_staleness: 2,
         buffer_frac: 0.5,
+        reorder_window: 0,
+        sparse_spill_frac: 0.25,
         seed: 0,
     }
 }
@@ -659,13 +691,17 @@ mod tests {
 
     #[test]
     fn old_configs_without_dispatch_fields_parse() {
-        // engine section written before the dispatch engine existed
+        // engine section written before the dispatch engine / sparse
+        // arena / deterministic replay existed
         let json = preset("cifar10-iid").unwrap().to_json();
         let stripped = json
             .lines()
             .filter(|l| {
-                !l.contains("dispatcher") && !l.contains("max_staleness")
+                !l.contains("dispatcher")
+                    && !l.contains("max_staleness")
                     && !l.contains("buffer_frac")
+                    && !l.contains("reorder_window")
+                    && !l.contains("sparse_spill_frac")
             })
             .collect::<Vec<_>>()
             .join("\n");
@@ -673,5 +709,20 @@ mod tests {
         assert_eq!(parsed.dispatcher, "static");
         assert_eq!(parsed.max_staleness, 2);
         assert_eq!(parsed.buffer_frac, 0.5);
+        assert_eq!(parsed.reorder_window, 0);
+        assert_eq!(parsed.sparse_spill_frac, 0.25);
+    }
+
+    #[test]
+    fn replay_and_arena_knobs_roundtrip() {
+        let mut c = preset("cifar10-iid").unwrap();
+        c.dispatcher = "async".into();
+        c.reorder_window = 8;
+        c.sparse_spill_frac = 0.1;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.reorder_window, 8);
+        assert_eq!(back.sparse_spill_frac, 0.1);
+        assert_eq!(back.dispatch_spec().unwrap().reorder_window, 8);
+        assert_eq!(back.arena_config().sparse_spill_frac, 0.1);
     }
 }

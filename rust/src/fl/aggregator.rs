@@ -24,8 +24,10 @@ pub trait Aggregator: Send + Sync {
     /// Fold one contribution scaled by `scale` — the staleness-weighted
     /// fold of async buffered aggregation (see
     /// [`crate::fl::dispatch::staleness_weight`]). Both the vectors and
-    /// the aggregation weight scale, so the downstream weighted average
-    /// stays consistent: a half-weighted update contributes half a user.
+    /// the aggregation weight **must** scale together, or the weighted
+    /// -average denominator over-counts stale users (regression-pinned
+    /// in `accumulate_scaled_weight_denominator_regression` below): a
+    /// half-weighted update contributes half a user.
     fn accumulate_scaled(&self, acc: &mut Option<Statistics>, mut user: Statistics, scale: f32) {
         if scale != 1.0 {
             for v in user.vecs.values_mut() {
@@ -77,6 +79,39 @@ impl Aggregator for SumAggregator {
             self.accumulate(&mut acc, p);
         }
         acc
+    }
+
+    /// Sparse-aware scaled fold: discounts a stale arrival directly into
+    /// the accumulator (`axpy` / `scatter_axpy`) instead of scaling a
+    /// copy first, and never densifies a sparse contribution the plain
+    /// sum would have kept sparse. The weight scales with the values —
+    /// the denominator contract of the default implementation.
+    fn accumulate_scaled(&self, acc: &mut Option<Statistics>, mut user: Statistics, scale: f32) {
+        if scale == 1.0 {
+            return self.accumulate(acc, user);
+        }
+        match acc {
+            None => {
+                for v in user.vecs.values_mut() {
+                    v.scale(scale);
+                }
+                user.weight *= scale as f64;
+                *acc = Some(user);
+            }
+            Some(state) => {
+                state.weight += user.weight * scale as f64;
+                for (key, v) in user.vecs {
+                    match state.vecs.get_mut(&key) {
+                        Some(dst) => dst.axpy_value(scale, &v),
+                        None => {
+                            let mut v = v;
+                            v.scale(scale);
+                            state.vecs.insert(key, v);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     fn arena_compatible(&self) -> bool {
@@ -214,6 +249,62 @@ mod tests {
         let mut avg = a.clone();
         avg.average_in_place();
         assert_eq!(avg.update(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn accumulate_scaled_weight_denominator_regression() {
+        // async-fold weight accounting (ISSUE 4 satellite): the scaled
+        // fold must discount the *weight* together with the values, or
+        // the weighted-average denominator over-counts stale users.
+        // Hand-computed two-user case, user B stale by one round
+        // (staleness weight 0.5):
+        //   sum   = 1.0·2.0·[0.5, 1.5] + 0.5·4.0·[2.0, 1.0] = [5.0, 5.0]
+        //   denom = 1.0·2.0 + 0.5·4.0 = 4.0     (NOT 2.0 + 4.0 = 6.0)
+        //   avg   = [1.25, 1.25]
+        let agg = SumAggregator;
+        let mut acc = None;
+        agg.accumulate_scaled(&mut acc, stat(vec![1.0, 3.0], 2.0), 1.0);
+        agg.accumulate_scaled(&mut acc, stat(vec![8.0, 4.0], 4.0), 0.5);
+        let mut a = acc.unwrap();
+        assert_eq!(a.weight, 4.0, "denominator must discount the stale user");
+        assert_eq!(a.update(), &[5.0, 5.0]);
+        a.average_in_place();
+        assert_eq!(a.update(), &[1.25, 1.25]);
+    }
+
+    #[test]
+    fn accumulate_scaled_keeps_sparse_sparse() {
+        use crate::fl::stats::StatValue;
+        let agg = SumAggregator;
+        // sparse + scaled sparse stays sparse (no densify in the async
+        // fold), and values discount exactly
+        let mut acc = None;
+        agg.accumulate_scaled(
+            &mut acc,
+            Statistics::new_update_value(StatValue::sparse(8, vec![1], vec![4.0]), 1.0),
+            1.0,
+        );
+        agg.accumulate_scaled(
+            &mut acc,
+            Statistics::new_update_value(StatValue::sparse(8, vec![1, 6], vec![2.0, 8.0]), 2.0),
+            0.5,
+        );
+        let a = acc.unwrap();
+        let v = a.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "async fold densified: {v:?}");
+        assert_eq!(v.to_dense_vec(), vec![0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 4.0, 0.0]);
+        assert_eq!(a.weight, 2.0);
+
+        // scaled sparse into a dense accumulator scatters in place
+        let mut acc = Some(stat(vec![1.0; 4], 1.0));
+        agg.accumulate_scaled(
+            &mut acc,
+            Statistics::new_update_value(StatValue::sparse(4, vec![0, 3], vec![2.0, -2.0]), 1.0),
+            0.25,
+        );
+        let a = acc.unwrap();
+        assert_eq!(a.update(), &[1.5, 1.0, 1.0, 0.5]);
+        assert_eq!(a.weight, 1.25);
     }
 
     #[test]

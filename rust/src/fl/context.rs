@@ -53,11 +53,25 @@ pub struct DispatchSpec {
     /// Async: fraction of the cohort whose arrival closes the round's
     /// buffer (K = ⌈frac·cohort⌉).
     pub buffer_frac: f64,
+    /// Async: deterministic-replay window. `0` (default) folds arrivals
+    /// in physical arrival order — fastest, but the result depends on
+    /// worker count and timing. `> 0` keeps at most this many commands
+    /// logically outstanding and folds their results strictly in
+    /// dispatch (round, uid) order through a bounded arrival-reorder
+    /// buffer, making async runs bit-identical across worker counts
+    /// (the window also caps the parallelism the engine can exploit,
+    /// so pick `>= num_workers`).
+    pub reorder_window: usize,
 }
 
 impl Default for DispatchSpec {
     fn default() -> Self {
-        DispatchSpec { mode: DispatchMode::Static, max_staleness: 2, buffer_frac: 0.5 }
+        DispatchSpec {
+            mode: DispatchMode::Static,
+            max_staleness: 2,
+            buffer_frac: 0.5,
+            reorder_window: 0,
+        }
     }
 }
 
@@ -67,7 +81,24 @@ impl DispatchSpec {
     }
 
     pub fn async_mode(max_staleness: u64, buffer_frac: f64) -> Self {
-        DispatchSpec { mode: DispatchMode::Async, max_staleness, buffer_frac }
+        DispatchSpec {
+            mode: DispatchMode::Async,
+            max_staleness,
+            buffer_frac,
+            reorder_window: 0,
+        }
+    }
+
+    /// Async with deterministic replay: arrivals release in dispatch
+    /// (round, uid) order through a reorder buffer bounded by `window`
+    /// (clamped to ≥ 1), so runs are bit-identical across worker counts.
+    pub fn async_replay(max_staleness: u64, buffer_frac: f64, window: usize) -> Self {
+        DispatchSpec {
+            mode: DispatchMode::Async,
+            max_staleness,
+            buffer_frac,
+            reorder_window: window.max(1),
+        }
     }
 
     /// Async buffer size K for a cohort of `cohort` users: ⌈frac·n⌉,
@@ -192,5 +223,15 @@ mod tests {
         // frac > 1 clamps to the full cohort; frac <= 0 to one arrival
         assert_eq!(DispatchSpec::async_mode(2, 5.0).buffer_k(8), 8);
         assert_eq!(DispatchSpec::async_mode(2, 0.0).buffer_k(8), 1);
+    }
+
+    #[test]
+    fn replay_spec_sets_window() {
+        assert_eq!(DispatchSpec::async_mode(2, 0.5).reorder_window, 0);
+        let r = DispatchSpec::async_replay(2, 0.5, 4);
+        assert_eq!(r.mode, DispatchMode::Async);
+        assert_eq!(r.reorder_window, 4);
+        // a zero window would deadlock the fold loop: clamped to 1
+        assert_eq!(DispatchSpec::async_replay(2, 0.5, 0).reorder_window, 1);
     }
 }

@@ -24,6 +24,13 @@
 //!   the first K arrivals weighted by [`staleness_weight`] and opens the
 //!   next context without waiting for stragglers. The async engine lives
 //!   in `backend::run_async`; this module supplies its drain/eval plans.
+//!   With `DispatchSpec::reorder_window > 0` the engine switches to
+//!   **deterministic replay**: at most `window` commands stay logically
+//!   outstanding and their results fold strictly in dispatch
+//!   (round, uid) order through a bounded arrival-reorder buffer, so
+//!   the run — folds, staleness discounts, drops, central updates — is
+//!   bit-identical across worker counts (property-tested in
+//!   `backend.rs`).
 //!
 //! Statistics invariance: under an exchange-law aggregator (e.g.
 //! `SumAggregator`) Static and WorkStealing produce identical reduced

@@ -48,9 +48,12 @@ impl MetricValue {
         }
     }
 
-    /// Merge two contributions of the same metric. Panics on kind
-    /// mismatch — mixing central and per-user semantics is a bug.
-    pub fn merge(&mut self, other: &MetricValue) {
+    /// Merge two contributions of the same metric. Mixing central and
+    /// per-user semantics is a contract violation reported as a typed
+    /// [`MetricError`] — never a panic: one malformed user metric must
+    /// not abort a simulation round (see [`Metrics::add`], which skips
+    /// the offending contribution and counts it).
+    pub fn try_merge(&mut self, other: &MetricValue) -> Result<(), MetricError> {
         match (self, other) {
             (
                 MetricValue::Central { sum: s, weight: w },
@@ -58,6 +61,7 @@ impl MetricValue {
             ) => {
                 *s += os;
                 *w += ow;
+                Ok(())
             }
             (
                 MetricValue::PerUser { sum: s, count: c },
@@ -65,11 +69,36 @@ impl MetricValue {
             ) => {
                 *s += os;
                 *c += oc;
+                Ok(())
             }
-            (a, b) => panic!("metric kind mismatch: {a:?} vs {b:?}"),
+            (a, b) => Err(MetricError::KindMismatch { left: *a, right: *b }),
         }
     }
 }
+
+/// Typed metric-pipeline error (the fold/merge paths used to panic on
+/// these).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricError {
+    /// A central and a per-user contribution met under one metric name.
+    KindMismatch { left: MetricValue, right: MetricValue },
+}
+
+impl fmt::Display for MetricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MetricError::KindMismatch { left, right } => {
+                write!(f, "metric kind mismatch: {left:?} vs {right:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MetricError {}
+
+/// Name under which skipped kind-mismatched contributions are counted
+/// (value = total count; summed across merges with a pinned weight).
+pub const KIND_MISMATCH_METRIC: &str = "sys/metric-kind-mismatch";
 
 /// An ordered bag of named metrics.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -80,14 +109,50 @@ impl Metrics {
         Self::default()
     }
 
+    /// Add one contribution. On a kind mismatch the incoming
+    /// contribution is **skipped and counted** under
+    /// [`KIND_MISMATCH_METRIC`] (first writer wins) — a malformed user
+    /// metric degrades one reading, not the whole simulation. Callers
+    /// that want the strict contract use [`MetricValue::try_merge`]
+    /// directly.
     pub fn add(&mut self, name: impl Into<String>, v: MetricValue) {
         let name = name.into();
+        if name.ends_with(KIND_MISMATCH_METRIC) {
+            // the mismatch counter is a plain total: contributions —
+            // including prefixed copies from namespaced eval bags
+            // (`prefixed("val/")`) — fold into the one unprefixed
+            // counter with the weight pinned at 1, so `get` returns the
+            // total rather than a per-bag average and
+            // `kind_mismatches()` sees every skip
+            if let MetricValue::Central { sum, .. } = v {
+                self.bump_mismatch(sum);
+            }
+            return;
+        }
         match self.0.get_mut(&name) {
-            Some(existing) => existing.merge(&v),
+            Some(existing) => {
+                if existing.try_merge(&v).is_err() {
+                    self.bump_mismatch(1.0);
+                }
+            }
             None => {
                 self.0.insert(name, v);
             }
         }
+    }
+
+    fn bump_mismatch(&mut self, n: f64) {
+        match self.0.get_mut(KIND_MISMATCH_METRIC) {
+            Some(MetricValue::Central { sum, .. }) => *sum += n,
+            _ => {
+                self.0.insert(KIND_MISMATCH_METRIC.into(), MetricValue::central(n, 1.0));
+            }
+        }
+    }
+
+    /// Contributions skipped because of a metric kind mismatch.
+    pub fn kind_mismatches(&self) -> u64 {
+        self.get(KIND_MISMATCH_METRIC).unwrap_or(0.0) as u64
     }
 
     pub fn add_central(&mut self, name: impl Into<String>, sum: f64, weight: f64) {
@@ -242,11 +307,51 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "metric kind mismatch")]
-    fn kind_mismatch_panics() {
+    fn kind_mismatch_is_skipped_and_counted_not_a_panic() {
+        // regression (ISSUE 4 satellite): a malformed user metric used to
+        // panic mid-round; now the contribution is skipped, the first
+        // writer wins, and the skip is observable
         let mut m = Metrics::new();
         m.add_central("x", 1.0, 1.0);
-        m.add_per_user("x", 1.0);
+        m.add_per_user("x", 9.0);
+        assert_eq!(m.get("x"), Some(1.0), "first writer must win");
+        assert_eq!(m.kind_mismatches(), 1);
+        m.add_per_user("x", 9.0);
+        assert_eq!(m.kind_mismatches(), 2);
+
+        // the typed error carries both sides for diagnostics
+        let mut a = MetricValue::central(1.0, 1.0);
+        let err = a.try_merge(&MetricValue::per_user(2.0)).unwrap_err();
+        assert!(format!("{err}").contains("kind mismatch"));
+    }
+
+    #[test]
+    fn mismatch_counter_sums_across_bag_merges() {
+        // two worker bags each with one skip: the merged bag reports the
+        // total, not a per-bag average
+        let bag = || {
+            let mut m = Metrics::new();
+            m.add_central("x", 1.0, 1.0);
+            m.add_per_user("x", 1.0);
+            m
+        };
+        let (a, b) = (bag(), bag());
+        assert_eq!(a.kind_mismatches(), 1);
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.kind_mismatches(), 2);
+        // the real metric merged normally
+        assert_eq!(merged.get("x"), Some(1.0));
+
+        // a namespaced copy (the backend prefixes eval bags "val/")
+        // still folds into the one total instead of averaging under the
+        // prefixed name
+        let mut with_val = Metrics::new();
+        with_val.merge(&a);
+        with_val.merge(&b.prefixed("val/"));
+        assert_eq!(with_val.kind_mismatches(), 2);
+        assert!(with_val.get("val/sys/metric-kind-mismatch").is_none());
     }
 
     #[test]

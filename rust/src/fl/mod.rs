@@ -42,7 +42,7 @@ pub use dispatch::{
     WorkSource, WorkStealingDispatcher,
 };
 pub use linear::LinearModel;
-pub use metrics::{MetricValue, Metrics};
+pub use metrics::{MetricError, MetricValue, Metrics};
 #[cfg(feature = "hlo")]
 pub use model::HloModel;
 pub use model::{ClipKernel, Model, TrainOutput};

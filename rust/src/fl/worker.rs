@@ -52,6 +52,10 @@ enum Cmd {
         /// This worker's work: an owned queue (static schedule) or a
         /// shared pull queue it drains user-by-user.
         work: WorkSource,
+        /// Dispatch sequence number, echoed in [`RoundResult::seq`]. The
+        /// async replay engine orders arrivals by it; barrier rounds
+        /// send 0.
+        seq: u64,
     },
     Stop,
 }
@@ -62,6 +66,10 @@ pub struct RoundResult {
     /// Central iteration the command was issued for (async mode computes
     /// staleness from this when the result arrives rounds later).
     pub round: u64,
+    /// Echo of the command's dispatch sequence number (async replay
+    /// matches out-of-order arrivals against the expected fold order
+    /// with it; 0 for barrier rounds).
+    pub seq: u64,
     pub partial: Option<Statistics>,
     pub metrics: Metrics,
     pub counters: Counters,
@@ -82,6 +90,9 @@ pub struct WorkerShared {
     /// Use the model's L1 HLO clip kernel (paper-faithful on-device path)
     /// instead of the native Rust clip. See `RunParams::clip_backend`.
     pub use_hlo_clip: bool,
+    /// Accumulation-arena tuning (sparse spill threshold); each worker
+    /// builds its resident [`StatsArena`] from this.
+    pub arena: crate::tensor::ArenaConfig,
 }
 
 /// The replica pool: w worker threads plus (baselines only) a coordinator
@@ -159,7 +170,7 @@ impl WorkerPool {
     ) -> Result<Vec<RoundResult>> {
         assert_eq!(sources.len(), self.num_workers);
         for (tx, work) in self.cmd_txs.iter().zip(sources) {
-            tx.send(Cmd::Round { ctx: ctx.clone(), central: central.clone(), work })
+            tx.send(Cmd::Round { ctx: ctx.clone(), central: central.clone(), work, seq: 0 })
                 .map_err(|_| anyhow!("worker channel closed"))?;
         }
         let mut results: Vec<Option<RoundResult>> = (0..self.num_workers).map(|_| None).collect();
@@ -177,16 +188,25 @@ impl WorkerPool {
 
     /// Dispatch a single user to one worker without waiting (async mode).
     /// Exactly one [`RoundResult`] will later arrive via
-    /// [`Self::recv_result`] for every dispatched command.
+    /// [`Self::recv_result`] for every dispatched command, echoing
+    /// `seq` (the replay engine's fold-order key; pass 0 when arrival
+    /// order is allowed to be physical). Commands queue on the worker's
+    /// channel and execute FIFO, so more commands than workers is fine.
     pub fn send_user(
         &self,
         worker: usize,
         ctx: &CentralContext,
         central: Arc<Vec<f32>>,
         uid: usize,
+        seq: u64,
     ) -> Result<()> {
         self.cmd_txs[worker]
-            .send(Cmd::Round { ctx: ctx.clone(), central, work: WorkSource::Owned(vec![uid]) })
+            .send(Cmd::Round {
+                ctx: ctx.clone(),
+                central,
+                work: WorkSource::Owned(vec![uid]),
+                seq,
+            })
             .map_err(|_| anyhow!("worker channel closed"))
     }
 
@@ -263,12 +283,12 @@ fn worker_loop(
     let mut model: Option<Box<dyn Model>> = None;
     // Worker-local accumulation arena, resident for the whole simulation
     // so steady-state rounds fold user statistics with zero allocation.
-    let mut arena = StatsArena::new();
+    let mut arena = StatsArena::with_config(shared.arena);
 
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::Stop => break,
-            Cmd::Round { ctx, central, work } => {
+            Cmd::Round { ctx, central, work, seq } => {
                 if model.is_none() {
                     match (shared.factory)(id) {
                         Ok(m) => model = Some(m),
@@ -276,6 +296,7 @@ fn worker_loop(
                             let _ = res_tx.send(RoundResult {
                                 worker: id,
                                 round: ctx.iteration,
+                                seq,
                                 partial: None,
                                 metrics: Metrics::new(),
                                 counters: Counters::default(),
@@ -293,6 +314,7 @@ fn worker_loop(
                     &ctx,
                     &central,
                     work,
+                    seq,
                     &mut arena,
                     coord_tx.as_ref(),
                 );
@@ -301,6 +323,7 @@ fn worker_loop(
                     Err(e) => RoundResult {
                         worker: id,
                         round: ctx.iteration,
+                        seq,
                         partial: None,
                         metrics: Metrics::new(),
                         counters: Counters::default(),
@@ -336,6 +359,7 @@ fn run_worker_round(
     ctx: &CentralContext,
     central: &[f32],
     work: WorkSource,
+    seq: u64,
     arena: &mut StatsArena,
     coord_tx: Option<&Sender<CoordMsg>>,
 ) -> Result<RoundResult> {
@@ -347,8 +371,12 @@ fn run_worker_round(
     // reference (no per-user move/insert); others keep the generic path.
     let use_arena = shared.aggregator.arena_compatible();
     // Re-arm defensively: a previous round that erred out mid-loop may
-    // have left folded state behind (normal rounds reset on take_partial).
+    // have left folded state — and undrained spill/sparse counts —
+    // behind (normal rounds reset on take_partial and drain at round
+    // end, so these discards are no-ops in normal flow).
     arena.reset();
+    arena.drain_spill_count();
+    arena.drain_sparse_rounds();
     let profile = &shared.profile;
 
     let busy0 = model.busy_nanos();
@@ -472,10 +500,15 @@ fn run_worker_round(
     if use_arena {
         partial = arena.take_partial();
     }
+    // drained after take_partial: the sparse-round classification happens
+    // when the partial is emitted
+    counters.arena_spill_count = arena.drain_spill_count();
+    counters.arena_sparse_rounds = arena.drain_sparse_rounds();
     counters.busy_nanos = model.busy_nanos() - busy0;
     Ok(RoundResult {
         worker: id,
         round: ctx.iteration,
+        seq,
         partial,
         metrics,
         counters,
@@ -586,6 +619,7 @@ pub(crate) mod tests {
             profile: OverheadProfile::default(),
             seed: 0,
             use_hlo_clip: false,
+            arena: crate::tensor::ArenaConfig::default(),
         };
         WorkerPool::new(workers, shared).unwrap()
     }
@@ -642,8 +676,8 @@ pub(crate) mod tests {
         let pool = mean_pool(2, 2, data);
         let ctx = CentralContext::train(3, 4, Default::default(), 1);
         let central = Arc::new(vec![0.0f32; 2]);
-        pool.send_user(0, &ctx, central.clone(), 0).unwrap();
-        pool.send_user(1, &ctx, central, 1).unwrap();
+        pool.send_user(0, &ctx, central.clone(), 0, 7).unwrap();
+        pool.send_user(1, &ctx, central, 1, 8).unwrap();
         let (a, b) = (pool.recv_result().unwrap(), pool.recv_result().unwrap());
         for r in [&a, &b] {
             assert_eq!(r.round, 3);
@@ -651,6 +685,10 @@ pub(crate) mod tests {
             assert!(r.partial.is_some());
         }
         assert_ne!(a.worker, b.worker);
+        // the dispatch sequence number is echoed for replay ordering
+        let mut seqs = [a.seq, b.seq];
+        seqs.sort();
+        assert_eq!(seqs, [7, 8]);
         pool.shutdown();
     }
 
@@ -704,6 +742,7 @@ pub(crate) mod tests {
             },
             seed: 0,
             use_hlo_clip: false,
+            arena: crate::tensor::ArenaConfig::default(),
         };
         let pool = WorkerPool::new(2, shared).unwrap();
         let ctx = CentralContext::train(0, 4, Default::default(), 1);

@@ -39,6 +39,7 @@ COMMANDS
                                     [--algorithm A] [--mechanism M]
                                     [--dispatch static|work-stealing|async]
                                     [--max-staleness N] [--buffer-frac F]
+                                    [--reorder-window N] [--sparse-spill-frac F]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
   table1     CIFAR10 speed vs baseline engines   [--scale F] [--p N]
@@ -178,6 +179,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     cfg.max_staleness = args.get_u64("max-staleness", cfg.max_staleness)?;
     cfg.buffer_frac = args.get_f64("buffer-frac", cfg.buffer_frac)?;
+    cfg.reorder_window = args.get_usize("reorder-window", cfg.reorder_window)?;
+    cfg.sparse_spill_frac = args.get_f64("sparse-spill-frac", cfg.sparse_spill_frac)?;
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }

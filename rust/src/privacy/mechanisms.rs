@@ -8,8 +8,14 @@
 //! carries its own scalar loops — and sparse updates clip exactly on
 //! their nonzeros, densifying only where additive noise requires full
 //! coordinate coverage.
+//!
+//! Shared mechanism state (adaptive bounds, noise rings, participation
+//! maps) is locked poison-tolerantly (`unwrap_or_else
+//! (PoisonError::into_inner)`): the state is plain data, so a worker
+//! that panics mid-round must not wedge the mechanism for the rest of
+//! the simulation.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 use anyhow::Result;
 
@@ -199,7 +205,7 @@ impl AdaptiveClipGaussian {
     }
 
     pub fn current_bound(&self) -> f64 {
-        self.state.lock().unwrap().bound
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).bound
     }
 }
 
@@ -234,7 +240,7 @@ impl Postprocessor for AdaptiveClipGaussian {
     ) -> Result<Metrics> {
         let mut m = Metrics::new();
         let cohort = stats.weight.max(1.0);
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         // privately estimate the clipped fraction and adapt the bound:
         // C ← C · exp(−η (b̂ − γ))
         if let Some(ind) = stats.vecs.get_mut(CLIP_INDICATOR) {
@@ -336,7 +342,7 @@ impl Postprocessor for BandedMatrixFactorization {
         let mut m = Metrics::new();
         if let Some(update) = stats.dense_mut(UPDATE) {
             let n = update.len();
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
             if st.ring.len() != self.band || st.ring.first().map(|v| v.len()) != Some(n) {
                 st.ring = (0..self.band).map(|_| vec![0.0f32; n]).collect();
                 st.next = 0;
@@ -379,7 +385,7 @@ impl BandedMatrixFactorization {
     /// user may participate at iteration t. The backend consults this for
     /// BMF runs before scheduling a user (via the `Postprocessor` hook).
     pub fn may_participate_inner(&self, uid: usize, t: u64) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         match st.last_seen.get(&uid) {
             Some(&last) => t.saturating_sub(last) >= self.min_sep,
             None => true,
@@ -387,7 +393,7 @@ impl BandedMatrixFactorization {
     }
 
     pub fn record_participation_inner(&self, uid: usize, t: u64) {
-        self.state.lock().unwrap().last_seen.insert(uid, t);
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).last_seen.insert(uid, t);
     }
 }
 
@@ -523,6 +529,35 @@ mod tests {
         let mut s = Statistics::new_update(v, 1.0);
         pp.postprocess_one_user(&mut s, &ctx(0), &mut env).unwrap();
         s
+    }
+
+    #[test]
+    fn poisoned_state_does_not_wedge_the_mechanism() {
+        // regression (ISSUE 4 satellite): shared mechanism state was
+        // locked with `.lock().unwrap()`, so one panicking worker
+        // poisoned the mutex and every later round panicked too. The
+        // state is plain data (a bound, a ring buffer, a seen-map) — the
+        // run must recover the lock and continue.
+        use std::sync::Arc;
+        let mech = Arc::new(AdaptiveClipGaussian::new(1.5, 1.0, 1.0));
+        let m2 = mech.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.state.lock().unwrap();
+            panic!("worker dies while holding the mechanism lock");
+        })
+        .join();
+        assert_eq!(mech.current_bound(), 1.5);
+
+        let bmf = Arc::new(BandedMatrixFactorization::new(1.0, 1.0, 1.0, 4));
+        let b2 = bmf.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = b2.state.lock().unwrap();
+            panic!("worker dies while holding the BMF lock");
+        })
+        .join();
+        assert!(bmf.may_participate_inner(0, 0));
+        bmf.record_participation_inner(0, 5);
+        assert!(!bmf.may_participate_inner(0, 6), "min-sep filter still works after poison");
     }
 
     #[test]

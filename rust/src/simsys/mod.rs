@@ -29,6 +29,15 @@ pub struct Counters {
     /// once on first use; 0 in steady-state rounds — the observable form
     /// of the "no model-sized alloc in the loop" invariant).
     pub arena_grow_bytes: u64,
+    /// Worker-rounds whose arena emitted an all-sparse partial (every
+    /// live slot stayed a sorted sparse accumulator — no model-sized
+    /// dense buffer was touched).
+    pub arena_sparse_rounds: u64,
+    /// Arena slots spilled sparse→dense (union nnz crossed
+    /// `ArenaConfig::sparse_spill_frac` · dim, or a dense contribution
+    /// arrived). 0 across an all-sparse run is the observable form of
+    /// "very-sparse regimes never allocate model-sized buffers".
+    pub arena_spill_count: u64,
     /// Bytes memcpy'd between "host" and "device" staging buffers.
     pub copy_bytes: u64,
     /// Bytes serialized for topology-simulating transport (baselines).
@@ -60,6 +69,8 @@ impl Counters {
     pub fn merge(&mut self, o: &Counters) {
         self.loop_alloc_bytes += o.loop_alloc_bytes;
         self.arena_grow_bytes += o.arena_grow_bytes;
+        self.arena_sparse_rounds += o.arena_sparse_rounds;
+        self.arena_spill_count += o.arena_spill_count;
         self.copy_bytes += o.copy_bytes;
         self.wire_bytes += o.wire_bytes;
         self.coordinator_msgs += o.coordinator_msgs;

@@ -2,34 +2,145 @@
 //!
 //! One arena lives in each worker thread for the whole simulation. Per
 //! round, the worker folds every user's statistics into the arena's
-//! resident dense buffers by reference; at round end `take_partial`
-//! emits one `Statistics` (the per-worker partial handed to
-//! `worker_reduce`) and re-arms the buffers for the next round without
-//! dropping their capacity.
+//! resident buffers by reference; at round end `take_partial` emits one
+//! `Statistics` (the per-worker partial handed to `worker_reduce`) and
+//! re-arms the buffers for the next round without dropping their
+//! capacity.
 //!
-//! Steady-state guarantee: after the first round sizes the slots, `fold`
-//! performs **zero heap allocation** — dense contributions are a chunked
-//! `add_assign` (or a `copy_from_slice` for the round's first
-//! contribution), sparse contributions a `scatter_add`. Growth bytes are
-//! tracked and drained into `Counters::arena_grow_bytes`, so the
-//! `loop_alloc_bytes == 0` invariant is observable, not aspirational.
+//! # Sparse slot lifecycle
+//!
+//! A slot starts every round **sparse**: contributions with
+//! `StatValue::Sparse` payloads accumulate in a sorted-index (idx, val)
+//! pair via ping-pong merge buffers, so very-sparse regimes (GBDT
+//! histograms, `--topk` LoRA adapters) never touch a model-sized dense
+//! buffer. The slot **spills** to its resident dense buffer when either
+//!
+//! * a dense contribution arrives (a dense operand makes the sum dense
+//!   anyway), or
+//! * the union nnz crosses `sparse_spill_frac · dim`
+//!   ([`ArenaConfig::sparse_spill_frac`]) — past that point the sorted
+//!   merge costs more than a dense scatter and the sparse encoding stops
+//!   paying for itself.
+//!
+//! Spills are counted ([`Counters::arena_spill_count`]) and rounds whose
+//! every live slot stayed sparse are counted too
+//! ([`Counters::arena_sparse_rounds`]), so "the arena stayed sparse" is
+//! an observable claim, not an aspiration.
+//!
+//! Steady-state guarantee: after the first rounds size the slots (dense
+//! buffers and sparse ping-pong buffers both keep their capacity across
+//! rounds), `fold` performs **zero heap allocation** — dense
+//! contributions are a chunked `add_assign`, sparse contributions a
+//! sorted merge into retained scratch (or a `scatter_add` once spilled).
+//! Growth bytes are tracked and drained into
+//! `Counters::arena_grow_bytes`, so the `loop_alloc_bytes == 0`
+//! invariant is observable in both regimes.
+//!
+//! [`Counters::arena_spill_count`]: crate::simsys::Counters::arena_spill_count
+//! [`Counters::arena_sparse_rounds`]: crate::simsys::Counters::arena_sparse_rounds
 
 use std::collections::BTreeMap;
 
 use super::ops;
-use super::value::StatValue;
+use super::value::{merge_sparse_scaled_into, StatValue};
 use crate::fl::stats::Statistics;
+
+/// Tuning knobs of the worker accumulation arena (config
+/// `engine.sparse_spill_frac`, CLI `--sparse-spill-frac`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArenaConfig {
+    /// A slot's sparse accumulator spills to the dense buffer once its
+    /// union nnz exceeds this fraction of the logical dimension. `0.0`
+    /// densifies on the first sparse contribution (the pre-sparse-arena
+    /// behavior); values `>= 1.0` never spill on nnz growth (only a
+    /// dense contribution forces the dense buffer).
+    pub sparse_spill_frac: f64,
+}
+
+impl Default for ArenaConfig {
+    fn default() -> Self {
+        // past ~1/4 occupancy the sparse encoding (u32 idx + f32 val per
+        // nonzero) stops winning on wire size and the sorted merge stops
+        // winning on fold cost
+        ArenaConfig { sparse_spill_frac: 0.25 }
+    }
+}
+
+/// Per-round accumulation state of one slot.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+enum SlotMode {
+    /// No contribution yet this round.
+    #[default]
+    Idle,
+    /// Accumulating in the sorted sparse (idx, val) pair.
+    Sparse,
+    /// Accumulating in the resident dense buffer.
+    Dense,
+}
 
 #[derive(Debug, Default)]
 struct Slot {
+    /// Resident dense buffer (allocated on first spill / dense
+    /// contribution; capacity kept across rounds).
     buf: Vec<f32>,
-    /// Whether this round has already written into the slot (the first
-    /// contribution overwrites; later ones add).
-    live: bool,
+    /// Sparse accumulator: sorted unique indices + values.
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    /// Ping-pong merge scratch (swapped with idx/val each sparse merge).
+    scratch_idx: Vec<u32>,
+    scratch_val: Vec<f32>,
+    /// Logical dimension of the sparse accumulator this round.
+    dim: usize,
+    mode: SlotMode,
+}
+
+impl Slot {
+    /// Grow the dense buffer to at least `need` coordinates, tracking
+    /// growth bytes.
+    fn ensure_dense_len(&mut self, need: usize, grown: &mut u64) {
+        if self.buf.len() < need {
+            *grown += ((need - self.buf.len()) * std::mem::size_of::<f32>()) as u64;
+            self.buf.resize(need, 0.0);
+        }
+    }
+
+    /// Total f32/u32 slots allocated across the sparse accumulator and
+    /// its merge scratch (growth accounting).
+    fn sparse_capacity(&self) -> usize {
+        self.idx.capacity()
+            + self.val.capacity()
+            + self.scratch_idx.capacity()
+            + self.scratch_val.capacity()
+    }
+
+    /// Move the sparse accumulator into the dense buffer (zeroed first —
+    /// the buffer may hold a previous round's partial).
+    fn spill(&mut self, grown: &mut u64) {
+        self.ensure_dense_len(self.dim, grown);
+        self.buf.fill(0.0);
+        ops::scatter_add(&mut self.buf, &self.idx, &self.val);
+        self.idx.clear();
+        self.val.clear();
+        self.mode = SlotMode::Dense;
+    }
+
+    /// Spill to dense once the union nnz crosses `frac · dim` (runs
+    /// inline on the already-borrowed slot — the per-user hot loop pays
+    /// no extra map lookup).
+    fn maybe_spill(&mut self, frac: f64, grown: &mut u64, spills: &mut u64) {
+        if self.mode == SlotMode::Sparse
+            && self.dim > 0
+            && self.idx.len() as f64 > frac * self.dim as f64
+        {
+            self.spill(grown);
+            *spills += 1;
+        }
+    }
 }
 
 #[derive(Debug, Default)]
 pub struct StatsArena {
+    config: ArenaConfig,
     weight: f64,
     /// True once any user was folded this round (so an all-empty round
     /// yields `None`, matching `Aggregator::accumulate` semantics).
@@ -37,11 +148,24 @@ pub struct StatsArena {
     slots: BTreeMap<String, Slot>,
     /// Bytes allocated growing slot buffers since the last drain.
     grown_bytes: u64,
+    /// Sparse→dense slot spills since the last drain.
+    spill_count: u64,
+    /// Rounds whose every live slot was emitted sparse, since the last
+    /// drain.
+    sparse_rounds: u64,
 }
 
 impl StatsArena {
     pub fn new() -> Self {
-        StatsArena::default()
+        StatsArena::with_config(ArenaConfig::default())
+    }
+
+    pub fn with_config(config: ArenaConfig) -> Self {
+        StatsArena { config, ..Default::default() }
+    }
+
+    pub fn config(&self) -> ArenaConfig {
+        self.config
     }
 
     /// Accumulated weight this round.
@@ -70,44 +194,136 @@ impl StatsArena {
             // so this path runs O(keys) times per run, not per user
             self.slots.insert(key.to_string(), Slot::default());
         }
+        let frac = self.config.sparse_spill_frac;
         let slot = self.slots.get_mut(key).expect("just inserted");
-        let need = value.len();
-        if slot.buf.len() < need {
-            self.grown_bytes += ((need - slot.buf.len()) * std::mem::size_of::<f32>()) as u64;
-            slot.buf.resize(need, 0.0);
-        }
-        if slot.live {
-            match value {
-                StatValue::Dense(v) => ops::add_assign(&mut slot.buf[..v.len()], v),
-                StatValue::Sparse { idx, val, .. } => ops::scatter_add(&mut slot.buf, idx, val),
-            }
-        } else {
-            match value {
-                StatValue::Dense(v) => {
-                    slot.buf[..v.len()].copy_from_slice(v);
-                    slot.buf[v.len()..].fill(0.0);
-                }
-                StatValue::Sparse { idx, val, .. } => {
-                    slot.buf.fill(0.0);
-                    ops::scatter_add(&mut slot.buf, idx, val);
+        match value {
+            StatValue::Dense(v) => {
+                slot.ensure_dense_len(v.len().max(slot.dim), &mut self.grown_bytes);
+                match slot.mode {
+                    SlotMode::Dense => ops::add_assign(&mut slot.buf[..v.len()], v),
+                    SlotMode::Sparse => {
+                        // a dense operand makes the sum dense: spill the
+                        // sparse accumulator, then add
+                        slot.spill(&mut self.grown_bytes);
+                        self.spill_count += 1;
+                        ops::add_assign(&mut slot.buf[..v.len()], v);
+                    }
+                    SlotMode::Idle => {
+                        slot.buf[..v.len()].copy_from_slice(v);
+                        slot.buf[v.len()..].fill(0.0);
+                        slot.mode = SlotMode::Dense;
+                    }
                 }
             }
-            slot.live = true;
+            StatValue::Sparse { dim, idx, val } => {
+                match slot.mode {
+                    SlotMode::Dense => {
+                        slot.ensure_dense_len(*dim as usize, &mut self.grown_bytes);
+                        ops::scatter_add(&mut slot.buf, idx, val);
+                    }
+                    SlotMode::Idle => {
+                        slot.dim = *dim as usize;
+                        Self::copy_sparse_into(
+                            idx,
+                            val,
+                            &mut slot.idx,
+                            &mut slot.val,
+                            &mut self.grown_bytes,
+                        );
+                        slot.mode = SlotMode::Sparse;
+                        slot.maybe_spill(frac, &mut self.grown_bytes, &mut self.spill_count);
+                    }
+                    SlotMode::Sparse => {
+                        slot.dim = slot.dim.max(*dim as usize);
+                        if slot.idx.as_slice() == idx.as_slice() {
+                            // identical sparsity pattern (users sharing a
+                            // top-k mask / histogram layout): plain add
+                            ops::add_assign(&mut slot.val, val);
+                        } else {
+                            let cap_before = slot.sparse_capacity();
+                            merge_sparse_scaled_into(
+                                &slot.idx,
+                                &slot.val,
+                                idx,
+                                val,
+                                1.0,
+                                &mut slot.scratch_idx,
+                                &mut slot.scratch_val,
+                            );
+                            std::mem::swap(&mut slot.idx, &mut slot.scratch_idx);
+                            std::mem::swap(&mut slot.val, &mut slot.scratch_val);
+                            // keep the ping-pong pair symmetric so the
+                            // all-sparse steady state settles after one
+                            // round of a repeating cohort shape
+                            slot.scratch_idx.clear();
+                            slot.scratch_val.clear();
+                            let need = slot.idx.len();
+                            if slot.scratch_idx.capacity() < need {
+                                slot.scratch_idx.reserve(need);
+                                slot.scratch_val.reserve(need);
+                            }
+                            let cap_after = slot.sparse_capacity();
+                            self.grown_bytes +=
+                                (cap_after.saturating_sub(cap_before) * 4) as u64;
+                        }
+                        slot.maybe_spill(frac, &mut self.grown_bytes, &mut self.spill_count);
+                    }
+                }
+            }
         }
     }
 
-    /// Emit this round's partial (one dense vector clone per live slot —
-    /// the per-round hand-off to `worker_reduce`, not a per-user cost)
-    /// and re-arm the buffers, keeping their capacity.
+    /// Copy a sparse contribution into retained accumulator buffers,
+    /// tracking capacity growth (zero once the buffers reached the
+    /// working-set size).
+    fn copy_sparse_into(
+        idx: &[u32],
+        val: &[f32],
+        dst_idx: &mut Vec<u32>,
+        dst_val: &mut Vec<f32>,
+        grown: &mut u64,
+    ) {
+        let cap_before = dst_idx.capacity() + dst_val.capacity();
+        dst_idx.clear();
+        dst_val.clear();
+        dst_idx.extend_from_slice(idx);
+        dst_val.extend_from_slice(val);
+        let cap_after = dst_idx.capacity() + dst_val.capacity();
+        *grown += (cap_after.saturating_sub(cap_before) * 4) as u64;
+    }
+
+    /// Emit this round's partial (one vector clone per live slot — the
+    /// per-round hand-off to `worker_reduce`, not a per-user cost) and
+    /// re-arm the buffers, keeping their capacity. Slots still in sparse
+    /// mode emit `StatValue::Sparse`, so sparsity survives into the
+    /// cross-worker reduce and the async fold.
     pub fn take_partial(&mut self) -> Option<Statistics> {
         if !self.active {
             return None;
         }
         let mut stats = Statistics { weight: self.weight, vecs: BTreeMap::new() };
+        let mut all_sparse = true;
         for (key, slot) in &mut self.slots {
-            if slot.live {
-                stats.vecs.insert(key.clone(), StatValue::Dense(slot.buf.clone()));
+            match slot.mode {
+                SlotMode::Idle => {}
+                SlotMode::Dense => {
+                    all_sparse = false;
+                    stats.vecs.insert(key.clone(), StatValue::Dense(slot.buf.clone()));
+                }
+                SlotMode::Sparse => {
+                    stats.vecs.insert(
+                        key.clone(),
+                        StatValue::sparse(
+                            slot.dim as u32,
+                            slot.idx.clone(),
+                            slot.val.clone(),
+                        ),
+                    );
+                }
             }
+        }
+        if all_sparse && !stats.vecs.is_empty() {
+            self.sparse_rounds += 1;
         }
         self.reset();
         Some(stats)
@@ -122,7 +338,10 @@ impl StatsArena {
         self.active = false;
         self.grown_bytes = 0;
         for slot in self.slots.values_mut() {
-            slot.live = false;
+            slot.mode = SlotMode::Idle;
+            slot.idx.clear();
+            slot.val.clear();
+            slot.dim = 0;
         }
     }
 
@@ -132,11 +351,37 @@ impl StatsArena {
     pub fn drain_grown_bytes(&mut self) -> u64 {
         std::mem::take(&mut self.grown_bytes)
     }
+
+    /// Sparse→dense slot spills since the last call (dense contribution
+    /// or nnz crossing the threshold). Drained into
+    /// `Counters::arena_spill_count`.
+    pub fn drain_spill_count(&mut self) -> u64 {
+        std::mem::take(&mut self.spill_count)
+    }
+
+    /// Rounds whose every live slot stayed sparse, since the last call
+    /// (drain after `take_partial` — the round is classified when the
+    /// partial is emitted). Drained into
+    /// `Counters::arena_sparse_rounds`.
+    pub fn drain_sparse_rounds(&mut self) -> u64 {
+        std::mem::take(&mut self.sparse_rounds)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sparse_user(dim: u32, pairs: &[(u32, f32)], weight: f64) -> Statistics {
+        Statistics::new_update_value(
+            StatValue::sparse(
+                dim,
+                pairs.iter().map(|p| p.0).collect(),
+                pairs.iter().map(|p| p.1).collect(),
+            ),
+            weight,
+        )
+    }
 
     #[test]
     fn fold_matches_sum_aggregator() {
@@ -173,25 +418,56 @@ mod tests {
     fn sparse_and_dense_fold_together() {
         let mut arena = StatsArena::new();
         arena.fold(&Statistics::new_update(vec![1.0; 4], 1.0));
-        arena.fold(&Statistics::new_update_value(
-            StatValue::sparse(4, vec![0, 3], vec![2.0, -1.0]),
-            1.0,
-        ));
+        arena.fold(&sparse_user(4, &[(0, 2.0), (3, -1.0)], 1.0));
         let p = arena.take_partial().unwrap();
         assert_eq!(p.update(), &[3.0, 1.0, 1.0, 0.0]);
         assert_eq!(p.weight, 2.0);
+        // a dense contribution is a spill
+        assert_eq!(arena.drain_spill_count(), 0, "dense-first round never spills");
+        assert_eq!(arena.drain_sparse_rounds(), 0);
     }
 
     #[test]
-    fn all_sparse_round_densifies_to_dim() {
+    fn all_sparse_round_stays_sparse_below_threshold() {
+        // 1 nnz of 16 is far below the default 0.25 threshold: the round
+        // must emit a sparse partial and never touch a dense buffer
         let mut arena = StatsArena::new();
-        arena.fold(&Statistics::new_update_value(
-            StatValue::sparse(6, vec![5], vec![1.0]),
-            1.0,
-        ));
+        arena.fold(&sparse_user(16, &[(5, 1.0)], 1.0));
+        arena.fold(&sparse_user(16, &[(9, 2.0)], 1.0));
+        let p = arena.take_partial().unwrap();
+        let v = p.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "partial densified: {v:?}");
+        assert_eq!(v.element_count(), 2);
+        assert_eq!(v.to_dense_vec()[5], 1.0);
+        assert_eq!(v.to_dense_vec()[9], 2.0);
+        assert_eq!(arena.drain_spill_count(), 0);
+        assert_eq!(arena.drain_sparse_rounds(), 1);
+    }
+
+    #[test]
+    fn union_nnz_crossing_threshold_spills_mid_round() {
+        let mut arena = StatsArena::with_config(ArenaConfig { sparse_spill_frac: 0.5 });
+        // dim 8, threshold = 4 nnz: two disjoint 3-nnz users cross it
+        arena.fold(&sparse_user(8, &[(0, 1.0), (1, 1.0), (2, 1.0)], 1.0));
+        arena.fold(&sparse_user(8, &[(5, 1.0), (6, 1.0), (7, 1.0)], 1.0));
+        // the slot is dense now; more sparse folds scatter in place
+        arena.fold(&sparse_user(8, &[(0, 1.0)], 1.0));
+        let p = arena.take_partial().unwrap();
+        assert!(p.update_value().unwrap().as_dense().is_some());
+        assert_eq!(p.update(), &[2.0, 1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(p.weight, 3.0);
+        assert_eq!(arena.drain_spill_count(), 1);
+        assert_eq!(arena.drain_sparse_rounds(), 0);
+    }
+
+    #[test]
+    fn spill_frac_zero_recovers_dense_behavior() {
+        let mut arena = StatsArena::with_config(ArenaConfig { sparse_spill_frac: 0.0 });
+        arena.fold(&sparse_user(6, &[(5, 1.0)], 1.0));
         let p = arena.take_partial().unwrap();
         assert_eq!(p.update().len(), 6);
         assert_eq!(p.update()[5], 1.0);
+        assert_eq!(arena.drain_spill_count(), 1);
     }
 
     #[test]
@@ -208,6 +484,50 @@ mod tests {
             let p = arena.take_partial().unwrap();
             assert_eq!(p.update(), &[2.0f32; 128][..]);
         }
+    }
+
+    #[test]
+    fn sparse_steady_state_needs_no_growth() {
+        // all-sparse regime: after the ping-pong buffers size themselves,
+        // repeated rounds of the same cohort shape allocate nothing
+        let mut arena = StatsArena::new();
+        let users: Vec<Statistics> = (0..4)
+            .map(|u| sparse_user(1024, &[(u * 7, 1.0), (u * 7 + 3, -1.0)], 1.0))
+            .collect();
+        for u in &users {
+            arena.fold(u);
+        }
+        arena.drain_grown_bytes();
+        arena.take_partial().unwrap();
+        for round in 0..3 {
+            for u in &users {
+                arena.fold(u);
+            }
+            assert_eq!(
+                arena.drain_grown_bytes(),
+                0,
+                "round {round}: sparse steady-state fold must not grow"
+            );
+            let p = arena.take_partial().unwrap();
+            let v = p.update_value().unwrap();
+            assert!(matches!(v, StatValue::Sparse { .. }));
+            assert_eq!(v.element_count(), 8);
+        }
+        assert_eq!(arena.drain_spill_count(), 0);
+        assert_eq!(arena.drain_sparse_rounds(), 4);
+    }
+
+    #[test]
+    fn spilled_slot_rearms_sparse_next_round() {
+        // the sparse-first lifecycle restarts every round, so one dense
+        // round does not condemn later all-sparse rounds to dense
+        let mut arena = StatsArena::new();
+        arena.fold(&Statistics::new_update(vec![1.0; 8], 1.0));
+        arena.take_partial().unwrap();
+        arena.fold(&sparse_user(8, &[(2, 4.0)], 1.0));
+        let p = arena.take_partial().unwrap();
+        assert!(matches!(p.update_value().unwrap(), StatValue::Sparse { .. }));
+        assert_eq!(p.update_value().unwrap().to_dense_vec()[2], 4.0);
     }
 
     #[test]

@@ -16,10 +16,11 @@
 //!   [`ops::add_assign`], [`ops::axpy`], [`ops::scale`],
 //!   [`ops::sub_into`], [`ops::l2_norm`], [`ops::l1_norm`],
 //!   [`ops::l2_clip`], [`ops::l1_clip`], [`ops::scatter_add`],
-//!   [`ops::add_gaussian_noise`], [`ops::add_laplace_noise`]. This is the
-//!   **only** place in the crate that writes raw `f32` arithmetic loops;
-//!   `crate::util` re-exports the common names for backwards
-//!   compatibility, and `fl/` + `privacy/` call them via either path.
+//!   [`ops::scatter_axpy`], [`ops::add_gaussian_noise`],
+//!   [`ops::add_laplace_noise`]. This is the **only** place in the crate
+//!   that writes raw `f32` arithmetic loops; `crate::util` re-exports
+//!   the common names for backwards compatibility, and `fl/` +
+//!   `privacy/` call them via either path.
 //!
 //! * [`value`] — [`StatValue`], the statistic payload: `Dense(Vec<f32>)`
 //!   or `Sparse { dim, idx, val }` (sorted unique `idx`). Sums of any
@@ -27,25 +28,40 @@
 //!   stays sparse via a sorted merge; any dense operand densifies the
 //!   result), which preserves the aggregator exchange law — see the
 //!   randomized property tests in `rust/tests/property_invariants.rs`.
+//!   `axpy_value` is the scaled variant backing the staleness-discounted
+//!   async fold without materializing scaled copies.
 //!
 //! * [`arena`] — [`StatsArena`], the worker-local accumulation arena.
-//!   Pre-sized dense buffers, one per statistic key, that persist across
-//!   rounds; `fold` adds a user's statistics **by reference** (dense add
-//!   or sparse scatter-add) instead of moving/inserting per-user `Vec`s
-//!   into a fresh accumulator. This is what makes the
-//!   `Counters::loop_alloc_bytes == 0` steady-state invariant hold under
-//!   aggregation: after the first round sizes the slots, the per-user
-//!   loop performs zero heap allocation (arena growth is reported
-//!   separately via `Counters::arena_grow_bytes`).
+//!   Per-key slots that persist across rounds; `fold` adds a user's
+//!   statistics **by reference** instead of moving/inserting per-user
+//!   `Vec`s into a fresh accumulator. Each slot starts a round as a
+//!   **sorted-merge sparse accumulator** and spills to its resident
+//!   dense buffer only when a dense contribution arrives or the union
+//!   nnz crosses [`ArenaConfig::sparse_spill_frac`] · dim — so an
+//!   all-sparse cohort (GBDT histograms, top-k LoRA) finishes the round
+//!   without ever allocating a model-sized buffer, and its partial
+//!   leaves the worker sparse. Spills and all-sparse rounds are counted
+//!   (`Counters::{arena_spill_count, arena_sparse_rounds}`). This is
+//!   what makes the `Counters::loop_alloc_bytes == 0` steady-state
+//!   invariant hold under aggregation: after the first round sizes the
+//!   slots (dense buffers and sparse ping-pong merge buffers alike), the
+//!   per-user loop performs zero heap allocation (arena growth is
+//!   reported separately via `Counters::arena_grow_bytes`).
 //!
 //! # Who uses what
 //!
 //! * `fl::stats::Statistics` stores `BTreeMap<String, StatValue>`.
 //! * `fl::worker` folds each user's statistics into its `StatsArena`
 //!   whenever the aggregator is arena-compatible (plain summation), and
-//!   hands one dense partial per round to `worker_reduce`.
+//!   hands one partial per round — sparse when every slot stayed sparse
+//!   — to `worker_reduce`.
 //! * `fl::aggregator::SumAggregator` uses `StatValue::add_value` for the
-//!   reduce, so dense and sparse partials mix freely.
+//!   reduce and `StatValue::axpy_value` for the staleness-weighted async
+//!   fold, so dense and sparse partials mix freely without densifying.
+//! * `fl::backend::run_async` optionally replays arrivals through a
+//!   bounded reorder buffer (`DispatchSpec::reorder_window`) that
+//!   releases results in dispatch (round, uid) order, making async runs
+//!   bit-identical across worker counts.
 //! * `privacy::mechanisms` and `fl::postprocess` clip/scale/noise
 //!   through `ops`, densifying sparse aggregates only where a mechanism
 //!   mathematically requires full coverage (additive noise).
@@ -54,5 +70,5 @@ pub mod arena;
 pub mod ops;
 pub mod value;
 
-pub use arena::StatsArena;
+pub use arena::{ArenaConfig, StatsArena};
 pub use value::StatValue;

@@ -207,6 +207,18 @@ pub fn scatter_add(y: &mut [f32], idx: &[u32], val: &[f32]) {
     }
 }
 
+/// y[idx[j]] += s * val[j] — the scaled sparse fold (async buffered
+/// aggregation discounts stale sparse arrivals by the staleness weight
+/// without materializing a scaled copy). Index contract as
+/// [`scatter_add`].
+#[inline]
+pub fn scatter_axpy(y: &mut [f32], s: f32, idx: &[u32], val: &[f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (i, v) in idx.iter().zip(val) {
+        y[*i as usize] += s * *v;
+    }
+}
+
 /// Add iid N(0, std²) noise to `v` in place; returns the noise L2 norm
 /// (for SNR diagnostics, paper Fig. 6).
 pub fn add_gaussian_noise(v: &mut [f32], std: f64, rng: &mut Rng) -> f64 {
@@ -334,6 +346,17 @@ mod tests {
         assert_eq!(y, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
         scatter_add(&mut y, &[1], &[0.5]);
         assert_eq!(y[1], 1.5);
+    }
+
+    #[test]
+    fn scatter_axpy_scales_contributions() {
+        let mut y = vec![1.0f32; 4];
+        scatter_axpy(&mut y, 0.5, &[0, 2], &[2.0, -4.0]);
+        assert_eq!(y, vec![2.0, 1.0, -1.0, 1.0]);
+        // scale 1 degenerates to scatter_add
+        let mut z = vec![0.0f32; 3];
+        scatter_axpy(&mut z, 1.0, &[1], &[3.0]);
+        assert_eq!(z, vec![0.0, 3.0, 0.0]);
     }
 
     #[test]

@@ -170,30 +170,40 @@ impl StatValue {
 
     /// self += other, for any mix of shapes. The result is sparse only
     /// when both operands are sparse; any dense operand densifies.
+    /// Exactly [`Self::axpy_value`] at s = 1.0 (bit-identical: IEEE
+    /// multiplication by 1.0 is the identity).
     pub fn add_value(&mut self, other: &StatValue) {
+        self.axpy_value(1.0, other);
+    }
+
+    /// self += s · other, for any mix of shapes, without materializing a
+    /// scaled copy of `other` — the staleness-discounted fold of async
+    /// buffered aggregation. Shape result matches [`Self::add_value`]:
+    /// sparse only when both operands are sparse.
+    pub fn axpy_value(&mut self, s: f32, other: &StatValue) {
         match other {
             StatValue::Dense(x) => {
                 let dst = self.densify();
                 if dst.len() < x.len() {
                     dst.resize(x.len(), 0.0);
                 }
-                ops::add_assign(&mut dst[..x.len()], x);
+                ops::axpy(&mut dst[..x.len()], s, x);
             }
             StatValue::Sparse { dim, idx, val } => match self {
                 StatValue::Dense(dst) => {
                     if dst.len() < *dim as usize {
                         dst.resize(*dim as usize, 0.0);
                     }
-                    ops::scatter_add(dst, idx, val);
+                    ops::scatter_axpy(dst, s, idx, val);
                 }
                 StatValue::Sparse { dim: d0, idx: i0, val: v0 } => {
                     *d0 = (*d0).max(*dim);
                     if i0.as_slice() == idx.as_slice() {
-                        // identical sparsity pattern (common when users
-                        // share a mask): plain vector add, no merge
-                        ops::add_assign(v0, val);
+                        ops::axpy(v0, s, val);
                     } else {
-                        let (mi, mv) = merge_sparse(i0, v0, idx, val);
+                        let mut mi = Vec::new();
+                        let mut mv = Vec::new();
+                        merge_sparse_scaled_into(i0, v0, idx, val, s, &mut mi, &mut mv);
                         *i0 = mi;
                         *v0 = mv;
                     }
@@ -213,39 +223,53 @@ impl StatValue {
     }
 }
 
-/// Merge two sorted sparse (idx, val) streams, summing shared indices.
-fn merge_sparse(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> (Vec<u32>, Vec<f32>) {
-    let cap = ia.len() + ib.len();
-    let mut idx = Vec::with_capacity(cap);
-    let mut val = Vec::with_capacity(cap);
+/// Merge two sorted sparse streams into caller-owned output buffers,
+/// scaling the `b` side by `s`: out = a + s·b. The outputs are cleared
+/// but keep their capacity, so a caller that ping-pongs the same pair of
+/// buffers (the sparse [`crate::tensor::StatsArena`] slot) allocates
+/// nothing once the buffers have grown to the working-set size.
+pub(crate) fn merge_sparse_scaled_into(
+    ia: &[u32],
+    va: &[f32],
+    ib: &[u32],
+    vb: &[f32],
+    s: f32,
+    out_idx: &mut Vec<u32>,
+    out_val: &mut Vec<f32>,
+) {
+    debug_assert_eq!(ia.len(), va.len());
+    debug_assert_eq!(ib.len(), vb.len());
+    out_idx.clear();
+    out_val.clear();
+    out_idx.reserve(ia.len() + ib.len());
+    out_val.reserve(ia.len() + ib.len());
     let (mut i, mut j) = (0usize, 0usize);
     while i < ia.len() && j < ib.len() {
         if ia[i] == ib[j] {
-            idx.push(ia[i]);
-            val.push(va[i] + vb[j]);
+            out_idx.push(ia[i]);
+            out_val.push(va[i] + s * vb[j]);
             i += 1;
             j += 1;
         } else if ia[i] < ib[j] {
-            idx.push(ia[i]);
-            val.push(va[i]);
+            out_idx.push(ia[i]);
+            out_val.push(va[i]);
             i += 1;
         } else {
-            idx.push(ib[j]);
-            val.push(vb[j]);
+            out_idx.push(ib[j]);
+            out_val.push(s * vb[j]);
             j += 1;
         }
     }
     while i < ia.len() {
-        idx.push(ia[i]);
-        val.push(va[i]);
+        out_idx.push(ia[i]);
+        out_val.push(va[i]);
         i += 1;
     }
     while j < ib.len() {
-        idx.push(ib[j]);
-        val.push(vb[j]);
+        out_idx.push(ib[j]);
+        out_val.push(s * vb[j]);
         j += 1;
     }
-    (idx, val)
 }
 
 #[cfg(test)]
@@ -321,6 +345,32 @@ mod tests {
         a.add_value(&sp(4, &[(0, 10.0), (2, 20.0)]));
         assert_eq!(a.element_count(), 2);
         assert_eq!(a.to_dense_vec(), vec![11.0, 0.0, 22.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_value_matches_scaled_add_all_mixes() {
+        let cases: Vec<(StatValue, StatValue)> = vec![
+            (StatValue::Dense(vec![1.0, 2.0, 3.0]), StatValue::Dense(vec![4.0, 5.0, 6.0])),
+            (StatValue::Dense(vec![1.0, 1.0, 1.0]), sp(3, &[(0, 2.0), (2, -4.0)])),
+            (sp(3, &[(1, 1.0)]), StatValue::Dense(vec![2.0, 2.0, 2.0])),
+            (sp(5, &[(0, 1.0), (3, 1.0)]), sp(5, &[(3, 2.0), (4, 8.0)])),
+            (sp(4, &[(1, 1.0), (2, 2.0)]), sp(4, &[(1, 10.0), (2, 20.0)])),
+        ];
+        for (a0, b) in cases {
+            let s = 0.5f32;
+            let mut a = a0.clone();
+            a.axpy_value(s, &b);
+            let mut reference = a0.clone();
+            let mut scaled = b.clone();
+            scaled.scale(s);
+            reference.add_value(&scaled);
+            assert_eq!(a.to_dense_vec(), reference.to_dense_vec(), "{a0:?} += {s}*{b:?}");
+            // shape law matches add_value: sparse only when both sparse
+            assert_eq!(
+                matches!(a, StatValue::Sparse { .. }),
+                matches!(a0, StatValue::Sparse { .. }) && matches!(b, StatValue::Sparse { .. })
+            );
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use pfl::fl::stats::{StatValue, Statistics};
 use pfl::fl::Metrics;
 use pfl::privacy::{Accountant, AccountantParams, PldAccountant, RdpAccountant};
 use pfl::simsys::{replay_cluster, replay_round, UserCost};
-use pfl::tensor::StatsArena;
+use pfl::tensor::{ArenaConfig, StatsArena};
 use pfl::util::rng::Rng;
 
 const TRIALS: u64 = 25;
@@ -185,6 +185,146 @@ fn arena_fold_matches_accumulate_on_mixes() {
         assert_close(
             &dense_of(&a, "update", dim),
             &dense_of(&b, "update", dim),
+            &format!("seed {seed}"),
+        );
+    }
+}
+
+/// Exchange law of the sparse-aware arena with the spill threshold
+/// crossed mid-round: random mixed dense/sparse cohorts split across two
+/// arenas (simulating two workers) must reduce to the same statistics as
+/// the single-accumulator fold, regardless of which slots spilled where.
+#[test]
+fn sparse_arena_exchange_law_across_spill_threshold() {
+    for seed in 0..TRIALS * 2 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x59A5);
+        let dim = 8 + rng.below(56);
+        // a low threshold so some rounds cross it mid-round (each sparse
+        // user carries ~30% nnz) while all-sparse small unions stay under
+        let config = ArenaConfig { sparse_spill_frac: 0.4 };
+        let users: Vec<Statistics> =
+            (0..2 + rng.below(10)).map(|_| rand_mixed_stats(&mut rng, dim)).collect();
+
+        // one arena folds everything
+        let mut arena = StatsArena::with_config(config);
+        for u in &users {
+            arena.fold(u);
+        }
+        let single = arena.take_partial().unwrap();
+
+        // two "workers" fold an interleaved split; reduce the partials
+        let mut a0 = StatsArena::with_config(config);
+        let mut a1 = StatsArena::with_config(config);
+        for (i, u) in users.iter().enumerate() {
+            if i % 2 == 0 {
+                a0.fold(u);
+            } else {
+                a1.fold(u);
+            }
+        }
+        let partials: Vec<Statistics> =
+            [a0.take_partial(), a1.take_partial()].into_iter().flatten().collect();
+        let reduced = SumAggregator.worker_reduce(partials).unwrap();
+
+        // reference: the move-based accumulate
+        let mut acc = None;
+        for u in users.clone() {
+            SumAggregator.accumulate(&mut acc, u.clone());
+        }
+        let reference = acc.unwrap();
+
+        for (name, got) in [("single-arena", &single), ("split-reduce", &reduced)] {
+            assert_eq!(got.weight, reference.weight, "seed {seed} {name}");
+            assert_close(
+                &dense_of(got, "update", dim),
+                &dense_of(&reference, "update", dim),
+                &format!("seed {seed} {name}"),
+            );
+        }
+    }
+}
+
+/// All-sparse regime: the arena must stay in sparse mode (no spills, a
+/// sparse partial every round) and reach the zero-allocation steady
+/// state after the first round of a repeating cohort shape.
+#[test]
+fn all_sparse_arena_zero_growth_steady_state() {
+    let mut arena = StatsArena::new(); // default spill frac 0.25
+    let dim = 4096u32;
+    // GBDT-style tiny users: 8 nnz each, union 32 nnz « 0.25·dim
+    let users: Vec<Statistics> = (0u32..4)
+        .map(|u| {
+            let idx: Vec<u32> = (0u32..8).map(|i| u * 512 + i * 9).collect();
+            let val: Vec<f32> = (0u32..8).map(|i| (u * 8 + i) as f32 * 0.5 - 2.0).collect();
+            Statistics::new_update_value(StatValue::sparse(dim, idx, val), 1.0)
+        })
+        .collect();
+
+    for u in &users {
+        arena.fold(u);
+    }
+    arena.drain_grown_bytes(); // first round sizes the ping-pong buffers
+    let first = arena.take_partial().unwrap();
+    assert!(matches!(first.update_value(), Some(StatValue::Sparse { .. })));
+
+    for round in 0..5 {
+        for u in &users {
+            arena.fold(u);
+        }
+        assert_eq!(arena.drain_grown_bytes(), 0, "round {round}: steady state must not grow");
+        let p = arena.take_partial().unwrap();
+        let v = p.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "round {round} densified");
+        assert_eq!(v.element_count(), 32);
+        assert_eq!(p.weight, 4.0);
+    }
+    assert_eq!(arena.drain_spill_count(), 0, "all-sparse cohort must never spill");
+    assert_eq!(arena.drain_sparse_rounds(), 6);
+}
+
+/// The sparse-aware scaled fold (async staleness discount) must equal
+/// scaling the contribution first and folding it plainly, over every
+/// shape mix.
+#[test]
+fn accumulate_scaled_matches_scaled_accumulate_randomized() {
+    for seed in 0..TRIALS * 2 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5CA1);
+        let dim = 1 + rng.below(48);
+        let users: Vec<(Statistics, f32)> = (0..2 + rng.below(8))
+            .map(|_| {
+                let s = rand_mixed_stats(&mut rng, dim);
+                let scale = 1.0 / (1.0 + rng.below(4) as f32); // staleness weights
+                (s, scale)
+            })
+            .collect();
+        let agg = SumAggregator;
+
+        let mut fast = None;
+        for (u, sc) in &users {
+            agg.accumulate_scaled(&mut fast, u.clone(), *sc);
+        }
+        let fast = fast.unwrap();
+
+        let mut reference = None;
+        for (u, sc) in &users {
+            let mut scaled = u.clone();
+            for v in scaled.vecs.values_mut() {
+                v.scale(*sc);
+            }
+            scaled.weight *= *sc as f64;
+            agg.accumulate(&mut reference, scaled);
+        }
+        let reference = reference.unwrap();
+
+        assert!(
+            (fast.weight - reference.weight).abs() < 1e-9,
+            "seed {seed}: weight {} vs {}",
+            fast.weight,
+            reference.weight
+        );
+        assert_close(
+            &dense_of(&fast, "update", dim),
+            &dense_of(&reference, "update", dim),
             &format!("seed {seed}"),
         );
     }
