@@ -1,0 +1,159 @@
+//! Bench: the out-of-core sharded dataset store (ISSUE 5) — read
+//! latency per user in the three regimes that matter for the cohort
+//! pipeline, plus the zero-allocation invariant of the cache hit path.
+//!
+//! Emits `BENCH_data.json`:
+//! * `data_store/cold/ns_per_user` — cache empty, no prefetch: every
+//!   fetch pays the shard read (the regime the prefetcher exists to
+//!   hide).
+//! * `data_store/warm/ns_per_user` — 100% cache-hit rate; the in-bench
+//!   assert requires **zero** heap allocation per fetch in this regime
+//!   (`alloc_bytes_per_op == 0`, counted by the global allocator).
+//! * `data_store/prefetched/stall_ns_per_user` vs
+//!   `data_store/unprefetched/stall_ns_per_user` — time the "training"
+//!   loop was blocked on disk with and without the dispatcher-fed
+//!   prefetch thread running ahead; prefetching must stall strictly
+//!   less (asserted when the unprefetched baseline stalls at all).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pfl::data::{
+    materialize, ShardedStore, SourceConfig, StoreSource, SynthCifar, UserDataSource,
+};
+use pfl::util::bench::{
+    bench_per_op, bench_per_op_alloc, write_bench_json, BenchRecord, CountingAlloc,
+};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const USERS: usize = 96;
+const PER_USER: usize = 10;
+/// Simulated local-training time per user in the prefetch-overlap
+/// measurement; the prefetcher has this long to load the next users.
+const TRAIN_NS: u64 = 300_000;
+
+fn spin_ns(ns: u64) {
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+/// Fetch every user once in order, spinning `train_ns` after each (the
+/// local-training phase prefetch overlaps with); returns total stall ns.
+fn consume_round(src: &StoreSource, order: &[usize], train_ns: u64) -> u64 {
+    let mut stall = 0;
+    for &uid in order {
+        let f = src.fetch(uid);
+        stall += f.stall_nanos;
+        std::hint::black_box(&f.data);
+        if train_ns > 0 {
+            spin_ns(train_ns);
+        }
+    }
+    stall
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("pfl_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // CIFAR-shaped users (~123 KB each): big enough that a read is real
+    // work, small enough that the bench stays quick
+    let gen = SynthCifar::new(USERS, PER_USER, None, 7);
+    let stats = materialize(&gen, &dir, 16, 0)?;
+    println!(
+        "materialized {} users, {} shards, {:.1} MB",
+        stats.num_users,
+        stats.num_shards,
+        stats.data_bytes as f64 / 1e6
+    );
+    let store = Arc::new(ShardedStore::open(&dir)?);
+    let order: Vec<usize> = (0..USERS).collect();
+
+    // --- cold: empty cache, no prefetch thread ----------------------
+    // a fresh source per iteration so no fetch ever hits
+    let cold = bench_per_op("data_store/cold", 1, 5, USERS, || {
+        let src = StoreSource::new(
+            store.clone(),
+            SourceConfig { cache_users: USERS, prefetch_depth: 0 },
+        );
+        let stall = consume_round(&src, &order, 0);
+        std::hint::black_box(stall);
+    });
+
+    // --- warm: 100% hit rate, zero allocation per fetch -------------
+    let warm_src = StoreSource::new(
+        store.clone(),
+        SourceConfig { cache_users: USERS, prefetch_depth: 0 },
+    );
+    consume_round(&warm_src, &order, 0); // fill the cache
+    let (warm, warm_alloc) = bench_per_op_alloc("data_store/warm", 2, 9, USERS, || {
+        for &uid in &order {
+            let f = warm_src.fetch(uid);
+            assert_eq!(f.cache_hit, Some(true), "warm fetch missed");
+            std::hint::black_box(&f.data);
+        }
+    });
+    assert_eq!(
+        warm_alloc, 0.0,
+        "cache hits must not allocate: {warm_alloc} bytes/op at 100% hit rate"
+    );
+
+    // --- prefetched vs not: stall while "training" overlaps ---------
+    // small cache so nothing survives between measurements; the
+    // prefetcher gets the dispatch order up front, stays `depth` users
+    // ahead, and the training spin gives it time to win the race
+    let measure_stall = |depth: usize| -> u64 {
+        let src = StoreSource::new(
+            store.clone(),
+            SourceConfig { cache_users: 16, prefetch_depth: depth },
+        );
+        if depth > 0 {
+            src.hint_round(&order);
+        }
+        consume_round(&src, &order, TRAIN_NS) / USERS as u64
+    };
+    let unprefetched_stall = measure_stall(0);
+    let prefetched_stall = measure_stall(8);
+    println!(
+        "stall/user: unprefetched {:>8} ns, prefetched {:>8} ns",
+        unprefetched_stall, prefetched_stall
+    );
+    if unprefetched_stall > 0 {
+        assert!(
+            prefetched_stall < unprefetched_stall,
+            "prefetch did not reduce stalls: {prefetched_stall} >= {unprefetched_stall} ns/user"
+        );
+    }
+
+    write_bench_json(
+        "BENCH_data.json",
+        &[
+            BenchRecord {
+                name: "data_store/cold/ns_per_user".into(),
+                ns_per_op: cold.median.as_nanos() as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "data_store/warm/ns_per_user".into(),
+                ns_per_op: warm.median.as_nanos() as f64,
+                alloc_bytes_per_op: warm_alloc,
+            },
+            BenchRecord {
+                name: "data_store/unprefetched/stall_ns_per_user".into(),
+                ns_per_op: unprefetched_stall as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+            BenchRecord {
+                name: "data_store/prefetched/stall_ns_per_user".into(),
+                ns_per_op: prefetched_stall as f64,
+                alloc_bytes_per_op: 0.0,
+            },
+        ],
+    )?;
+    println!("wrote BENCH_data.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

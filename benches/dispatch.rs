@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use pfl::baselines::OverheadProfile;
-use pfl::data::{FederatedDataset, UserData};
+use pfl::data::{FederatedDataset, GeneratorSource, UserData};
 use pfl::fl::algorithm::RunSpec;
 use pfl::fl::backend::{BackendBuilder, RunParams};
 use pfl::fl::central_opt::Sgd;
@@ -122,7 +122,7 @@ fn spin_pool(dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
     WorkerPool::new(
         WORKERS,
         WorkerShared {
-            dataset,
+            source: Arc::new(GeneratorSource::new(dataset)),
             algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
             postprocessors: Arc::new(Vec::new()),
             aggregator: Arc::new(SumAggregator),

@@ -9,7 +9,8 @@ use anyhow::{bail, Context, Result};
 use super::{Config, DatasetConfig};
 use crate::baselines::OverheadProfile;
 use crate::data::{
-    FederatedDataset, InstructFlavor, SynthCifar, SynthFlair, SynthInstruct, SynthText,
+    FederatedDataset, InstructFlavor, ShardedStore, StoreSource, SynthCifar, SynthFlair,
+    SynthInstruct, SynthText, UserDataSource,
 };
 use crate::fl::algorithm::RunSpec;
 use crate::fl::backend::{BackendBuilder, RunParams, SimulatedBackend};
@@ -224,9 +225,55 @@ pub fn build_eval_callback(
     )
 }
 
+/// Open + validate the config's data store: the store must hold the
+/// same dataset (name) and population the config's generator would
+/// produce — a store materialized from a different preset or `--scale`
+/// would feed the wrong shapes into the model, so fail loudly instead.
+fn open_store(cfg: &Config) -> Result<Arc<ShardedStore>> {
+    let store = Arc::new(
+        ShardedStore::open(std::path::Path::new(&cfg.data_store)).with_context(|| {
+            format!("opening data store {} (run `pfl materialize` first)", cfg.data_store)
+        })?,
+    );
+    let expect = build_dataset(&cfg.dataset)?;
+    if store.name() != expect.name() || store.num_users() != expect.num_users() {
+        bail!(
+            "data store {} holds {:?} with {} users, but the config expects {:?} with {} \
+             users — materialize with the same --preset/--config and --scale",
+            cfg.data_store,
+            store.name(),
+            store.num_users(),
+            expect.name(),
+            expect.num_users(),
+        );
+    }
+    Ok(store)
+}
+
+/// The run's training dataset: the lazy generator, or — with
+/// `engine.data_store` set — the materialized store opened from disk
+/// (its in-memory index serves `user_len` scheduling weights with no
+/// I/O; reads are bit-identical to the generator it was materialized
+/// from). Prefer [`crate::fl::backend::SimulatedBackend::dataset`]
+/// when a backend has already been built — it shares one store open.
+pub fn effective_dataset(cfg: &Config) -> Result<Arc<dyn FederatedDataset>> {
+    if cfg.data_store.is_empty() {
+        build_dataset(&cfg.dataset)
+    } else {
+        Ok(open_store(cfg)?)
+    }
+}
+
 /// Assemble the full backend for a config.
 pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<SimulatedBackend> {
-    let dataset = build_dataset(&cfg.dataset)?;
+    let mut source: Option<Arc<dyn UserDataSource>> = None;
+    let dataset: Arc<dyn FederatedDataset> = if cfg.data_store.is_empty() {
+        build_dataset(&cfg.dataset)?
+    } else {
+        let store = open_store(cfg)?;
+        source = Some(Arc::new(StoreSource::new(store.clone(), cfg.source_config())));
+        store
+    };
     let algorithm = build_algorithm(cfg, dataset.num_users())?;
     let factory = hlo_factory(cfg.model.clone(), cfg.seed ^ 0x1817);
     let mut builder = BackendBuilder::new(dataset, algorithm, factory).params(RunParams {
@@ -239,6 +286,9 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         arena: cfg.arena_config(),
         ..Default::default()
     });
+    if let Some(s) = source {
+        builder = builder.data_source(s);
+    }
     for pp in build_postprocessors(cfg)? {
         builder = builder.postprocessor(pp);
     }
@@ -288,6 +338,38 @@ mod tests {
         let cfg = preset("cifar10-iid").unwrap();
         assert!(build_postprocessors(&cfg).unwrap().is_empty());
         assert_eq!(calibrated_noise_multiplier(&cfg).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn effective_dataset_opens_materialized_store() {
+        let mut cfg = preset("cifar10-iid").unwrap().scaled(0.02);
+        let dir =
+            std::env::temp_dir().join(format!("pfl_build_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let gen = build_dataset(&cfg.dataset).unwrap();
+        crate::data::materialize(&*gen, &dir, 16, 0).unwrap();
+        cfg.data_store = dir.to_string_lossy().into_owned();
+        cfg.cache_users = 8;
+        cfg.prefetch_depth = 2;
+        let ds = effective_dataset(&cfg).unwrap();
+        assert_eq!(ds.num_users(), gen.num_users());
+        assert_eq!(ds.name(), gen.name());
+        assert_eq!(ds.user_len(0), gen.user_len(0));
+        // the full backend assembles over the store (model construction
+        // is lazy, so no hlo feature is needed here)
+        let backend = build_backend(&cfg, OverheadProfile::default()).unwrap();
+        assert_eq!(backend.num_workers(), cfg.num_workers);
+        // a store from a different scale (population mismatch) is
+        // rejected instead of silently training on the wrong users
+        let mut other = preset("cifar10-iid").unwrap().scaled(0.05);
+        other.data_store = cfg.data_store.clone();
+        let err = effective_dataset(&other).unwrap_err();
+        assert!(err.to_string().contains("users"), "unhelpful mismatch error: {err:#}");
+        // a bogus path errors with context instead of falling back
+        cfg.data_store = "/nonexistent/pfl-store".into();
+        assert!(effective_dataset(&cfg).is_err());
+        assert!(build_backend(&cfg, OverheadProfile::default()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

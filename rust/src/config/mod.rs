@@ -125,6 +125,17 @@ pub struct Config {
     /// Worker arena: sparse slots spill to dense once union nnz exceeds
     /// this fraction of the dimension (`ArenaConfig::sparse_spill_frac`).
     pub sparse_spill_frac: f64,
+    /// Path of a `pfl materialize` store directory. Empty (default) =
+    /// generate user data lazily (pre-store behavior, byte-identical);
+    /// set = read materialized users out-of-core through the LRU cache
+    /// + prefetch pipeline (`crate::data::store`, CLI `--data-store`).
+    pub data_store: String,
+    /// Store-backed runs: LRU user-cache capacity (CLI `--cache-users`).
+    pub cache_users: usize,
+    /// Store-backed runs: how many users the prefetch thread may run
+    /// ahead of worker consumption; 0 disables the thread (CLI
+    /// `--prefetch-depth`).
+    pub prefetch_depth: usize,
     pub seed: u64,
 }
 
@@ -160,6 +171,13 @@ impl Config {
 
     pub fn arena_config(&self) -> crate::tensor::ArenaConfig {
         crate::tensor::ArenaConfig { sparse_spill_frac: self.sparse_spill_frac }
+    }
+
+    pub fn source_config(&self) -> crate::data::SourceConfig {
+        crate::data::SourceConfig {
+            cache_users: self.cache_users,
+            prefetch_depth: self.prefetch_depth,
+        }
     }
 
     pub fn dispatch_spec(&self) -> Result<crate::fl::DispatchSpec> {
@@ -253,6 +271,9 @@ impl Config {
                     ("buffer_frac", num(self.buffer_frac)),
                     ("reorder_window", num(self.reorder_window as f64)),
                     ("sparse_spill_frac", num(self.sparse_spill_frac)),
+                    ("data_store", s(self.data_store.clone())),
+                    ("cache_users", num(self.cache_users as f64)),
+                    ("prefetch_depth", num(self.prefetch_depth as f64)),
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
@@ -340,6 +361,19 @@ impl Config {
                 Some(x) => x.as_f64()?,
                 None => crate::tensor::ArenaConfig::default().sparse_spill_frac,
             },
+            // optional for configs written before the out-of-core store
+            data_store: match e.get("data_store") {
+                Some(x) => x.as_str()?.to_string(),
+                None => String::new(),
+            },
+            cache_users: match e.get("cache_users") {
+                Some(x) => x.as_usize()?,
+                None => crate::data::SourceConfig::default().cache_users,
+            },
+            prefetch_depth: match e.get("prefetch_depth") {
+                Some(x) => x.as_usize()?,
+                None => crate::data::SourceConfig::default().prefetch_depth,
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -405,6 +439,9 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         buffer_frac: 0.5,
         reorder_window: 0,
         sparse_spill_frac: 0.25,
+        data_store: String::new(),
+        cache_users: 512,
+        prefetch_depth: 8,
         seed: 0,
     }
 }
@@ -448,6 +485,9 @@ fn stackoverflow(dp: bool) -> Config {
         buffer_frac: 0.5,
         reorder_window: 0,
         sparse_spill_frac: 0.25,
+        data_store: String::new(),
+        cache_users: 512,
+        prefetch_depth: 8,
         seed: 0,
     }
 }
@@ -494,6 +534,9 @@ fn flair(iid: bool, dp: bool) -> Config {
         buffer_frac: 0.5,
         reorder_window: 0,
         sparse_spill_frac: 0.25,
+        data_store: String::new(),
+        cache_users: 512,
+        prefetch_depth: 8,
         seed: 0,
     }
 }
@@ -536,6 +579,9 @@ fn llm(flavor: &str, dp: bool) -> Config {
         buffer_frac: 0.5,
         reorder_window: 0,
         sparse_spill_frac: 0.25,
+        data_store: String::new(),
+        cache_users: 512,
+        prefetch_depth: 8,
         seed: 0,
     }
 }
@@ -692,7 +738,7 @@ mod tests {
     #[test]
     fn old_configs_without_dispatch_fields_parse() {
         // engine section written before the dispatch engine / sparse
-        // arena / deterministic replay existed
+        // arena / deterministic replay / out-of-core store existed
         let json = preset("cifar10-iid").unwrap().to_json();
         let stripped = json
             .lines()
@@ -702,6 +748,9 @@ mod tests {
                     && !l.contains("buffer_frac")
                     && !l.contains("reorder_window")
                     && !l.contains("sparse_spill_frac")
+                    && !l.contains("data_store")
+                    && !l.contains("cache_users")
+                    && !l.contains("prefetch_depth")
             })
             .collect::<Vec<_>>()
             .join("\n");
@@ -711,6 +760,22 @@ mod tests {
         assert_eq!(parsed.buffer_frac, 0.5);
         assert_eq!(parsed.reorder_window, 0);
         assert_eq!(parsed.sparse_spill_frac, 0.25);
+        assert_eq!(parsed.data_store, "");
+        assert_eq!(parsed.cache_users, 512);
+        assert_eq!(parsed.prefetch_depth, 8);
+    }
+
+    #[test]
+    fn data_store_knobs_roundtrip() {
+        let mut c = preset("cifar10-iid").unwrap();
+        assert!(c.data_store.is_empty(), "presets default to lazy generation");
+        c.data_store = "/tmp/cifar-store".into();
+        c.cache_users = 64;
+        c.prefetch_depth = 3;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.data_store, "/tmp/cifar-store");
+        assert_eq!(back.source_config().cache_users, 64);
+        assert_eq!(back.source_config().prefetch_depth, 3);
     }
 
     #[test]

@@ -10,9 +10,15 @@
 //! Data is generated lazily per user from (dataset_seed, user_id), so a
 //! million-user population costs no memory — the analogue of
 //! pfl-research's async user-dataset loading being off the critical path.
+//! For the I/O-bound regime — materialized user data that cannot live in
+//! RAM — [`store`] adds an out-of-core sharded store (`pfl materialize`
+//! writes it, [`ShardedStore`] reads it back bit-identically) behind the
+//! [`UserDataSource`] worker interface, with an LRU cache and a
+//! dispatcher-fed prefetch thread (DESIGN.md §6).
 
 pub mod partition;
 pub mod sampling;
+pub mod store;
 pub mod synth_cifar;
 pub mod synth_flair;
 pub mod synth_instruct;
@@ -21,6 +27,10 @@ pub mod tabular;
 
 pub use partition::{dirichlet_label_partition, iid_fixed_size_partition, poisson_size_partition};
 pub use sampling::{CohortSampler, CrossSiloSampler, MinibatchSampler, PoissonCohortSampler};
+pub use store::{
+    materialize, Fetched, GeneratorSource, ShardWriter, ShardedStore, SourceConfig, StoreSource,
+    UserDataSource,
+};
 pub use synth_cifar::SynthCifar;
 pub use synth_flair::SynthFlair;
 pub use synth_instruct::{InstructFlavor, SynthInstruct};
@@ -75,6 +85,47 @@ impl UserData {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Bit-level fingerprint: the variant tag, shape fields, and every
+    /// payload element as raw bits (`f32::to_bits` — NaNs included, so
+    /// "close" never passes for "identical"). Two records fingerprint
+    /// equal iff they are byte-for-byte the same data; the store
+    /// round-trip tests are built on this.
+    pub fn bit_fingerprint(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        match self {
+            UserData::Image { x, y, hwc } => {
+                out.push(0);
+                out.push(*hwc as u64);
+                out.extend(y.iter().map(|v| *v as u64));
+                out.extend(x.iter().map(|v| v.to_bits() as u64));
+            }
+            UserData::Features { x, y, feat, labels } => {
+                out.push(1);
+                out.push(*feat as u64);
+                out.push(*labels as u64);
+                out.extend(x.iter().map(|v| v.to_bits() as u64));
+                out.extend(y.iter().map(|v| v.to_bits() as u64));
+            }
+            UserData::Tokens { seqs, seq_len } => {
+                out.push(2);
+                out.push(*seq_len as u64);
+                out.extend(seqs.iter().map(|v| *v as u64));
+            }
+            UserData::Tabular { x, y, dim } => {
+                out.push(3);
+                out.push(*dim as u64);
+                out.extend(x.iter().map(|v| v.to_bits() as u64));
+                out.extend(y.iter().map(|v| v.to_bits() as u64));
+            }
+            UserData::Points { x, dim } => {
+                out.push(4);
+                out.push(*dim as u64);
+                out.extend(x.iter().map(|v| v.to_bits() as u64));
+            }
+        }
+        out
     }
 }
 

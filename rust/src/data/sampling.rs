@@ -90,4 +90,58 @@ mod tests {
     fn cross_silo_takes_everyone() {
         assert_eq!(CrossSiloSampler.sample(7, 0, 0), (0..7).collect::<Vec<_>>());
     }
+
+    #[test]
+    fn poisson_per_user_inclusion_rate() {
+        // The DP accounting assumption is *per-user*: every uid is an
+        // independent Bernoulli(rate) each round, not just the cohort
+        // mean — check the inclusion frequency of individual users.
+        let s = PoissonCohortSampler { rate: 0.2 };
+        let rounds = 2000u64;
+        let population = 40;
+        let mut included = vec![0u32; population];
+        for it in 0..rounds {
+            for uid in s.sample(population, it, 11) {
+                included[uid] += 1;
+            }
+        }
+        for (uid, &n) in included.iter().enumerate() {
+            let freq = n as f64 / rounds as f64;
+            // 5 sigma of Bernoulli(0.2) over 2000 trials ≈ 0.045
+            assert!((freq - 0.2).abs() < 0.05, "uid {uid} included at rate {freq}");
+        }
+    }
+
+    #[test]
+    fn poisson_cohorts_are_valid_sorted_and_deterministic() {
+        let s = PoissonCohortSampler { rate: 0.3 };
+        for it in 0..20 {
+            let c = s.sample(100, it, 5);
+            assert!(c.iter().all(|&u| u < 100));
+            // per-user coin flips over 0..n yield strictly increasing ids
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "iteration {it} not sorted-unique");
+            assert_eq!(c, s.sample(100, it, 5), "iteration {it} not deterministic");
+        }
+        // different seeds decorrelate the rounds
+        assert_ne!(s.sample(100, 3, 5), s.sample(100, 3, 6));
+        // degenerate rates
+        assert!(PoissonCohortSampler { rate: 0.0 }.sample(50, 0, 1).is_empty());
+        assert_eq!(PoissonCohortSampler { rate: 1.0 }.sample(50, 0, 1).len(), 50);
+    }
+
+    #[test]
+    fn cross_silo_coverage_invariants() {
+        // Every silo participates every round: full coverage, each id
+        // exactly once, in stable order, regardless of iteration or
+        // seed — the invariant the prefetcher's hint order relies on.
+        let s = CrossSiloSampler;
+        for population in [0usize, 1, 13, 100] {
+            for (it, seed) in [(0u64, 0u64), (7, 3), (1000, 99)] {
+                let c = s.sample(population, it, seed);
+                assert_eq!(c.len(), population);
+                assert_eq!(c, (0..population).collect::<Vec<_>>(), "pop {population}");
+            }
+        }
+        assert_eq!(s.name(), "cross-silo");
+    }
 }

@@ -1,0 +1,1034 @@
+//! Out-of-core sharded dataset store: materialized user data on disk,
+//! read back through a bounded LRU cache with dispatcher-driven
+//! prefetch. See DESIGN.md §6 for the architecture.
+//!
+//! The synthetic generators in this module's siblings cost no memory
+//! because user data is a pure function of (seed, uid) — but that also
+//! means every simulated dataset is formulaic. pfl-research's answer
+//! for *realistic* datasets is to keep user-dataset loading off the
+//! critical path on a separate thread; this module reproduces that
+//! design for populations whose data is materialized and does not fit
+//! in RAM:
+//!
+//! * [`ShardWriter`] / [`materialize`] write any [`FederatedDataset`]
+//!   to a directory of binary shards (the `pfl materialize`
+//!   subcommand): each shard has a fixed header, and `index.bin` holds
+//!   the per-user (shard, offset, length, examples) index, so reading
+//!   one user costs a single positioned read.
+//! * [`ShardedStore`] opens a store directory and implements
+//!   [`FederatedDataset`] over it — bit-identical to the generator it
+//!   was materialized from (property-tested in
+//!   `rust/tests/property_invariants.rs`), so every downstream layer
+//!   is unchanged.
+//! * [`StoreSource`] wraps a store in the [`UserDataSource`] interface
+//!   the workers consume: a bounded LRU user cache (a hit allocates
+//!   nothing — asserted by `benches/data_store.rs`) plus a background
+//!   prefetch thread that consumes the *dispatcher's* upcoming-uid
+//!   order ([`UserDataSource::hint_round`]: the static LPT schedule,
+//!   the work-stealing shared-queue order, and the async streaming
+//!   order all feed it) and stays at most `prefetch_depth` users ahead
+//!   of worker consumption, so disk I/O overlaps local training
+//!   exactly as pfl-research keeps loading off the critical path.
+//!
+//! Observability: every fetch reports hit/miss and the nanoseconds the
+//! worker spent blocked on a miss; workers fold these into
+//! [`crate::simsys::Counters`] (`cache_hits`, `cache_misses`,
+//! `prefetch_stall_nanos`) and the backend emits the per-round
+//! `sys/cache-hit-frac` metric.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{FederatedDataset, UserData};
+
+/// Store format version; any layout change bumps it and readers reject
+/// mismatches instead of misparsing.
+const VERSION: u32 = 1;
+const INDEX_MAGIC: &[u8; 8] = b"PFLSIDX1";
+const SHARD_MAGIC: &[u8; 8] = b"PFLSHRD1";
+const EVAL_MAGIC: &[u8; 8] = b"PFLSEVL1";
+/// Bytes of fixed shard header preceding the first user blob.
+const SHARD_HEADER_LEN: u64 = 8 + 4 + 4;
+
+fn shard_file_name(shard: u32) -> String {
+    format!("shard_{shard:05}.bin")
+}
+
+// ----------------------------------------------------------------------
+// Blob encoding: one self-describing record per user (or eval shard)
+// ----------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(buf: &mut Vec<u8>, v: &[i32]) {
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Byte cursor over an encoded blob.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.p.checked_add(n).ok_or_else(|| anyhow!("blob offset overflow"))?;
+        if end > self.b.len() {
+            bail!("truncated blob: want {n} bytes at {}, have {}", self.p, self.b.len());
+        }
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("blob length overflow"))?)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("blob length overflow"))?)?;
+        Ok(s.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+/// Encode one [`UserData`] record. f32/i32 payloads are stored as raw
+/// little-endian bits, so a round trip is bit-exact (NaNs included).
+fn encode_user_data(d: &UserData, buf: &mut Vec<u8>) {
+    match d {
+        UserData::Image { x, y, hwc } => {
+            buf.push(0);
+            put_u32(buf, *hwc as u32);
+            put_u32(buf, y.len() as u32);
+            put_u32(buf, x.len() as u32);
+            put_i32s(buf, y);
+            put_f32s(buf, x);
+        }
+        UserData::Features { x, y, feat, labels } => {
+            buf.push(1);
+            put_u32(buf, *feat as u32);
+            put_u32(buf, *labels as u32);
+            put_u32(buf, x.len() as u32);
+            put_u32(buf, y.len() as u32);
+            put_f32s(buf, x);
+            put_f32s(buf, y);
+        }
+        UserData::Tokens { seqs, seq_len } => {
+            buf.push(2);
+            put_u32(buf, *seq_len as u32);
+            put_u32(buf, seqs.len() as u32);
+            put_i32s(buf, seqs);
+        }
+        UserData::Tabular { x, y, dim } => {
+            buf.push(3);
+            put_u32(buf, *dim as u32);
+            put_u32(buf, x.len() as u32);
+            put_u32(buf, y.len() as u32);
+            put_f32s(buf, x);
+            put_f32s(buf, y);
+        }
+        UserData::Points { x, dim } => {
+            buf.push(4);
+            put_u32(buf, *dim as u32);
+            put_u32(buf, x.len() as u32);
+            put_f32s(buf, x);
+        }
+    }
+}
+
+fn decode_user_data(b: &[u8]) -> Result<UserData> {
+    let mut c = Cur { b, p: 0 };
+    let d = match c.u8()? {
+        0 => {
+            let hwc = c.u32()? as usize;
+            let ny = c.u32()? as usize;
+            let nx = c.u32()? as usize;
+            UserData::Image { y: c.i32s(ny)?, x: c.f32s(nx)?, hwc }
+        }
+        1 => {
+            let feat = c.u32()? as usize;
+            let labels = c.u32()? as usize;
+            let nx = c.u32()? as usize;
+            let ny = c.u32()? as usize;
+            UserData::Features { x: c.f32s(nx)?, y: c.f32s(ny)?, feat, labels }
+        }
+        2 => {
+            let seq_len = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            UserData::Tokens { seqs: c.i32s(n)?, seq_len }
+        }
+        3 => {
+            let dim = c.u32()? as usize;
+            let nx = c.u32()? as usize;
+            let ny = c.u32()? as usize;
+            UserData::Tabular { x: c.f32s(nx)?, y: c.f32s(ny)?, dim }
+        }
+        4 => {
+            let dim = c.u32()? as usize;
+            let nx = c.u32()? as usize;
+            UserData::Points { x: c.f32s(nx)?, dim }
+        }
+        t => bail!("unknown UserData tag {t}"),
+    };
+    if c.p != b.len() {
+        bail!("trailing bytes in blob: consumed {}, have {}", c.p, b.len());
+    }
+    Ok(d)
+}
+
+// ----------------------------------------------------------------------
+// Writer
+// ----------------------------------------------------------------------
+
+/// One user's location in the store.
+#[derive(Debug, Clone, Copy)]
+struct IndexEntry {
+    shard: u32,
+    offset: u64,
+    len: u32,
+    examples: u32,
+}
+
+/// Materialization summary returned by [`ShardWriter::finish`].
+#[derive(Debug, Clone, Copy)]
+pub struct StoreStats {
+    pub num_users: usize,
+    pub num_shards: usize,
+    /// Total user-payload bytes across all shard files (headers excluded).
+    pub data_bytes: u64,
+    /// Central-eval shards materialized alongside the users.
+    pub eval_shards: usize,
+}
+
+struct CurShard {
+    idx: u32,
+    w: BufWriter<File>,
+    off: u64,
+}
+
+/// Sequential store writer: `append_user` in uid order (uid 0, 1, ...),
+/// optionally `write_eval`, then `finish` to seal the index. Users land
+/// in shard `uid / users_per_shard`, so a shard is one contiguous write
+/// and one uid range. Any existing store in `dir` is overwritten.
+pub struct ShardWriter {
+    dir: PathBuf,
+    users_per_shard: usize,
+    cur: Option<CurShard>,
+    index: Vec<IndexEntry>,
+    data_bytes: u64,
+    eval_shards: usize,
+    buf: Vec<u8>,
+}
+
+impl ShardWriter {
+    pub fn create(dir: &Path, users_per_shard: usize) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        Ok(ShardWriter {
+            dir: dir.to_path_buf(),
+            users_per_shard: users_per_shard.max(1),
+            cur: None,
+            index: Vec::new(),
+            data_bytes: 0,
+            eval_shards: 0,
+            buf: Vec::new(),
+        })
+    }
+
+    fn close_shard(&mut self) -> Result<()> {
+        if let Some(mut c) = self.cur.take() {
+            c.w.flush().context("flushing shard")?;
+        }
+        Ok(())
+    }
+
+    /// Append the next user (uid = number of users appended so far).
+    pub fn append_user(&mut self, data: &UserData) -> Result<()> {
+        let uid = self.index.len();
+        let shard = (uid / self.users_per_shard) as u32;
+        if self.cur.as_ref().map(|c| c.idx) != Some(shard) {
+            self.close_shard()?;
+            let path = self.dir.join(shard_file_name(shard));
+            let f = File::create(&path)
+                .with_context(|| format!("creating shard {}", path.display()))?;
+            let mut w = BufWriter::new(f);
+            w.write_all(SHARD_MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&shard.to_le_bytes())?;
+            self.cur = Some(CurShard { idx: shard, w, off: SHARD_HEADER_LEN });
+        }
+        self.buf.clear();
+        encode_user_data(data, &mut self.buf);
+        if self.buf.len() > u32::MAX as usize {
+            // the index stores blob lengths as u32; a wrapped length
+            // would silently corrupt the store
+            bail!("user {uid} encodes to {} bytes (> u32::MAX)", self.buf.len());
+        }
+        let c = self.cur.as_mut().unwrap();
+        c.w.write_all(&self.buf).with_context(|| format!("writing user {uid}"))?;
+        self.index.push(IndexEntry {
+            shard,
+            offset: c.off,
+            len: self.buf.len() as u32,
+            examples: data.len() as u32,
+        });
+        c.off += self.buf.len() as u64;
+        self.data_bytes += self.buf.len() as u64;
+        Ok(())
+    }
+
+    /// Materialize the central-eval shards (`eval.bin`). The shard size
+    /// is fixed at materialization time; [`ShardedStore::central_eval`]
+    /// returns these shards as stored.
+    pub fn write_eval(&mut self, shards: &[UserData]) -> Result<()> {
+        let path = self.dir.join("eval.bin");
+        let f = File::create(&path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(EVAL_MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(shards.len() as u32).to_le_bytes())?;
+        for (i, s) in shards.iter().enumerate() {
+            self.buf.clear();
+            encode_user_data(s, &mut self.buf);
+            if self.buf.len() > u32::MAX as usize {
+                bail!("eval shard {i} encodes to {} bytes (> u32::MAX)", self.buf.len());
+            }
+            w.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            w.write_all(&self.buf)?;
+        }
+        w.flush().context("flushing eval.bin")?;
+        self.eval_shards = shards.len();
+        Ok(())
+    }
+
+    /// Seal the store: flush the open shard and write `index.bin`.
+    pub fn finish(mut self, name: &str) -> Result<StoreStats> {
+        self.close_shard()?;
+        let num_shards = self.index.last().map(|e| e.shard as usize + 1).unwrap_or(0);
+        let path = self.dir.join("index.bin");
+        let f = File::create(&path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(INDEX_MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(num_shards as u32).to_le_bytes())?;
+        w.write_all(&(self.users_per_shard as u32).to_le_bytes())?;
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(self.index.len() as u64).to_le_bytes())?;
+        for e in &self.index {
+            w.write_all(&e.shard.to_le_bytes())?;
+            w.write_all(&e.offset.to_le_bytes())?;
+            w.write_all(&e.len.to_le_bytes())?;
+            w.write_all(&e.examples.to_le_bytes())?;
+        }
+        w.flush().context("flushing index.bin")?;
+        Ok(StoreStats {
+            num_users: self.index.len(),
+            num_shards,
+            data_bytes: self.data_bytes,
+            eval_shards: self.eval_shards,
+        })
+    }
+}
+
+/// Materialize a [`FederatedDataset`] to `dir`: every user in uid order
+/// plus (when `eval_shard_size > 0`) the central-eval shards.
+pub fn materialize(
+    dataset: &dyn FederatedDataset,
+    dir: &Path,
+    users_per_shard: usize,
+    eval_shard_size: usize,
+) -> Result<StoreStats> {
+    let mut w = ShardWriter::create(dir, users_per_shard)?;
+    for uid in 0..dataset.num_users() {
+        w.append_user(&dataset.user_data(uid))
+            .with_context(|| format!("materializing user {uid}"))?;
+    }
+    if eval_shard_size > 0 {
+        w.write_eval(&dataset.central_eval(eval_shard_size))?;
+    }
+    w.finish(dataset.name())
+}
+
+// ----------------------------------------------------------------------
+// Reader
+// ----------------------------------------------------------------------
+
+/// An opened store directory. Thread-safe: shard file handles are opened
+/// lazily, kept for the store's lifetime, and read with positioned reads
+/// (no shared seek cursor), so workers and the prefetch thread read
+/// concurrently.
+pub struct ShardedStore {
+    dir: PathBuf,
+    name: String,
+    index: Vec<IndexEntry>,
+    files: Mutex<HashMap<u32, Arc<File>>>,
+}
+
+impl ShardedStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let path = dir.join("index.bin");
+        let mut raw = Vec::new();
+        File::open(&path)
+            .with_context(|| {
+                format!("opening {} (is this a `pfl materialize` dir?)", path.display())
+            })?
+            .read_to_end(&mut raw)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut c = Cur { b: &raw, p: 0 };
+        if c.take(8)? != INDEX_MAGIC {
+            bail!("{}: bad index magic", path.display());
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            bail!("{}: store version {version}, reader supports {VERSION}", path.display());
+        }
+        let _num_shards = c.u32()?;
+        let _users_per_shard = c.u32()?;
+        let name_len = c.u32()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec()).context("store name")?;
+        let n = {
+            let s = c.take(8)?;
+            u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]) as usize
+        };
+        let mut index = Vec::with_capacity(n);
+        for _ in 0..n {
+            let shard = c.u32()?;
+            let offset = {
+                let s = c.take(8)?;
+                u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+            };
+            let len = c.u32()?;
+            let examples = c.u32()?;
+            index.push(IndexEntry { shard, offset, len, examples });
+        }
+        Ok(ShardedStore {
+            dir: dir.to_path_buf(),
+            name,
+            index,
+            files: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn file(&self, shard: u32) -> Result<Arc<File>> {
+        let mut files = self.files.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(f) = files.get(&shard) {
+            return Ok(f.clone());
+        }
+        let path = self.dir.join(shard_file_name(shard));
+        let f = File::open(&path).with_context(|| format!("opening {}", path.display()))?;
+        let mut header = [0u8; SHARD_HEADER_LEN as usize];
+        f.read_exact_at(&mut header, 0)
+            .with_context(|| format!("reading {} header", path.display()))?;
+        if &header[..8] != SHARD_MAGIC {
+            bail!("{}: bad shard magic", path.display());
+        }
+        let f = Arc::new(f);
+        files.insert(shard, f.clone());
+        Ok(f)
+    }
+
+    /// Read one user straight from disk (no cache — [`StoreSource`]
+    /// layers the cache on top).
+    pub fn read_user(&self, uid: usize) -> Result<UserData> {
+        let e = self
+            .index
+            .get(uid)
+            .copied()
+            .ok_or_else(|| anyhow!("uid {uid} out of range ({} users)", self.index.len()))?;
+        let f = self.file(e.shard)?;
+        let mut buf = vec![0u8; e.len as usize];
+        f.read_exact_at(&mut buf, e.offset)
+            .with_context(|| format!("reading user {uid} (shard {}, off {})", e.shard, e.offset))?;
+        decode_user_data(&buf).with_context(|| format!("decoding user {uid}"))
+    }
+
+    fn read_eval(&self) -> Result<Vec<UserData>> {
+        let path = self.dir.join("eval.bin");
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let mut raw = Vec::new();
+        File::open(&path)?.read_to_end(&mut raw)?;
+        let mut c = Cur { b: &raw, p: 0 };
+        if c.take(8)? != EVAL_MAGIC {
+            bail!("{}: bad eval magic", path.display());
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            bail!("{}: eval version {version}, reader supports {VERSION}", path.display());
+        }
+        let n = c.u32()? as usize;
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let len = c.u32()? as usize;
+            shards.push(
+                decode_user_data(c.take(len)?).with_context(|| format!("eval shard {i}"))?,
+            );
+        }
+        Ok(shards)
+    }
+}
+
+impl FederatedDataset for ShardedStore {
+    /// The materialized generator's name, so runs over a store report
+    /// the same dataset they would have reported over the generator.
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_users(&self) -> usize {
+        self.index.len()
+    }
+
+    /// The trait is infallible (generators cannot fail), so an I/O or
+    /// decode error here panics with the store path — a corrupt store
+    /// is unrecoverable mid-simulation anyway.
+    fn user_data(&self, uid: usize) -> UserData {
+        self.read_user(uid)
+            .unwrap_or_else(|e| panic!("store {}: {e:#}", self.dir.display()))
+    }
+
+    /// Free: the example count comes from the in-memory index, never
+    /// from disk — scheduling weights cost no I/O.
+    fn user_len(&self, uid: usize) -> usize {
+        self.index.get(uid).map(|e| e.examples as usize).unwrap_or(0)
+    }
+
+    /// Eval shards as materialized; the shard size was fixed by
+    /// `pfl materialize --eval-shard`, so the requested size is ignored.
+    fn central_eval(&self, _shard_size: usize) -> Vec<UserData> {
+        self.read_eval()
+            .unwrap_or_else(|e| panic!("store {}: {e:#}", self.dir.display()))
+    }
+}
+
+// ----------------------------------------------------------------------
+// UserDataSource: the worker-facing fetch interface
+// ----------------------------------------------------------------------
+
+/// One fetched user, with the bookkeeping the worker folds into its
+/// round [`crate::simsys::Counters`].
+pub struct Fetched {
+    pub data: Arc<UserData>,
+    /// `Some(hit)` for cache-backed sources; `None` when no cache is in
+    /// play (generator-backed), so generator runs report no hit-rate.
+    pub cache_hit: Option<bool>,
+    /// Nanoseconds this call was blocked on I/O (0 on a hit).
+    pub stall_nanos: u64,
+}
+
+/// Where workers get user data: the lazy synthetic generators
+/// ([`GeneratorSource`], the default — no behavior change) or the
+/// out-of-core store ([`StoreSource`]). The backend feeds each round's
+/// dispatch order to [`Self::hint_round`] so a prefetching source can
+/// overlap loads with local training.
+pub trait UserDataSource: Send + Sync {
+    fn fetch(&self, uid: usize) -> Fetched;
+
+    /// Whether [`Self::hint_round`] is worth calling (lets the backend
+    /// skip building the order vector for generator runs).
+    fn wants_hints(&self) -> bool {
+        false
+    }
+
+    /// Announce one round's upcoming uids in dispatch order. Replaces
+    /// any previous (possibly abandoned) round's hints.
+    fn hint_round(&self, _uids: &[usize]) {}
+}
+
+/// The default source: generate lazily from (seed, uid), exactly the
+/// pre-store behavior.
+pub struct GeneratorSource {
+    dataset: Arc<dyn FederatedDataset>,
+}
+
+impl GeneratorSource {
+    pub fn new(dataset: Arc<dyn FederatedDataset>) -> Self {
+        GeneratorSource { dataset }
+    }
+}
+
+impl UserDataSource for GeneratorSource {
+    fn fetch(&self, uid: usize) -> Fetched {
+        Fetched {
+            data: Arc::new(self.dataset.user_data(uid)),
+            cache_hit: None,
+            stall_nanos: 0,
+        }
+    }
+}
+
+/// Tuning for a [`StoreSource`] (config `engine.cache_users` /
+/// `engine.prefetch_depth`, CLI `--cache-users` / `--prefetch-depth`).
+#[derive(Debug, Clone, Copy)]
+pub struct SourceConfig {
+    /// LRU user-cache capacity (entries).
+    pub cache_users: usize,
+    /// How many users the prefetch thread may run ahead of worker
+    /// consumption (0 disables the thread; the cache remains).
+    pub prefetch_depth: usize,
+}
+
+impl Default for SourceConfig {
+    fn default() -> Self {
+        SourceConfig { cache_users: 512, prefetch_depth: 8 }
+    }
+}
+
+struct CacheEntry {
+    data: Arc<UserData>,
+    last_used: u64,
+}
+
+/// Bounded LRU over `Arc<UserData>`: a hit bumps a tick in place and
+/// clones the `Arc` — no allocation. Eviction scans for the least
+/// recently used entry (O(capacity), fine for the few-thousand-entry
+/// caches this is built for).
+struct LruCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<usize, CacheEntry>,
+}
+
+impl LruCache {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        LruCache { cap, tick: 0, map: HashMap::with_capacity(cap + 1) }
+    }
+
+    fn get(&mut self, uid: usize) -> Option<Arc<UserData>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(&uid)?;
+        e.last_used = tick;
+        Some(e.data.clone())
+    }
+
+    fn contains(&self, uid: usize) -> bool {
+        self.map.contains_key(&uid)
+    }
+
+    fn insert(&mut self, uid: usize, data: Arc<UserData>) {
+        if self.map.contains_key(&uid) {
+            return; // fetch and prefetch raced: keep the resident copy
+        }
+        if self.map.len() >= self.cap {
+            let victim = self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(victim) = victim {
+                self.map.remove(&victim);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(uid, CacheEntry { data, last_used: self.tick });
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Round-scoped prefetch cursor. `issued - consumed` is how far the
+/// prefetch thread has run ahead of the workers; it stalls at
+/// `prefetch_depth` and wakes on every worker fetch. `hint_round`
+/// resets the cursor, so hints from an abandoned round (async mode
+/// moves on when its buffer fills) can never wedge the thread.
+#[derive(Default)]
+struct PrefetchState {
+    upcoming: VecDeque<usize>,
+    issued: u64,
+    consumed: u64,
+    stop: bool,
+}
+
+struct PrefetchShared {
+    state: Mutex<PrefetchState>,
+    cv: Condvar,
+}
+
+struct Prefetcher {
+    shared: Arc<PrefetchShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The cached, prefetching [`UserDataSource`] over a [`ShardedStore`].
+pub struct StoreSource {
+    store: Arc<ShardedStore>,
+    cache: Arc<Mutex<LruCache>>,
+    prefetch: Option<Prefetcher>,
+}
+
+impl StoreSource {
+    pub fn new(store: Arc<ShardedStore>, cfg: SourceConfig) -> Self {
+        let cache = Arc::new(Mutex::new(LruCache::new(cfg.cache_users)));
+        // a prefetch window wider than the cache would evict its own
+        // loads before any worker consumed them — every fetch would
+        // then re-read the shard, doubling I/O; clamp to the capacity
+        let depth_cap = cfg.prefetch_depth.min(cfg.cache_users.max(1));
+        let prefetch = if depth_cap > 0 {
+            let shared = Arc::new(PrefetchShared {
+                state: Mutex::new(PrefetchState::default()),
+                cv: Condvar::new(),
+            });
+            let (s2, c2, st2) = (shared.clone(), cache.clone(), store.clone());
+            let depth = depth_cap as u64;
+            let handle = std::thread::Builder::new()
+                .name("data-prefetch".into())
+                .spawn(move || prefetch_loop(s2, c2, st2, depth))
+                .expect("spawning data-prefetch thread");
+            Some(Prefetcher { shared, handle: Some(handle) })
+        } else {
+            None
+        };
+        StoreSource { store, cache, prefetch }
+    }
+
+    /// Resident cache entries (diagnostics / tests).
+    pub fn cached_users(&self) -> usize {
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    fn note_consumed(&self) {
+        if let Some(p) = &self.prefetch {
+            let mut st = p.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.consumed += 1;
+            drop(st);
+            p.shared.cv.notify_all();
+        }
+    }
+}
+
+impl UserDataSource for StoreSource {
+    fn fetch(&self, uid: usize) -> Fetched {
+        if let Some(data) =
+            self.cache.lock().unwrap_or_else(PoisonError::into_inner).get(uid)
+        {
+            self.note_consumed();
+            return Fetched { data, cache_hit: Some(true), stall_nanos: 0 };
+        }
+        // Miss: the worker eats the read latency; that is exactly the
+        // stall the prefetcher exists to hide.
+        let t0 = Instant::now();
+        let data = Arc::new(
+            self.store
+                .read_user(uid)
+                .unwrap_or_else(|e| panic!("store {}: {e:#}", self.store.dir.display())),
+        );
+        let stall_nanos = t0.elapsed().as_nanos() as u64;
+        self.cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(uid, data.clone());
+        self.note_consumed();
+        Fetched { data, cache_hit: Some(false), stall_nanos }
+    }
+
+    fn wants_hints(&self) -> bool {
+        self.prefetch.is_some()
+    }
+
+    fn hint_round(&self, uids: &[usize]) {
+        if let Some(p) = &self.prefetch {
+            let mut st = p.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.upcoming.clear();
+            st.upcoming.extend(uids.iter().copied());
+            st.issued = 0;
+            st.consumed = 0;
+            drop(st);
+            p.shared.cv.notify_all();
+        }
+    }
+}
+
+impl Drop for StoreSource {
+    fn drop(&mut self) {
+        if let Some(p) = &mut self.prefetch {
+            {
+                let mut st = p.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+                st.stop = true;
+            }
+            p.shared.cv.notify_all();
+            if let Some(h) = p.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn prefetch_loop(
+    shared: Arc<PrefetchShared>,
+    cache: Arc<Mutex<LruCache>>,
+    store: Arc<ShardedStore>,
+    depth: u64,
+) {
+    loop {
+        let uid = {
+            let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if st.stop {
+                    return;
+                }
+                if !st.upcoming.is_empty() && st.issued < st.consumed + depth {
+                    st.issued += 1;
+                    break st.upcoming.pop_front().unwrap();
+                }
+                st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        if cache.lock().unwrap_or_else(PoisonError::into_inner).contains(uid) {
+            continue; // already resident: the cursor still advances
+        }
+        // I/O outside every lock, so workers hitting the cache never
+        // wait on the disk. A failed read is not fatal here: the
+        // worker's own fetch of this uid will surface the error.
+        if let Ok(d) = store.read_user(uid) {
+            cache
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .insert(uid, Arc::new(d));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthGmmPoints, SynthTabular};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pfl_store_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn bits(d: &UserData) -> Vec<u64> {
+        d.bit_fingerprint()
+    }
+
+    #[test]
+    fn blob_roundtrip_every_variant() {
+        let variants = vec![
+            UserData::Image { x: vec![0.5, -1.25, f32::MIN_POSITIVE], y: vec![1, -2, 3], hwc: 1 },
+            UserData::Features { x: vec![1.0, 2.0], y: vec![0.0, 1.0], feat: 1, labels: 1 },
+            UserData::Tokens { seqs: vec![5, 0, -1, 7], seq_len: 2 },
+            UserData::Tabular { x: vec![0.25; 6], y: vec![1.5, 2.5], dim: 3 },
+            UserData::Points { x: vec![f32::NAN, 1.0], dim: 2 },
+            UserData::Points { x: vec![], dim: 3 }, // empty payload
+        ];
+        for d in &variants {
+            let mut buf = Vec::new();
+            encode_user_data(d, &mut buf);
+            let back = decode_user_data(&buf).unwrap();
+            assert_eq!(bits(d), bits(&back));
+        }
+        // corrupt tag and truncation are errors, not panics
+        assert!(decode_user_data(&[9]).is_err());
+        let mut buf = Vec::new();
+        encode_user_data(&variants[0], &mut buf);
+        assert!(decode_user_data(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn materialize_then_read_matches_generator() {
+        let dir = tmp_dir("roundtrip");
+        let gen = SynthTabular::new(11, 8, 3, 42);
+        // odd users_per_shard exercises the multi-shard path
+        let stats = materialize(&gen, &dir, 4, 16).unwrap();
+        assert_eq!(stats.num_users, 11);
+        assert_eq!(stats.num_shards, 3);
+        assert!(stats.eval_shards > 0);
+        let store = ShardedStore::open(&dir).unwrap();
+        assert_eq!(store.name(), gen.name());
+        assert_eq!(store.num_users(), 11);
+        for uid in 0..11 {
+            let (a, b) = (gen.user_data(uid), store.user_data(uid));
+            assert_eq!(bits(&a), bits(&b), "user {uid}");
+            // user_len comes from the index, free of I/O, and reflects
+            // the materialized data
+            assert_eq!(store.user_len(uid), a.len());
+        }
+        let (ea, eb) = (gen.central_eval(16), store.central_eval(16));
+        assert_eq!(ea.len(), eb.len());
+        for (a, b) in ea.iter().zip(&eb) {
+            assert_eq!(bits(a), bits(b));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_rejects_missing_and_garbage() {
+        let dir = tmp_dir("garbage");
+        assert!(ShardedStore::open(&dir).is_err()); // no index
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("index.bin"), b"not a store").unwrap();
+        assert!(ShardedStore::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let d = Arc::new(UserData::Points { x: vec![1.0], dim: 1 });
+        let mut c = LruCache::new(2);
+        c.insert(1, d.clone());
+        c.insert(2, d.clone());
+        assert!(c.get(1).is_some()); // 1 is now most recent
+        c.insert(3, d.clone()); // evicts 2
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert!(c.contains(3));
+        assert_eq!(c.len(), 2);
+        // double insert keeps one entry
+        c.insert(3, d);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn source_counts_hits_misses_and_stalls() {
+        let dir = tmp_dir("hitmiss");
+        let gen = SynthGmmPoints::new(6, 5, 2, 2, 1);
+        materialize(&gen, &dir, 8, 0).unwrap();
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let src = StoreSource::new(store, SourceConfig { cache_users: 8, prefetch_depth: 0 });
+        let first = src.fetch(3);
+        assert_eq!(first.cache_hit, Some(false));
+        let second = src.fetch(3);
+        assert_eq!(second.cache_hit, Some(true));
+        assert_eq!(second.stall_nanos, 0);
+        assert_eq!(bits(&first.data), bits(&second.data));
+        assert_eq!(bits(&first.data), bits(&gen.user_data(3)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetcher_runs_ahead_and_respects_depth() {
+        let dir = tmp_dir("prefetch");
+        let gen = SynthGmmPoints::new(16, 5, 2, 2, 2);
+        materialize(&gen, &dir, 8, 0).unwrap();
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let src =
+            StoreSource::new(store, SourceConfig { cache_users: 16, prefetch_depth: 4 });
+        assert!(src.wants_hints());
+        let order: Vec<usize> = (0..16).collect();
+        src.hint_round(&order);
+        // the prefetcher loads at most `depth` users before any fetch
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while src.cached_users() < 4 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(src.cached_users(), 4, "prefetcher should stop at depth");
+        // consuming in dispatch order hits the cache and tops it back up
+        let mut hits = 0;
+        for &uid in &order {
+            if src.fetch(uid).cache_hit == Some(true) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 4, "prefetched users should be hits, got {hits}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_hints_are_replaced_not_wedged() {
+        let dir = tmp_dir("stale");
+        let gen = SynthGmmPoints::new(8, 5, 2, 2, 3);
+        materialize(&gen, &dir, 8, 0).unwrap();
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let src =
+            StoreSource::new(store, SourceConfig { cache_users: 8, prefetch_depth: 2 });
+        // an abandoned round's hints...
+        src.hint_round(&[0, 1, 2, 3]);
+        // ...are replaced wholesale by the next round's
+        src.hint_round(&[4, 5, 6, 7]);
+        for uid in [4usize, 5, 6, 7] {
+            let f = src.fetch(uid);
+            assert!(f.cache_hit.is_some());
+        }
+        // and the source still serves anything on demand
+        assert_eq!(bits(&src.fetch(0).data), bits(&gen.user_data(0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_backed_run_matches_generator_run() {
+        // end-to-end: the same simulation over the generator and over
+        // its materialized store produces bit-identical central models
+        // (acceptance: with a store, reads are bit-identical, so the
+        // whole run is).
+        use crate::fl::algorithm::RunSpec;
+        use crate::fl::backend::{BackendBuilder, RunParams};
+        use crate::fl::central_opt::Sgd;
+        use crate::fl::worker::tests::MeanModel;
+        use crate::fl::FedAvg;
+
+        let dir = tmp_dir("e2e");
+        let gen: Arc<dyn FederatedDataset> = Arc::new(SynthGmmPoints::new(24, 10, 3, 2, 5));
+        materialize(&*gen, &dir, 7, 0).unwrap();
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+
+        let run = |dataset: Arc<dyn FederatedDataset>,
+                   source: Option<Arc<dyn UserDataSource>>| {
+            let spec = RunSpec {
+                iterations: 5,
+                cohort_size: 8,
+                population: 24,
+                ..Default::default()
+            };
+            let alg = Arc::new(FedAvg::new(spec, Box::new(Sgd)));
+            let mut builder = BackendBuilder::new(
+                dataset,
+                alg,
+                Arc::new(|_| Ok(Box::new(MeanModel::new(3)) as Box<dyn crate::fl::Model>)),
+            )
+            .params(RunParams { num_workers: 2, ..Default::default() });
+            if let Some(s) = source {
+                builder = builder.data_source(s);
+            }
+            builder.build().unwrap().run(vec![1.0; 3], &mut []).unwrap()
+        };
+
+        let base = run(gen, None);
+        let src: Arc<dyn UserDataSource> = Arc::new(StoreSource::new(
+            store.clone(),
+            SourceConfig { cache_users: 8, prefetch_depth: 2 },
+        ));
+        let stored = run(store as Arc<dyn FederatedDataset>, Some(src));
+        assert_eq!(base.central, stored.central, "store-backed run diverged");
+        assert_eq!(base.rounds, stored.rounds);
+        // the store run observed its cache
+        let (h, m) = (stored.counters.cache_hits, stored.counters.cache_misses);
+        assert!(h + m > 0, "cache counters never ticked");
+        assert!(stored.final_metric("sys/cache-hit-frac").is_some());
+        // the generator run reports no cache metric at all
+        assert!(base.final_metric("sys/cache-hit-frac").is_none());
+        assert_eq!(base.counters.cache_hits + base.counters.cache_misses, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -47,8 +47,10 @@ pub fn run_benchmark(
     eval: EvalMode,
     log_every: u64,
 ) -> Result<RunSummary> {
-    let dataset = crate::config::build::build_dataset(&cfg.dataset)?;
     let mut backend = build_backend(cfg, profile)?;
+    // the backend's dataset: the generator, or the one opened store
+    // for `engine.data_store` configs (no second open)
+    let dataset = backend.dataset();
     let init = crate::config::build::init_params(cfg)?;
 
     let mut callbacks: Vec<Box<dyn Callback>> = Vec::new();

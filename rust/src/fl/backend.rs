@@ -34,7 +34,9 @@ use super::postprocess::{Postprocessor, PpEnv};
 use super::scheduler::{order, SchedulerKind};
 use super::worker::{ModelFactory, WorkerPool, WorkerShared};
 use crate::baselines::OverheadProfile;
-use crate::data::{CohortSampler, FederatedDataset, MinibatchSampler};
+use crate::data::{
+    CohortSampler, FederatedDataset, GeneratorSource, MinibatchSampler, UserDataSource,
+};
 use crate::simsys::{current_rss_bytes, Counters, Timeline, TimelineRow, UserCost};
 use crate::util::rng::Rng;
 
@@ -131,6 +133,10 @@ pub struct SimulatedBackend {
     aggregator: Arc<dyn Aggregator>,
     postprocessors: Arc<Vec<Box<dyn Postprocessor>>>,
     sampler: Box<dyn CohortSampler>,
+    /// The workers' user-data source (shared with the pool); the round
+    /// loops feed it each round's dispatch order so a store-backed
+    /// source can prefetch ahead of consumption.
+    source: Arc<dyn UserDataSource>,
     /// Engine-level cohort distribution policy (`RunParams::dispatch`);
     /// contexts carrying a different mode get an ad-hoc dispatcher.
     dispatcher: Box<dyn Dispatcher>,
@@ -147,6 +153,11 @@ pub struct BackendBuilder {
     pub sampler: Option<Box<dyn CohortSampler>>,
     pub factory: ModelFactory,
     pub params: RunParams,
+    /// Where workers fetch user data. `None` (default) generates lazily
+    /// from `dataset` — the pre-store behavior, byte-identical. Set an
+    /// out-of-core [`crate::data::StoreSource`] for materialized data
+    /// with caching + dispatcher-driven prefetch (`--data-store`).
+    pub data_source: Option<Arc<dyn UserDataSource>>,
 }
 
 impl BackendBuilder {
@@ -164,7 +175,13 @@ impl BackendBuilder {
             sampler: None,
             factory,
             params: RunParams::default(),
+            data_source: None,
         }
+    }
+
+    pub fn data_source(mut self, source: Arc<dyn UserDataSource>) -> Self {
+        self.data_source = Some(source);
+        self
     }
 
     pub fn postprocessor(mut self, pp: Box<dyn Postprocessor>) -> Self {
@@ -194,8 +211,13 @@ impl BackendBuilder {
         let aggregator = self
             .aggregator
             .unwrap_or_else(|| Arc::new(super::aggregator::SumAggregator) as Arc<dyn Aggregator>);
+        // one source instance, shared between the workers (fetch) and
+        // the backend (per-round prefetch hints)
+        let source = self
+            .data_source
+            .unwrap_or_else(|| Arc::new(GeneratorSource::new(self.dataset.clone())));
         let shared = WorkerShared {
-            dataset: self.dataset.clone(),
+            source: source.clone(),
             algorithm: self.algorithm.clone(),
             postprocessors: postprocessors.clone(),
             aggregator: aggregator.clone(),
@@ -213,6 +235,7 @@ impl BackendBuilder {
             aggregator,
             postprocessors,
             sampler: self.sampler.unwrap_or_else(|| Box::new(MinibatchSampler { cohort_size: 0 })),
+            source,
             dispatcher: dispatcher_for(self.params.dispatch, self.params.scheduler),
             pool,
             params: self.params,
@@ -436,6 +459,7 @@ impl SimulatedBackend {
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
         let window = ctx.dispatch.reorder_window.max(1);
+        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
@@ -484,6 +508,7 @@ impl SimulatedBackend {
             folded,
             stale_folds,
             round_stat_elements,
+            cache0,
         )
     }
 
@@ -614,6 +639,7 @@ impl SimulatedBackend {
         engine: &mut AsyncEngine,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
+        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
@@ -672,6 +698,7 @@ impl SimulatedBackend {
             folded,
             stale_folds,
             round_stat_elements,
+            cache0,
         )
     }
 
@@ -690,6 +717,12 @@ impl SimulatedBackend {
             cohort.iter().map(|&u| self.dataset.user_len(u) as f64).collect();
         let pending: VecDeque<usize> =
             order(self.params.scheduler, &weights).into_iter().map(|i| cohort[i]).collect();
+        // async streaming consumes `pending` front to back: that is the
+        // prefetcher's upcoming-uid order for this round
+        if self.source.wants_hints() {
+            let upcoming: Vec<usize> = pending.iter().copied().collect();
+            self.source.hint_round(&upcoming);
+        }
         let k = ctx.dispatch.buffer_k(cohort.len());
         (pending, cohort.len(), k, Arc::new(central.to_vec()))
     }
@@ -713,11 +746,13 @@ impl SimulatedBackend {
         folded: usize,
         stale_folds: u64,
         round_stat_elements: u64,
+        cache0: (u64, u64),
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         metrics.add_central("sys/cohort", cohort_len as f64, 1.0);
         metrics.add_central("sys/async-folded", folded as f64, 1.0);
         metrics.add_central("sys/stale-updates", stale_folds as f64, 1.0);
         metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
+        cache_hit_metric(&mut metrics, cache0, &outcome.counters);
         if let Some(a) = acc.as_ref() {
             metrics.add_central("sys/agg-elements", a.element_count() as f64, 1.0);
         }
@@ -907,6 +942,12 @@ impl SimulatedBackend {
             )
         };
         let shared_queue = plan.shared;
+        // feed the round's dispatch order to the prefetcher before any
+        // worker asks for its first user (store-backed sources only)
+        if self.source.wants_hints() {
+            self.source.hint_round(&plan.dispatch_order());
+        }
+        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
 
         // --- distribute + train ----------------------------------------
         let central_arc = Arc::new(central.to_vec());
@@ -941,6 +982,7 @@ impl SimulatedBackend {
             // user→server wire volume this round, in f32-equivalents
             // (sparse updates count idx + val per nonzero)
             metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
+            cache_hit_metric(&mut metrics, cache0, &outcome.counters);
         }
 
         // --- worker_reduce (all-reduce equivalent) ----------------------
@@ -980,6 +1022,14 @@ impl SimulatedBackend {
 
     pub fn num_workers(&self) -> usize {
         self.pool.num_workers
+    }
+
+    /// The training dataset this backend simulates over (the generator,
+    /// or the opened store for `--data-store` runs) — callers needing
+    /// dataset metadata (e.g. central-eval shards) should reuse this
+    /// rather than re-opening or re-building their own copy.
+    pub fn dataset(&self) -> Arc<dyn FederatedDataset> {
+        self.dataset.clone()
     }
 
     /// Coordinator traffic counters (baseline diagnostics).
@@ -1024,6 +1074,18 @@ struct ReplayEngine {
     next_seq: u64,
     outstanding: VecDeque<Outstanding>,
     parked: BTreeMap<u64, super::worker::RoundResult>,
+}
+
+/// Emit `sys/cache-hit-frac` for one round from the run-level counter
+/// deltas (`before` is the (hits, misses) snapshot at round start).
+/// Generator-backed sources tick neither counter, so default runs carry
+/// no cache metric at all.
+fn cache_hit_metric(metrics: &mut Metrics, before: (u64, u64), counters: &Counters) {
+    let hits = counters.cache_hits - before.0;
+    let misses = counters.cache_misses - before.1;
+    if hits + misses > 0 {
+        metrics.add_central("sys/cache-hit-frac", hits as f64 / (hits + misses) as f64, 1.0);
+    }
 }
 
 /// Fraction of the round's wall-clock the workers spent busy:

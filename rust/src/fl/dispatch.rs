@@ -86,6 +86,12 @@ impl CohortQueue {
     pub fn remaining(&self) -> usize {
         self.users.len().saturating_sub(self.cursor.load(Ordering::Relaxed))
     }
+
+    /// The full queue in claim order (the cursor does not reorder it) —
+    /// the prefetcher's upcoming-uid feed for shared-queue rounds.
+    pub fn ordered(&self) -> &[usize] {
+        &self.users
+    }
 }
 
 /// One worker's work for one round: an owned queue (static schedule) or
@@ -141,6 +147,42 @@ pub struct DispatchPlan {
     /// True when the sources share one pull queue (enables steal
     /// accounting in the backend).
     pub shared: bool,
+}
+
+impl DispatchPlan {
+    /// The order the round will consume users in — the upcoming-uid
+    /// feed for [`crate::data::UserDataSource::hint_round`]. Shared
+    /// plans consume their one queue in cursor order; owned plans run
+    /// W queues concurrently, so their feed interleaves the per-worker
+    /// queues round-robin (each worker's next user stays near the
+    /// front, whichever worker asks next).
+    pub fn dispatch_order(&self) -> Vec<usize> {
+        if self.shared {
+            if let Some(WorkSource::Shared(q)) = self.sources.first() {
+                return q.ordered().to_vec();
+            }
+        }
+        let queues: Vec<&[usize]> = self
+            .sources
+            .iter()
+            .filter_map(|s| match s {
+                WorkSource::Owned(v) => Some(v.as_slice()),
+                WorkSource::Shared(_) => None,
+            })
+            .collect();
+        let total: usize = queues.iter().map(|q| q.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        let mut depth = 0;
+        while out.len() < total {
+            for q in &queues {
+                if let Some(&uid) = q.get(depth) {
+                    out.push(uid);
+                }
+            }
+            depth += 1;
+        }
+        out
+    }
 }
 
 /// Cohort distribution policy: turns (cohort, weights) into per-worker
@@ -317,6 +359,33 @@ mod tests {
         assert_eq!(q.remaining(), 0);
         // shared sources never reserve cohort-sized bookkeeping
         assert_eq!(plan.sources[1].len_hint(), 0);
+    }
+
+    #[test]
+    fn dispatch_order_covers_the_cohort_for_both_plans() {
+        let cohort = vec![10, 11, 12, 13, 14];
+        let weights = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        let sp = StaticDispatcher { scheduler: SchedulerKind::Greedy }.plan(&cohort, &weights, 2);
+        let order = sp.dispatch_order();
+        assert_eq!(order.len(), cohort.len());
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(sorted, cohort, "static order must cover the cohort exactly once");
+        // the first W entries are the workers' first pulls
+        let heads: Vec<usize> = sp
+            .sources
+            .iter()
+            .filter_map(|s| match s {
+                WorkSource::Owned(v) => v.first().copied(),
+                WorkSource::Shared(_) => None,
+            })
+            .collect();
+        assert_eq!(&order[..heads.len()], &heads[..]);
+
+        let wp =
+            WorkStealingDispatcher { scheduler: SchedulerKind::Greedy }.plan(&cohort, &weights, 2);
+        // shared plans feed the queue's claim order (LPT: heaviest first)
+        assert_eq!(wp.dispatch_order(), vec![10, 11, 12, 13, 14]);
     }
 
     #[test]

@@ -35,7 +35,7 @@ use super::model::{Model, RustClip};
 use super::postprocess::{Postprocessor, PpEnv};
 use super::stats::Statistics;
 use crate::baselines::OverheadProfile;
-use crate::data::FederatedDataset;
+use crate::data::UserDataSource;
 use crate::simsys::{Counters, UserCost};
 use crate::tensor::StatsArena;
 use crate::util::rng::Rng;
@@ -80,7 +80,11 @@ pub struct RoundResult {
 
 /// Shared immutable pieces each worker needs.
 pub struct WorkerShared {
-    pub dataset: Arc<dyn FederatedDataset>,
+    /// Where user data comes from: the lazy synthetic generators
+    /// ([`crate::data::GeneratorSource`], the default) or an
+    /// out-of-core [`crate::data::StoreSource`] whose cache/prefetch
+    /// bookkeeping lands in this worker's round counters.
+    pub source: Arc<dyn UserDataSource>,
     pub algorithm: Arc<dyn FederatedAlgorithm>,
     pub postprocessors: Arc<Vec<Box<dyn Postprocessor>>>,
     pub aggregator: Arc<dyn Aggregator>,
@@ -399,7 +403,18 @@ fn run_worker_round(
         }
         spin_ns(profile.per_user_overhead_ns);
 
-        let data = shared.dataset.user_data(uid);
+        // User data arrives through the source: generated on the spot
+        // (lazy synth), or pulled from the store cache — where a miss
+        // means the prefetcher lost the race and the worker pays the
+        // read, recorded as prefetch stall.
+        let fetched = shared.source.fetch(uid);
+        match fetched.cache_hit {
+            Some(true) => counters.cache_hits += 1,
+            Some(false) => counters.cache_misses += 1,
+            None => {}
+        }
+        counters.prefetch_stall_nanos += fetched.stall_nanos;
+        let data = fetched.data;
         let user_len = data.len();
         let (stats, m) = shared
             .algorithm
@@ -520,7 +535,7 @@ fn run_worker_round(
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::data::UserData;
+    use crate::data::{FederatedDataset, UserData};
     use crate::fl::algorithm::RunSpec;
     use crate::fl::central_opt::Sgd;
     use crate::fl::FedAvg;
@@ -611,7 +626,7 @@ pub(crate) mod tests {
     pub fn mean_pool(workers: usize, dim: usize, dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
         let spec = RunSpec { iterations: 10, cohort_size: 8, ..Default::default() };
         let shared = WorkerShared {
-            dataset,
+            source: Arc::new(crate::data::GeneratorSource::new(dataset)),
             algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
             postprocessors: Arc::new(Vec::new()),
             aggregator: Arc::new(crate::fl::SumAggregator),
@@ -729,7 +744,7 @@ pub(crate) mod tests {
         let data = Arc::new(crate::data::SynthGmmPoints::new(4, 10, 2, 2, 0));
         let spec = RunSpec { iterations: 10, cohort_size: 4, ..Default::default() };
         let shared = WorkerShared {
-            dataset: data,
+            source: Arc::new(crate::data::GeneratorSource::new(data)),
             algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
             postprocessors: Arc::new(Vec::new()),
             aggregator: Arc::new(crate::fl::SumAggregator),

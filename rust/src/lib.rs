@@ -4,12 +4,13 @@
 //! al., NeurIPS 2024): a fast, modular simulation framework for federated
 //! learning (FL) and private federated learning (PFL).
 //!
-//! Architecture (DESIGN.md):
+//! Architecture (DESIGN.md §1):
 //! * **L3 (this crate)** — the simulation framework: the generalized PFL
 //!   loop (paper Alg. 1), algorithms, aggregation, DP mechanisms +
 //!   accountants, worker replicas with greedy load balancing, synthetic
-//!   federated datasets, metrics, callbacks, baseline-architecture
-//!   emulations and the benchmark CLI.
+//!   federated datasets plus the out-of-core sharded store (DESIGN.md
+//!   §6), metrics, callbacks, baseline-architecture emulations and the
+//!   benchmark CLI.
 //! * **L2 (python/compile)** — JAX benchmark models, AOT-lowered once to
 //!   HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (DP clipping, fused

@@ -3,6 +3,7 @@
 //! ```text
 //! pfl run --preset cifar10-iid [--scale 0.05] [--workers 2] ...
 //! pfl run --config path.json
+//! pfl materialize --preset X --out DIR        # write an on-disk store
 //! pfl table1|table2|table3|table4|table5      # paper tables
 //! pfl fig2|fig3|fig4a|fig4b|fig5|fig6|fig7    # paper figures
 //! pfl calibrate                               # DP noise calibration
@@ -40,8 +41,14 @@ COMMANDS
                                     [--dispatch static|work-stealing|async]
                                     [--max-staleness N] [--buffer-frac F]
                                     [--reorder-window N] [--sparse-spill-frac F]
+                                    [--data-store DIR] [--cache-users N]
+                                    [--prefetch-depth N]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
+  materialize  write a preset/config dataset to an on-disk sharded store
+                                    --preset NAME | --config FILE
+                                    --out DIR [--scale F]
+                                    [--users-per-shard N] [--eval-shard N]
   table1     CIFAR10 speed vs baseline engines   [--scale F] [--p N]
   table2     FLAIR speed (+DP overhead row)      [--scale F] [--p N]
   table3     algorithm suite, no DP    [--benchmarks a,b] [--scale F] [--seeds N]
@@ -72,6 +79,7 @@ fn real_main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" => print!("{HELP}"),
         "run" => cmd_run(&args)?,
+        "materialize" => cmd_materialize(&args)?,
         "table1" => {
             experiments::speed::table1(scale, args.get_usize("p", 5)?)?;
         }
@@ -139,19 +147,63 @@ fn real_main() -> Result<()> {
     Ok(())
 }
 
-/// `pfl run` — the config-driven launcher.
-fn cmd_run(args: &Args) -> Result<()> {
-    let mut cfg = if let Some(path) = args.get("config") {
+/// Resolve `--preset NAME | --config FILE` (+ `--scale`) into a config.
+fn cmd_config(args: &Args, what: &str) -> Result<pfl::config::Config> {
+    let cfg = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         pfl::config::Config::from_json(&text)?
     } else {
         let name = args
             .get("preset")
-            .context("run needs --preset NAME or --config FILE")?;
+            .with_context(|| format!("{what} needs --preset NAME or --config FILE"))?;
         pfl::config::preset(name)?
     };
+    Ok(cfg.scaled(args.get_f64("scale", 1.0)?))
+}
+
+/// `pfl materialize` — write a dataset to an on-disk sharded store that
+/// `pfl run --data-store DIR` reads back out-of-core (bit-identical to
+/// the generator; see `rust/src/data/store.rs`).
+fn cmd_materialize(args: &Args) -> Result<()> {
+    let cfg = cmd_config(args, "materialize")?;
+    let out = args.require("out")?;
+    let users_per_shard = args.get_usize("users-per-shard", 1024)?;
+    let eval_shard = args.get_usize("eval-shard", 256)?;
+    let dataset = pfl::config::build::build_dataset(&cfg.dataset)?;
+    eprintln!(
+        "materializing {} ({} users) -> {out}",
+        dataset.name(),
+        dataset.num_users()
+    );
+    let t0 = std::time::Instant::now();
+    let stats =
+        pfl::data::materialize(&*dataset, std::path::Path::new(out), users_per_shard, eval_shard)?;
+    println!(
+        "wrote {} users in {} shards ({:.1} MB data, {} eval shards) in {:.1}s",
+        stats.num_users,
+        stats.num_shards,
+        stats.data_bytes as f64 / 1e6,
+        stats.eval_shards,
+        t0.elapsed().as_secs_f64(),
+    );
+    // the run must use the same dataset config AND scale the store was
+    // materialized from (build_backend validates and rejects mismatches)
     let scale = args.get_f64("scale", 1.0)?;
-    cfg = cfg.scaled(scale);
+    let scale_arg = if (scale - 1.0).abs() > 1e-12 {
+        format!(" --scale {scale}")
+    } else {
+        String::new()
+    };
+    match args.get("preset") {
+        Some(p) => println!("run it with: pfl run --preset {p}{scale_arg} --data-store {out}"),
+        None => println!("run it with: pfl run --config FILE{scale_arg} --data-store {out}"),
+    }
+    Ok(())
+}
+
+/// `pfl run` — the config-driven launcher.
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = cmd_config(args, "run")?;
     if let Some(w) = args.get("workers") {
         cfg.num_workers = w.parse()?;
     }
@@ -181,6 +233,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.buffer_frac = args.get_f64("buffer-frac", cfg.buffer_frac)?;
     cfg.reorder_window = args.get_usize("reorder-window", cfg.reorder_window)?;
     cfg.sparse_spill_frac = args.get_f64("sparse-spill-frac", cfg.sparse_spill_frac)?;
+    if let Some(d) = args.get("data-store") {
+        cfg.data_store = d.into();
+    }
+    cfg.cache_users = args.get_usize("cache-users", cfg.cache_users)?;
+    cfg.prefetch_depth = args.get_usize("prefetch-depth", cfg.prefetch_depth)?;
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }
@@ -195,9 +252,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.name, cfg.iterations, cfg.cohort_size, cfg.num_workers
     );
 
-    let dataset = pfl::config::build::build_dataset(&cfg.dataset)?;
     let mut backend =
         pfl::config::build::build_backend(&cfg, EngineVariant::PflStyle.profile())?;
+    // reuse the backend's dataset (for --data-store runs this shares
+    // the one opened store instead of parsing the index twice)
+    let dataset = backend.dataset();
     let init = pfl::config::build::init_params(&cfg)?;
     let mut callbacks: Vec<Box<dyn Callback>> = Vec::new();
     callbacks.push(Box::new(pfl::config::build::build_eval_callback(&cfg, &dataset)?));
@@ -215,6 +274,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             if t % log_every == 0 {
                 println!("[round {t}] {m}");
             }
+        }
+    }
+    if !cfg.data_store.is_empty() {
+        let c = &outcome.counters;
+        let total = c.cache_hits + c.cache_misses;
+        if total > 0 {
+            eprintln!(
+                "data store: {:.1}% cache hits over {} fetches, {:.1} ms stalled on reads",
+                100.0 * c.cache_hits as f64 / total as f64,
+                total,
+                c.prefetch_stall_nanos as f64 / 1e6,
+            );
         }
     }
     println!(

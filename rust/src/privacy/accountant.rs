@@ -178,7 +178,7 @@ impl Accountant for RdpAccountant {
 /// a pessimistic ceil grid would inflate ε by T·grid, which dominates at
 /// the benchmark's thousands of rounds); with grid h the residual
 /// discretization error is O(h·√T) ≈ 0.02 at h = 2e-4, T = 5000 —
-/// recorded as a known approximation in DESIGN.md. Self-composition uses
+/// recorded as a known approximation in DESIGN.md §3. Self-composition uses
 /// exponentiation by squaring with FFT convolutions (`util::fft`).
 pub struct PldAccountant {
     /// Discretization step of the privacy-loss grid.

@@ -1,6 +1,7 @@
 //! Runtime layer: load + execute AOT-compiled HLO artifacts via PJRT.
 //!
-//! See DESIGN.md — python/jax (+Pallas) runs only at `make artifacts` time;
+//! See DESIGN.md §1 (layering) and §5 (hardware adaptation) —
+//! python/jax (+Pallas) runs only at `make artifacts` time;
 //! this module is the only place the simulator touches XLA. The PJRT
 //! executor (and with it the `xla` crate) is behind the optional `hlo`
 //! cargo feature; the manifest layer is pure Rust and always available,

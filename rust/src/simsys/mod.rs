@@ -63,6 +63,16 @@ pub struct Counters {
     /// Async rounds: updates discarded — staler than the bound, or still
     /// in flight when the run (or an eval barrier) drained the engine.
     pub dropped_updates: u64,
+    /// Store-backed runs: user fetches served from the LRU cache
+    /// (generator-backed sources count neither hits nor misses).
+    pub cache_hits: u64,
+    /// Store-backed runs: user fetches that had to read the shard file
+    /// on the worker thread (the prefetcher lost the race).
+    pub cache_misses: u64,
+    /// Nanoseconds workers spent blocked on user-data I/O (miss reads).
+    /// 0 when every load was prefetched off the critical path — the
+    /// observable form of "data loading overlaps local training".
+    pub prefetch_stall_nanos: u64,
 }
 
 impl Counters {
@@ -81,6 +91,9 @@ impl Counters {
         self.steal_count += o.steal_count;
         self.stale_updates += o.stale_updates;
         self.dropped_updates += o.dropped_updates;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.prefetch_stall_nanos += o.prefetch_stall_nanos;
     }
 
     pub fn busy(&self) -> Duration {
@@ -232,13 +245,29 @@ mod tests {
 
     #[test]
     fn counters_merge() {
-        let mut a = Counters { busy_nanos: 5, users_trained: 1, ..Default::default() };
-        let b = Counters { busy_nanos: 7, steps: 3, copy_bytes: 10, ..Default::default() };
+        let mut a = Counters {
+            busy_nanos: 5,
+            users_trained: 1,
+            cache_hits: 2,
+            ..Default::default()
+        };
+        let b = Counters {
+            busy_nanos: 7,
+            steps: 3,
+            copy_bytes: 10,
+            cache_hits: 1,
+            cache_misses: 4,
+            prefetch_stall_nanos: 9,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.busy_nanos, 12);
         assert_eq!(a.users_trained, 1);
         assert_eq!(a.steps, 3);
         assert_eq!(a.copy_bytes, 10);
+        assert_eq!(a.cache_hits, 3);
+        assert_eq!(a.cache_misses, 4);
+        assert_eq!(a.prefetch_stall_nanos, 9);
     }
 
     #[test]
