@@ -17,7 +17,7 @@
 //! written to `BENCH_aggregation.json` so the perf trajectory is tracked
 //! across PRs.
 
-use pfl::fl::aggregator::{Aggregator, SumAggregator};
+use pfl::fl::aggregator::{tree_reduce, Aggregator, SumAggregator};
 use pfl::fl::stats::{StatValue, Statistics};
 use pfl::tensor::StatsArena;
 use pfl::util::bench::{
@@ -120,6 +120,59 @@ fn main() -> anyhow::Result<()> {
                 black_box(s.weight);
             });
         records.push(BenchRecord::new(&r, alloc));
+    }
+
+    // serial left fold vs parallel tree fold over worker partials (the
+    // once-per-round reduce). The tree pairs adjacent partials per level
+    // (depth ceil(log2 n)) and merges pairs on scoped threads; it folds
+    // the same pairs as the chain in a different association, so beyond
+    // per-merge thread bookkeeping it must not cost extra heap.
+    {
+        let d = DIMS[1];
+        let agg = SumAggregator;
+        let dense_partials = |n: usize| -> Vec<Statistics> {
+            (0..n).map(|w| Statistics::new_update(vec![w as f32 * 1e-3; d], 6.0)).collect()
+        };
+        let nnz = 4096usize;
+        let sparse_partials = |n: usize| -> Vec<Statistics> {
+            (0..n)
+                .map(|w| {
+                    let mut idx: Vec<u32> =
+                        (0..nnz).map(|i| ((i * (d / nnz) + w) % d) as u32).collect();
+                    idx.sort_unstable();
+                    idx.dedup();
+                    let val = vec![1e-3f32; idx.len()];
+                    Statistics::new_update_value(StatValue::sparse(d as u32, idx, val), 6.0)
+                })
+                .collect()
+        };
+        for &n in &[4usize, 8, 16] {
+            for shape in ["dense", "sparse"] {
+                let make: &dyn Fn(usize) -> Vec<Statistics> =
+                    if shape == "dense" { &dense_partials } else { &sparse_partials };
+                let (r, serial_alloc) =
+                    bench_per_op_alloc(&format!("fold/serial n={n} {shape} d={d}"), 2, 10, 1, || {
+                        black_box(agg.worker_reduce(make(n)).map(|a| a.weight));
+                    });
+                records.push(BenchRecord::new(&r, serial_alloc));
+
+                let (r, tree_alloc) =
+                    bench_per_op_alloc(&format!("fold/tree n={n} {shape} d={d}"), 2, 10, 1, || {
+                        let (acc, depth) = tree_reduce(&agg, make(n));
+                        black_box(acc.map(|a| a.weight));
+                        black_box(depth);
+                    });
+                records.push(BenchRecord::new(&r, tree_alloc));
+
+                // thread-spawn bookkeeping is the only tree-side extra;
+                // the model-sized buffers dominate both rows
+                assert!(
+                    tree_alloc <= serial_alloc + 64.0 * 1024.0,
+                    "tree fold allocates more than serial: {tree_alloc} vs {serial_alloc} \
+                     bytes/op (n={n} {shape})"
+                );
+            }
+        }
     }
 
     // headline ratio for the dense accumulate path

@@ -128,6 +128,11 @@ pub fn calibrated_noise_multiplier(cfg: &Config) -> Result<f64> {
 /// With `sparse_top_k > 0`, a top-k sparsifier runs *before* the DP clip
 /// (so clipping remains the last local step and the sensitivity bound is
 /// unaffected) and the surviving coordinates travel as sparse statistics.
+///
+/// With `wire_quantization != "none"`, an error-feedback
+/// [`crate::fl::postprocess::WireQuantizer`] runs *after* the mechanism
+/// (= last in local order): the DP-noised update is what gets encoded,
+/// so the wire narrows without touching the sensitivity bound.
 pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>> {
     let mut pps: Vec<Box<dyn Postprocessor>> = Vec::new();
     if cfg.privacy.sparse_top_k > 0 {
@@ -136,21 +141,24 @@ pub fn build_postprocessors(cfg: &Config) -> Result<Vec<Box<dyn Postprocessor>>>
             emit_sparse: true,
         }));
     }
-    if cfg.privacy.is_none() {
-        return Ok(pps);
+    let quant_bits = cfg.wire_quantization_bits()?;
+    if !cfg.privacy.is_none() {
+        let sigma = calibrated_noise_multiplier(cfg)?;
+        let r = if cfg.privacy.noise_cohort > 0.0 {
+            cfg.cohort_size as f64 / cfg.privacy.noise_cohort
+        } else {
+            1.0
+        };
+        pps.push(mechanism_by_name(
+            &cfg.privacy.mechanism,
+            cfg.privacy.clip_bound as f32,
+            sigma,
+            r,
+        )?);
     }
-    let sigma = calibrated_noise_multiplier(cfg)?;
-    let r = if cfg.privacy.noise_cohort > 0.0 {
-        cfg.cohort_size as f64 / cfg.privacy.noise_cohort
-    } else {
-        1.0
-    };
-    pps.push(mechanism_by_name(
-        &cfg.privacy.mechanism,
-        cfg.privacy.clip_bound as f32,
-        sigma,
-        r,
-    )?);
+    if let Some(bits) = quant_bits {
+        pps.push(Box::new(crate::fl::postprocess::WireQuantizer::new(bits, true)));
+    }
     Ok(pps)
 }
 
@@ -284,6 +292,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         seed: cfg.seed,
         log_every: 0,
         arena: cfg.arena_config(),
+        fold_tree: cfg.fold_tree,
         ..Default::default()
     });
     if let Some(s) = source {
@@ -338,6 +347,26 @@ mod tests {
         let cfg = preset("cifar10-iid").unwrap();
         assert!(build_postprocessors(&cfg).unwrap().is_empty());
         assert_eq!(calibrated_noise_multiplier(&cfg).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn wire_quantizer_appends_after_mechanism() {
+        // the quantizer must be the last local step, so the DP-noised
+        // f32s are what gets encoded for the wire
+        let mut cfg = preset("cifar10-iid-dp").unwrap().scaled(0.1);
+        cfg.wire_quantization = "int8".into();
+        let pps = build_postprocessors(&cfg).unwrap();
+        assert_eq!(pps.len(), 2);
+        assert_eq!(pps[0].name(), "gaussian");
+        assert_eq!(pps[1].name(), "wire-quantize");
+        // without DP it is the only postprocessor
+        cfg.privacy = crate::config::PrivacyConfig::none();
+        let pps = build_postprocessors(&cfg).unwrap();
+        assert_eq!(pps.len(), 1);
+        assert_eq!(pps[0].name(), "wire-quantize");
+        // invalid widths surface at build time
+        cfg.wire_quantization = "int4".into();
+        assert!(build_postprocessors(&cfg).is_err());
     }
 
     #[test]

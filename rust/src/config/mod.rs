@@ -136,6 +136,15 @@ pub struct Config {
     /// ahead of worker consumption; 0 disables the thread (CLI
     /// `--prefetch-depth`).
     pub prefetch_depth: usize,
+    /// Wire representation of user statistics: "none" (exact f32,
+    /// default), "f16" or "int8" (CLI `--quantize`). Non-none appends an
+    /// error-feedback [`crate::fl::postprocess::WireQuantizer`] as the
+    /// last local step, so the narrow codes are what ships to the
+    /// aggregator.
+    pub wire_quantization: String,
+    /// Reduce worker partials with the parallel binary tree fold instead
+    /// of the serial left fold (CLI `--fold-tree`).
+    pub fold_tree: bool,
     pub seed: u64,
 }
 
@@ -192,6 +201,18 @@ impl Config {
             max_staleness: self.max_staleness,
             buffer_frac: self.buffer_frac,
             reorder_window: self.reorder_window,
+        })
+    }
+
+    /// Code width of the configured wire quantization: `None` for the
+    /// exact f32 wire, `Some(16)` for binary16, `Some(8)` for
+    /// int8-with-scale.
+    pub fn wire_quantization_bits(&self) -> Result<Option<u8>> {
+        Ok(match self.wire_quantization.as_str() {
+            "" | "none" => None,
+            "f16" => Some(16),
+            "int8" => Some(8),
+            other => bail!("unknown wire quantization {other:?} (none | f16 | int8)"),
         })
     }
 
@@ -274,6 +295,8 @@ impl Config {
                     ("data_store", s(self.data_store.clone())),
                     ("cache_users", num(self.cache_users as f64)),
                     ("prefetch_depth", num(self.prefetch_depth as f64)),
+                    ("wire_quantization", s(self.wire_quantization.clone())),
+                    ("fold_tree", Value::Bool(self.fold_tree)),
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
@@ -374,6 +397,16 @@ impl Config {
                 Some(x) => x.as_usize()?,
                 None => crate::data::SourceConfig::default().prefetch_depth,
             },
+            // optional for configs written before wire quantization /
+            // the tree fold
+            wire_quantization: match e.get("wire_quantization") {
+                Some(x) => x.as_str()?.to_string(),
+                None => "none".into(),
+            },
+            fold_tree: match e.get("fold_tree") {
+                Some(x) => x.as_bool()?,
+                None => false,
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -442,6 +475,8 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        wire_quantization: "none".into(),
+        fold_tree: false,
         seed: 0,
     }
 }
@@ -488,6 +523,8 @@ fn stackoverflow(dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        wire_quantization: "none".into(),
+        fold_tree: false,
         seed: 0,
     }
 }
@@ -537,6 +574,8 @@ fn flair(iid: bool, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        wire_quantization: "none".into(),
+        fold_tree: false,
         seed: 0,
     }
 }
@@ -582,6 +621,8 @@ fn llm(flavor: &str, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        wire_quantization: "none".into(),
+        fold_tree: false,
         seed: 0,
     }
 }
@@ -751,6 +792,8 @@ mod tests {
                     && !l.contains("data_store")
                     && !l.contains("cache_users")
                     && !l.contains("prefetch_depth")
+                    && !l.contains("wire_quantization")
+                    && !l.contains("fold_tree")
             })
             .collect::<Vec<_>>()
             .join("\n");
@@ -763,6 +806,24 @@ mod tests {
         assert_eq!(parsed.data_store, "");
         assert_eq!(parsed.cache_users, 512);
         assert_eq!(parsed.prefetch_depth, 8);
+        assert_eq!(parsed.wire_quantization, "none");
+        assert!(!parsed.fold_tree);
+    }
+
+    #[test]
+    fn quantize_and_fold_tree_knobs_roundtrip() {
+        let mut c = preset("cifar10-iid").unwrap();
+        assert_eq!(c.wire_quantization_bits().unwrap(), None);
+        c.wire_quantization = "int8".into();
+        c.fold_tree = true;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.wire_quantization, "int8");
+        assert!(back.fold_tree);
+        assert_eq!(back.wire_quantization_bits().unwrap(), Some(8));
+        c.wire_quantization = "f16".into();
+        assert_eq!(c.wire_quantization_bits().unwrap(), Some(16));
+        c.wire_quantization = "int4".into();
+        assert!(c.wire_quantization_bits().is_err());
     }
 
     #[test]

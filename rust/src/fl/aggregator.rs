@@ -51,6 +51,61 @@ pub trait Aggregator: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Parallel deterministic binary tree reduction over worker partials
+/// (`RunParams::fold_tree` / `--fold-tree`): fixed adjacent pairing
+/// (0,1)(2,3)… repeated until one partial remains, each level's
+/// pairwise merges running concurrently on scoped threads.
+///
+/// The pairing is a pure function of the partial count, so the fold
+/// order — and therefore the f32 rounding — is reproducible run to run
+/// at any parallelism. It differs from the serial left fold in general
+/// (tree (a+b)+(c+d) vs serial ((a+b)+c)+d), which is why the tree is
+/// opt-in and the default serial [`Aggregator::worker_reduce`] stays
+/// byte-identical to pre-tree behavior. Each pairwise merge is the
+/// aggregator's own binary `worker_reduce`, reusing the partials'
+/// buffers (the left operand absorbs the right), so no model-sized
+/// temporaries beyond the partials themselves are allocated.
+///
+/// Returns the reduced statistics plus the tree depth (⌈log₂ n⌉; 0 for
+/// n ≤ 1), surfaced as the `sys/fold-tree-depth` metric.
+pub fn tree_reduce(
+    agg: &dyn Aggregator,
+    partials: Vec<Statistics>,
+) -> (Option<Statistics>, u32) {
+    let mut layer = partials;
+    let mut depth = 0u32;
+    while layer.len() > 1 {
+        depth += 1;
+        let mut pairs: Vec<(Statistics, Option<Statistics>)> =
+            Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.drain(..);
+        while let Some(a) = it.next() {
+            pairs.push((a, it.next()));
+        }
+        drop(it);
+        let merged: Vec<Statistics> = std::thread::scope(|s| {
+            let handles: Vec<_> = pairs
+                .into_iter()
+                .map(|(a, b)| {
+                    s.spawn(move || match b {
+                        Some(b) => agg
+                            .worker_reduce(vec![a, b])
+                            .expect("binary reduce of two partials yields Some"),
+                        // odd tail passes through to the next level
+                        None => a,
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tree-fold merge panicked"))
+                .collect()
+        });
+        layer = merged;
+    }
+    (layer.pop(), depth)
+}
+
 /// Vector summation — the FL default: f(S, Δ) = S + Δ, g = Σ.
 #[derive(Debug, Default, Clone)]
 pub struct SumAggregator;
@@ -311,6 +366,82 @@ mod tests {
     fn empty_reduce_is_none() {
         assert!(SumAggregator.worker_reduce(vec![]).is_none());
         assert!(CollectAggregator.worker_reduce(vec![]).is_none());
+    }
+
+    #[test]
+    fn tree_reduce_handles_degenerate_counts() {
+        let agg = SumAggregator;
+        let (none, depth) = tree_reduce(&agg, vec![]);
+        assert!(none.is_none());
+        assert_eq!(depth, 0);
+        let (one, depth) = tree_reduce(&agg, vec![stat(vec![1.0, 2.0], 3.0)]);
+        assert_eq!(one.unwrap().update(), &[1.0, 2.0]);
+        assert_eq!(depth, 0);
+    }
+
+    #[test]
+    fn tree_reduce_matches_serial_bit_exact_on_exact_inputs() {
+        // powers of two sum exactly in f32, so tree and serial fold
+        // orders agree to the bit for any partial count (incl. odd)
+        let agg = SumAggregator;
+        for n in [2usize, 3, 4, 5, 7, 8, 16] {
+            let partials: Vec<Statistics> = (0..n)
+                .map(|w| stat(vec![(1 << w.min(20)) as f32, 0.5, -2.0], 1.0 + w as f64))
+                .collect();
+            let serial = agg.worker_reduce(partials.clone()).unwrap();
+            let (tree, depth) = tree_reduce(&agg, partials);
+            let tree = tree.unwrap();
+            assert_eq!(tree.update(), serial.update(), "n={n}");
+            assert_eq!(tree.weight, serial.weight, "n={n}");
+            assert_eq!(depth, (n as f64).log2().ceil() as u32, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_is_deterministic_across_repeats() {
+        let agg = SumAggregator;
+        let partials: Vec<Statistics> = (0..6)
+            .map(|w| stat((0..64).map(|i| ((w * 64 + i) as f32).sin()).collect(), 1.0))
+            .collect();
+        let (a, _) = tree_reduce(&agg, partials.clone());
+        let (b, _) = tree_reduce(&agg, partials);
+        assert_eq!(a.unwrap().update(), b.unwrap().update(), "tree fold order must be fixed");
+    }
+
+    #[test]
+    fn tree_reduce_keeps_all_sparse_sparse() {
+        use crate::fl::stats::StatValue;
+        let agg = SumAggregator;
+        let partials: Vec<Statistics> = (0..4)
+            .map(|w| {
+                Statistics::new_update_value(
+                    StatValue::sparse(16, vec![w as u32 * 3], vec![1.0 + w as f32]),
+                    1.0,
+                )
+            })
+            .collect();
+        let (r, depth) = tree_reduce(&agg, partials);
+        let r = r.unwrap();
+        let v = r.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "tree fold densified: {v:?}");
+        assert_eq!(v.element_count(), 4);
+        assert_eq!(depth, 2);
+    }
+
+    #[test]
+    fn tree_reduce_collect_keeps_every_entry() {
+        let agg = CollectAggregator;
+        let partials: Vec<Statistics> = (0..5)
+            .map(|w| {
+                let mut acc = None;
+                agg.accumulate(&mut acc, stat(vec![w as f32], 1.0));
+                acc.unwrap()
+            })
+            .collect();
+        let (r, _) = tree_reduce(&agg, partials);
+        let r = r.unwrap();
+        assert_eq!(r.vecs.len(), 5);
+        assert_eq!(r.weight, 5.0);
     }
 
     #[test]

@@ -62,6 +62,13 @@ pub struct RunParams {
     /// Worker accumulation-arena tuning (sparse spill threshold) — see
     /// [`crate::tensor::ArenaConfig`].
     pub arena: crate::tensor::ArenaConfig,
+    /// Reduce worker partials with the parallel binary tree fold
+    /// ([`crate::fl::aggregator::tree_reduce`], `--fold-tree`) instead of
+    /// the serial left fold. Off by default: the serial path stays
+    /// byte-identical to previous releases; the tree is deterministic in
+    /// its own right (fixed adjacent pairing) but associates f32 adds
+    /// differently.
+    pub fold_tree: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,6 +88,7 @@ impl Default for RunParams {
             log_every: 0,
             clip_backend: ClipBackend::Rust,
             arena: crate::tensor::ArenaConfig::default(),
+            fold_tree: false,
         }
     }
 }
@@ -466,6 +474,7 @@ impl SimulatedBackend {
         let mut folded = 0usize;
         let mut stale_folds = 0u64;
         let mut round_stat_elements = 0u64;
+        let mut round_stat_bytes = 0u64;
 
         self.replay_top_up(engine, &mut pending, ctx, &central_arc, window)?;
         while folded < k {
@@ -475,6 +484,7 @@ impl SimulatedBackend {
             let r = self.replay_recv(engine, head.seq)?;
             engine.outstanding.pop_front();
             round_stat_elements += r.counters.stat_elements;
+            round_stat_bytes += r.counters.stat_bytes;
             Self::absorb_result_bookkeeping(outcome, &r);
             // deterministic staleness: dispatch round of the expected
             // command vs the current context (r.round echoes head.round)
@@ -508,6 +518,7 @@ impl SimulatedBackend {
             folded,
             stale_folds,
             round_stat_elements,
+            round_stat_bytes,
             cache0,
         )
     }
@@ -646,6 +657,7 @@ impl SimulatedBackend {
         let mut folded = 0usize;
         let mut stale_folds = 0u64;
         let mut round_stat_elements = 0u64;
+        let mut round_stat_bytes = 0u64;
 
         // prime every idle worker with one user of this round
         while let Some(&w) = engine.idle.last() {
@@ -666,6 +678,7 @@ impl SimulatedBackend {
                 return Err(anyhow!("worker {w} failed: {err}"));
             }
             round_stat_elements += r.counters.stat_elements;
+            round_stat_bytes += r.counters.stat_bytes;
             Self::absorb_result_bookkeeping(outcome, &r);
             let staleness = ctx.iteration.saturating_sub(r.round);
             if self.fold_async_arrival(
@@ -698,6 +711,7 @@ impl SimulatedBackend {
             folded,
             stale_folds,
             round_stat_elements,
+            round_stat_bytes,
             cache0,
         )
     }
@@ -746,12 +760,14 @@ impl SimulatedBackend {
         folded: usize,
         stale_folds: u64,
         round_stat_elements: u64,
+        round_stat_bytes: u64,
         cache0: (u64, u64),
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         metrics.add_central("sys/cohort", cohort_len as f64, 1.0);
         metrics.add_central("sys/async-folded", folded as f64, 1.0);
         metrics.add_central("sys/stale-updates", stale_folds as f64, 1.0);
         metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
+        metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
         cache_hit_metric(&mut metrics, cache0, &outcome.counters);
         if let Some(a) = acc.as_ref() {
             metrics.add_central("sys/agg-elements", a.element_count() as f64, 1.0);
@@ -958,9 +974,11 @@ impl SimulatedBackend {
         let mut worker_busy: Vec<u64> = Vec::with_capacity(results.len());
         let mut pulled: Vec<u64> = Vec::with_capacity(results.len());
         let mut round_stat_elements = 0u64;
+        let mut round_stat_bytes = 0u64;
         for r in results {
             metrics.merge(&r.metrics);
             round_stat_elements += r.counters.stat_elements;
+            round_stat_bytes += r.counters.stat_bytes;
             pulled.push(r.counters.users_trained);
             worker_busy.push(Self::absorb_result_bookkeeping(outcome, &r));
             if let Some(p) = r.partial {
@@ -980,13 +998,25 @@ impl SimulatedBackend {
             metrics.add_central("sys/straggler-secs", gap as f64 / 1e9, 1.0);
             metrics.add_central("sys/cohort", cohort.len() as f64, 1.0);
             // user→server wire volume this round, in f32-equivalents
-            // (sparse updates count idx + val per nonzero)
+            // (sparse updates count idx + val per nonzero) and in bytes
+            // (which --quantize shrinks at unchanged element count)
             metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
+            metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
             cache_hit_metric(&mut metrics, cache0, &outcome.counters);
         }
 
         // --- worker_reduce (all-reduce equivalent) ----------------------
-        let mut agg = self.aggregator.worker_reduce(partials);
+        // serial left fold by default (byte-identical to previous
+        // releases); parallel binary tree when opted in (--fold-tree)
+        let mut agg = if self.params.fold_tree {
+            let (agg, depth) = super::aggregator::tree_reduce(&*self.aggregator, partials);
+            if ctx.population == Population::Train {
+                metrics.add_central("sys/fold-tree-depth", depth as f64, 1.0);
+            }
+            agg
+        } else {
+            self.aggregator.worker_reduce(partials)
+        };
         if ctx.population == Population::Train {
             if let Some(a) = agg.as_ref() {
                 // stored f32s in the reduced aggregate: the full dense
@@ -1011,7 +1041,7 @@ impl SimulatedBackend {
         metrics: &mut Metrics,
     ) -> Result<()> {
         if let Some(agg) = agg {
-            let mut env = PpEnv { clip: &RustClip, rng: server_rng, user_len: 0 };
+            let mut env = PpEnv { clip: &RustClip, rng: server_rng, user_len: 0, uid: 0 };
             for pp in self.postprocessors.iter().rev() {
                 let pm = pp.postprocess_server(agg, ctx, &mut env)?;
                 metrics.merge(&pm);
@@ -1131,6 +1161,37 @@ mod tests {
         build_backend_with(workers, iters, DispatchSpec::default())
     }
 
+    /// Like [`build_backend_with`] but with full [`RunParams`] control, a
+    /// configurable model dimension and a postprocessor chain.
+    fn build_backend_cfg(
+        iters: u64,
+        dim: usize,
+        params: RunParams,
+        pps: Vec<Box<dyn Postprocessor>>,
+    ) -> SimulatedBackend {
+        let dataset: Arc<dyn FederatedDataset> =
+            Arc::new(crate::data::SynthGmmPoints::new(32, 12, dim, 2, 1));
+        let spec = RunSpec {
+            iterations: iters,
+            cohort_size: 8,
+            val_cohort_size: 4,
+            eval_every: 2,
+            population: 32,
+            ..Default::default()
+        };
+        let alg = Arc::new(FedAvg::new(spec, Box::new(Sgd)));
+        let mut b = BackendBuilder::new(
+            dataset,
+            alg,
+            Arc::new(move |_| Ok(Box::new(MeanModel::new(dim)) as Box<dyn crate::fl::Model>)),
+        )
+        .params(params);
+        for pp in pps {
+            b = b.postprocessor(pp);
+        }
+        b.build().unwrap()
+    }
+
     #[test]
     fn run_completes_all_iterations() {
         let mut b = build_backend(2, 5);
@@ -1216,6 +1277,65 @@ mod tests {
         }
         // work-stealing rounds report the steal metric
         assert!(out_ws.final_metric("sys/steal-count").is_some());
+    }
+
+    #[test]
+    fn fold_tree_matches_serial_and_reports_depth() {
+        // opt-in tree fold reduces the same partials with a fixed
+        // adjacent pairing: learning matches the serial left fold to f32
+        // association tolerance, repeats are bit-identical, and the depth
+        // metric reports ceil(log2(partials))
+        let tree_run = || {
+            build_backend_cfg(
+                6,
+                3,
+                RunParams { num_workers: 4, fold_tree: true, ..Default::default() },
+                vec![],
+            )
+            .run(vec![1.0; 3], &mut [])
+            .unwrap()
+        };
+        let serial = build_backend(4, 6).run(vec![1.0; 3], &mut []).unwrap();
+        let tree = tree_run();
+        assert_eq!(serial.rounds, tree.rounds);
+        for (a, b) in serial.central.iter().zip(&tree.central) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // 8 users over 4 workers: every worker ships a partial, depth 2
+        assert_eq!(tree.final_metric("sys/fold-tree-depth"), Some(2.0));
+        assert!(serial.final_metric("sys/fold-tree-depth").is_none());
+        let tree2 = tree_run();
+        assert_eq!(tree.central, tree2.central, "tree fold not deterministic");
+    }
+
+    #[test]
+    fn wire_quantization_shrinks_update_bytes() {
+        // acceptance: --quantize int8 drops sys/user-update-bytes >= 3.5x
+        // vs none on the dense path, at unchanged element count and
+        // near-identical learning
+        let run = |pps: Vec<Box<dyn Postprocessor>>| {
+            build_backend_cfg(4, 64, RunParams { num_workers: 2, ..Default::default() }, pps)
+                .run(vec![1.0; 64], &mut [])
+                .unwrap()
+        };
+        let base = run(vec![]);
+        let q8 = run(vec![Box::new(super::super::postprocess::WireQuantizer::new(8, true))]);
+        assert_eq!(base.counters.stat_elements, q8.counters.stat_elements);
+        let ratio = base.counters.stat_bytes as f64 / q8.counters.stat_bytes as f64;
+        assert!(ratio >= 3.5, "int8 wire bytes only {ratio:.2}x smaller");
+        let m0 = base.final_metric("sys/user-update-bytes").unwrap();
+        let m8 = q8.final_metric("sys/user-update-bytes").unwrap();
+        assert!(m0 / m8 >= 3.5, "per-round bytes metric only {:.2}x smaller", m0 / m8);
+        // the quantizer reports its round-trip error, and the decoded
+        // aggregate still learns the same problem (int8 noise is small
+        // relative to the update scale, not bit-identical)
+        assert!(q8.final_metric("quant/err-l2").is_some());
+        let q8_loss = q8.series("train/loss");
+        let base_loss = base.series("train/loss");
+        assert!(q8_loss.last().unwrap().1 < q8_loss.first().unwrap().1);
+        let rel = (q8_loss.last().unwrap().1 - base_loss.last().unwrap().1).abs()
+            / base_loss.last().unwrap().1.max(1e-9);
+        assert!(rel < 0.1, "quantized final loss diverged {rel:.3} from exact");
     }
 
     #[test]

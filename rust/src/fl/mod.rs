@@ -28,7 +28,7 @@ pub mod scheduler;
 pub mod stats;
 pub mod worker;
 
-pub use aggregator::{Aggregator, CollectAggregator, SumAggregator};
+pub use aggregator::{tree_reduce, Aggregator, CollectAggregator, SumAggregator};
 pub use algorithm::{AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, Scaffold};
 pub use backend::{RunOutcome, RunParams, SimulatedBackend};
 pub use callbacks::{

@@ -5,9 +5,11 @@
 //! the aggregator, postprocessors and DP mechanisms algorithm-agnostic,
 //! matching the paper's separation of concerns (App. B.2).
 //!
-//! Each named value is a [`StatValue`] — dense, or sparse with sorted
-//! indices — so LoRA-/GBDT-style scenarios ship compact updates through
-//! the same aggregation and privacy machinery (see `crate::tensor`).
+//! Each named value is a [`StatValue`] — dense, sparse with sorted
+//! indices, or quantized on the wire (f16 / int8-with-scale, decoded on
+//! arrival at any accumulator) — so LoRA-/GBDT-style scenarios ship
+//! compact updates through the same aggregation and privacy machinery
+//! (see `crate::tensor`).
 
 use std::collections::BTreeMap;
 
@@ -44,6 +46,21 @@ impl Statistics {
 
     pub fn update_value(&self) -> Option<&StatValue> {
         self.vecs.get(UPDATE)
+    }
+
+    /// Wire elements across all named values — what `sys/user-update-elems`
+    /// counts. Width-independent: a quantized value reports the same
+    /// element count as the f32 it encodes.
+    pub fn wire_elements(&self) -> usize {
+        self.vecs.values().map(|v| v.wire_elements()).sum()
+    }
+
+    /// Serialized payload bytes across all named values — what
+    /// `Counters::stat_bytes` / `sys/user-update-bytes` count. Unlike
+    /// [`Self::wire_elements`] this reflects the stored width, so it is
+    /// where [`StatValue::Quantized`] shows its shrink.
+    pub fn wire_bytes(&self) -> usize {
+        self.vecs.values().map(|v| v.wire_bytes()).sum()
     }
 
     /// Entry-style mutable access to the dense update buffer: inserts an

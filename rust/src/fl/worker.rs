@@ -449,7 +449,7 @@ fn run_worker_round(
                         ^ ctx.seed.rotate_left(17)
                         ^ (uid as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
                 );
-                let mut env = PpEnv { clip, rng: &mut user_rng, user_len };
+                let mut env = PpEnv { clip, rng: &mut user_rng, user_len, uid };
                 for pp in shared.postprocessors.iter() {
                     let pm = pp.postprocess_one_user(&mut stats, ctx, &mut env)?;
                     metrics.merge(&pm);
@@ -468,22 +468,34 @@ fn run_worker_round(
             }
             if let Some(tx) = coord_tx {
                 // explicit topology: serialize and route via coordinator
-                // (sparse values ship idx + val, like a real wire format)
+                // (sparse values ship idx + val; quantized values ship
+                // scale + idx + packed codes — like a real wire format)
+                use crate::fl::stats::StatValue;
                 for v in stats.vecs.values() {
-                    let vals = v.values();
-                    let cap = match v {
-                        // sparse ships idx (u32) + val (f32) per nonzero
-                        crate::fl::stats::StatValue::Sparse { .. } => v.element_count() * 8,
-                        crate::fl::stats::StatValue::Dense(_) => v.element_count() * 4,
-                    };
-                    let mut buf = Vec::with_capacity(cap);
-                    if let crate::fl::stats::StatValue::Sparse { idx, .. } = v {
-                        for i in idx {
-                            buf.extend_from_slice(&i.to_le_bytes());
+                    let mut buf = Vec::with_capacity(v.wire_bytes());
+                    match v {
+                        StatValue::Sparse { idx, val, .. } => {
+                            for i in idx {
+                                buf.extend_from_slice(&i.to_le_bytes());
+                            }
+                            for x in val {
+                                buf.extend_from_slice(&x.to_le_bytes());
+                            }
                         }
-                    }
-                    for x in vals {
-                        buf.extend_from_slice(&x.to_le_bytes());
+                        StatValue::Dense(vals) => {
+                            for x in vals {
+                                buf.extend_from_slice(&x.to_le_bytes());
+                            }
+                        }
+                        StatValue::Quantized { scale, idx, data, .. } => {
+                            buf.extend_from_slice(&scale.to_le_bytes());
+                            if let Some(idx) = idx {
+                                for i in idx {
+                                    buf.extend_from_slice(&i.to_le_bytes());
+                                }
+                            }
+                            buf.extend_from_slice(data);
+                        }
                     }
                     counters.wire_bytes += buf.len() as u64;
                     counters.coordinator_msgs += 1;
@@ -492,10 +504,11 @@ fn run_worker_round(
             }
 
             // user→server communication volume, after all local
-            // postprocessing (so sparsification is reflected); sparse
-            // values count idx + val, matching the wire serialization
-            counters.stat_elements +=
-                stats.vecs.values().map(|v| v.wire_elements()).sum::<usize>() as u64;
+            // postprocessing (so sparsification and wire quantization
+            // are reflected); sparse values count idx + val, matching
+            // the wire serialization; bytes account for the stored width
+            counters.stat_elements += stats.wire_elements() as u64;
+            counters.stat_bytes += stats.wire_bytes() as u64;
 
             if use_arena {
                 arena.fold(&stats);
@@ -774,6 +787,8 @@ pub(crate) mod tests {
         assert_eq!(c.coordinator_msgs, 4);
         // 4 users × 2-dim dense update
         assert_eq!(c.stat_elements, 8);
+        // same update in bytes: 8 f32 elements × 4 bytes
+        assert_eq!(c.stat_bytes, 32);
         pool.shutdown();
     }
 }

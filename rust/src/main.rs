@@ -43,6 +43,7 @@ COMMANDS
                                     [--reorder-window N] [--sparse-spill-frac F]
                                     [--data-store DIR] [--cache-users N]
                                     [--prefetch-depth N]
+                                    [--quantize none|f16|int8] [--fold-tree]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
   materialize  write a preset/config dataset to an on-disk sharded store
@@ -238,6 +239,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     cfg.cache_users = args.get_usize("cache-users", cfg.cache_users)?;
     cfg.prefetch_depth = args.get_usize("prefetch-depth", cfg.prefetch_depth)?;
+    if let Some(q) = args.get("quantize") {
+        cfg.wire_quantization = q.into();
+        cfg.wire_quantization_bits()?; // fail fast on unknown widths
+    }
+    if args.flag("fold-tree") {
+        cfg.fold_tree = true;
+    }
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }

@@ -49,6 +49,12 @@ pub struct Counters {
     /// user→server communication volume, which sparsification shrinks
     /// even though the arena-reduced aggregate stays dense.
     pub stat_elements: u64,
+    /// Bytes shipped by users after local postprocessing, accounting for
+    /// the stored width (f32 = 4/coordinate, sparse = 8/nonzero,
+    /// quantized = the packed code bytes + index/scale overhead) — the
+    /// width-aware companion of `stat_elements`, which `--quantize`
+    /// shrinks even though the element count is unchanged.
+    pub stat_bytes: u64,
     /// Device busy time (executable execution).
     pub busy_nanos: u64,
     /// Users trained.
@@ -85,6 +91,7 @@ impl Counters {
         self.wire_bytes += o.wire_bytes;
         self.coordinator_msgs += o.coordinator_msgs;
         self.stat_elements += o.stat_elements;
+        self.stat_bytes += o.stat_bytes;
         self.busy_nanos += o.busy_nanos;
         self.users_trained += o.users_trained;
         self.steps += o.steps;
@@ -258,6 +265,8 @@ mod tests {
             cache_hits: 1,
             cache_misses: 4,
             prefetch_stall_nanos: 9,
+            stat_elements: 6,
+            stat_bytes: 24,
             ..Default::default()
         };
         a.merge(&b);
@@ -268,6 +277,8 @@ mod tests {
         assert_eq!(a.cache_hits, 3);
         assert_eq!(a.cache_misses, 4);
         assert_eq!(a.prefetch_stall_nanos, 9);
+        assert_eq!(a.stat_elements, 6);
+        assert_eq!(a.stat_bytes, 24);
     }
 
     #[test]

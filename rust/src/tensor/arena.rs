@@ -42,7 +42,7 @@
 use std::collections::BTreeMap;
 
 use super::ops;
-use super::value::{merge_sparse_scaled_into, StatValue};
+use super::value::{dequant_axpy_into, merge_sparse_scaled_into, StatValue};
 use crate::fl::stats::Statistics;
 
 /// Tuning knobs of the worker accumulation arena (config
@@ -89,6 +89,10 @@ struct Slot {
     /// Ping-pong merge scratch (swapped with idx/val each sparse merge).
     scratch_idx: Vec<u32>,
     scratch_val: Vec<f32>,
+    /// Retained decode buffer for indexed-quantized contributions
+    /// (`--quantize` + sparse updates), so decoding allocates nothing
+    /// once sized.
+    dequant_val: Vec<f32>,
     /// Logical dimension of the sparse accumulator this round.
     dim: usize,
     mode: SlotMode,
@@ -216,59 +220,122 @@ impl StatsArena {
                 }
             }
             StatValue::Sparse { dim, idx, val } => {
-                match slot.mode {
-                    SlotMode::Dense => {
-                        slot.ensure_dense_len(*dim as usize, &mut self.grown_bytes);
-                        ops::scatter_add(&mut slot.buf, idx, val);
-                    }
-                    SlotMode::Idle => {
-                        slot.dim = *dim as usize;
-                        Self::copy_sparse_into(
-                            idx,
-                            val,
-                            &mut slot.idx,
-                            &mut slot.val,
-                            &mut self.grown_bytes,
-                        );
-                        slot.mode = SlotMode::Sparse;
-                        slot.maybe_spill(frac, &mut self.grown_bytes, &mut self.spill_count);
-                    }
-                    SlotMode::Sparse => {
-                        slot.dim = slot.dim.max(*dim as usize);
-                        if slot.idx.as_slice() == idx.as_slice() {
-                            // identical sparsity pattern (users sharing a
-                            // top-k mask / histogram layout): plain add
-                            ops::add_assign(&mut slot.val, val);
-                        } else {
-                            let cap_before = slot.sparse_capacity();
-                            merge_sparse_scaled_into(
-                                &slot.idx,
-                                &slot.val,
-                                idx,
-                                val,
-                                1.0,
-                                &mut slot.scratch_idx,
-                                &mut slot.scratch_val,
-                            );
-                            std::mem::swap(&mut slot.idx, &mut slot.scratch_idx);
-                            std::mem::swap(&mut slot.val, &mut slot.scratch_val);
-                            // keep the ping-pong pair symmetric so the
-                            // all-sparse steady state settles after one
-                            // round of a repeating cohort shape
-                            slot.scratch_idx.clear();
-                            slot.scratch_val.clear();
-                            let need = slot.idx.len();
-                            if slot.scratch_idx.capacity() < need {
-                                slot.scratch_idx.reserve(need);
-                                slot.scratch_val.reserve(need);
-                            }
-                            let cap_after = slot.sparse_capacity();
-                            self.grown_bytes +=
-                                (cap_after.saturating_sub(cap_before) * 4) as u64;
+                Self::fold_sparse_into_slot(
+                    slot,
+                    frac,
+                    *dim as usize,
+                    idx,
+                    val,
+                    &mut self.grown_bytes,
+                    &mut self.spill_count,
+                );
+            }
+            StatValue::Quantized { dim, idx, .. } => {
+                let dim = *dim as usize;
+                match idx {
+                    None => {
+                        // a dense-quantized contribution makes the sum
+                        // dense, exactly like a dense one; the decode is
+                        // fused into the accumulate
+                        slot.ensure_dense_len(dim.max(slot.dim), &mut self.grown_bytes);
+                        if slot.mode == SlotMode::Sparse {
+                            slot.spill(&mut self.grown_bytes);
+                            self.spill_count += 1;
                         }
-                        slot.maybe_spill(frac, &mut self.grown_bytes, &mut self.spill_count);
+                        if slot.mode == SlotMode::Idle {
+                            slot.buf.fill(0.0);
+                            slot.mode = SlotMode::Dense;
+                        }
+                        dequant_axpy_into(&mut slot.buf, 1.0, value);
+                    }
+                    Some(qidx) => {
+                        // indexed-quantized: decode the codes into the
+                        // slot's retained scratch, then run the normal
+                        // sparse lifecycle — sparsity survives the wire
+                        // quantization end to end
+                        let mut dec = std::mem::take(&mut slot.dequant_val);
+                        let cap_before = dec.capacity();
+                        if let StatValue::Quantized { scale, bits, data, .. } = value {
+                            if *bits == 8 {
+                                ops::dequantize_i8(data, *scale, &mut dec);
+                            } else {
+                                ops::dequantize_f16(data, &mut dec);
+                            }
+                        }
+                        self.grown_bytes +=
+                            (dec.capacity().saturating_sub(cap_before) * 4) as u64;
+                        Self::fold_sparse_into_slot(
+                            slot,
+                            frac,
+                            dim,
+                            qidx,
+                            &dec,
+                            &mut self.grown_bytes,
+                            &mut self.spill_count,
+                        );
+                        slot.dequant_val = dec;
                     }
                 }
+            }
+        }
+    }
+
+    /// The sparse-contribution slot lifecycle (shared by plain sparse
+    /// and decoded indexed-quantized contributions).
+    #[allow(clippy::too_many_arguments)]
+    fn fold_sparse_into_slot(
+        slot: &mut Slot,
+        frac: f64,
+        dim: usize,
+        idx: &[u32],
+        val: &[f32],
+        grown: &mut u64,
+        spills: &mut u64,
+    ) {
+        match slot.mode {
+            SlotMode::Dense => {
+                slot.ensure_dense_len(dim, grown);
+                ops::scatter_add(&mut slot.buf, idx, val);
+            }
+            SlotMode::Idle => {
+                slot.dim = dim;
+                Self::copy_sparse_into(idx, val, &mut slot.idx, &mut slot.val, grown);
+                slot.mode = SlotMode::Sparse;
+                slot.maybe_spill(frac, grown, spills);
+            }
+            SlotMode::Sparse => {
+                slot.dim = slot.dim.max(dim);
+                if slot.idx.as_slice() == idx {
+                    // identical sparsity pattern (users sharing a
+                    // top-k mask / histogram layout): plain add
+                    ops::add_assign(&mut slot.val, val);
+                } else {
+                    let cap_before = slot.sparse_capacity();
+                    merge_sparse_scaled_into(
+                        &slot.idx,
+                        &slot.val,
+                        idx,
+                        val,
+                        1.0,
+                        &mut slot.scratch_idx,
+                        &mut slot.scratch_val,
+                    );
+                    std::mem::swap(&mut slot.idx, &mut slot.scratch_idx);
+                    std::mem::swap(&mut slot.val, &mut slot.scratch_val);
+                    // keep the ping-pong pair symmetric so the
+                    // all-sparse steady state settles after one
+                    // round of a repeating cohort shape
+                    slot.scratch_idx.clear();
+                    slot.scratch_val.clear();
+                    let need = slot.idx.len();
+                    if slot.scratch_idx.capacity() < need {
+                        slot.scratch_idx.reserve(need);
+                        slot.scratch_val.reserve(need);
+                    }
+                    let cap_after = slot.sparse_capacity();
+                    *grown += (cap_after.saturating_sub(cap_before) * 4) as u64;
+                }
+                slot.maybe_spill(frac, grown, spills);
             }
         }
     }
@@ -528,6 +595,71 @@ mod tests {
         let p = arena.take_partial().unwrap();
         assert!(matches!(p.update_value().unwrap(), StatValue::Sparse { .. }));
         assert_eq!(p.update_value().unwrap().to_dense_vec()[2], 4.0);
+    }
+
+    #[test]
+    fn quantized_dense_contribution_decodes_into_dense_slot() {
+        let mut arena = StatsArena::new();
+        let raw = vec![1.0f32, -2.0, 0.5, 4.0];
+        let q = StatValue::Dense(raw.clone()).quantize(16); // f16 exact here
+        arena.fold(&Statistics::new_update_value(q.clone(), 1.0));
+        arena.fold(&Statistics::new_update_value(q, 1.0));
+        let p = arena.take_partial().unwrap();
+        assert!(p.update_value().unwrap().as_dense().is_some());
+        assert_eq!(p.update(), &[2.0, -4.0, 1.0, 8.0]);
+        assert_eq!(p.weight, 2.0);
+    }
+
+    #[test]
+    fn quantized_sparse_contribution_stays_sparse_and_allocs_nothing_in_steady_state() {
+        let mut arena = StatsArena::new();
+        let users: Vec<Statistics> = (0..4)
+            .map(|u| {
+                let s = StatValue::sparse(1024, vec![u * 7, u * 7 + 3], vec![1.0, -1.0]);
+                Statistics::new_update_value(s.quantize(16), 1.0)
+            })
+            .collect();
+        for u in &users {
+            arena.fold(u);
+        }
+        arena.drain_grown_bytes();
+        let p = arena.take_partial().unwrap();
+        let v = p.update_value().unwrap();
+        assert!(matches!(v, StatValue::Sparse { .. }), "quantized-sparse densified: {v:?}");
+        assert_eq!(v.element_count(), 8);
+        assert_eq!(v.to_dense_vec()[0], 1.0);
+        for round in 0..3 {
+            for u in &users {
+                arena.fold(u);
+            }
+            assert_eq!(arena.drain_grown_bytes(), 0, "round {round}: decode scratch grew");
+            arena.take_partial().unwrap();
+        }
+        assert_eq!(arena.drain_spill_count(), 0);
+    }
+
+    #[test]
+    fn quantized_fold_matches_direct_sum() {
+        use crate::fl::aggregator::{Aggregator, SumAggregator};
+        let users: Vec<Statistics> = (0..5)
+            .map(|u| {
+                let v: Vec<f32> = (0..16).map(|i| ((u * 16 + i) as f32).sin()).collect();
+                Statistics::new_update_value(StatValue::Dense(v).quantize(8), 1.0)
+            })
+            .collect();
+        let mut arena = StatsArena::new();
+        for u in &users {
+            arena.fold(u);
+        }
+        let a = arena.take_partial().unwrap();
+        let agg = SumAggregator;
+        let mut acc = None;
+        for u in users {
+            agg.accumulate(&mut acc, u);
+        }
+        let b = acc.unwrap();
+        assert_eq!(a.weight, b.weight);
+        assert_eq!(a.update(), b.update(), "arena decode must match accumulate decode");
     }
 
     #[test]

@@ -219,6 +219,236 @@ pub fn scatter_axpy(y: &mut [f32], s: f32, idx: &[u32], val: &[f32]) {
     }
 }
 
+// ----------------------------------------------------------------------
+// Wire quantization kernels (f16 / int8-with-scale)
+// ----------------------------------------------------------------------
+
+/// max |v| over the buffer (chunked; NaN-free inputs assumed, matching
+/// the rest of the kernel layer).
+#[inline]
+pub fn max_abs(v: &[f32]) -> f32 {
+    let mut acc = [0f32; LANES];
+    let chunks = v.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        for i in 0..LANES {
+            acc[i] = acc[i].max(chunk[i].abs());
+        }
+    }
+    let mut m = 0f32;
+    for a in acc {
+        m = m.max(a);
+    }
+    for &x in tail {
+        m = m.max(x.abs());
+    }
+    m
+}
+
+/// Encode one f32 as IEEE 754 binary16 bits (round-to-nearest-even,
+/// overflow to ±inf, subnormal and NaN preserved). No `half` crate in
+/// the offline build — this is the crate's single f16 codec.
+#[inline]
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN (keep NaN signaling-agnostic via a quiet mantissa bit)
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // subnormal: shift the (implicit-bit) mantissa into 10 bits
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut v = m >> shift;
+        if rem > half || (rem == half && v & 1 == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    // normal: round 23-bit mantissa to 10 bits, nearest-even; a mantissa
+    // carry rolls into the exponent (and saturates to inf) by encoding
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && v & 1 == 1) {
+        v += 1;
+    }
+    sign | v as u16
+}
+
+/// Decode IEEE 754 binary16 bits to f32 (exact — every f16 is an f32).
+#[inline]
+pub fn f16_decode(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    if exp == 0 {
+        // zero / subnormal: mant · 2⁻²⁴ (exact in f32)
+        let v = mant as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -v } else { v };
+    }
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize `src` to f16 wire bytes (little-endian u16 per element,
+/// 2 bytes/elem), replacing `out`'s contents.
+pub fn quantize_f16(src: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(src.len() * 2);
+    let chunks = src.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        let mut enc = [0u16; LANES];
+        for i in 0..LANES {
+            enc[i] = f16_encode(chunk[i]);
+        }
+        for h in enc {
+            out.extend_from_slice(&h.to_le_bytes());
+        }
+    }
+    for &x in tail {
+        out.extend_from_slice(&f16_encode(x).to_le_bytes());
+    }
+}
+
+/// Decode f16 wire bytes back to f32, replacing `out`'s contents.
+pub fn dequantize_f16(data: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(data.len() / 2);
+    for c in data.chunks_exact(2) {
+        out.push(f16_decode(u16::from_le_bytes([c[0], c[1]])));
+    }
+}
+
+/// y[i] += s · decode(data[i]) — fused f16 dequantize-accumulate, no
+/// intermediate f32 buffer.
+pub fn dequant_axpy_f16(y: &mut [f32], s: f32, data: &[u8]) {
+    let n = y.len().min(data.len() / 2);
+    let split = n - n % LANES;
+    let (yh, yt) = y[..n].split_at_mut(split);
+    let (dh, dt) = data[..n * 2].split_at(split * 2);
+    for (ys, ds) in yh.chunks_exact_mut(LANES).zip(dh.chunks_exact(2 * LANES)) {
+        for i in 0..LANES {
+            ys[i] += s * f16_decode(u16::from_le_bytes([ds[2 * i], ds[2 * i + 1]]));
+        }
+    }
+    for (yv, c) in yt.iter_mut().zip(dt.chunks_exact(2)) {
+        *yv += s * f16_decode(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+/// y[idx[j]] += s · decode(data[j]) — sparse fused f16 accumulate.
+/// Index contract as [`scatter_add`].
+pub fn dequant_scatter_axpy_f16(y: &mut [f32], s: f32, idx: &[u32], data: &[u8]) {
+    debug_assert_eq!(idx.len() * 2, data.len());
+    for (i, c) in idx.iter().zip(data.chunks_exact(2)) {
+        y[*i as usize] += s * f16_decode(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+/// Symmetric int8 quantization: scale = max|x|/127 (0 for an all-zero
+/// buffer), byte j = round(x[j]/scale) clamped to [−127, 127] stored
+/// two's-complement (1 byte/elem). Replaces `out`'s contents and
+/// returns the scale.
+pub fn quantize_i8(src: &[f32], out: &mut Vec<u8>) -> f32 {
+    out.clear();
+    out.reserve(src.len());
+    let m = max_abs(src);
+    if m == 0.0 {
+        out.resize(src.len(), 0);
+        return 0.0;
+    }
+    let scale = m / 127.0;
+    let inv = 127.0 / m;
+    let chunks = src.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        let mut enc = [0u8; LANES];
+        for i in 0..LANES {
+            enc[i] = (chunk[i] * inv).round().clamp(-127.0, 127.0) as i8 as u8;
+        }
+        out.extend_from_slice(&enc);
+    }
+    for &x in tail {
+        out.push((x * inv).round().clamp(-127.0, 127.0) as i8 as u8);
+    }
+    scale
+}
+
+/// Decode int8 wire bytes back to f32 (· scale), replacing `out`'s
+/// contents.
+pub fn dequantize_i8(data: &[u8], scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(data.len());
+    for &b in data {
+        out.push(b as i8 as f32 * scale);
+    }
+}
+
+/// y[i] += s · scale · data[i] — fused int8 dequantize-accumulate.
+pub fn dequant_axpy_i8(y: &mut [f32], s: f32, data: &[u8], scale: f32) {
+    let eff = s * scale;
+    let n = y.len().min(data.len());
+    let split = n - n % LANES;
+    let (yh, yt) = y[..n].split_at_mut(split);
+    let (dh, dt) = data[..n].split_at(split);
+    for (ys, ds) in yh.chunks_exact_mut(LANES).zip(dh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            ys[i] += eff * (ds[i] as i8 as f32);
+        }
+    }
+    for (yv, &b) in yt.iter_mut().zip(dt) {
+        *yv += eff * (b as i8 as f32);
+    }
+}
+
+/// y[idx[j]] += s · scale · data[j] — sparse fused int8 accumulate.
+/// Index contract as [`scatter_add`].
+pub fn dequant_scatter_axpy_i8(y: &mut [f32], s: f32, idx: &[u32], data: &[u8], scale: f32) {
+    debug_assert_eq!(idx.len(), data.len());
+    let eff = s * scale;
+    for (i, &b) in idx.iter().zip(data) {
+        y[*i as usize] += eff * (b as i8 as f32);
+    }
+}
+
+/// L2 norm of int8 codes · scale: scale · √Σq² (integer-exact sum in
+/// f64, no decoded buffer).
+pub fn l2_norm_i8(data: &[u8], scale: f32) -> f64 {
+    let mut sq = 0f64;
+    for &b in data {
+        let q = b as i8 as f64;
+        sq += q * q;
+    }
+    scale as f64 * sq.sqrt()
+}
+
+/// L2 norm of packed f16 codes (f64 accumulation, no decoded buffer).
+pub fn l2_norm_f16(data: &[u8]) -> f64 {
+    let mut sq = 0f64;
+    for c in data.chunks_exact(2) {
+        let x = f16_decode(u16::from_le_bytes([c[0], c[1]])) as f64;
+        sq += x * x;
+    }
+    sq.sqrt()
+}
+
 /// Add iid N(0, std²) noise to `v` in place; returns the noise L2 norm
 /// (for SNR diagnostics, paper Fig. 6).
 pub fn add_gaussian_noise(v: &mut [f32], std: f64, rng: &mut Rng) -> f64 {
@@ -357,6 +587,107 @@ mod tests {
         let mut z = vec![0.0f32; 3];
         scatter_axpy(&mut z, 1.0, &[1], &[3.0]);
         assert_eq!(z, vec![0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn f16_codec_round_trips_special_and_normal_values() {
+        // exactly representable values survive the round trip bit-perfectly
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 1.5, 0.099975586] {
+            let y = f16_decode(f16_encode(x));
+            assert_eq!(y, x, "{x} -> {y}");
+        }
+        // signed zero keeps its sign bit
+        assert_eq!(f16_encode(-0.0).to_be_bytes()[0] & 0x80, 0x80);
+        // overflow saturates to inf, inf/nan pass through
+        assert_eq!(f16_decode(f16_encode(1e6)), f32::INFINITY);
+        assert_eq!(f16_decode(f16_encode(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_decode(f16_encode(f32::NAN)).is_nan());
+        // tiny values underflow through the subnormal range to zero
+        assert_eq!(f16_decode(f16_encode(1e-10)), 0.0);
+        // subnormal f16s decode exactly (mant · 2⁻²⁴)
+        assert_eq!(f16_decode(1), 1.0 / 16_777_216.0);
+        // general values: relative error ≤ 2⁻¹¹ in the normal range
+        for i in 0..200 {
+            let x = (i as f32 - 100.0) * 0.37 + 0.013 * i as f32;
+            let y = f16_decode(f16_encode(x));
+            let tol = x.abs().max(6.1e-5) * 4.9e-4;
+            assert!((y - x).abs() <= tol, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn quantize_kernels_bound_round_trip_error() {
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 100] {
+            let src: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.73 - 7.0).sin() * 3.0).collect();
+
+            // f16: per-element relative error ≤ 2⁻¹¹
+            let mut bytes = Vec::new();
+            quantize_f16(&src, &mut bytes);
+            assert_eq!(bytes.len(), 2 * n);
+            let mut back = Vec::new();
+            dequantize_f16(&bytes, &mut back);
+            assert_eq!(back.len(), n);
+            for i in 0..n {
+                let tol = src[i].abs().max(6.1e-5) * 4.9e-4;
+                assert!((back[i] - src[i]).abs() <= tol);
+            }
+
+            // int8: per-element absolute error ≤ scale/2 = max|x|/254
+            let mut b8 = Vec::new();
+            let scale = quantize_i8(&src, &mut b8);
+            assert_eq!(b8.len(), n);
+            let mut back8 = Vec::new();
+            dequantize_i8(&b8, scale, &mut back8);
+            let m = max_abs(&src);
+            for i in 0..n {
+                assert!((back8[i] - src[i]).abs() <= m / 254.0 + 1e-7);
+            }
+
+            // fused accumulate matches dequantize-then-axpy
+            let base: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+            let mut y = base.clone();
+            dequant_axpy_f16(&mut y, 2.0, &bytes);
+            for i in 0..n {
+                assert_eq!(y[i], base[i] + 2.0 * back[i]);
+            }
+            let mut y8 = base.clone();
+            dequant_axpy_i8(&mut y8, 2.0, &b8, scale);
+            for i in 0..n {
+                let expect = base[i] + 2.0 * scale * (b8[i] as i8 as f32);
+                assert!((y8[i] - expect).abs() <= expect.abs().max(1.0) * 1e-6);
+            }
+        }
+        // all-zero input quantizes to scale 0 and zero bytes
+        let mut b = Vec::new();
+        assert_eq!(quantize_i8(&[0.0; 9], &mut b), 0.0);
+        assert!(b.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn dequant_scatter_hits_indices() {
+        let src = [1.0f32, -2.0, 0.5];
+        let mut f16b = Vec::new();
+        quantize_f16(&src, &mut f16b);
+        let mut y = vec![0.0f32; 6];
+        dequant_scatter_axpy_f16(&mut y, 2.0, &[1, 3, 5], &f16b);
+        assert_eq!(y, vec![0.0, 2.0, 0.0, -4.0, 0.0, 1.0]);
+
+        let mut i8b = Vec::new();
+        let scale = quantize_i8(&src, &mut i8b);
+        let mut z = vec![0.0f32; 6];
+        dequant_scatter_axpy_i8(&mut z, 1.0, &[0, 2, 4], &i8b, scale);
+        for (got, want) in z.iter().step_by(2).zip(src) {
+            assert!((got - want).abs() <= 2.0 / 254.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn max_abs_matches_reference() {
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 100] {
+            let v: Vec<f32> = (0..n).map(|i| (i as f32 - 4.5) * -0.7).collect();
+            let want = v.iter().fold(0f32, |a, x| a.max(x.abs()));
+            assert_eq!(max_abs(&v), want);
+        }
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub enum StatValue {
     /// mixed-shape sums are well-defined even when every contribution is
     /// sparse.
     Sparse { dim: u32, idx: Vec<u32>, val: Vec<f32> },
+    /// Quantized wire representation (the `--quantize` path). `bits` is
+    /// 8 (symmetric int8 fixed-point in `scale`, 1 byte/code) or 16
+    /// (IEEE binary16, little-endian, 2 bytes/code, `scale` = 1.0);
+    /// `data` holds the packed codes. `idx: Some(indices)` is the
+    /// quantized form of a sparse value — code j encodes coordinate
+    /// `idx[j]` (sorted unique, all `< dim`); `None` means dense, with
+    /// the codes covering all `dim` coordinates. Quantized values decode
+    /// on arrival at the accumulator (see [`Self::axpy_value`]), so they
+    /// exist only on the user → aggregator wire hop.
+    Quantized { dim: u32, scale: f32, bits: u8, idx: Option<Vec<u32>>, data: Vec<u8> },
 }
 
 impl Default for StatValue {
@@ -79,6 +89,56 @@ impl StatValue {
                 }
                 StatValue::Sparse { dim, idx, val }
             }
+            // already the most compact wire form
+            q @ StatValue::Quantized { .. } => q,
+        }
+    }
+
+    /// Quantize to the given wire precision (8 or 16 bits). Sparse
+    /// input keeps its index set; already-quantized input is returned
+    /// unchanged. The inverse (up to rounding) is [`Self::dequantize`].
+    pub fn quantize(&self, bits: u8) -> StatValue {
+        debug_assert!(bits == 8 || bits == 16, "wire precision must be 8 or 16");
+        let encode = |v: &[f32]| {
+            let mut data = Vec::new();
+            let scale = if bits == 8 {
+                ops::quantize_i8(v, &mut data)
+            } else {
+                ops::quantize_f16(v, &mut data);
+                1.0
+            };
+            (scale, data)
+        };
+        match self {
+            StatValue::Dense(v) => {
+                let (scale, data) = encode(v);
+                StatValue::Quantized { dim: v.len() as u32, scale, bits, idx: None, data }
+            }
+            StatValue::Sparse { dim, idx, val } => {
+                let (scale, data) = encode(val);
+                StatValue::Quantized { dim: *dim, scale, bits, idx: Some(idx.clone()), data }
+            }
+            q @ StatValue::Quantized { .. } => q.clone(),
+        }
+    }
+
+    /// Decode back to the unquantized shape: dense, or sparse when the
+    /// quantized value carries an index set. Clones non-quantized input.
+    pub fn dequantize(&self) -> StatValue {
+        match self {
+            StatValue::Quantized { dim, scale, bits, idx, data } => {
+                let mut vals = Vec::new();
+                if *bits == 8 {
+                    ops::dequantize_i8(data, *scale, &mut vals);
+                } else {
+                    ops::dequantize_f16(data, &mut vals);
+                }
+                match idx {
+                    Some(i) => StatValue::Sparse { dim: *dim, idx: i.clone(), val: vals },
+                    None => StatValue::Dense(vals),
+                }
+            }
+            other => other.clone(),
         }
     }
 
@@ -86,7 +146,7 @@ impl StatValue {
     pub fn len(&self) -> usize {
         match self {
             StatValue::Dense(v) => v.len(),
-            StatValue::Sparse { dim, .. } => *dim as usize,
+            StatValue::Sparse { dim, .. } | StatValue::Quantized { dim, .. } => *dim as usize,
         }
     }
 
@@ -94,56 +154,89 @@ impl StatValue {
         self.len() == 0
     }
 
-    /// Stored f32 count — the communication cost of this value (nonzeros
-    /// for sparse, full length for dense).
+    /// Stored coordinate count — the communication cost of this value in
+    /// coordinates (nonzeros for sparse/indexed-quantized, full length
+    /// for dense shapes).
     pub fn element_count(&self) -> usize {
         match self {
             StatValue::Dense(v) => v.len(),
             StatValue::Sparse { val, .. } => val.len(),
+            StatValue::Quantized { bits, data, .. } => data.len() / (*bits as usize / 8),
         }
     }
 
-    /// Wire cost in f32-equivalents: dense ships one f32 per
-    /// coordinate; sparse ships a u32 index plus an f32 value per
-    /// nonzero (2 f32-equivalents). This is the honest basis for
-    /// communication metrics — near the compact threshold a "sparse"
-    /// update costs the same as dense, and `compact()` only converts
-    /// when this number shrinks.
+    /// Wire cost in coordinate-slots: dense ships one slot per
+    /// coordinate; sparse (and indexed-quantized) ships an index slot
+    /// plus a value slot per nonzero. This is the width-independent
+    /// volume metric (`sys/user-update-elems`); [`Self::wire_bytes`] is
+    /// the width-aware one. Near the compact threshold a "sparse" update
+    /// costs the same as dense, and `compact()` only converts when this
+    /// number shrinks.
     pub fn wire_elements(&self) -> usize {
         match self {
             StatValue::Dense(v) => v.len(),
             StatValue::Sparse { val, .. } => 2 * val.len(),
+            StatValue::Quantized { idx, .. } => {
+                let n = self.element_count();
+                n + if idx.is_some() { n } else { 0 }
+            }
         }
     }
 
-    /// The backing values: all coordinates for dense, the nonzeros for
-    /// sparse. Norms and uniform scaling over this slice are exact for
-    /// both shapes (absent coordinates are zero).
+    /// Wire cost in bytes, accounting for the stored width: dense = 4
+    /// bytes per coordinate, sparse = 8 per nonzero (u32 index + f32
+    /// value), quantized = the packed code bytes plus 4 per index (when
+    /// indexed) plus a 4-byte scale header. Feeds
+    /// `sys/user-update-bytes`.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            StatValue::Dense(v) => 4 * v.len(),
+            StatValue::Sparse { val, .. } => 8 * val.len(),
+            StatValue::Quantized { idx, data, .. } => {
+                4 + data.len() + 4 * idx.as_ref().map_or(0, |i| i.len())
+            }
+        }
+    }
+
+    /// The backing f32 values: all coordinates for dense, the nonzeros
+    /// for sparse. Norms and uniform scaling over this slice are exact
+    /// for both shapes (absent coordinates are zero). Quantized values
+    /// have no f32 backing and return the empty slice — use
+    /// [`Self::l2_norm`] / [`Self::scale`] (decode-aware) or
+    /// [`Self::dequantize`] instead.
     pub fn values(&self) -> &[f32] {
         match self {
             StatValue::Dense(v) => v,
             StatValue::Sparse { val, .. } => val,
+            StatValue::Quantized { .. } => &[],
         }
     }
 
     /// Mutable backing values (see [`Self::values`]); a full `Vec` so
     /// clip kernels with a `&mut Vec<f32>` interface apply directly.
+    /// A quantized value densifies first (in-place mutation of packed
+    /// codes is not representable).
     pub fn values_mut(&mut self) -> &mut Vec<f32> {
+        if matches!(self, StatValue::Quantized { .. }) {
+            return self.densify();
+        }
         match self {
             StatValue::Dense(v) => v,
             StatValue::Sparse { val, .. } => val,
+            StatValue::Quantized { .. } => unreachable!("densified above"),
         }
     }
 
-    /// Dense view, `None` when sparse.
+    /// Dense view, `None` when sparse or quantized.
     pub fn as_dense(&self) -> Option<&[f32]> {
         match self {
             StatValue::Dense(v) => Some(v),
-            StatValue::Sparse { .. } => None,
+            StatValue::Sparse { .. } | StatValue::Quantized { .. } => None,
         }
     }
 
-    /// Materialize the dense form (clones for dense input).
+    /// Materialize the dense form (clones for dense input; decodes
+    /// quantized input).
     pub fn to_dense_vec(&self) -> Vec<f32> {
         match self {
             StatValue::Dense(v) => v.clone(),
@@ -152,19 +245,24 @@ impl StatValue {
                 ops::scatter_add(&mut out, idx, val);
                 out
             }
+            StatValue::Quantized { dim, .. } => {
+                let mut out = vec![0.0f32; *dim as usize];
+                dequant_axpy_into(&mut out, 1.0, self);
+                out
+            }
         }
     }
 
-    /// Convert to dense in place and return the buffer. No-op for dense.
+    /// Convert to dense in place and return the buffer. No-op for
+    /// dense; decodes quantized values.
     pub fn densify(&mut self) -> &mut Vec<f32> {
-        if let StatValue::Sparse { dim, idx, val } = self {
-            let mut out = vec![0.0f32; *dim as usize];
-            ops::scatter_add(&mut out, idx, val);
-            *self = StatValue::Dense(out);
+        match self {
+            StatValue::Dense(_) => {}
+            _ => *self = StatValue::Dense(self.to_dense_vec()),
         }
         match self {
             StatValue::Dense(v) => v,
-            StatValue::Sparse { .. } => unreachable!("densified above"),
+            _ => unreachable!("densified above"),
         }
     }
 
@@ -181,6 +279,10 @@ impl StatValue {
     /// buffered aggregation. Shape result matches [`Self::add_value`]:
     /// sparse only when both operands are sparse.
     pub fn axpy_value(&mut self, s: f32, other: &StatValue) {
+        if matches!(self, StatValue::Quantized { .. }) {
+            // a quantized accumulator decodes before accepting adds
+            self.densify();
+        }
         match other {
             StatValue::Dense(x) => {
                 let dst = self.densify();
@@ -208,18 +310,62 @@ impl StatValue {
                         *v0 = mv;
                     }
                 }
+                StatValue::Quantized { .. } => unreachable!("densified above"),
             },
+            q @ StatValue::Quantized { dim, .. } => {
+                // quantized arrivals decode into a dense accumulator —
+                // the aggregation-side decode of the wire representation
+                let dst = self.densify();
+                if dst.len() < *dim as usize {
+                    dst.resize(*dim as usize, 0.0);
+                }
+                dequant_axpy_into(dst, s, q);
+            }
         }
     }
 
-    /// Uniform scale (exact for both shapes).
+    /// Uniform scale (exact for dense/sparse; int8 rescales the shared
+    /// fixed-point scale exactly, f16 re-encodes each code in place).
     pub fn scale(&mut self, s: f32) {
-        ops::scale(self.values_mut(), s);
+        match self {
+            StatValue::Quantized { scale, bits: 8, .. } => *scale *= s,
+            StatValue::Quantized { data, .. } => {
+                for c in data.chunks_exact_mut(2) {
+                    let x = ops::f16_decode(u16::from_le_bytes([c[0], c[1]])) * s;
+                    c.copy_from_slice(&ops::f16_encode(x).to_le_bytes());
+                }
+            }
+            _ => ops::scale(self.values_mut(), s),
+        }
     }
 
-    /// L2 norm (exact for both shapes).
+    /// L2 norm (exact for dense/sparse; decodes quantized codes on the
+    /// fly without materializing an f32 buffer).
     pub fn l2_norm(&self) -> f64 {
-        ops::l2_norm(self.values())
+        match self {
+            StatValue::Quantized { scale, bits, data, .. } => {
+                if *bits == 8 {
+                    ops::l2_norm_i8(data, *scale)
+                } else {
+                    ops::l2_norm_f16(data)
+                }
+            }
+            _ => ops::l2_norm(self.values()),
+        }
+    }
+}
+
+/// dst += s · decode(q) without materializing an f32 copy of `q`'s
+/// payload; `dst` must already cover `q.len()`. No-op for non-quantized
+/// input (callers dispatch those through [`StatValue::axpy_value`]).
+pub(crate) fn dequant_axpy_into(dst: &mut [f32], s: f32, q: &StatValue) {
+    if let StatValue::Quantized { scale, bits, idx, data, .. } = q {
+        match (idx, *bits) {
+            (Some(i), 8) => ops::dequant_scatter_axpy_i8(dst, s, i, data, *scale),
+            (Some(i), _) => ops::dequant_scatter_axpy_f16(dst, s, i, data),
+            (None, 8) => ops::dequant_axpy_i8(dst, s, data, *scale),
+            (None, _) => ops::dequant_axpy_f16(dst, s, data),
+        }
     }
 }
 
@@ -380,5 +526,100 @@ mod tests {
         v.scale(0.5);
         assert_eq!(v.to_dense_vec()[10], 1.5);
         assert_eq!(v.to_dense_vec()[90], 2.0);
+    }
+
+    #[test]
+    fn quantize_round_trips_both_shapes_and_widths() {
+        let dense = StatValue::Dense(vec![1.0, -2.0, 0.5, 0.25]);
+        let sparse = sp(10, &[(1, 2.0), (7, -4.0)]);
+        for bits in [8u8, 16] {
+            let qd = dense.quantize(bits);
+            assert_eq!(qd.len(), 4);
+            assert_eq!(qd.element_count(), 4);
+            let back = qd.dequantize();
+            assert!(matches!(back, StatValue::Dense(_)));
+            for (a, b) in back.to_dense_vec().iter().zip(dense.to_dense_vec()) {
+                assert!((a - b).abs() <= 2.0 / 127.0, "{a} vs {b}");
+            }
+
+            let qs = sparse.quantize(bits);
+            assert_eq!(qs.len(), 10);
+            assert_eq!(qs.element_count(), 2);
+            let back = qs.dequantize();
+            assert!(matches!(back, StatValue::Sparse { .. }));
+            for (a, b) in back.to_dense_vec().iter().zip(sparse.to_dense_vec()) {
+                assert!((a - b).abs() <= 4.0 / 127.0, "{a} vs {b}");
+            }
+        }
+        // quantizing a quantized value is the identity
+        let q = dense.quantize(8);
+        assert_eq!(q.quantize(8), q);
+        // f16 of exactly representable values is lossless
+        assert_eq!(dense.quantize(16).to_dense_vec(), dense.to_dense_vec());
+    }
+
+    #[test]
+    fn wire_bytes_accounts_for_width() {
+        let d = 1000usize;
+        let dense = StatValue::Dense((0..d).map(|i| (i as f32).cos()).collect());
+        assert_eq!(dense.wire_bytes(), 4 * d);
+        let q8 = dense.quantize(8);
+        assert_eq!(q8.wire_bytes(), 4 + d);
+        let q16 = dense.quantize(16);
+        assert_eq!(q16.wire_bytes(), 4 + 2 * d);
+        // the satellite claim: int8 ships ≈4× fewer bytes than f32
+        assert!(dense.wire_bytes() as f64 / q8.wire_bytes() as f64 >= 3.5);
+        // elems metric stays width-independent
+        assert_eq!(q8.wire_elements(), d);
+        assert_eq!(q16.wire_elements(), d);
+
+        let s = sp(1000, &[(3, 1.0), (500, -2.0), (999, 4.0)]);
+        assert_eq!(s.wire_bytes(), 8 * 3);
+        let sq = s.quantize(8);
+        assert_eq!(sq.wire_bytes(), 4 + 3 + 4 * 3);
+        assert_eq!(sq.wire_elements(), 6);
+    }
+
+    #[test]
+    fn axpy_value_decodes_quantized_operands() {
+        // dense accumulator += quantized dense
+        let mut a = StatValue::Dense(vec![1.0, 1.0, 1.0, 1.0]);
+        let q = StatValue::Dense(vec![2.0, -4.0, 0.0, 8.0]).quantize(8);
+        a.axpy_value(0.5, &q);
+        let want = [2.0f32, -1.0, 1.0, 5.0];
+        for (got, w) in a.to_dense_vec().iter().zip(want) {
+            assert!((got - w).abs() <= 0.5 * 8.0 / 127.0 + 1e-6, "{got} vs {w}");
+        }
+        assert!(a.as_dense().is_some());
+
+        // sparse accumulator += quantized sparse: densifies (quantized
+        // arrivals decode into a dense accumulator)
+        let mut a = sp(6, &[(0, 1.0)]);
+        a.add_value(&sp(6, &[(2, 2.0)]).quantize(16));
+        assert!(a.as_dense().is_some());
+        assert_eq!(a.to_dense_vec(), vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0]);
+
+        // quantized accumulator decodes before accepting adds
+        let mut a = StatValue::Dense(vec![1.0, 2.0]).quantize(16);
+        a.add_value(&StatValue::Dense(vec![1.0, 1.0]));
+        assert_eq!(a.to_dense_vec(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn quantized_scale_and_norm() {
+        let v = StatValue::Dense(vec![3.0, 4.0]);
+        let mut q8 = v.quantize(8);
+        assert!((q8.l2_norm() - 5.0).abs() < 0.1);
+        q8.scale(2.0);
+        assert!((q8.l2_norm() - 10.0).abs() < 0.2);
+        let mut q16 = v.quantize(16);
+        assert!((q16.l2_norm() - 5.0).abs() < 1e-6);
+        q16.scale(0.5);
+        assert_eq!(q16.to_dense_vec(), vec![1.5, 2.0]);
+        // values_mut densifies packed codes
+        let mut q = v.quantize(16);
+        assert!(q.values().is_empty());
+        q.values_mut().push(9.0);
+        assert_eq!(q.to_dense_vec(), vec![3.0, 4.0, 9.0]);
     }
 }

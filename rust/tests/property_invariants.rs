@@ -330,6 +330,183 @@ fn accumulate_scaled_matches_scaled_accumulate_randomized() {
     }
 }
 
+/// Quantize∘dequantize round-trip error is bounded per coordinate:
+/// int8-with-scale by half a code step (max|x|/254), binary16 by half an
+/// ULP (~4.9e-4 relative, with an absolute floor for subnormals) — over
+/// random dense and sparse shapes of both widths.
+#[test]
+fn quantized_round_trip_error_bounded_randomized() {
+    for seed in 0..TRIALS * 2 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x9A17);
+        let dim = 1 + rng.below(64);
+        let value = if rng.f64() < 0.5 {
+            StatValue::Dense((0..dim).map(|_| rng.normal() as f32).collect())
+        } else {
+            rand_sparse(&mut rng, dim)
+        };
+        let orig = value.to_dense_vec();
+        let max = orig.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        for bits in [8u8, 16] {
+            let q = value.quantize(bits);
+            assert!(
+                matches!(q, StatValue::Quantized { .. }),
+                "seed {seed}: quantize({bits}) left {q:?}"
+            );
+            let back = q.dequantize().to_dense_vec();
+            assert_eq!(back.len(), orig.len(), "seed {seed} bits {bits}");
+            for (x, y) in orig.iter().zip(&back) {
+                let tol = if bits == 8 {
+                    max / 254.0 + 1e-6
+                } else {
+                    (x.abs() * 4.9e-4).max(1e-7)
+                };
+                assert!(
+                    (x - y).abs() <= tol,
+                    "seed {seed} bits {bits}: {x} vs {y} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+/// Folding the same quantized contributions in any order decodes to the
+/// same sum (exchange law over the quantized wire): forward, permuted
+/// and the dense reference of the decoded images all agree.
+#[test]
+fn quantized_accumulate_commutes_within_tolerance() {
+    for seed in 0..TRIALS * 2 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x9C0B);
+        let dim = 1 + rng.below(48);
+        let users: Vec<Statistics> = (0..3 + rng.below(6))
+            .map(|_| {
+                let mut s = rand_mixed_stats(&mut rng, dim);
+                if rng.f64() < 0.6 {
+                    let bits = if rng.f64() < 0.5 { 8 } else { 16 };
+                    let v = s.vecs.get_mut("update").unwrap();
+                    *v = v.quantize(bits);
+                }
+                s
+            })
+            .collect();
+        let agg = SumAggregator;
+
+        let mut fwd = None;
+        for u in users.clone() {
+            agg.accumulate(&mut fwd, u);
+        }
+        let fwd = fwd.unwrap();
+
+        let mut perm = users.clone();
+        let mut r2 = Rng::seed_from_u64(seed);
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, r2.below(i + 1));
+        }
+        let mut bwd = None;
+        for u in perm {
+            agg.accumulate(&mut bwd, u);
+        }
+        let bwd = bwd.unwrap();
+
+        // reference: the decoded dense image of every contribution,
+        // summed coordinatewise — quantization error cancels exactly
+        // because both orders fold the *same* codes
+        let mut expect = vec![0.0f32; dim];
+        let mut w = 0.0f64;
+        for u in &users {
+            w += u.weight;
+            for (e, x) in expect.iter_mut().zip(dense_of(u, "update", dim)) {
+                *e += x;
+            }
+        }
+        for (name, got) in [("forward", &fwd), ("permuted", &bwd)] {
+            assert_eq!(got.weight, w, "seed {seed} {name}");
+            assert_close(
+                &dense_of(got, "update", dim),
+                &expect,
+                &format!("seed {seed} {name}"),
+            );
+        }
+    }
+}
+
+/// Error feedback drives the mean round-trip bias to ~0: quantizing the
+/// same update for N rounds with carried residuals, the decoded mean
+/// converges to the true value at rate step/N — far below the one-round
+/// quantization error a feedback-free wire would repeat every round.
+#[test]
+fn wire_quantizer_error_feedback_unbiased_over_rounds() {
+    use pfl::fl::postprocess::{Postprocessor, PpEnv, WireQuantizer};
+    use pfl::fl::{CentralContext, LocalParams};
+    let ctx = CentralContext::train(0, 4, LocalParams::default(), 1);
+    for bits in [8u8, 16] {
+        let mut rng = Rng::seed_from_u64(bits as u64 ^ 0xEF);
+        let dim = 32;
+        let truth: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.01).collect();
+        let max = truth.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let pp = WireQuantizer::new(bits, true);
+        let n = 200u32;
+        let mut sum = vec![0f64; dim];
+        for _ in 0..n {
+            let mut s = Statistics::new_update(truth.clone(), 1.0);
+            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 1, uid: 7 };
+            pp.postprocess_one_user(&mut s, &ctx, &mut env).unwrap();
+            let dec = s.update_value().unwrap().to_dense_vec();
+            for (a, v) in sum.iter_mut().zip(&dec) {
+                *a += *v as f64;
+            }
+        }
+        // the carried residual bounds the *sum* of per-round errors by
+        // one quantization step, so the mean bias shrinks as step/N
+        let step = if bits == 8 { max * 1.05 / 127.0 } else { max * 1.1e-3 };
+        for (j, t) in truth.iter().enumerate() {
+            let bias = (sum[j] / n as f64 - *t as f64).abs();
+            assert!(
+                bias <= step as f64 * 2.0 / n as f64 + 1e-9,
+                "bits {bits} coord {j}: mean bias {bias:e} not driven to ~0"
+            );
+        }
+    }
+}
+
+/// The parallel binary tree fold reduces random mixed partials to the
+/// serial left fold's result (weights exact, values to f32-association
+/// tolerance), reports depth ceil(log2 n), and repeats bit-identically.
+#[test]
+fn tree_reduce_matches_serial_within_tolerance_randomized() {
+    use pfl::fl::tree_reduce;
+    for seed in 0..TRIALS {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x73EE);
+        let dim = 1 + rng.below(48);
+        let n = 1 + rng.below(9);
+        let partials: Vec<Statistics> =
+            (0..n).map(|_| rand_mixed_stats(&mut rng, dim)).collect();
+
+        let serial = SumAggregator.worker_reduce(partials.clone()).unwrap();
+        let (tree, depth) = tree_reduce(&SumAggregator, partials.clone());
+        let tree = tree.unwrap();
+        assert_eq!(
+            depth,
+            partials.len().next_power_of_two().trailing_zeros(),
+            "seed {seed}: depth for {n} partials"
+        );
+        assert_eq!(tree.weight, serial.weight, "seed {seed}");
+        assert_close(
+            &dense_of(&tree, "update", dim),
+            &dense_of(&serial, "update", dim),
+            &format!("seed {seed}"),
+        );
+
+        // fixed adjacent pairing: repeating the tree fold is bit-identical
+        let (tree2, depth2) = tree_reduce(&SumAggregator, partials);
+        let tree2 = tree2.unwrap();
+        assert_eq!(depth, depth2);
+        let bits_of = |s: &Statistics| -> Vec<u32> {
+            dense_of(s, "update", dim).iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits_of(&tree), bits_of(&tree2), "seed {seed}: tree fold not deterministic");
+    }
+}
+
 /// CollectAggregator must preserve sparse contributions individually
 /// (shape and values) across accumulate + worker_reduce.
 #[test]
