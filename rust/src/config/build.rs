@@ -239,9 +239,10 @@ pub fn build_eval_callback(
 /// would feed the wrong shapes into the model, so fail loudly instead.
 fn open_store(cfg: &Config) -> Result<Arc<ShardedStore>> {
     let store = Arc::new(
-        ShardedStore::open(std::path::Path::new(&cfg.data_store)).with_context(|| {
-            format!("opening data store {} (run `pfl materialize` first)", cfg.data_store)
-        })?,
+        ShardedStore::open_with(std::path::Path::new(&cfg.data_store), cfg.open_options())
+            .with_context(|| {
+                format!("opening data store {} (run `pfl materialize` first)", cfg.data_store)
+            })?,
     );
     let expect = build_dataset(&cfg.dataset)?;
     if store.name() != expect.name() || store.num_users() != expect.num_users() {
@@ -384,6 +385,11 @@ mod tests {
         assert_eq!(ds.num_users(), gen.num_users());
         assert_eq!(ds.name(), gen.name());
         assert_eq!(ds.user_len(0), gen.user_len(0));
+        // the portable pread fallback opens the same store
+        cfg.store_mmap = false;
+        let ds = effective_dataset(&cfg).unwrap();
+        assert_eq!(ds.num_users(), gen.num_users());
+        cfg.store_mmap = true;
         // the full backend assembles over the store (model construction
         // is lazy, so no hlo feature is needed here)
         let backend = build_backend(&cfg, OverheadProfile::default()).unwrap();

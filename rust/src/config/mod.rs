@@ -136,6 +136,16 @@ pub struct Config {
     /// ahead of worker consumption; 0 disables the thread (CLI
     /// `--prefetch-depth`).
     pub prefetch_depth: usize,
+    /// Store-backed runs: map shards with `mmap` so warm reads are
+    /// zero-copy out of the page cache (default true; CLI
+    /// `--store-mmap=false` forces the portable `pread` path — also the
+    /// automatic fallback on platforms without the mmap shim).
+    pub store_mmap: bool,
+    /// Compression for `pfl materialize`: "none" (default) or
+    /// "shuffle-lz" (byte-shuffle + block LZ, decoded on the prefetch
+    /// thread; CLI `--compression`). Reads auto-detect from the store
+    /// index, so this only affects writing.
+    pub store_compression: String,
     /// Wire representation of user statistics: "none" (exact f32,
     /// default), "f16" or "int8" (CLI `--quantize`). Non-none appends an
     /// error-feedback [`crate::fl::postprocess::WireQuantizer`] as the
@@ -187,6 +197,18 @@ impl Config {
             cache_users: self.cache_users,
             prefetch_depth: self.prefetch_depth,
         }
+    }
+
+    pub fn open_options(&self) -> crate::data::OpenOptions {
+        crate::data::OpenOptions { mmap: self.store_mmap }
+    }
+
+    /// Parsed `engine.store_compression` (write-side only).
+    pub fn store_compression(&self) -> Result<crate::data::Compression> {
+        if self.store_compression.is_empty() {
+            return Ok(crate::data::Compression::None);
+        }
+        self.store_compression.parse()
     }
 
     pub fn dispatch_spec(&self) -> Result<crate::fl::DispatchSpec> {
@@ -295,6 +317,8 @@ impl Config {
                     ("data_store", s(self.data_store.clone())),
                     ("cache_users", num(self.cache_users as f64)),
                     ("prefetch_depth", num(self.prefetch_depth as f64)),
+                    ("store_mmap", Value::Bool(self.store_mmap)),
+                    ("store_compression", s(self.store_compression.clone())),
                     ("wire_quantization", s(self.wire_quantization.clone())),
                     ("fold_tree", Value::Bool(self.fold_tree)),
                     ("seed", num(self.seed as f64)),
@@ -397,6 +421,15 @@ impl Config {
                 Some(x) => x.as_usize()?,
                 None => crate::data::SourceConfig::default().prefetch_depth,
             },
+            // optional for configs written before mmap/compressed stores
+            store_mmap: match e.get("store_mmap") {
+                Some(x) => x.as_bool()?,
+                None => true,
+            },
+            store_compression: match e.get("store_compression") {
+                Some(x) => x.as_str()?.to_string(),
+                None => "none".into(),
+            },
             // optional for configs written before wire quantization /
             // the tree fold
             wire_quantization: match e.get("wire_quantization") {
@@ -475,6 +508,8 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        store_mmap: true,
+        store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
         seed: 0,
@@ -523,6 +558,8 @@ fn stackoverflow(dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        store_mmap: true,
+        store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
         seed: 0,
@@ -574,6 +611,8 @@ fn flair(iid: bool, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        store_mmap: true,
+        store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
         seed: 0,
@@ -621,6 +660,8 @@ fn llm(flavor: &str, dp: bool) -> Config {
         data_store: String::new(),
         cache_users: 512,
         prefetch_depth: 8,
+        store_mmap: true,
+        store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
         seed: 0,
@@ -792,6 +833,8 @@ mod tests {
                     && !l.contains("data_store")
                     && !l.contains("cache_users")
                     && !l.contains("prefetch_depth")
+                    && !l.contains("store_mmap")
+                    && !l.contains("store_compression")
                     && !l.contains("wire_quantization")
                     && !l.contains("fold_tree")
             })
@@ -806,6 +849,8 @@ mod tests {
         assert_eq!(parsed.data_store, "");
         assert_eq!(parsed.cache_users, 512);
         assert_eq!(parsed.prefetch_depth, 8);
+        assert!(parsed.store_mmap, "pre-mmap configs default to mmap");
+        assert_eq!(parsed.store_compression, "none");
         assert_eq!(parsed.wire_quantization, "none");
         assert!(!parsed.fold_tree);
     }
@@ -833,10 +878,17 @@ mod tests {
         c.data_store = "/tmp/cifar-store".into();
         c.cache_users = 64;
         c.prefetch_depth = 3;
+        c.store_mmap = false;
+        c.store_compression = "shuffle-lz".into();
         let back = Config::from_json(&c.to_json()).unwrap();
         assert_eq!(back.data_store, "/tmp/cifar-store");
         assert_eq!(back.source_config().cache_users, 64);
         assert_eq!(back.source_config().prefetch_depth, 3);
+        assert!(!back.open_options().mmap);
+        assert_eq!(back.store_compression().unwrap(), crate::data::Compression::ShuffleLz);
+        // and the parse helper rejects junk
+        c.store_compression = "zstd".into();
+        assert!(c.store_compression().is_err());
     }
 
     #[test]

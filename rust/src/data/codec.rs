@@ -1,0 +1,412 @@
+//! Per-block compression codec for the sharded data store.
+//!
+//! Store payloads are dominated by little-endian `f32`/`i32` lanes
+//! (see the blob encoding in [`crate::data::store`]), which raw LZ
+//! handles poorly: the low mantissa bytes are near-random while the
+//! sign/exponent bytes repeat heavily. The codec therefore runs two
+//! passes per fixed-size block:
+//!
+//! 1. **byte-shuffle** — transpose the 4-byte lanes so byte plane 0 of
+//!    every word is contiguous, then plane 1, etc. (the classic
+//!    blosc/HDF5 shuffle filter). Repetitive planes become long runs.
+//! 2. **LZ** — a greedy LZ4-block-style coder: hash table over 4-byte
+//!    words, 64 KiB window, `token = lit-nibble | match-nibble` with
+//!    255-extension bytes and a 2-byte little-endian offset. Runs (the
+//!    post-shuffle common case) collapse to offset-1 matches, so this
+//!    subsumes RLE.
+//!
+//! Each compressed block is framed with a 1-byte flag; blocks the codec
+//! cannot shrink are **stored** verbatim (flag 0), bounding the worst
+//! case at one byte of overhead per block. Framing and integrity
+//! errors surface as `anyhow` errors that the store maps into its typed
+//! corruption errors.
+//!
+//! Decompression happens on the store's prefetch thread (never on the
+//! worker critical path); see `DESIGN.md` §6.
+
+use anyhow::{bail, ensure, Result};
+
+/// Store-level compression scheme, recorded in the index header
+/// (format V2; see [`crate::data::store`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compression {
+    /// Raw blobs, byte-compatible with the V1 shard layout.
+    None,
+    /// Byte-shuffle + block LZ as described at module level.
+    ShuffleLz,
+}
+
+impl Compression {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::ShuffleLz => "shuffle-lz",
+        }
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::ShuffleLz => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Compression> {
+        match v {
+            0 => Ok(Compression::None),
+            1 => Ok(Compression::ShuffleLz),
+            other => bail!("unknown compression id {other} in store index"),
+        }
+    }
+}
+
+impl std::str::FromStr for Compression {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Compression> {
+        match s {
+            "none" => Ok(Compression::None),
+            "shuffle-lz" => Ok(Compression::ShuffleLz),
+            other => bail!("unknown compression {other:?} (expected none|shuffle-lz)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Compression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Default uncompressed block size written by `ShardWriter` (256 KiB:
+/// large enough that the per-block flag/table overhead is noise, small
+/// enough that a single-user decode touches one or two blocks).
+pub const DEFAULT_BLOCK_SIZE: u32 = 256 * 1024;
+
+/// Block flag: payload is the raw bytes, stored verbatim.
+pub const FLAG_STORED: u8 = 0;
+/// Block flag: payload is byte-shuffled then LZ-coded.
+pub const FLAG_SHUFFLE_LZ: u8 = 1;
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: u32 = 12;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+const MAX_OFFSET: usize = u16::MAX as usize;
+
+/// Transpose `src` into 4 byte-planes (word stride 4); the non-multiple
+/// tail is appended verbatim. `out` is cleared first.
+pub fn byte_shuffle(src: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(src.len());
+    let words = src.len() / 4;
+    for plane in 0..4 {
+        out.extend(src[..words * 4].iter().skip(plane).step_by(4));
+    }
+    out.extend_from_slice(&src[words * 4..]);
+}
+
+/// Inverse of [`byte_shuffle`]. `out` is cleared first.
+pub fn byte_unshuffle(shuffled: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(shuffled.len(), 0);
+    let words = shuffled.len() / 4;
+    for plane in 0..4 {
+        for (j, &b) in shuffled[plane * words..(plane + 1) * words].iter().enumerate() {
+            out[j * 4 + plane] = b;
+        }
+    }
+    out[words * 4..].copy_from_slice(&shuffled[words * 4..]);
+}
+
+#[inline]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(2_654_435_761) >> (32 - HASH_BITS)) as usize
+}
+
+#[inline]
+fn word_at(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]])
+}
+
+fn push_ext(out: &mut Vec<u8>, mut v: usize) {
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+/// Emit one `literals + match` sequence. `mlen >= MIN_MATCH`.
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: u16, mlen: usize) {
+    let lit = literals.len();
+    let m = mlen - MIN_MATCH;
+    let token = ((lit.min(15) as u8) << 4) | m.min(15) as u8;
+    out.push(token);
+    if lit >= 15 {
+        push_ext(out, lit - 15);
+    }
+    out.extend_from_slice(literals);
+    out.extend_from_slice(&offset.to_le_bytes());
+    if m >= 15 {
+        push_ext(out, m - 15);
+    }
+}
+
+/// Emit the final literals-only sequence (match nibble 0, no offset).
+fn emit_last(out: &mut Vec<u8>, literals: &[u8]) {
+    let lit = literals.len();
+    if lit == 0 {
+        return;
+    }
+    out.push((lit.min(15) as u8) << 4);
+    if lit >= 15 {
+        push_ext(out, lit - 15);
+    }
+    out.extend_from_slice(literals);
+}
+
+/// Greedy single-pass LZ coder, appending to `out`.
+pub fn lz_compress(src: &[u8], out: &mut Vec<u8>) {
+    // positions stored as pos+1 so 0 means empty
+    let mut table = vec![0usize; HASH_SIZE];
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+    while i + MIN_MATCH <= src.len() {
+        let h = hash4(word_at(src, i));
+        let cand = table[h];
+        table[h] = i + 1;
+        if cand > 0 {
+            let c = cand - 1;
+            if i - c <= MAX_OFFSET && word_at(src, c) == word_at(src, i) {
+                let mut mlen = MIN_MATCH;
+                while i + mlen < src.len() && src[c + mlen] == src[i + mlen] {
+                    mlen += 1;
+                }
+                emit_sequence(out, &src[anchor..i], (i - c) as u16, mlen);
+                i += mlen;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_last(out, &src[anchor..]);
+}
+
+fn read_ext(comp: &[u8], p: &mut usize) -> Result<usize> {
+    let mut v = 0usize;
+    loop {
+        let b = *comp
+            .get(*p)
+            .ok_or_else(|| anyhow::anyhow!("lz stream truncated in length extension"))?;
+        *p += 1;
+        v += b as usize;
+        if b != 255 {
+            return Ok(v);
+        }
+    }
+}
+
+/// Decode an [`lz_compress`] stream, verifying the output is exactly
+/// `raw_len` bytes. Bounds-checked throughout: corrupt input errors,
+/// never panics or reads out of range.
+pub fn lz_decompress(comp: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut p = 0usize;
+    while p < comp.len() {
+        let token = comp[p];
+        p += 1;
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            lit += read_ext(comp, &mut p)?;
+        }
+        ensure!(
+            p + lit <= comp.len(),
+            "lz stream truncated: literal run of {lit} at {p} overruns {} bytes",
+            comp.len()
+        );
+        out.extend_from_slice(&comp[p..p + lit]);
+        p += lit;
+        if p == comp.len() {
+            break; // last sequence carries no match
+        }
+        ensure!(p + 2 <= comp.len(), "lz stream truncated before match offset");
+        let off = u16::from_le_bytes([comp[p], comp[p + 1]]) as usize;
+        p += 2;
+        ensure!(
+            off >= 1 && off <= out.len(),
+            "lz match offset {off} out of range (decoded {} bytes)",
+            out.len()
+        );
+        let mut m = (token & 0x0f) as usize;
+        if m == 15 {
+            m += read_ext(comp, &mut p)?;
+        }
+        let mlen = m + MIN_MATCH;
+        ensure!(
+            out.len() + mlen <= raw_len,
+            "lz match of {mlen} overruns declared raw length {raw_len}"
+        );
+        // byte-by-byte so overlapping matches (offset < mlen, the RLE
+        // case) replicate correctly
+        let start = out.len() - off;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+    ensure!(
+        out.len() == raw_len,
+        "lz stream decoded {} bytes, index declares {raw_len}",
+        out.len()
+    );
+    Ok(out)
+}
+
+/// Compress one block: shuffle + LZ framed behind a flag byte, falling
+/// back to a stored block when that does not shrink the data.
+pub fn compress_block(raw: &[u8]) -> Vec<u8> {
+    let mut shuffled = Vec::new();
+    byte_shuffle(raw, &mut shuffled);
+    let mut out = Vec::with_capacity(raw.len() / 2 + 16);
+    out.push(FLAG_SHUFFLE_LZ);
+    lz_compress(&shuffled, &mut out);
+    if out.len() > raw.len() {
+        out.clear();
+        out.push(FLAG_STORED);
+        out.extend_from_slice(raw);
+    }
+    out
+}
+
+/// Decode one framed block back to exactly `raw_len` raw bytes.
+pub fn decompress_block(framed: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let Some((&flag, payload)) = framed.split_first() else {
+        bail!("empty compressed block");
+    };
+    match flag {
+        FLAG_STORED => {
+            ensure!(
+                payload.len() == raw_len,
+                "stored block is {} bytes, index declares {raw_len}",
+                payload.len()
+            );
+            Ok(payload.to_vec())
+        }
+        FLAG_SHUFFLE_LZ => {
+            let shuffled = lz_decompress(payload, raw_len)?;
+            let mut raw = Vec::new();
+            byte_unshuffle(&shuffled, &mut raw);
+            Ok(raw)
+        }
+        other => bail!("unknown block flag {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    fn roundtrip(raw: &[u8]) {
+        let framed = compress_block(raw);
+        let back = decompress_block(&framed, raw.len()).unwrap();
+        assert_eq!(back, raw, "roundtrip mismatch for {} bytes", raw.len());
+    }
+
+    #[test]
+    fn shuffle_is_exact_inverse() {
+        let mut rng = Rng::seed_from_u64(7);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 64, 1001] {
+            let raw = rand_bytes(&mut rng, len);
+            let mut sh = Vec::new();
+            byte_shuffle(&raw, &mut sh);
+            assert_eq!(sh.len(), raw.len());
+            let mut back = Vec::new();
+            byte_unshuffle(&sh, &mut back);
+            assert_eq!(back, raw, "len {len}");
+        }
+    }
+
+    #[test]
+    fn roundtrips_edge_and_random_blocks() {
+        roundtrip(&[]);
+        roundtrip(&[42]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[0; 4096]); // pure run → offset-1 match chain
+        let mut rng = Rng::seed_from_u64(11);
+        for len in [17usize, 255, 256, 4093, 65_537] {
+            roundtrip(&rand_bytes(&mut rng, len));
+        }
+    }
+
+    #[test]
+    fn f32_lanes_compress_after_shuffle() {
+        // slowly-varying f32s: shared sign/exponent planes shuffle into
+        // long runs the LZ collapses
+        let floats: Vec<f32> = (0..16_384).map(|i| 1.0 + (i as f32) * 1e-4).collect();
+        let raw: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let framed = compress_block(&raw);
+        assert!(
+            framed.len() * 2 < raw.len(),
+            "expected ≥2× shrink on lane data, got {} / {}",
+            framed.len(),
+            raw.len()
+        );
+        assert_eq!(framed[0], FLAG_SHUFFLE_LZ);
+        assert_eq!(decompress_block(&framed, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn incompressible_blocks_are_stored_with_one_byte_overhead() {
+        let mut rng = Rng::seed_from_u64(5);
+        let raw = rand_bytes(&mut rng, 8192);
+        let framed = compress_block(&raw);
+        assert!(framed.len() <= raw.len() + 1);
+        if framed[0] == FLAG_STORED {
+            assert_eq!(framed.len(), raw.len() + 1);
+        }
+        assert_eq!(decompress_block(&framed, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        // empty frame
+        assert!(decompress_block(&[], 4).is_err());
+        // unknown flag
+        assert!(decompress_block(&[9, 0, 0], 2).is_err());
+        // stored length mismatch
+        assert!(decompress_block(&[FLAG_STORED, 1, 2], 3).is_err());
+        // wrong declared raw_len for a valid stream
+        let framed = compress_block(&[7u8; 1000]);
+        assert!(decompress_block(&framed, 999).is_err());
+        assert!(decompress_block(&framed, 1001).is_err());
+        // truncated / bit-flipped LZ payloads must error cleanly
+        let floats: Vec<u8> = (0..4096u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let good = compress_block(&floats);
+        assert_eq!(good[0], FLAG_SHUFFLE_LZ);
+        for cut in [1usize, 2, good.len() / 2, good.len() - 1] {
+            let _ = decompress_block(&good[..cut], floats.len()); // may Err; must not panic
+        }
+        for flip in [1usize, 5, good.len() / 3] {
+            let mut bad = good.clone();
+            bad[flip] ^= 0xff;
+            let _ = decompress_block(&bad, floats.len()); // may Err or decode junk of right length; must not panic
+        }
+    }
+
+    #[test]
+    fn compression_names_and_ids_roundtrip() {
+        for c in [Compression::None, Compression::ShuffleLz] {
+            assert_eq!(Compression::from_u8(c.to_u8()).unwrap(), c);
+            assert_eq!(c.as_str().parse::<Compression>().unwrap(), c);
+            assert_eq!(format!("{c}"), c.as_str());
+        }
+        assert!(Compression::from_u8(7).is_err());
+        assert!("zstd".parse::<Compression>().is_err());
+    }
+}

@@ -1,0 +1,449 @@
+//! Write-through corpus import: materialize an *external* tabular
+//! corpus into the sharded store (`pfl import`), so real data — not
+//! just the generator zoo — feeds the out-of-core pipeline.
+//!
+//! Two documented input layouts, both streamed row-by-row straight
+//! through [`ShardWriter`] (the importer never holds more than one
+//! user's rows in memory, so corpus size is bounded by disk, not RAM):
+//!
+//! **JSONL** — one object per line:
+//! ```text
+//! {"user": "alice", "x": [0.1, 2.0, -1.5], "y": 1.0}
+//! {"user": "alice", "x": [0.0, 1.0, 3.25], "y": 0.0}
+//! {"user": "bob",   "x": [9.5, 0.5, 0.75], "y": 1.0}
+//! ```
+//! `user` may be a string or a number; `y` is optional but must be
+//! present on all rows or none.
+//!
+//! **CSV** — header row `user[,y],f0,f1,...` then one example per row:
+//! ```text
+//! user,y,f0,f1,f2
+//! alice,1.0,0.1,2.0,-1.5
+//! bob,1.0,9.5,0.5,0.75
+//! ```
+//!
+//! Rows for one user must be contiguous (the store is written
+//! sequentially); a user key reappearing after another user is an
+//! error, not a silent merge. Labeled corpora become
+//! [`UserData::Tabular`], unlabeled ones [`UserData::Points`]. uids are
+//! assigned in order of first appearance.
+
+use std::collections::HashSet;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::codec::Compression;
+use super::store::{ShardWriter, StoreStats};
+use super::UserData;
+use crate::util::json::Value;
+
+/// Input layout; [`ImportFormat::detect`] infers it from the file
+/// extension when the CLI does not pass `--format`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportFormat {
+    Jsonl,
+    Csv,
+}
+
+impl ImportFormat {
+    pub fn detect(path: &Path) -> Result<ImportFormat> {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") | Some("ndjson") | Some("json") => Ok(ImportFormat::Jsonl),
+            Some("csv") | Some("tsv") => Ok(ImportFormat::Csv),
+            other => bail!(
+                "cannot infer corpus format from extension {other:?} \
+                 (use .jsonl/.ndjson or .csv, or pass --format)"
+            ),
+        }
+    }
+}
+
+impl std::str::FromStr for ImportFormat {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ImportFormat> {
+        match s {
+            "jsonl" => Ok(ImportFormat::Jsonl),
+            "csv" => Ok(ImportFormat::Csv),
+            other => bail!("unknown import format {other:?} (expected jsonl|csv)"),
+        }
+    }
+}
+
+/// Import tuning; the defaults mirror `pfl materialize`.
+#[derive(Debug, Clone)]
+pub struct ImportOptions {
+    pub users_per_shard: usize,
+    pub compression: Compression,
+    /// Store name recorded in the index (shown by `pfl store stat` and
+    /// used by `engine.data_store` validation).
+    pub name: String,
+    /// `None`: infer from the input file extension.
+    pub format: Option<ImportFormat>,
+}
+
+impl Default for ImportOptions {
+    fn default() -> Self {
+        ImportOptions {
+            users_per_shard: 256,
+            compression: Compression::None,
+            name: "imported".into(),
+            format: None,
+        }
+    }
+}
+
+/// One parsed example row.
+struct Row {
+    user: String,
+    x: Vec<f32>,
+    y: Option<f32>,
+}
+
+fn parse_jsonl_row(line: &str, lineno: usize) -> Result<Row> {
+    let v = Value::parse(line).with_context(|| format!("line {lineno}: invalid JSON"))?;
+    let user_v = v.req("user").with_context(|| format!("line {lineno}"))?;
+    let user = match user_v.as_str() {
+        Ok(s) => s.to_string(),
+        // numeric user ids are fine; canonicalize through f64
+        Err(_) => {
+            let n = user_v
+                .as_f64()
+                .with_context(|| format!("line {lineno}: user must be a string or number"))?;
+            format!("{n}")
+        }
+    };
+    let x: Vec<f32> = v
+        .req("x")
+        .and_then(|a| a.as_arr())
+        .with_context(|| format!("line {lineno}: missing feature array \"x\""))?
+        .iter()
+        .map(|f| f.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()
+        .with_context(|| format!("line {lineno}: non-numeric feature"))?;
+    let y = match v.get("y") {
+        Some(f) => Some(
+            f.as_f64()
+                .with_context(|| format!("line {lineno}: label \"y\" must be a number"))?
+                as f32,
+        ),
+        None => None,
+    };
+    Ok(Row { user, x, y })
+}
+
+/// CSV column layout from the header row.
+struct CsvHeader {
+    has_y: bool,
+    features: usize,
+}
+
+fn parse_csv_header(line: &str) -> Result<CsvHeader> {
+    let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+    ensure!(
+        cols.first() == Some(&"user"),
+        "CSV header must start with a \"user\" column, got {:?}",
+        cols.first().unwrap_or(&"")
+    );
+    let has_y = cols.get(1) == Some(&"y");
+    let features = cols.len() - 1 - usize::from(has_y);
+    ensure!(features > 0, "CSV header declares no feature columns");
+    Ok(CsvHeader { has_y, features })
+}
+
+fn parse_csv_row(line: &str, header: &CsvHeader, lineno: usize) -> Result<Row> {
+    let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+    let expect = 1 + usize::from(header.has_y) + header.features;
+    ensure!(
+        cols.len() == expect,
+        "line {lineno}: {} columns, header declares {expect}",
+        cols.len()
+    );
+    let user = cols[0].to_string();
+    ensure!(!user.is_empty(), "line {lineno}: empty user key");
+    let mut idx = 1;
+    let y = if header.has_y {
+        let v: f32 = cols[idx]
+            .parse()
+            .with_context(|| format!("line {lineno}: bad label {:?}", cols[idx]))?;
+        idx += 1;
+        Some(v)
+    } else {
+        None
+    };
+    let x = cols[idx..]
+        .iter()
+        .map(|c| {
+            c.parse::<f32>().with_context(|| format!("line {lineno}: bad feature {c:?}"))
+        })
+        .collect::<Result<Vec<f32>>>()?;
+    Ok(Row { user, x, y })
+}
+
+/// Accumulates one user's contiguous rows, then writes through.
+struct PendingUser {
+    key: String,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+struct Importer {
+    writer: ShardWriter,
+    pending: Option<PendingUser>,
+    seen: HashSet<String>,
+    /// Feature dimension and labeledness, fixed by the first row.
+    dim: usize,
+    has_y: bool,
+    users: usize,
+    rows: u64,
+}
+
+impl Importer {
+    fn flush(&mut self) -> Result<()> {
+        if let Some(p) = self.pending.take() {
+            let data = if self.has_y {
+                UserData::Tabular { x: p.x, y: p.y, dim: self.dim }
+            } else {
+                UserData::Points { x: p.x, dim: self.dim }
+            };
+            self.writer
+                .append_user(&data)
+                .with_context(|| format!("writing user {:?}", p.key))?;
+            self.users += 1;
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, row: Row, lineno: usize) -> Result<()> {
+        if self.rows == 0 {
+            self.dim = row.x.len();
+            self.has_y = row.y.is_some();
+            ensure!(self.dim > 0, "line {lineno}: first row has no features");
+        }
+        ensure!(
+            row.x.len() == self.dim,
+            "line {lineno}: {} features, corpus dimension is {}",
+            row.x.len(),
+            self.dim
+        );
+        ensure!(
+            row.y.is_some() == self.has_y,
+            "line {lineno}: label presence differs from the first row \
+             (all rows must have \"y\", or none)"
+        );
+        let start_new = match &self.pending {
+            Some(p) => p.key != row.user,
+            None => true,
+        };
+        if start_new {
+            self.flush()?;
+            if !self.seen.insert(row.user.clone()) {
+                bail!(
+                    "line {lineno}: user {:?} reappears after other users — \
+                     rows for one user must be contiguous",
+                    row.user
+                );
+            }
+            self.pending = Some(PendingUser { key: row.user, x: Vec::new(), y: Vec::new() });
+        }
+        let p = self.pending.as_mut().unwrap();
+        p.x.extend_from_slice(&row.x);
+        if let Some(y) = row.y {
+            p.y.push(y);
+        }
+        self.rows += 1;
+        Ok(())
+    }
+}
+
+/// Stream `input` through [`ShardWriter`] into a store at `out`.
+/// Returns the same [`StoreStats`] `materialize` would.
+pub fn import_corpus(input: &Path, out: &Path, opts: &ImportOptions) -> Result<StoreStats> {
+    let format = match opts.format {
+        Some(f) => f,
+        None => ImportFormat::detect(input)?,
+    };
+    let file =
+        File::open(input).with_context(|| format!("opening corpus {}", input.display()))?;
+    let reader = BufReader::new(file);
+    let writer = ShardWriter::create_with(
+        out,
+        opts.users_per_shard,
+        opts.compression,
+        super::codec::DEFAULT_BLOCK_SIZE,
+    )?;
+    let mut imp = Importer {
+        writer,
+        pending: None,
+        seen: HashSet::new(),
+        dim: 0,
+        has_y: false,
+        users: 0,
+        rows: 0,
+    };
+    let mut header: Option<CsvHeader> = None;
+    for (i, line) in reader.lines().enumerate() {
+        let lineno = i + 1;
+        let line = line.with_context(|| format!("reading line {lineno}"))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let row = match format {
+            ImportFormat::Jsonl => parse_jsonl_row(trimmed, lineno)?,
+            ImportFormat::Csv => match &header {
+                None => {
+                    header = Some(parse_csv_header(trimmed)?);
+                    continue;
+                }
+                Some(h) => parse_csv_row(trimmed, h, lineno)?,
+            },
+        };
+        imp.push(row, lineno)?;
+    }
+    imp.flush()?;
+    ensure!(imp.users > 0, "corpus {} contains no rows", input.display());
+    imp.writer.finish(&opts.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::{OpenOptions, ShardedStore};
+    use crate::data::FederatedDataset;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pfl_import_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        let _ = std::fs::remove_file(&d);
+        d
+    }
+
+    #[test]
+    fn jsonl_roundtrips_users_and_labels() {
+        let corpus = tmp("jsonl").with_extension("jsonl");
+        std::fs::write(
+            &corpus,
+            concat!(
+                "{\"user\": \"alice\", \"x\": [0.5, -1.0], \"y\": 1.0}\n",
+                "{\"user\": \"alice\", \"x\": [2.0, 3.0], \"y\": 0.0}\n",
+                "\n",
+                "{\"user\": \"bob\", \"x\": [9.0, 8.0], \"y\": 1.0}\n",
+                "{\"user\": 3, \"x\": [7.5, 6.5], \"y\": 0.0}\n",
+            ),
+        )
+        .unwrap();
+        let out = tmp("jsonl_store");
+        let stats = import_corpus(
+            &corpus,
+            &out,
+            &ImportOptions {
+                users_per_shard: 2,
+                compression: Compression::ShuffleLz,
+                name: "corpus-test".into(),
+                format: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.num_users, 3);
+        assert_eq!(stats.num_shards, 2);
+        for mmap in [true, false] {
+            let store = ShardedStore::open_with(&out, OpenOptions { mmap }).unwrap();
+            assert_eq!(store.name(), "corpus-test");
+            assert_eq!(store.num_users(), 3);
+            // alice: 2 examples; bob and "3": 1 each
+            assert_eq!(store.user_len(0), 2);
+            match store.user_data(0) {
+                UserData::Tabular { x, y, dim } => {
+                    assert_eq!(dim, 2);
+                    assert_eq!(x, vec![0.5, -1.0, 2.0, 3.0]);
+                    assert_eq!(y, vec![1.0, 0.0]);
+                }
+                other => panic!("expected Tabular, got {other:?}"),
+            }
+            match store.user_data(2) {
+                UserData::Tabular { x, y, .. } => {
+                    assert_eq!(x, vec![7.5, 6.5]);
+                    assert_eq!(y, vec![0.0]);
+                }
+                other => panic!("expected Tabular, got {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_file(&corpus);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    #[test]
+    fn csv_with_and_without_labels() {
+        let corpus = tmp("csv").with_extension("csv");
+        std::fs::write(&corpus, "user,y,f0,f1\nu1,1.0,0.5,0.25\nu1,0.0,1.5,2.5\nu2,1.0,3.0,4.0\n")
+            .unwrap();
+        let out = tmp("csv_store");
+        let stats = import_corpus(&corpus, &out, &ImportOptions::default()).unwrap();
+        assert_eq!(stats.num_users, 2);
+        let store = ShardedStore::open(&out).unwrap();
+        assert!(matches!(store.user_data(0), UserData::Tabular { .. }));
+
+        // unlabeled variant becomes Points
+        std::fs::write(&corpus, "user,f0,f1\nu1,0.5,0.25\nu2,3.0,4.0\n").unwrap();
+        let out2 = tmp("csv_store2");
+        import_corpus(&corpus, &out2, &ImportOptions::default()).unwrap();
+        let store2 = ShardedStore::open(&out2).unwrap();
+        match store2.user_data(1) {
+            UserData::Points { x, dim } => {
+                assert_eq!(dim, 2);
+                assert_eq!(x, vec![3.0, 4.0]);
+            }
+            other => panic!("expected Points, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&corpus);
+        let _ = std::fs::remove_dir_all(&out);
+        let _ = std::fs::remove_dir_all(&out2);
+    }
+
+    #[test]
+    fn malformed_corpora_error_cleanly() {
+        let out = tmp("bad_store");
+        let corpus = tmp("bad").with_extension("jsonl");
+
+        // non-contiguous duplicate user
+        std::fs::write(
+            &corpus,
+            "{\"user\":\"a\",\"x\":[1.0]}\n{\"user\":\"b\",\"x\":[2.0]}\n{\"user\":\"a\",\"x\":[3.0]}\n",
+        )
+        .unwrap();
+        let err = import_corpus(&corpus, &out, &ImportOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("contiguous"), "{err:#}");
+
+        // feature dimension mismatch
+        std::fs::write(&corpus, "{\"user\":\"a\",\"x\":[1.0]}\n{\"user\":\"a\",\"x\":[1.0,2.0]}\n")
+            .unwrap();
+        assert!(import_corpus(&corpus, &out, &ImportOptions::default()).is_err());
+
+        // label on some rows only
+        std::fs::write(
+            &corpus,
+            "{\"user\":\"a\",\"x\":[1.0],\"y\":1.0}\n{\"user\":\"a\",\"x\":[2.0]}\n",
+        )
+        .unwrap();
+        assert!(import_corpus(&corpus, &out, &ImportOptions::default()).is_err());
+
+        // empty corpus
+        std::fs::write(&corpus, "\n\n").unwrap();
+        assert!(import_corpus(&corpus, &out, &ImportOptions::default()).is_err());
+
+        // unknown extension without explicit format
+        let odd = tmp("odd").with_extension("parquet");
+        std::fs::write(&odd, "x").unwrap();
+        assert!(import_corpus(&odd, &out, &ImportOptions::default()).is_err());
+
+        let _ = std::fs::remove_file(&corpus);
+        let _ = std::fs::remove_file(&odd);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+}

@@ -16,6 +16,8 @@
 //! [`UserDataSource`] worker interface, with an LRU cache and a
 //! dispatcher-fed prefetch thread (DESIGN.md §6).
 
+pub mod codec;
+pub mod import;
 pub mod partition;
 pub mod sampling;
 pub mod store;
@@ -27,9 +29,11 @@ pub mod tabular;
 
 pub use partition::{dirichlet_label_partition, iid_fixed_size_partition, poisson_size_partition};
 pub use sampling::{CohortSampler, CrossSiloSampler, MinibatchSampler, PoissonCohortSampler};
+pub use codec::Compression;
+pub use import::{import_corpus, ImportFormat, ImportOptions};
 pub use store::{
-    materialize, Fetched, GeneratorSource, ShardWriter, ShardedStore, SourceConfig, StoreSource,
-    UserDataSource,
+    materialize, materialize_with, stat, Fetched, GeneratorSource, OpenOptions, ReadTrace,
+    ShardWriter, ShardedStore, SourceConfig, StoreError, StoreSource, StoreStat, UserDataSource,
 };
 pub use synth_cifar::SynthCifar;
 pub use synth_flair::SynthFlair;

@@ -1,6 +1,7 @@
 //! Out-of-core sharded dataset store: materialized user data on disk,
 //! read back through a bounded LRU cache with dispatcher-driven
-//! prefetch. See DESIGN.md §6 for the architecture.
+//! prefetch. See DESIGN.md §6 for the architecture and the format V2
+//! layout diagram.
 //!
 //! The synthetic generators in this module's siblings cost no memory
 //! because user data is a pure function of (seed, uid) — but that also
@@ -11,10 +12,10 @@
 //! in RAM:
 //!
 //! * [`ShardWriter`] / [`materialize`] write any [`FederatedDataset`]
-//!   to a directory of binary shards (the `pfl materialize`
-//!   subcommand): each shard has a fixed header, and `index.bin` holds
-//!   the per-user (shard, offset, length, examples) index, so reading
-//!   one user costs a single positioned read.
+//!   to a directory of binary shards (the `pfl materialize` and
+//!   `pfl import` subcommands): each shard has a fixed header, and
+//!   `index.bin` holds the per-user (shard, offset, length, examples)
+//!   index, so reading one user costs a single positioned read.
 //! * [`ShardedStore`] opens a store directory and implements
 //!   [`FederatedDataset`] over it — bit-identical to the generator it
 //!   was materialized from (property-tested in
@@ -24,43 +25,128 @@
 //!   the workers consume: a bounded LRU user cache (a hit allocates
 //!   nothing — asserted by `benches/data_store.rs`) plus a background
 //!   prefetch thread that consumes the *dispatcher's* upcoming-uid
-//!   order ([`UserDataSource::hint_round`]: the static LPT schedule,
-//!   the work-stealing shared-queue order, and the async streaming
-//!   order all feed it) and stays at most `prefetch_depth` users ahead
-//!   of worker consumption, so disk I/O overlaps local training
-//!   exactly as pfl-research keeps loading off the critical path.
+//!   order ([`UserDataSource::hint_round`]) and stays at most
+//!   `prefetch_depth` users ahead of worker consumption, so disk I/O —
+//!   and, for compressed stores, block decompression — overlaps local
+//!   training exactly as pfl-research keeps loading off the critical
+//!   path.
 //!
-//! Observability: every fetch reports hit/miss and the nanoseconds the
-//! worker spent blocked on a miss; workers fold these into
-//! [`crate::simsys::Counters`] (`cache_hits`, `cache_misses`,
-//! `prefetch_stall_nanos`) and the backend emits the per-round
-//! `sys/cache-hit-frac` metric.
+//! **Format V2 (this version) vs V1:** V2 shards can be mapped with
+//! `mmap` ([`crate::util::mman`]) so the OS page cache is the L2 cache
+//! behind the user LRU and a warm read decodes straight out of the
+//! mapping — zero heap allocation and zero copies beyond the
+//! [`UserData`] vectors themselves. V2 also adds optional per-block
+//! compression ([`crate::data::codec`]: byte-shuffle + LZ on fixed
+//! blocks) recorded in the index header, with a decoded-block LRU
+//! alongside the user cache. V1 stores (raw, version 1) still open and
+//! read bit-identically; the `pread` path remains as a portable
+//! fallback selected at open time ([`OpenOptions`]).
+//!
+//! Observability: every fetch reports hit/miss, the nanoseconds the
+//! worker spent blocked on a miss (split mmap-vs-pread), bytes read
+//! from disk, and worker-side decode time; workers fold these into
+//! [`crate::simsys::Counters`] and the backend emits per-round
+//! `sys/cache-hit-frac`, `sys/store-bytes-read`, `sys/decode-nanos`
+//! and `sys/page-fault-stalls` metrics.
 
 use std::collections::{HashMap, VecDeque};
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::codec::{self, Compression};
 use super::{FederatedDataset, UserData};
+use crate::util::mman::{Advice, Mmap};
 
-/// Store format version; any layout change bumps it and readers reject
-/// mismatches instead of misparsing.
-const VERSION: u32 = 1;
+/// Store format version written by [`ShardWriter`]; readers accept
+/// this and [`V1`] (raw stores from the previous release).
+const VERSION: u32 = 2;
+/// First format version: raw blobs, absolute file offsets, no
+/// compression fields in the index. Still readable.
+const V1: u32 = 1;
 const INDEX_MAGIC: &[u8; 8] = b"PFLSIDX1";
 const SHARD_MAGIC: &[u8; 8] = b"PFLSHRD1";
 const EVAL_MAGIC: &[u8; 8] = b"PFLSEVL1";
-/// Bytes of fixed shard header preceding the first user blob.
+/// Bytes of fixed shard header preceding the first user blob (or first
+/// compressed block).
 const SHARD_HEADER_LEN: u64 = 8 + 4 + 4;
+/// Decoded-block LRU budget in bytes (counted in raw block bytes).
+const BLOCK_CACHE_BYTES: u64 = 32 * 1024 * 1024;
 
 fn shard_file_name(shard: u32) -> String {
     format!("shard_{shard:05}.bin")
 }
+
+// ----------------------------------------------------------------------
+// Typed store errors
+// ----------------------------------------------------------------------
+
+/// Typed corruption/robustness errors surfaced (through `anyhow`, so
+/// callers can `downcast_ref::<StoreError>()`) by [`ShardedStore::open`]
+/// and the fetch paths instead of panicking. Regression-tested in this
+/// module's tests: truncated shards, wrong magics, index/shard length
+/// mismatches and out-of-range offsets all land here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// A file does not start with the expected magic.
+    BadMagic { path: PathBuf, expected: &'static str },
+    /// Format version this reader does not understand.
+    UnsupportedVersion { path: PathBuf, version: u32 },
+    /// A shard file is shorter than the extent the index declares.
+    Truncated { path: PathBuf, need: u64, have: u64 },
+    /// Shard file header names a different shard than its file name.
+    ShardMismatch { path: PathBuf, expected: u32, found: u32 },
+    /// Requested uid is not in the store.
+    UidOutOfRange { uid: usize, num_users: usize },
+    /// An index entry points outside its shard's addressable range.
+    OffsetOutOfRange { uid: usize, shard: u32, end: u64, limit: u64 },
+    /// Structural damage not covered by a more specific variant.
+    Corrupt { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::BadMagic { path, expected } => {
+                write!(f, "{}: bad magic (expected {expected})", path.display())
+            }
+            StoreError::UnsupportedVersion { path, version } => write!(
+                f,
+                "{}: store version {version}, reader supports {V1} and {VERSION}",
+                path.display()
+            ),
+            StoreError::Truncated { path, need, have } => write!(
+                f,
+                "{}: truncated — index needs {need} bytes, file has {have}",
+                path.display()
+            ),
+            StoreError::ShardMismatch { path, expected, found } => write!(
+                f,
+                "{}: header names shard {found}, file name says {expected}",
+                path.display()
+            ),
+            StoreError::UidOutOfRange { uid, num_users } => {
+                write!(f, "uid {uid} out of range ({num_users} users)")
+            }
+            StoreError::OffsetOutOfRange { uid, shard, end, limit } => write!(
+                f,
+                "uid {uid}: entry ends at {end}, shard {shard} addressable range is {limit}"
+            ),
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "{}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 // ----------------------------------------------------------------------
 // Blob encoding: one self-describing record per user (or eval shard)
@@ -106,6 +192,11 @@ impl<'a> Cur<'a> {
     fn u32(&mut self) -> Result<u32> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
@@ -207,7 +298,10 @@ fn decode_user_data(b: &[u8]) -> Result<UserData> {
 // Writer
 // ----------------------------------------------------------------------
 
-/// One user's location in the store.
+/// One user's location in the store. `offset` is the absolute file
+/// offset of the blob for raw stores (V1-compatible), and the offset
+/// into the shard's *uncompressed* stream (0-based, header excluded)
+/// for compressed stores.
 #[derive(Debug, Clone, Copy)]
 struct IndexEntry {
     shard: u32,
@@ -216,55 +310,142 @@ struct IndexEntry {
     examples: u32,
 }
 
+/// One compressed block's location: where its framed bytes live in the
+/// shard file, and how many raw bytes it decodes to.
+#[derive(Debug, Clone, Copy)]
+struct BlockEntry {
+    comp_off: u64,
+    comp_len: u32,
+    raw_len: u32,
+}
+
 /// Materialization summary returned by [`ShardWriter::finish`].
 #[derive(Debug, Clone, Copy)]
 pub struct StoreStats {
     pub num_users: usize,
     pub num_shards: usize,
-    /// Total user-payload bytes across all shard files (headers excluded).
+    /// Total raw (uncompressed) user-payload bytes (headers excluded).
     pub data_bytes: u64,
+    /// User-payload bytes actually on disk: equals `data_bytes` for raw
+    /// stores, the framed compressed size for compressed ones.
+    pub disk_bytes: u64,
+    /// Compression scheme the store was written with.
+    pub compression: Compression,
     /// Central-eval shards materialized alongside the users.
     pub eval_shards: usize,
+}
+
+impl StoreStats {
+    /// Raw-to-disk payload ratio (≥ 1.0 when compression helps).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.disk_bytes == 0 {
+            1.0
+        } else {
+            self.data_bytes as f64 / self.disk_bytes as f64
+        }
+    }
 }
 
 struct CurShard {
     idx: u32,
     w: BufWriter<File>,
+    /// Raw-stream cursor: absolute file offset for raw stores, bytes of
+    /// uncompressed payload so far for compressed ones.
     off: u64,
+    /// Compressed stores: raw bytes awaiting a full block.
+    pending: Vec<u8>,
+    /// Compressed stores: absolute file offset of the next block.
+    comp_off: u64,
+    blocks: Vec<BlockEntry>,
 }
 
 /// Sequential store writer: `append_user` in uid order (uid 0, 1, ...),
 /// optionally `write_eval`, then `finish` to seal the index. Users land
 /// in shard `uid / users_per_shard`, so a shard is one contiguous write
 /// and one uid range. Any existing store in `dir` is overwritten.
+///
+/// With [`Compression::ShuffleLz`] the raw blob stream is cut into
+/// fixed-size blocks, each framed by [`codec::compress_block`]; the
+/// per-shard block tables land in `index.bin` so a reader can address
+/// any byte range without scanning.
 pub struct ShardWriter {
     dir: PathBuf,
     users_per_shard: usize,
+    compression: Compression,
+    block_size: u32,
     cur: Option<CurShard>,
     index: Vec<IndexEntry>,
+    shard_blocks: Vec<Vec<BlockEntry>>,
     data_bytes: u64,
+    disk_bytes: u64,
     eval_shards: usize,
     buf: Vec<u8>,
 }
 
 impl ShardWriter {
+    /// A raw (uncompressed) writer — same on-disk payload layout as V1.
     pub fn create(dir: &Path, users_per_shard: usize) -> Result<Self> {
+        Self::create_with(dir, users_per_shard, Compression::None, codec::DEFAULT_BLOCK_SIZE)
+    }
+
+    pub fn create_with(
+        dir: &Path,
+        users_per_shard: usize,
+        compression: Compression,
+        block_size: u32,
+    ) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating store dir {}", dir.display()))?;
         Ok(ShardWriter {
             dir: dir.to_path_buf(),
             users_per_shard: users_per_shard.max(1),
+            compression,
+            block_size: block_size.max(1),
             cur: None,
             index: Vec::new(),
+            shard_blocks: Vec::new(),
             data_bytes: 0,
+            disk_bytes: 0,
             eval_shards: 0,
             buf: Vec::new(),
         })
     }
 
+    /// Compress-and-write every full block sitting in `pending`; with
+    /// `all`, also the final partial block.
+    fn flush_blocks(c: &mut CurShard, block_size: u32, all: bool, disk_bytes: &mut u64) -> Result<()> {
+        let bs = block_size as usize;
+        let mut start = 0usize;
+        while c.pending.len() - start >= bs || (all && c.pending.len() > start) {
+            let end = (start + bs).min(c.pending.len());
+            let framed = codec::compress_block(&c.pending[start..end]);
+            c.w.write_all(&framed).context("writing compressed block")?;
+            c.blocks.push(BlockEntry {
+                comp_off: c.comp_off,
+                comp_len: framed.len() as u32,
+                raw_len: (end - start) as u32,
+            });
+            c.comp_off += framed.len() as u64;
+            *disk_bytes += framed.len() as u64;
+            start = end;
+        }
+        c.pending.drain(..start);
+        Ok(())
+    }
+
     fn close_shard(&mut self) -> Result<()> {
         if let Some(mut c) = self.cur.take() {
+            if self.compression != Compression::None {
+                Self::flush_blocks(&mut c, self.block_size, true, &mut self.disk_bytes)?;
+            }
             c.w.flush().context("flushing shard")?;
+            if self.compression != Compression::None {
+                let idx = c.idx as usize;
+                if self.shard_blocks.len() <= idx {
+                    self.shard_blocks.resize_with(idx + 1, Vec::new);
+                }
+                self.shard_blocks[idx] = c.blocks;
+            }
         }
         Ok(())
     }
@@ -282,7 +463,15 @@ impl ShardWriter {
             w.write_all(SHARD_MAGIC)?;
             w.write_all(&VERSION.to_le_bytes())?;
             w.write_all(&shard.to_le_bytes())?;
-            self.cur = Some(CurShard { idx: shard, w, off: SHARD_HEADER_LEN });
+            let off = if self.compression == Compression::None { SHARD_HEADER_LEN } else { 0 };
+            self.cur = Some(CurShard {
+                idx: shard,
+                w,
+                off,
+                pending: Vec::new(),
+                comp_off: SHARD_HEADER_LEN,
+                blocks: Vec::new(),
+            });
         }
         self.buf.clear();
         encode_user_data(data, &mut self.buf);
@@ -292,21 +481,31 @@ impl ShardWriter {
             bail!("user {uid} encodes to {} bytes (> u32::MAX)", self.buf.len());
         }
         let c = self.cur.as_mut().unwrap();
-        c.w.write_all(&self.buf).with_context(|| format!("writing user {uid}"))?;
         self.index.push(IndexEntry {
             shard,
             offset: c.off,
             len: self.buf.len() as u32,
             examples: data.len() as u32,
         });
+        match self.compression {
+            Compression::None => {
+                c.w.write_all(&self.buf).with_context(|| format!("writing user {uid}"))?;
+                self.disk_bytes += self.buf.len() as u64;
+            }
+            Compression::ShuffleLz => {
+                c.pending.extend_from_slice(&self.buf);
+                Self::flush_blocks(c, self.block_size, false, &mut self.disk_bytes)?;
+            }
+        }
         c.off += self.buf.len() as u64;
         self.data_bytes += self.buf.len() as u64;
         Ok(())
     }
 
-    /// Materialize the central-eval shards (`eval.bin`). The shard size
-    /// is fixed at materialization time; [`ShardedStore::central_eval`]
-    /// returns these shards as stored.
+    /// Materialize the central-eval shards (`eval.bin`). Always stored
+    /// raw — eval shards are read once per run, so compressing them
+    /// buys nothing. [`ShardedStore::central_eval`] returns these
+    /// shards as stored.
     pub fn write_eval(&mut self, shards: &[UserData]) -> Result<()> {
         let path = self.dir.join("eval.bin");
         let f = File::create(&path).with_context(|| format!("creating {}", path.display()))?;
@@ -328,10 +527,15 @@ impl ShardWriter {
         Ok(())
     }
 
-    /// Seal the store: flush the open shard and write `index.bin`.
+    /// Seal the store: flush the open shard and write `index.bin`
+    /// (format V2 — V1 plus `compression`, `block_size` and, for
+    /// compressed stores, the per-shard block tables).
     pub fn finish(mut self, name: &str) -> Result<StoreStats> {
         self.close_shard()?;
         let num_shards = self.index.last().map(|e| e.shard as usize + 1).unwrap_or(0);
+        if self.compression != Compression::None && self.shard_blocks.len() < num_shards {
+            self.shard_blocks.resize_with(num_shards, Vec::new);
+        }
         let path = self.dir.join("index.bin");
         let f = File::create(&path).with_context(|| format!("creating {}", path.display()))?;
         let mut w = BufWriter::new(f);
@@ -341,6 +545,8 @@ impl ShardWriter {
         w.write_all(&(self.users_per_shard as u32).to_le_bytes())?;
         w.write_all(&(name.len() as u32).to_le_bytes())?;
         w.write_all(name.as_bytes())?;
+        w.write_all(&[self.compression.to_u8()])?;
+        w.write_all(&self.block_size.to_le_bytes())?;
         w.write_all(&(self.index.len() as u64).to_le_bytes())?;
         for e in &self.index {
             w.write_all(&e.shard.to_le_bytes())?;
@@ -348,25 +554,50 @@ impl ShardWriter {
             w.write_all(&e.len.to_le_bytes())?;
             w.write_all(&e.examples.to_le_bytes())?;
         }
+        if self.compression != Compression::None {
+            for blocks in &self.shard_blocks[..num_shards] {
+                w.write_all(&(blocks.len() as u32).to_le_bytes())?;
+                for b in blocks {
+                    w.write_all(&b.comp_off.to_le_bytes())?;
+                    w.write_all(&b.comp_len.to_le_bytes())?;
+                    w.write_all(&b.raw_len.to_le_bytes())?;
+                }
+            }
+        }
         w.flush().context("flushing index.bin")?;
         Ok(StoreStats {
             num_users: self.index.len(),
             num_shards,
             data_bytes: self.data_bytes,
+            disk_bytes: self.disk_bytes,
+            compression: self.compression,
             eval_shards: self.eval_shards,
         })
     }
 }
 
-/// Materialize a [`FederatedDataset`] to `dir`: every user in uid order
-/// plus (when `eval_shard_size > 0`) the central-eval shards.
+/// Materialize a [`FederatedDataset`] to `dir` uncompressed: every user
+/// in uid order plus (when `eval_shard_size > 0`) the central-eval
+/// shards.
 pub fn materialize(
     dataset: &dyn FederatedDataset,
     dir: &Path,
     users_per_shard: usize,
     eval_shard_size: usize,
 ) -> Result<StoreStats> {
-    let mut w = ShardWriter::create(dir, users_per_shard)?;
+    materialize_with(dataset, dir, users_per_shard, eval_shard_size, Compression::None)
+}
+
+/// [`materialize`] with an explicit compression scheme (CLI
+/// `pfl materialize --compression shuffle-lz`).
+pub fn materialize_with(
+    dataset: &dyn FederatedDataset,
+    dir: &Path,
+    users_per_shard: usize,
+    eval_shard_size: usize,
+    compression: Compression,
+) -> Result<StoreStats> {
+    let mut w = ShardWriter::create_with(dir, users_per_shard, compression, codec::DEFAULT_BLOCK_SIZE)?;
     for uid in 0..dataset.num_users() {
         w.append_user(&dataset.user_data(uid))
             .with_context(|| format!("materializing user {uid}"))?;
@@ -381,19 +612,133 @@ pub fn materialize(
 // Reader
 // ----------------------------------------------------------------------
 
-/// An opened store directory. Thread-safe: shard file handles are opened
-/// lazily, kept for the store's lifetime, and read with positioned reads
-/// (no shared seek cursor), so workers and the prefetch thread read
-/// concurrently.
+/// How to open a store: mmap (default — zero-copy warm reads through
+/// the page cache) or portable positioned reads. When mmap is requested
+/// but unavailable (platform shim, or `mmap(2)` itself failing) the
+/// store silently falls back to `pread` per shard.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenOptions {
+    pub mmap: bool,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions { mmap: true }
+    }
+}
+
+/// Per-read accounting folded into [`Fetched`] and from there into
+/// [`crate::simsys::Counters`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReadTrace {
+    /// Bytes pulled from the shard file (compressed bytes for
+    /// compressed stores; 0 when every needed block was cached).
+    pub bytes_read: u64,
+    /// Nanoseconds spent decompressing blocks on *this* thread.
+    pub decode_nanos: u64,
+    /// Whether the read went through a memory mapping (page-fault
+    /// stalls) rather than explicit `pread` calls.
+    pub via_mmap: bool,
+}
+
+/// A shard's backing: mapped or plain fd.
+enum ShardBacking {
+    Mapped(Mmap),
+    Pread(File),
+}
+
+struct ShardFile {
+    backing: ShardBacking,
+}
+
+/// Per-shard metadata derived from the index at open time.
+#[derive(Default)]
+struct ShardMeta {
+    /// Minimum file length implied by the index; validated against
+    /// `fs::metadata` before the file is mapped or read, so a truncated
+    /// shard surfaces [`StoreError::Truncated`] instead of a SIGBUS
+    /// (mmap) or short read (pread).
+    required_len: u64,
+    /// Compressed stores: the shard's block table.
+    blocks: Vec<BlockEntry>,
+    /// Compressed stores: total raw bytes across the blocks.
+    raw_len: u64,
+}
+
+struct BlockCacheEntry {
+    data: Arc<Vec<u8>>,
+    last_used: u64,
+}
+
+/// LRU over decoded blocks, bounded by raw bytes (not entry count, so
+/// one cache budget works for any block size). Shared by workers and
+/// the prefetch thread; in the steady prefetching state only the
+/// prefetch thread populates it.
+struct BlockCache {
+    cap_bytes: u64,
+    bytes: u64,
+    tick: u64,
+    map: HashMap<(u32, u32), BlockCacheEntry>,
+}
+
+impl BlockCache {
+    fn new(cap_bytes: u64) -> Self {
+        BlockCache { cap_bytes: cap_bytes.max(1), bytes: 0, tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, shard: u32, block: u32) -> Option<Arc<Vec<u8>>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(&(shard, block))?;
+        e.last_used = tick;
+        Some(e.data.clone())
+    }
+
+    fn insert(&mut self, shard: u32, block: u32, data: Arc<Vec<u8>>) {
+        if self.map.contains_key(&(shard, block)) {
+            return;
+        }
+        while self.bytes + data.len() as u64 > self.cap_bytes && !self.map.is_empty() {
+            let victim = self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(v) = victim {
+                if let Some(e) = self.map.remove(&v) {
+                    self.bytes -= e.data.len() as u64;
+                }
+            }
+        }
+        self.tick += 1;
+        self.bytes += data.len() as u64;
+        self.map.insert((shard, block), BlockCacheEntry { data, last_used: self.tick });
+    }
+}
+
+/// An opened store directory. Thread-safe: shard backings are opened
+/// (and mapped) lazily, kept for the store's lifetime, and read
+/// position-independently — no shared seek cursor — so workers and the
+/// prefetch thread read concurrently.
 pub struct ShardedStore {
     dir: PathBuf,
     name: String,
+    version: u32,
+    compression: Compression,
+    block_size: u32,
     index: Vec<IndexEntry>,
-    files: Mutex<HashMap<u32, Arc<File>>>,
+    shards: Vec<ShardMeta>,
+    use_mmap: bool,
+    /// Flips false the first time an mmap attempt fails (fallback to
+    /// pread); read for the stall-split accounting.
+    mmap_ok: AtomicBool,
+    files: Mutex<HashMap<u32, Arc<ShardFile>>>,
+    block_cache: Mutex<BlockCache>,
 }
 
 impl ShardedStore {
+    /// Open with the default [`OpenOptions`] (mmap when available).
     pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_with(dir, OpenOptions::default())
+    }
+
+    pub fn open_with(dir: &Path, opts: OpenOptions) -> Result<Self> {
         let path = dir.join("index.bin");
         let mut raw = Vec::new();
         File::open(&path)
@@ -402,72 +747,340 @@ impl ShardedStore {
             })?
             .read_to_end(&mut raw)
             .with_context(|| format!("reading {}", path.display()))?;
+        let cpath = path.clone();
+        let corrupt = move |detail: String| StoreError::Corrupt { path: cpath.clone(), detail };
         let mut c = Cur { b: &raw, p: 0 };
-        if c.take(8)? != INDEX_MAGIC {
-            bail!("{}: bad index magic", path.display());
+        if c.take(8).map_err(|e| corrupt(e.to_string()))? != INDEX_MAGIC {
+            bail!(StoreError::BadMagic { path, expected: "PFLSIDX1" });
         }
-        let version = c.u32()?;
-        if version != VERSION {
-            bail!("{}: store version {version}, reader supports {VERSION}", path.display());
+        let version = c.u32().map_err(|e| corrupt(e.to_string()))?;
+        if version != V1 && version != VERSION {
+            bail!(StoreError::UnsupportedVersion { path, version });
         }
-        let _num_shards = c.u32()?;
-        let _users_per_shard = c.u32()?;
-        let name_len = c.u32()? as usize;
-        let name = String::from_utf8(c.take(name_len)?.to_vec()).context("store name")?;
-        let n = {
-            let s = c.take(8)?;
-            u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]) as usize
+        let num_shards = c.u32().map_err(|e| corrupt(e.to_string()))? as usize;
+        let _users_per_shard = c.u32().map_err(|e| corrupt(e.to_string()))?;
+        let name_len = c.u32().map_err(|e| corrupt(e.to_string()))? as usize;
+        let name = String::from_utf8(c.take(name_len).map_err(|e| corrupt(e.to_string()))?.to_vec())
+            .map_err(|_| corrupt("store name is not utf-8".into()))?;
+        let (compression, block_size) = if version >= 2 {
+            let comp = Compression::from_u8(c.u8().map_err(|e| corrupt(e.to_string()))?)
+                .map_err(|e| corrupt(e.to_string()))?;
+            let bs = c.u32().map_err(|e| corrupt(e.to_string()))?;
+            if comp != Compression::None && bs == 0 {
+                bail!(corrupt("compressed store with block_size 0".into()));
+            }
+            (comp, bs.max(1))
+        } else {
+            (Compression::None, codec::DEFAULT_BLOCK_SIZE)
         };
+        let n = c.u64().map_err(|e| corrupt(e.to_string()))? as usize;
         let mut index = Vec::with_capacity(n);
         for _ in 0..n {
-            let shard = c.u32()?;
-            let offset = {
-                let s = c.take(8)?;
-                u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
-            };
-            let len = c.u32()?;
-            let examples = c.u32()?;
+            let shard = c.u32().map_err(|e| corrupt(e.to_string()))?;
+            let offset = c.u64().map_err(|e| corrupt(e.to_string()))?;
+            let len = c.u32().map_err(|e| corrupt(e.to_string()))?;
+            let examples = c.u32().map_err(|e| corrupt(e.to_string()))?;
+            if (shard as usize) >= num_shards {
+                bail!(corrupt(format!(
+                    "index entry names shard {shard}, header declares {num_shards} shards"
+                )));
+            }
             index.push(IndexEntry { shard, offset, len, examples });
+        }
+        let mut shards: Vec<ShardMeta> = Vec::with_capacity(num_shards);
+        shards.resize_with(num_shards, ShardMeta::default);
+        for m in &mut shards {
+            m.required_len = SHARD_HEADER_LEN;
+        }
+        if compression == Compression::None {
+            // raw store: entry offsets are absolute file offsets, so
+            // the index alone implies each shard's minimum length
+            for (uid, e) in index.iter().enumerate() {
+                if e.offset < SHARD_HEADER_LEN {
+                    bail!(StoreError::OffsetOutOfRange {
+                        uid,
+                        shard: e.shard,
+                        end: e.offset,
+                        limit: SHARD_HEADER_LEN,
+                    });
+                }
+                let m = &mut shards[e.shard as usize];
+                m.required_len = m.required_len.max(e.offset + e.len as u64);
+            }
+        } else {
+            // compressed store: parse the per-shard block tables and
+            // validate every entry against the shard's raw extent
+            for m in shards.iter_mut() {
+                let nb = c.u32().map_err(|e| corrupt(e.to_string()))? as usize;
+                m.blocks.reserve(nb);
+                for _ in 0..nb {
+                    let comp_off = c.u64().map_err(|e| corrupt(e.to_string()))?;
+                    let comp_len = c.u32().map_err(|e| corrupt(e.to_string()))?;
+                    let raw_len = c.u32().map_err(|e| corrupt(e.to_string()))?;
+                    if comp_off < SHARD_HEADER_LEN {
+                        bail!(corrupt(format!("block offset {comp_off} inside shard header")));
+                    }
+                    if raw_len == 0 || raw_len > block_size {
+                        bail!(corrupt(format!(
+                            "block raw length {raw_len} outside (0, {block_size}]"
+                        )));
+                    }
+                    m.required_len = m.required_len.max(comp_off + comp_len as u64);
+                    m.raw_len += raw_len as u64;
+                    m.blocks.push(BlockEntry { comp_off, comp_len, raw_len });
+                }
+                // all blocks except the last must be exactly block_size
+                // raw bytes, or raw-offset → block-index math breaks
+                for b in m.blocks.iter().take(m.blocks.len().saturating_sub(1)) {
+                    if b.raw_len != block_size {
+                        bail!(corrupt(format!(
+                            "interior block decodes to {} raw bytes, block size is {block_size}",
+                            b.raw_len
+                        )));
+                    }
+                }
+            }
+            for (uid, e) in index.iter().enumerate() {
+                let limit = shards[e.shard as usize].raw_len;
+                let end = e.offset + e.len as u64;
+                if end > limit {
+                    bail!(StoreError::OffsetOutOfRange { uid, shard: e.shard, end, limit });
+                }
+            }
+        }
+        if c.p != raw.len() {
+            bail!(corrupt(format!("{} trailing bytes after index", raw.len() - c.p)));
         }
         Ok(ShardedStore {
             dir: dir.to_path_buf(),
             name,
+            version,
+            compression,
+            block_size,
             index,
+            shards,
+            use_mmap: opts.mmap,
+            mmap_ok: AtomicBool::new(opts.mmap),
             files: Mutex::new(HashMap::new()),
+            block_cache: Mutex::new(BlockCache::new(BLOCK_CACHE_BYTES)),
         })
     }
 
-    fn file(&self, shard: u32) -> Result<Arc<File>> {
+    /// Format version this store was written with (1 or 2).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn compression(&self) -> Compression {
+        self.compression
+    }
+
+    /// Whether reads are currently going through mmap (false when
+    /// opened with `mmap: false`, on unsupported platforms, or after an
+    /// mmap failure fell back to pread).
+    pub fn uses_mmap(&self) -> bool {
+        self.mmap_ok.load(Ordering::Relaxed)
+    }
+
+    fn file(&self, shard: u32) -> Result<Arc<ShardFile>> {
         let mut files = self.files.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(f) = files.get(&shard) {
             return Ok(f.clone());
         }
         let path = self.dir.join(shard_file_name(shard));
         let f = File::open(&path).with_context(|| format!("opening {}", path.display()))?;
+        let have = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        let need = self
+            .shards
+            .get(shard as usize)
+            .map(|m| m.required_len)
+            .unwrap_or(SHARD_HEADER_LEN);
+        if have < need {
+            bail!(StoreError::Truncated { path, need, have });
+        }
         let mut header = [0u8; SHARD_HEADER_LEN as usize];
         f.read_exact_at(&mut header, 0)
             .with_context(|| format!("reading {} header", path.display()))?;
         if &header[..8] != SHARD_MAGIC {
-            bail!("{}: bad shard magic", path.display());
+            bail!(StoreError::BadMagic { path, expected: "PFLSHRD1" });
         }
-        let f = Arc::new(f);
-        files.insert(shard, f.clone());
-        Ok(f)
+        let version = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+        if version != V1 && version != VERSION {
+            bail!(StoreError::UnsupportedVersion { path, version });
+        }
+        let found = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+        if found != shard {
+            bail!(StoreError::ShardMismatch { path, expected: shard, found });
+        }
+        let backing = if self.use_mmap {
+            match Mmap::map_readonly(&f, need as usize) {
+                Ok(m) => {
+                    m.advise(Advice::WillNeed);
+                    ShardBacking::Mapped(m)
+                }
+                Err(_) => {
+                    self.mmap_ok.store(false, Ordering::Relaxed);
+                    ShardBacking::Pread(f)
+                }
+            }
+        } else {
+            ShardBacking::Pread(f)
+        };
+        let sf = Arc::new(ShardFile { backing });
+        files.insert(shard, sf.clone());
+        Ok(sf)
+    }
+
+    /// Fetch one decoded block through the block LRU, decompressing on
+    /// a miss (on whichever thread is calling — the prefetch thread in
+    /// the steady state, so decode stays off the worker critical path).
+    fn decoded_block(&self, shard: u32, block: u32, trace: &mut ReadTrace) -> Result<Arc<Vec<u8>>> {
+        if let Some(b) = self
+            .block_cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(shard, block)
+        {
+            return Ok(b);
+        }
+        let meta = &self.shards[shard as usize];
+        let be = *meta.blocks.get(block as usize).ok_or_else(|| StoreError::Corrupt {
+            path: self.dir.join(shard_file_name(shard)),
+            detail: format!("block {block} out of table ({} blocks)", meta.blocks.len()),
+        })?;
+        let sf = self.file(shard)?;
+        trace.bytes_read += be.comp_len as u64;
+        let raw = match &sf.backing {
+            ShardBacking::Mapped(m) => {
+                trace.via_mmap = true;
+                let lo = be.comp_off as usize;
+                let framed = m
+                    .as_slice()
+                    .get(lo..lo + be.comp_len as usize)
+                    .ok_or_else(|| StoreError::Truncated {
+                        path: self.dir.join(shard_file_name(shard)),
+                        need: be.comp_off + be.comp_len as u64,
+                        have: m.len() as u64,
+                    })?;
+                let t0 = Instant::now();
+                let raw = codec::decompress_block(framed, be.raw_len as usize)
+                    .map_err(|e| StoreError::Corrupt {
+                        path: self.dir.join(shard_file_name(shard)),
+                        detail: format!("block {block}: {e}"),
+                    })?;
+                trace.decode_nanos += t0.elapsed().as_nanos() as u64;
+                raw
+            }
+            ShardBacking::Pread(f) => {
+                trace.via_mmap = false;
+                let mut buf = vec![0u8; be.comp_len as usize];
+                f.read_exact_at(&mut buf, be.comp_off).with_context(|| {
+                    format!("reading shard {shard} block {block} at {}", be.comp_off)
+                })?;
+                let t0 = Instant::now();
+                let raw = codec::decompress_block(&buf, be.raw_len as usize)
+                    .map_err(|e| StoreError::Corrupt {
+                        path: self.dir.join(shard_file_name(shard)),
+                        detail: format!("block {block}: {e}"),
+                    })?;
+                trace.decode_nanos += t0.elapsed().as_nanos() as u64;
+                raw
+            }
+        };
+        let arc = Arc::new(raw);
+        self.block_cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(shard, block, arc.clone());
+        Ok(arc)
+    }
+
+    fn read_compressed(&self, uid: usize, e: IndexEntry, trace: &mut ReadTrace) -> Result<UserData> {
+        let bs = self.block_size as u64;
+        let start = e.offset;
+        let end = e.offset + e.len as u64;
+        let b0 = (start / bs) as u32;
+        let b1 = ((end.max(1) - 1) / bs) as u32;
+        if b0 == b1 {
+            // fast path: the blob lives in one block — decode straight
+            // from the cached block, no assembly copy
+            let block = self.decoded_block(e.shard, b0, trace)?;
+            let lo = (start - b0 as u64 * bs) as usize;
+            let hi = (end - b0 as u64 * bs) as usize;
+            let bytes = block.get(lo..hi).ok_or_else(|| StoreError::OffsetOutOfRange {
+                uid,
+                shard: e.shard,
+                end,
+                limit: b0 as u64 * bs + block.len() as u64,
+            })?;
+            return decode_user_data(bytes).with_context(|| format!("decoding user {uid}"));
+        }
+        let mut buf = Vec::with_capacity(e.len as usize);
+        for b in b0..=b1 {
+            let block = self.decoded_block(e.shard, b, trace)?;
+            let blk_start = b as u64 * bs;
+            let lo = start.max(blk_start) - blk_start;
+            let hi = end.min(blk_start + block.len() as u64) - blk_start;
+            buf.extend_from_slice(&block[lo as usize..hi as usize]);
+        }
+        if buf.len() != e.len as usize {
+            bail!(StoreError::OffsetOutOfRange {
+                uid,
+                shard: e.shard,
+                end,
+                limit: self.shards[e.shard as usize].raw_len,
+            });
+        }
+        decode_user_data(&buf).with_context(|| format!("decoding user {uid}"))
     }
 
     /// Read one user straight from disk (no cache — [`StoreSource`]
-    /// layers the cache on top).
+    /// layers the user cache on top; compressed stores still go through
+    /// the decoded-block LRU).
     pub fn read_user(&self, uid: usize) -> Result<UserData> {
-        let e = self
-            .index
-            .get(uid)
-            .copied()
-            .ok_or_else(|| anyhow!("uid {uid} out of range ({} users)", self.index.len()))?;
-        let f = self.file(e.shard)?;
-        let mut buf = vec![0u8; e.len as usize];
-        f.read_exact_at(&mut buf, e.offset)
-            .with_context(|| format!("reading user {uid} (shard {}, off {})", e.shard, e.offset))?;
-        decode_user_data(&buf).with_context(|| format!("decoding user {uid}"))
+        self.read_user_traced(uid).map(|(d, _)| d)
+    }
+
+    /// [`Self::read_user`] plus the [`ReadTrace`] accounting the
+    /// calling thread incurred.
+    pub fn read_user_traced(&self, uid: usize) -> Result<(UserData, ReadTrace)> {
+        let e = self.index.get(uid).copied().ok_or(StoreError::UidOutOfRange {
+            uid,
+            num_users: self.index.len(),
+        })?;
+        let mut trace =
+            ReadTrace { bytes_read: 0, decode_nanos: 0, via_mmap: self.uses_mmap() };
+        if self.compression != Compression::None {
+            let d = self.read_compressed(uid, e, &mut trace)?;
+            return Ok((d, trace));
+        }
+        let sf = self.file(e.shard)?;
+        trace.bytes_read = e.len as u64;
+        let d = match &sf.backing {
+            ShardBacking::Mapped(m) => {
+                // zero-copy: decode straight out of the mapping (the
+                // only allocations are the UserData vectors)
+                trace.via_mmap = true;
+                let lo = e.offset as usize;
+                let bytes = m.as_slice().get(lo..lo + e.len as usize).ok_or_else(|| {
+                    StoreError::Truncated {
+                        path: self.dir.join(shard_file_name(e.shard)),
+                        need: e.offset + e.len as u64,
+                        have: m.len() as u64,
+                    }
+                })?;
+                decode_user_data(bytes).with_context(|| format!("decoding user {uid}"))?
+            }
+            ShardBacking::Pread(f) => {
+                trace.via_mmap = false;
+                let mut buf = vec![0u8; e.len as usize];
+                f.read_exact_at(&mut buf, e.offset).with_context(|| {
+                    format!("reading user {uid} (shard {}, off {})", e.shard, e.offset)
+                })?;
+                decode_user_data(&buf).with_context(|| format!("decoding user {uid}"))?
+            }
+        };
+        Ok((d, trace))
     }
 
     fn read_eval(&self) -> Result<Vec<UserData>> {
@@ -479,11 +1092,11 @@ impl ShardedStore {
         File::open(&path)?.read_to_end(&mut raw)?;
         let mut c = Cur { b: &raw, p: 0 };
         if c.take(8)? != EVAL_MAGIC {
-            bail!("{}: bad eval magic", path.display());
+            bail!(StoreError::BadMagic { path, expected: "PFLSEVL1" });
         }
         let version = c.u32()?;
-        if version != VERSION {
-            bail!("{}: eval version {version}, reader supports {VERSION}", path.display());
+        if version != V1 && version != VERSION {
+            bail!(StoreError::UnsupportedVersion { path, version });
         }
         let n = c.u32()? as usize;
         let mut shards = Vec::with_capacity(n);
@@ -510,7 +1123,8 @@ impl FederatedDataset for ShardedStore {
 
     /// The trait is infallible (generators cannot fail), so an I/O or
     /// decode error here panics with the store path — a corrupt store
-    /// is unrecoverable mid-simulation anyway.
+    /// is unrecoverable mid-simulation anyway. Fallible callers use
+    /// [`ShardedStore::read_user`].
     fn user_data(&self, uid: usize) -> UserData {
         self.read_user(uid)
             .unwrap_or_else(|e| panic!("store {}: {e:#}", self.dir.display()))
@@ -531,6 +1145,78 @@ impl FederatedDataset for ShardedStore {
 }
 
 // ----------------------------------------------------------------------
+// stat: header/index-only store report
+// ----------------------------------------------------------------------
+
+/// `pfl store stat` report. Produced from `index.bin`, the shard
+/// files' `fs::metadata` lengths, and the 16-byte `eval.bin` header —
+/// never a full data scan, so it is O(population) time and O(1) I/O per
+/// shard even on a ten-million-user store.
+#[derive(Debug, Clone)]
+pub struct StoreStat {
+    pub name: String,
+    pub version: u32,
+    pub compression: Compression,
+    pub block_size: u32,
+    pub num_users: usize,
+    pub num_shards: usize,
+    /// Raw (uncompressed) user-payload bytes, from the index entries.
+    pub raw_bytes: u64,
+    /// Actual shard-file bytes on disk (headers included).
+    pub disk_bytes: u64,
+    pub eval_shards: usize,
+}
+
+impl StoreStat {
+    /// Raw payload over on-disk shard bytes (> 1.0 when compression
+    /// wins; slightly < 1.0 for raw stores because of shard headers).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.disk_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.disk_bytes as f64
+        }
+    }
+}
+
+/// Summarize a store from its headers and index only.
+pub fn stat(dir: &Path) -> Result<StoreStat> {
+    let store = ShardedStore::open_with(dir, OpenOptions { mmap: false })?;
+    let raw_bytes: u64 = store.index.iter().map(|e| e.len as u64).sum();
+    let mut disk_bytes = 0u64;
+    for shard in 0..store.shards.len() {
+        let path = dir.join(shard_file_name(shard as u32));
+        disk_bytes += std::fs::metadata(&path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+    }
+    let eval_path = dir.join("eval.bin");
+    let eval_shards = if eval_path.exists() {
+        let f = File::open(&eval_path)?;
+        let mut header = [0u8; 16];
+        f.read_exact_at(&mut header, 0)
+            .with_context(|| format!("reading {} header", eval_path.display()))?;
+        if &header[..8] != EVAL_MAGIC {
+            bail!(StoreError::BadMagic { path: eval_path, expected: "PFLSEVL1" });
+        }
+        u32::from_le_bytes([header[12], header[13], header[14], header[15]]) as usize
+    } else {
+        0
+    };
+    Ok(StoreStat {
+        name: store.name.clone(),
+        version: store.version,
+        compression: store.compression,
+        block_size: store.block_size,
+        num_users: store.index.len(),
+        num_shards: store.shards.len(),
+        raw_bytes,
+        disk_bytes,
+        eval_shards,
+    })
+}
+
+// ----------------------------------------------------------------------
 // UserDataSource: the worker-facing fetch interface
 // ----------------------------------------------------------------------
 
@@ -543,6 +1229,18 @@ pub struct Fetched {
     pub cache_hit: Option<bool>,
     /// Nanoseconds this call was blocked on I/O (0 on a hit).
     pub stall_nanos: u64,
+    /// Bytes read from disk on behalf of this user — on a miss, the
+    /// worker's own read; on the first hit of a prefetched user, the
+    /// bytes the prefetch thread read (credited once, so the per-round
+    /// sum is the true I/O volume).
+    pub bytes_read: u64,
+    /// Nanoseconds of block decompression on the *worker* thread (0 on
+    /// hits: prefetch-thread decode is intentionally excluded — the
+    /// whole point is keeping it off the critical path).
+    pub decode_nanos: u64,
+    /// Whether miss-path I/O went through mmap (splits the stall into
+    /// page-fault vs pread wait).
+    pub via_mmap: bool,
 }
 
 /// Where workers get user data: the lazy synthetic generators
@@ -582,6 +1280,9 @@ impl UserDataSource for GeneratorSource {
             data: Arc::new(self.dataset.user_data(uid)),
             cache_hit: None,
             stall_nanos: 0,
+            bytes_read: 0,
+            decode_nanos: 0,
+            via_mmap: false,
         }
     }
 }
@@ -606,6 +1307,9 @@ impl Default for SourceConfig {
 struct CacheEntry {
     data: Arc<UserData>,
     last_used: u64,
+    /// Disk bytes read to produce this entry, not yet credited to any
+    /// fetch; the first hit takes them (see [`Fetched::bytes_read`]).
+    pending_bytes: u64,
 }
 
 /// Bounded LRU over `Arc<UserData>`: a hit bumps a tick in place and
@@ -624,21 +1328,27 @@ impl LruCache {
         LruCache { cap, tick: 0, map: HashMap::with_capacity(cap + 1) }
     }
 
-    fn get(&mut self, uid: usize) -> Option<Arc<UserData>> {
+    /// A hit: returns the data plus any uncredited prefetch bytes
+    /// (taken exactly once).
+    fn get(&mut self, uid: usize) -> Option<(Arc<UserData>, u64)> {
         self.tick += 1;
         let tick = self.tick;
         let e = self.map.get_mut(&uid)?;
         e.last_used = tick;
-        Some(e.data.clone())
+        let bytes = std::mem::take(&mut e.pending_bytes);
+        Some((e.data.clone(), bytes))
     }
 
     fn contains(&self, uid: usize) -> bool {
         self.map.contains_key(&uid)
     }
 
-    fn insert(&mut self, uid: usize, data: Arc<UserData>) {
-        if self.map.contains_key(&uid) {
-            return; // fetch and prefetch raced: keep the resident copy
+    fn insert(&mut self, uid: usize, data: Arc<UserData>, pending_bytes: u64) {
+        if let Some(e) = self.map.get_mut(&uid) {
+            // fetch and prefetch raced: keep the resident copy, but
+            // both reads really happened — account the extra bytes
+            e.pending_bytes += pending_bytes;
+            return;
         }
         if self.map.len() >= self.cap {
             let victim = self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
@@ -647,7 +1357,7 @@ impl LruCache {
             }
         }
         self.tick += 1;
-        self.map.insert(uid, CacheEntry { data, last_used: self.tick });
+        self.map.insert(uid, CacheEntry { data, last_used: self.tick, pending_bytes });
     }
 
     fn len(&self) -> usize {
@@ -715,6 +1425,11 @@ impl StoreSource {
         self.cache.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
+    /// The underlying store (diagnostics / tests).
+    pub fn store(&self) -> &Arc<ShardedStore> {
+        &self.store
+    }
+
     fn note_consumed(&self) {
         if let Some(p) = &self.prefetch {
             let mut st = p.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
@@ -727,27 +1442,43 @@ impl StoreSource {
 
 impl UserDataSource for StoreSource {
     fn fetch(&self, uid: usize) -> Fetched {
-        if let Some(data) =
+        if let Some((data, bytes)) =
             self.cache.lock().unwrap_or_else(PoisonError::into_inner).get(uid)
         {
             self.note_consumed();
-            return Fetched { data, cache_hit: Some(true), stall_nanos: 0 };
+            return Fetched {
+                data,
+                cache_hit: Some(true),
+                stall_nanos: 0,
+                bytes_read: bytes,
+                decode_nanos: 0,
+                via_mmap: false,
+            };
         }
         // Miss: the worker eats the read latency; that is exactly the
         // stall the prefetcher exists to hide.
         let t0 = Instant::now();
-        let data = Arc::new(
-            self.store
-                .read_user(uid)
-                .unwrap_or_else(|e| panic!("store {}: {e:#}", self.store.dir.display())),
-        );
+        let (data, trace) = self
+            .store
+            .read_user_traced(uid)
+            .unwrap_or_else(|e| panic!("store {}: {e:#}", self.store.dir.display()));
+        let data = Arc::new(data);
         let stall_nanos = t0.elapsed().as_nanos() as u64;
+        // bytes are reported in this Fetched, so the cache entry holds
+        // no pending credit (a later hit must not double-count them)
         self.cache
             .lock()
             .unwrap_or_else(PoisonError::into_inner)
-            .insert(uid, data.clone());
+            .insert(uid, data.clone(), 0);
         self.note_consumed();
-        Fetched { data, cache_hit: Some(false), stall_nanos }
+        Fetched {
+            data,
+            cache_hit: Some(false),
+            stall_nanos,
+            bytes_read: trace.bytes_read,
+            decode_nanos: trace.decode_nanos,
+            via_mmap: trace.via_mmap,
+        }
     }
 
     fn wants_hints(&self) -> bool {
@@ -805,14 +1536,24 @@ fn prefetch_loop(
         if cache.lock().unwrap_or_else(PoisonError::into_inner).contains(uid) {
             continue; // already resident: the cursor still advances
         }
-        // I/O outside every lock, so workers hitting the cache never
-        // wait on the disk. A failed read is not fatal here: the
-        // worker's own fetch of this uid will surface the error.
-        if let Ok(d) = store.read_user(uid) {
+        // I/O and block decode outside every lock, so workers hitting
+        // the cache never wait on the disk or the codec. A failed read
+        // is not fatal here: the worker's own fetch of this uid will
+        // surface the error.
+        //
+        // Mid-fetch `hint_round` reset: this uid was popped under the
+        // old hints, and the cache insert below lands *after* the
+        // reset. That is safe by construction — the entry is keyed by
+        // this uid and user data is a pure function of (store, uid), so
+        // the worst case is one extra resident entry from the abandoned
+        // round (evicted by LRU), never wrong bytes under another
+        // user's key. Regression-tested by
+        // `mid_round_resets_never_corrupt_reads`.
+        if let Ok((d, trace)) = store.read_user_traced(uid) {
             cache
                 .lock()
                 .unwrap_or_else(PoisonError::into_inner)
-                .insert(uid, Arc::new(d));
+                .insert(uid, Arc::new(d), trace.bytes_read);
         }
     }
 }
@@ -865,7 +1606,10 @@ mod tests {
         assert_eq!(stats.num_users, 11);
         assert_eq!(stats.num_shards, 3);
         assert!(stats.eval_shards > 0);
+        assert_eq!(stats.compression, Compression::None);
+        assert_eq!(stats.disk_bytes, stats.data_bytes);
         let store = ShardedStore::open(&dir).unwrap();
+        assert_eq!(store.version(), 2);
         assert_eq!(store.name(), gen.name());
         assert_eq!(store.num_users(), 11);
         for uid in 0..11 {
@@ -884,12 +1628,234 @@ mod tests {
     }
 
     #[test]
+    fn compressed_store_roundtrips_on_both_read_paths() {
+        let dir = tmp_dir("lz");
+        let gen = SynthTabular::new(13, 16, 4, 7);
+        let stats = materialize_with(&gen, &dir, 4, 8, Compression::ShuffleLz).unwrap();
+        assert_eq!(stats.compression, Compression::ShuffleLz);
+        assert!(
+            stats.disk_bytes < stats.data_bytes,
+            "shuffle-lz did not shrink: {} vs {}",
+            stats.disk_bytes,
+            stats.data_bytes
+        );
+        assert!(stats.compression_ratio() > 1.0);
+        for mmap in [true, false] {
+            let store =
+                ShardedStore::open_with(&dir, OpenOptions { mmap }).unwrap();
+            assert_eq!(store.compression(), Compression::ShuffleLz);
+            for uid in 0..13 {
+                assert_eq!(
+                    bits(&gen.user_data(uid)),
+                    bits(&store.user_data(uid)),
+                    "user {uid} (mmap={mmap})"
+                );
+            }
+            // eval shards stay uncompressed and still read back
+            assert_eq!(store.central_eval(8).len(), gen.central_eval(8).len());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiny_blocks_span_blob_boundaries() {
+        // a 64-byte block is far smaller than one user's blob, so every
+        // read exercises the multi-block assembly path
+        let dir = tmp_dir("tinyblock");
+        let gen = SynthTabular::new(6, 12, 5, 3);
+        let mut w = ShardWriter::create_with(&dir, 4, Compression::ShuffleLz, 64).unwrap();
+        for uid in 0..gen.num_users() {
+            w.append_user(&gen.user_data(uid)).unwrap();
+        }
+        w.finish(gen.name()).unwrap();
+        for mmap in [true, false] {
+            let store = ShardedStore::open_with(&dir, OpenOptions { mmap }).unwrap();
+            for uid in 0..6 {
+                assert_eq!(bits(&gen.user_data(uid)), bits(&store.user_data(uid)));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_trace_accounts_bytes_and_decode() {
+        let dir = tmp_dir("trace");
+        let gen = SynthTabular::new(4, 16, 4, 9);
+        materialize_with(&gen, &dir, 4, 0, Compression::ShuffleLz).unwrap();
+        let store = ShardedStore::open(&dir).unwrap();
+        let (_, t0) = store.read_user_traced(0).unwrap();
+        assert!(t0.bytes_read > 0, "cold read must report compressed bytes");
+        // warm: every block cached → no I/O, no decode
+        let (_, t1) = store.read_user_traced(0).unwrap();
+        assert_eq!(t1.bytes_read, 0);
+        assert_eq!(t1.decode_nanos, 0);
+        // raw store reports the blob length
+        let dir2 = tmp_dir("trace_raw");
+        materialize(&gen, &dir2, 4, 0).unwrap();
+        let raw = ShardedStore::open(&dir2).unwrap();
+        let (_, tr) = raw.read_user_traced(1).unwrap();
+        assert!(tr.bytes_read > 0);
+        assert_eq!(tr.decode_nanos, 0, "raw stores never touch the codec");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    /// Byte offset of index entry 0 in an `index.bin` written by this
+    /// version with a 1-byte store name: magic(8) + version(4) +
+    /// num_shards(4) + users_per_shard(4) + name_len(4) + name(1) +
+    /// compression(1) + block_size(4) + num_users(8).
+    const ENTRY0: usize = 38;
+
+    fn small_store(dir: &Path, comp: Compression) {
+        let mut w = ShardWriter::create_with(dir, 2, comp, 64).unwrap();
+        for uid in 0..5u32 {
+            w.append_user(&UserData::Points { x: vec![uid as f32; 8], dim: 2 }).unwrap();
+        }
+        w.finish("t").unwrap();
+    }
+
+    fn patch(path: &Path, at: usize, bytes: &[u8]) {
+        let mut raw = std::fs::read(path).unwrap();
+        raw[at..at + bytes.len()].copy_from_slice(bytes);
+        std::fs::write(path, raw).unwrap();
+    }
+
+    fn store_err(err: &anyhow::Error) -> &StoreError {
+        err.downcast_ref::<StoreError>()
+            .unwrap_or_else(|| panic!("expected a typed StoreError, got: {err:#}"))
+    }
+
+    #[test]
     fn open_rejects_missing_and_garbage() {
         let dir = tmp_dir("garbage");
         assert!(ShardedStore::open(&dir).is_err()); // no index
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("index.bin"), b"not a store").unwrap();
-        assert!(ShardedStore::open(&dir).is_err());
+        let err = ShardedStore::open(&dir).unwrap_err();
+        assert!(matches!(store_err(&err), StoreError::BadMagic { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn typed_error_for_unsupported_version() {
+        let dir = tmp_dir("badver");
+        small_store(&dir, Compression::None);
+        patch(&dir.join("index.bin"), 8, &99u32.to_le_bytes());
+        let err = ShardedStore::open(&dir).unwrap_err();
+        assert!(matches!(
+            store_err(&err),
+            StoreError::UnsupportedVersion { version: 99, .. }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn typed_error_for_out_of_range_offsets() {
+        // raw store, offset inside the shard header: caught at open
+        let dir = tmp_dir("badoff");
+        small_store(&dir, Compression::None);
+        patch(&dir.join("index.bin"), ENTRY0 + 4, &1u64.to_le_bytes());
+        let err = ShardedStore::open(&dir).unwrap_err();
+        assert!(matches!(store_err(&err), StoreError::OffsetOutOfRange { uid: 0, .. }));
+
+        // compressed store, offset past the shard's raw extent: open
+        let dir2 = tmp_dir("badoff_lz");
+        small_store(&dir2, Compression::ShuffleLz);
+        patch(&dir2.join("index.bin"), ENTRY0 + 4, &(1u64 << 40).to_le_bytes());
+        let err = ShardedStore::open(&dir2).unwrap_err();
+        assert!(matches!(store_err(&err), StoreError::OffsetOutOfRange { uid: 0, .. }));
+
+        // raw store, offset far past EOF: the index alone cannot know
+        // the file length, so the fetch surfaces Truncated instead
+        let dir3 = tmp_dir("badoff_eof");
+        small_store(&dir3, Compression::None);
+        patch(&dir3.join("index.bin"), ENTRY0 + 4, &(1u64 << 40).to_le_bytes());
+        let store = ShardedStore::open(&dir3).unwrap();
+        let err = store.read_user(0).unwrap_err();
+        assert!(matches!(store_err(&err), StoreError::Truncated { .. }));
+
+        for d in [dir, dir2, dir3] {
+            let _ = std::fs::remove_dir_all(&d);
+        }
+    }
+
+    #[test]
+    fn typed_error_for_truncated_shard() {
+        for (tag, comp, mmap) in [
+            ("trunc_raw_m", Compression::None, true),
+            ("trunc_raw_p", Compression::None, false),
+            ("trunc_lz_m", Compression::ShuffleLz, true),
+            ("trunc_lz_p", Compression::ShuffleLz, false),
+        ] {
+            let dir = tmp_dir(tag);
+            small_store(&dir, comp);
+            let shard = dir.join(shard_file_name(0));
+            let full = std::fs::read(&shard).unwrap();
+            std::fs::write(&shard, &full[..full.len() / 2]).unwrap();
+            // open succeeds (index is intact); the length check guards
+            // the first read of that shard — before any mmap, so a
+            // truncated file can never SIGBUS through the mapping
+            let store = ShardedStore::open_with(&dir, OpenOptions { mmap }).unwrap();
+            let err = store.read_user(0).unwrap_err();
+            assert!(
+                matches!(store_err(&err), StoreError::Truncated { .. }),
+                "{tag}: {err:#}"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn typed_error_for_bad_shard_magic_and_mismatch() {
+        let dir = tmp_dir("shardmagic");
+        small_store(&dir, Compression::None);
+        let shard = dir.join(shard_file_name(0));
+        patch(&shard, 0, b"X");
+        let store = ShardedStore::open(&dir).unwrap();
+        let err = store.read_user(0).unwrap_err();
+        assert!(matches!(store_err(&err), StoreError::BadMagic { .. }));
+
+        // restore magic, corrupt the header's shard id
+        patch(&shard, 0, b"P");
+        patch(&shard, 12, &7u32.to_le_bytes());
+        let store = ShardedStore::open(&dir).unwrap();
+        let err = store.read_user(0).unwrap_err();
+        assert!(matches!(
+            store_err(&err),
+            StoreError::ShardMismatch { expected: 0, found: 7, .. }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn typed_error_for_uid_out_of_range() {
+        let dir = tmp_dir("uidrange");
+        small_store(&dir, Compression::None);
+        let store = ShardedStore::open(&dir).unwrap();
+        let err = store.read_user(999).unwrap_err();
+        assert!(matches!(
+            store_err(&err),
+            StoreError::UidOutOfRange { uid: 999, num_users: 5 }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stat_reports_without_scanning() {
+        let dir = tmp_dir("stat");
+        let gen = SynthTabular::new(9, 16, 4, 21);
+        let stats = materialize_with(&gen, &dir, 4, 8, Compression::ShuffleLz).unwrap();
+        let st = stat(&dir).unwrap();
+        assert_eq!(st.name, gen.name());
+        assert_eq!(st.version, 2);
+        assert_eq!(st.compression, Compression::ShuffleLz);
+        assert_eq!(st.num_users, 9);
+        assert_eq!(st.num_shards, 3);
+        assert_eq!(st.raw_bytes, stats.data_bytes);
+        // disk bytes = compressed payload + one 16-byte header per shard
+        assert_eq!(st.disk_bytes, stats.disk_bytes + 3 * SHARD_HEADER_LEN);
+        assert!(st.eval_shards > 0);
+        assert!(st.compression_ratio() > 1.0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -897,17 +1863,34 @@ mod tests {
     fn lru_evicts_least_recently_used() {
         let d = Arc::new(UserData::Points { x: vec![1.0], dim: 1 });
         let mut c = LruCache::new(2);
-        c.insert(1, d.clone());
-        c.insert(2, d.clone());
-        assert!(c.get(1).is_some()); // 1 is now most recent
-        c.insert(3, d.clone()); // evicts 2
+        c.insert(1, d.clone(), 10);
+        c.insert(2, d.clone(), 0);
+        let (got, bytes) = c.get(1).unwrap(); // 1 is now most recent
+        assert!(Arc::ptr_eq(&got, &d));
+        assert_eq!(bytes, 10, "pending prefetch bytes credited on first hit");
+        assert_eq!(c.get(1).unwrap().1, 0, "credited exactly once");
+        c.insert(3, d.clone(), 0); // evicts 2
         assert!(c.contains(1));
         assert!(!c.contains(2));
         assert!(c.contains(3));
         assert_eq!(c.len(), 2);
-        // double insert keeps one entry
-        c.insert(3, d);
+        // double insert keeps one entry, accumulating uncredited bytes
+        c.insert(3, d, 4);
         assert_eq!(c.len(), 2);
+        assert_eq!(c.get(3).unwrap().1, 4);
+    }
+
+    #[test]
+    fn block_cache_bounds_bytes_and_evicts_lru() {
+        let mut c = BlockCache::new(100);
+        c.insert(0, 0, Arc::new(vec![0u8; 40]));
+        c.insert(0, 1, Arc::new(vec![0u8; 40]));
+        assert!(c.get(0, 0).is_some()); // bump block 0
+        c.insert(0, 2, Arc::new(vec![0u8; 40])); // evicts (0,1)
+        assert!(c.get(0, 0).is_some());
+        assert!(c.get(0, 1).is_none());
+        assert!(c.get(0, 2).is_some());
+        assert!(c.bytes <= 100);
     }
 
     #[test]
@@ -919,9 +1902,12 @@ mod tests {
         let src = StoreSource::new(store, SourceConfig { cache_users: 8, prefetch_depth: 0 });
         let first = src.fetch(3);
         assert_eq!(first.cache_hit, Some(false));
+        assert!(first.bytes_read > 0, "miss reads from disk");
         let second = src.fetch(3);
         assert_eq!(second.cache_hit, Some(true));
         assert_eq!(second.stall_nanos, 0);
+        assert_eq!(second.bytes_read, 0, "miss already credited its bytes");
+        assert_eq!(second.decode_nanos, 0);
         assert_eq!(bits(&first.data), bits(&second.data));
         assert_eq!(bits(&first.data), bits(&gen.user_data(3)));
         let _ = std::fs::remove_dir_all(&dir);
@@ -946,12 +1932,19 @@ mod tests {
         assert_eq!(src.cached_users(), 4, "prefetcher should stop at depth");
         // consuming in dispatch order hits the cache and tops it back up
         let mut hits = 0;
+        let mut prefetched_bytes = 0;
         for &uid in &order {
-            if src.fetch(uid).cache_hit == Some(true) {
+            let f = src.fetch(uid);
+            if f.cache_hit == Some(true) {
                 hits += 1;
+                prefetched_bytes += f.bytes_read;
             }
         }
         assert!(hits >= 4, "prefetched users should be hits, got {hits}");
+        assert!(
+            prefetched_bytes > 0,
+            "prefetch-thread reads must be credited through the hit path"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -977,6 +1970,49 @@ mod tests {
     }
 
     #[test]
+    fn mid_round_resets_never_corrupt_reads() {
+        // Regression for the prefetch-reset race: `hint_round` drops
+        // the queue while a read may be in flight on the prefetch
+        // thread. Hammer resets from one thread while fetching every
+        // uid from another; every fetch must return bit-identical data
+        // (an in-flight decoded block or user blob must never land
+        // under the wrong key).
+        let dir = tmp_dir("midreset");
+        let gen = SynthTabular::new(24, 10, 3, 77);
+        materialize_with(&gen, &dir, 5, 0, Compression::ShuffleLz).unwrap();
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let src = Arc::new(StoreSource::new(
+            store,
+            SourceConfig { cache_users: 6, prefetch_depth: 3 },
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (src2, stop2) = (src.clone(), stop.clone());
+        let resetter = std::thread::spawn(move || {
+            let mut round = 0usize;
+            while !stop2.load(Ordering::Relaxed) {
+                let order: Vec<usize> = (0..24).map(|i| (i + round) % 24).collect();
+                src2.hint_round(&order);
+                round += 1;
+                std::thread::yield_now();
+            }
+        });
+        let expected: Vec<Vec<u64>> = (0..24).map(|u| bits(&gen.user_data(u))).collect();
+        for pass in 0..50 {
+            for uid in 0..24 {
+                let f = src.fetch(uid);
+                assert_eq!(
+                    bits(&f.data),
+                    expected[uid],
+                    "pass {pass}: uid {uid} returned another user's data"
+                );
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        resetter.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn store_backed_run_matches_generator_run() {
         // end-to-end: the same simulation over the generator and over
         // its materialized store produces bit-identical central models
@@ -990,7 +2026,8 @@ mod tests {
 
         let dir = tmp_dir("e2e");
         let gen: Arc<dyn FederatedDataset> = Arc::new(SynthGmmPoints::new(24, 10, 3, 2, 5));
-        materialize(&*gen, &dir, 7, 0).unwrap();
+        // compressed store: exercises prefetch-thread decode end to end
+        materialize_with(&*gen, &dir, 7, 0, Compression::ShuffleLz).unwrap();
         let store = Arc::new(ShardedStore::open(&dir).unwrap());
 
         let run = |dataset: Arc<dyn FederatedDataset>,
@@ -1022,13 +2059,17 @@ mod tests {
         let stored = run(store as Arc<dyn FederatedDataset>, Some(src));
         assert_eq!(base.central, stored.central, "store-backed run diverged");
         assert_eq!(base.rounds, stored.rounds);
-        // the store run observed its cache
+        // the store run observed its cache and its I/O volume
         let (h, m) = (stored.counters.cache_hits, stored.counters.cache_misses);
         assert!(h + m > 0, "cache counters never ticked");
+        assert!(stored.counters.store_bytes_read > 0, "bytes-read never ticked");
         assert!(stored.final_metric("sys/cache-hit-frac").is_some());
+        assert!(stored.final_metric("sys/store-bytes-read").is_some());
+        assert!(stored.final_metric("sys/decode-nanos").is_some());
         // the generator run reports no cache metric at all
         assert!(base.final_metric("sys/cache-hit-frac").is_none());
         assert_eq!(base.counters.cache_hits + base.counters.cache_misses, 0);
+        assert_eq!(base.counters.store_bytes_read, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

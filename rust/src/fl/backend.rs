@@ -467,7 +467,7 @@ impl SimulatedBackend {
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
         let window = ctx.dispatch.reorder_window.max(1);
-        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
+        let cache0 = StoreSnap::take(&outcome.counters);
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
@@ -650,7 +650,7 @@ impl SimulatedBackend {
         engine: &mut AsyncEngine,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
-        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
+        let cache0 = StoreSnap::take(&outcome.counters);
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
@@ -761,14 +761,14 @@ impl SimulatedBackend {
         stale_folds: u64,
         round_stat_elements: u64,
         round_stat_bytes: u64,
-        cache0: (u64, u64),
+        cache0: StoreSnap,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         metrics.add_central("sys/cohort", cohort_len as f64, 1.0);
         metrics.add_central("sys/async-folded", folded as f64, 1.0);
         metrics.add_central("sys/stale-updates", stale_folds as f64, 1.0);
         metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
         metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
-        cache_hit_metric(&mut metrics, cache0, &outcome.counters);
+        store_metrics(&mut metrics, cache0, &outcome.counters);
         if let Some(a) = acc.as_ref() {
             metrics.add_central("sys/agg-elements", a.element_count() as f64, 1.0);
         }
@@ -963,7 +963,7 @@ impl SimulatedBackend {
         if self.source.wants_hints() {
             self.source.hint_round(&plan.dispatch_order());
         }
-        let cache0 = (outcome.counters.cache_hits, outcome.counters.cache_misses);
+        let cache0 = StoreSnap::take(&outcome.counters);
 
         // --- distribute + train ----------------------------------------
         let central_arc = Arc::new(central.to_vec());
@@ -1002,7 +1002,7 @@ impl SimulatedBackend {
             // (which --quantize shrinks at unchanged element count)
             metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
             metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
-            cache_hit_metric(&mut metrics, cache0, &outcome.counters);
+            store_metrics(&mut metrics, cache0, &outcome.counters);
         }
 
         // --- worker_reduce (all-reduce equivalent) ----------------------
@@ -1106,16 +1106,66 @@ struct ReplayEngine {
     parked: BTreeMap<u64, super::worker::RoundResult>,
 }
 
-/// Emit `sys/cache-hit-frac` for one round from the run-level counter
-/// deltas (`before` is the (hits, misses) snapshot at round start).
-/// Generator-backed sources tick neither counter, so default runs carry
-/// no cache metric at all.
-fn cache_hit_metric(metrics: &mut Metrics, before: (u64, u64), counters: &Counters) {
-    let hits = counters.cache_hits - before.0;
-    let misses = counters.cache_misses - before.1;
-    if hits + misses > 0 {
-        metrics.add_central("sys/cache-hit-frac", hits as f64 / (hits + misses) as f64, 1.0);
+/// Round-start snapshot of the store-facing run counters; the deltas
+/// against round end become the round's store `sys/` metrics.
+#[derive(Debug, Clone, Copy)]
+struct StoreSnap {
+    hits: u64,
+    misses: u64,
+    bytes_read: u64,
+    decode_nanos: u64,
+    mmap_stall_nanos: u64,
+    pread_stall_nanos: u64,
+}
+
+impl StoreSnap {
+    fn take(c: &Counters) -> StoreSnap {
+        StoreSnap {
+            hits: c.cache_hits,
+            misses: c.cache_misses,
+            bytes_read: c.store_bytes_read,
+            decode_nanos: c.decode_nanos,
+            mmap_stall_nanos: c.mmap_stall_nanos,
+            pread_stall_nanos: c.pread_stall_nanos,
+        }
     }
+}
+
+/// Emit the per-round store metrics from the run-level counter deltas:
+/// `sys/cache-hit-frac`, `sys/store-bytes-read` (true I/O — prefetched
+/// bytes are credited when consumed), `sys/decode-nanos` (worker-side
+/// decompression only; ≈0 means decode stayed on the prefetch thread)
+/// and the miss-path stall split `sys/page-fault-stalls` (mmap) /
+/// `sys/pread-stalls` (portable fallback), in seconds.
+/// Generator-backed sources tick neither cache counter, so default runs
+/// carry no store metrics at all.
+fn store_metrics(metrics: &mut Metrics, before: StoreSnap, counters: &Counters) {
+    let hits = counters.cache_hits - before.hits;
+    let misses = counters.cache_misses - before.misses;
+    if hits + misses == 0 {
+        return;
+    }
+    metrics.add_central("sys/cache-hit-frac", hits as f64 / (hits + misses) as f64, 1.0);
+    metrics.add_central(
+        "sys/store-bytes-read",
+        (counters.store_bytes_read - before.bytes_read) as f64,
+        1.0,
+    );
+    metrics.add_central(
+        "sys/decode-nanos",
+        (counters.decode_nanos - before.decode_nanos) as f64,
+        1.0,
+    );
+    metrics.add_central(
+        "sys/page-fault-stalls",
+        (counters.mmap_stall_nanos - before.mmap_stall_nanos) as f64 / 1e9,
+        1.0,
+    );
+    metrics.add_central(
+        "sys/pread-stalls",
+        (counters.pread_stall_nanos - before.pread_stall_nanos) as f64 / 1e9,
+        1.0,
+    );
 }
 
 /// Fraction of the round's wall-clock the workers spent busy:

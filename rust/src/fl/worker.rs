@@ -414,6 +414,13 @@ fn run_worker_round(
             None => {}
         }
         counters.prefetch_stall_nanos += fetched.stall_nanos;
+        counters.store_bytes_read += fetched.bytes_read;
+        counters.decode_nanos += fetched.decode_nanos;
+        if fetched.via_mmap {
+            counters.mmap_stall_nanos += fetched.stall_nanos;
+        } else {
+            counters.pread_stall_nanos += fetched.stall_nanos;
+        }
         let data = fetched.data;
         let user_len = data.len();
         let (stats, m) = shared

@@ -4,6 +4,8 @@
 //! pfl run --preset cifar10-iid [--scale 0.05] [--workers 2] ...
 //! pfl run --config path.json
 //! pfl materialize --preset X --out DIR        # write an on-disk store
+//! pfl import --in corpus.jsonl --out DIR      # import a real corpus
+//! pfl store stat DIR                          # summarize a store
 //! pfl table1|table2|table3|table4|table5      # paper tables
 //! pfl fig2|fig3|fig4a|fig4b|fig5|fig6|fig7    # paper figures
 //! pfl calibrate                               # DP noise calibration
@@ -42,7 +44,7 @@ COMMANDS
                                     [--max-staleness N] [--buffer-frac F]
                                     [--reorder-window N] [--sparse-spill-frac F]
                                     [--data-store DIR] [--cache-users N]
-                                    [--prefetch-depth N]
+                                    [--prefetch-depth N] [--store-mmap on|off]
                                     [--quantize none|f16|int8] [--fold-tree]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
@@ -50,6 +52,13 @@ COMMANDS
                                     --preset NAME | --config FILE
                                     --out DIR [--scale F]
                                     [--users-per-shard N] [--eval-shard N]
+                                    [--compression none|shuffle-lz]
+  import     import a JSONL/CSV tabular corpus into a sharded store
+                                    --in FILE --out DIR [--name NAME]
+                                    [--format jsonl|csv] [--users-per-shard N]
+                                    [--compression none|shuffle-lz]
+  store      `store stat DIR` — summarize a store from headers + index
+             (population, shards, raw vs on-disk bytes, ratio, version)
   table1     CIFAR10 speed vs baseline engines   [--scale F] [--p N]
   table2     FLAIR speed (+DP overhead row)      [--scale F] [--p N]
   table3     algorithm suite, no DP    [--benchmarks a,b] [--scale F] [--seeds N]
@@ -81,6 +90,8 @@ fn real_main() -> Result<()> {
         "help" | "--help" => print!("{HELP}"),
         "run" => cmd_run(&args)?,
         "materialize" => cmd_materialize(&args)?,
+        "import" => cmd_import(&args)?,
+        "store" => cmd_store(&args)?,
         "table1" => {
             experiments::speed::table1(scale, args.get_usize("p", 5)?)?;
         }
@@ -170,20 +181,33 @@ fn cmd_materialize(args: &Args) -> Result<()> {
     let out = args.require("out")?;
     let users_per_shard = args.get_usize("users-per-shard", 1024)?;
     let eval_shard = args.get_usize("eval-shard", 256)?;
+    // --compression overrides the config's engine.store_compression
+    let compression: pfl::data::Compression = match args.get("compression") {
+        Some(s) => s.parse()?,
+        None => cfg.store_compression()?,
+    };
     let dataset = pfl::config::build::build_dataset(&cfg.dataset)?;
     eprintln!(
-        "materializing {} ({} users) -> {out}",
+        "materializing {} ({} users, compression={compression}) -> {out}",
         dataset.name(),
         dataset.num_users()
     );
     let t0 = std::time::Instant::now();
-    let stats =
-        pfl::data::materialize(&*dataset, std::path::Path::new(out), users_per_shard, eval_shard)?;
+    let stats = pfl::data::materialize_with(
+        &*dataset,
+        std::path::Path::new(out),
+        users_per_shard,
+        eval_shard,
+        compression,
+    )?;
     println!(
-        "wrote {} users in {} shards ({:.1} MB data, {} eval shards) in {:.1}s",
+        "wrote {} users in {} shards ({:.1} MB raw, {:.1} MB on disk, ratio {:.2}x, \
+         {} eval shards) in {:.1}s",
         stats.num_users,
         stats.num_shards,
         stats.data_bytes as f64 / 1e6,
+        stats.disk_bytes as f64 / 1e6,
+        stats.compression_ratio(),
         stats.eval_shards,
         t0.elapsed().as_secs_f64(),
     );
@@ -199,6 +223,70 @@ fn cmd_materialize(args: &Args) -> Result<()> {
         Some(p) => println!("run it with: pfl run --preset {p}{scale_arg} --data-store {out}"),
         None => println!("run it with: pfl run --config FILE{scale_arg} --data-store {out}"),
     }
+    Ok(())
+}
+
+/// `pfl import` — write-through import of a real tabular corpus
+/// (JSONL or CSV, rows grouped by user) into a sharded store, streamed
+/// through the same [`pfl::data::ShardWriter`] path `materialize` uses.
+fn cmd_import(args: &Args) -> Result<()> {
+    let input = args.require("in")?;
+    let out = args.require("out")?;
+    let mut opts = pfl::data::ImportOptions {
+        users_per_shard: args.get_usize("users-per-shard", 256)?,
+        name: args.get_str("name", "imported").to_string(),
+        ..Default::default()
+    };
+    if let Some(c) = args.get("compression") {
+        opts.compression = c.parse()?;
+    }
+    if let Some(f) = args.get("format") {
+        opts.format = Some(f.parse()?);
+    }
+    let t0 = std::time::Instant::now();
+    let stats = pfl::data::import_corpus(
+        std::path::Path::new(input),
+        std::path::Path::new(out),
+        &opts,
+    )?;
+    println!(
+        "imported {} users in {} shards ({:.1} MB raw, {:.1} MB on disk, ratio {:.2}x) \
+         in {:.1}s",
+        stats.num_users,
+        stats.num_shards,
+        stats.data_bytes as f64 / 1e6,
+        stats.disk_bytes as f64 / 1e6,
+        stats.compression_ratio(),
+        t0.elapsed().as_secs_f64(),
+    );
+    println!("run it with: pfl run --config FILE --data-store {out}");
+    Ok(())
+}
+
+/// `pfl store stat DIR` — summarize a store by reading only the shard
+/// headers and `index.bin` (no user payloads are scanned).
+fn cmd_store(args: &Args) -> Result<()> {
+    let (action, dir) = match args.positional.as_slice() {
+        [a, d] => (a.as_str(), d.as_str()),
+        _ => bail!("usage: pfl store stat DIR"),
+    };
+    if action != "stat" {
+        bail!("unknown store action {action:?}; usage: pfl store stat DIR");
+    }
+    let st = pfl::data::stat(std::path::Path::new(dir))?;
+    println!("store:        {dir}");
+    println!("dataset:      {}", st.name);
+    println!("version:      {}", st.version);
+    println!("compression:  {}", st.compression);
+    if st.block_size > 0 {
+        println!("block size:   {} KiB", st.block_size / 1024);
+    }
+    println!("users:        {}", st.num_users);
+    println!("shards:       {}", st.num_shards);
+    println!("eval shards:  {}", st.eval_shards);
+    println!("raw bytes:    {:.1} MB", st.raw_bytes as f64 / 1e6);
+    println!("disk bytes:   {:.1} MB", st.disk_bytes as f64 / 1e6);
+    println!("ratio:        {:.2}x", st.compression_ratio());
     Ok(())
 }
 
@@ -239,6 +327,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     cfg.cache_users = args.get_usize("cache-users", cfg.cache_users)?;
     cfg.prefetch_depth = args.get_usize("prefetch-depth", cfg.prefetch_depth)?;
+    if let Some(m) = args.get("store-mmap") {
+        cfg.store_mmap = match m {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => bail!("--store-mmap {other:?}: expected on|off"),
+        };
+    }
     if let Some(q) = args.get("quantize") {
         cfg.wire_quantization = q.into();
         cfg.wire_quantization_bits()?; // fail fast on unknown widths
@@ -293,6 +388,14 @@ fn cmd_run(args: &Args) -> Result<()> {
                 100.0 * c.cache_hits as f64 / total as f64,
                 total,
                 c.prefetch_stall_nanos as f64 / 1e6,
+            );
+            eprintln!(
+                "            {:.1} MB read, {:.1} ms decoding on workers, \
+                 stalls {:.1} ms mmap / {:.1} ms pread",
+                c.store_bytes_read as f64 / 1e6,
+                c.decode_nanos as f64 / 1e6,
+                c.mmap_stall_nanos as f64 / 1e6,
+                c.pread_stall_nanos as f64 / 1e6,
             );
         }
     }

@@ -79,6 +79,20 @@ pub struct Counters {
     /// 0 when every load was prefetched off the critical path — the
     /// observable form of "data loading overlaps local training".
     pub prefetch_stall_nanos: u64,
+    /// Store-backed runs: shard-file bytes actually read for user data
+    /// (compressed stores count framed on-disk bytes; prefetched reads
+    /// are credited when the worker consumes the cache entry).
+    pub store_bytes_read: u64,
+    /// Nanoseconds spent decompressing blocks *on worker threads* (miss
+    /// reads only). Prefetch-thread decode is deliberately excluded: ≈0
+    /// here is the observable form of "decompression is off the
+    /// critical path".
+    pub decode_nanos: u64,
+    /// Portion of `prefetch_stall_nanos` from mmap-backed reads — page
+    /// faults the kernel resolved while the worker touched the mapping.
+    pub mmap_stall_nanos: u64,
+    /// Portion of `prefetch_stall_nanos` from the portable pread path.
+    pub pread_stall_nanos: u64,
 }
 
 impl Counters {
@@ -101,6 +115,10 @@ impl Counters {
         self.cache_hits += o.cache_hits;
         self.cache_misses += o.cache_misses;
         self.prefetch_stall_nanos += o.prefetch_stall_nanos;
+        self.store_bytes_read += o.store_bytes_read;
+        self.decode_nanos += o.decode_nanos;
+        self.mmap_stall_nanos += o.mmap_stall_nanos;
+        self.pread_stall_nanos += o.pread_stall_nanos;
     }
 
     pub fn busy(&self) -> Duration {
@@ -267,6 +285,10 @@ mod tests {
             prefetch_stall_nanos: 9,
             stat_elements: 6,
             stat_bytes: 24,
+            store_bytes_read: 100,
+            decode_nanos: 11,
+            mmap_stall_nanos: 5,
+            pread_stall_nanos: 4,
             ..Default::default()
         };
         a.merge(&b);
@@ -279,6 +301,10 @@ mod tests {
         assert_eq!(a.prefetch_stall_nanos, 9);
         assert_eq!(a.stat_elements, 6);
         assert_eq!(a.stat_bytes, 24);
+        assert_eq!(a.store_bytes_read, 100);
+        assert_eq!(a.decode_nanos, 11);
+        assert_eq!(a.mmap_stall_nanos, 5);
+        assert_eq!(a.pread_stall_nanos, 4);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Minimal `mmap`/`munmap`/`madvise` FFI shim (offline build: the
+//! `memmap2`/`libc` crates are unavailable, so the three syscall
+//! wrappers the data store needs are declared directly).
+//!
+//! [`Mmap`] maps a file read-only for the store's zero-copy shard read
+//! path (`crate::data::store`): the OS page cache becomes the L2 cache
+//! behind the user-level LRU, a warm read is a slice into the mapping
+//! (no heap allocation, no copy), and a cold read stalls on a page
+//! fault instead of an explicit `pread` (reported separately as
+//! `sys/page-fault-stalls`).
+//!
+//! Platform gate: the FFI is only compiled on 64-bit unix (the declared
+//! `off_t = i64` ABI). Elsewhere [`Mmap::map_readonly`] returns an
+//! error and callers fall back to the portable positioned-read path —
+//! the store works everywhere, it is just zero-copy where mmap exists.
+
+use std::fs::File;
+use std::io;
+
+/// A read-only memory mapping of a file's first `len` bytes. `Send +
+/// Sync`: the mapping is immutable for its whole lifetime (`PROT_READ`,
+/// private), so concurrent reads from worker and prefetch threads are
+/// safe.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ-only and never remapped; sharing
+// immutable bytes across threads is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    /// `MADV_SEQUENTIAL` (linux + macOS share the value).
+    pub const MADV_SEQUENTIAL: i32 = 2;
+    /// `MADV_WILLNEED` (linux + macOS share the value).
+    pub const MADV_WILLNEED: i32 = 3;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+    }
+}
+
+/// Access-pattern hint forwarded to `madvise` (advisory: failures are
+/// ignored, the kernel is free to ignore the hint too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advice {
+    Sequential,
+    WillNeed,
+}
+
+impl Mmap {
+    /// Map the first `len` bytes of `file` read-only. `len` must not
+    /// exceed the file's length (reading a mapped page past EOF is a
+    /// SIGBUS — callers validate against `fs::metadata` first).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map_readonly(file: &File, len: usize) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; an empty file maps to an empty
+            // slice without a syscall
+            return Ok(Mmap { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        // SAFETY: a fresh PROT_READ | MAP_PRIVATE mapping of a file fd
+        // at offset 0; address chosen by the kernel. The result is
+        // checked against MAP_FAILED before use.
+        let p = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if p == usize::MAX as *mut _ || p.is_null() {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: p as *const u8, len })
+    }
+
+    /// Unsupported-platform fallback: always errors, so the store keeps
+    /// using the portable positioned-read path.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map_readonly(_file: &File, _len: usize) -> io::Result<Mmap> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "mmap is unavailable on this platform; using positioned reads",
+        ))
+    }
+
+    /// Advise the kernel about the expected access pattern (no-op on
+    /// error or on platforms without the shim).
+    pub fn advise(&self, advice: Advice) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            let a = match advice {
+                Advice::Sequential => sys::MADV_SEQUENTIAL,
+                Advice::WillNeed => sys::MADV_WILLNEED,
+            };
+            // SAFETY: (ptr, len) is exactly the live mapping; madvise is
+            // advisory and cannot invalidate it.
+            unsafe {
+                sys::madvise(self.ptr as *mut _, self.len, a);
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        let _ = advice;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes. Reading a page for the first time may stall on
+    /// a page fault — that stall is the mmap analogue of a `pread`.
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: (ptr, len) is a live PROT_READ mapping for the whole
+        // lifetime of self; the file length was validated ≥ len at map
+        // time, so every byte is backed.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            // SAFETY: (ptr, len) came from a successful mmap and is
+            // unmapped exactly once.
+            unsafe {
+                sys::munmap(self.ptr as *mut _, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_contents_readonly() {
+        let path = std::env::temp_dir()
+            .join(format!("pfl_mman_test_{}", std::process::id()));
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+        }
+        let f = File::open(&path).unwrap();
+        let len = f.metadata().unwrap().len() as usize;
+        match Mmap::map_readonly(&f, len) {
+            Ok(m) => {
+                assert_eq!(m.len(), payload.len());
+                assert!(!m.is_empty());
+                assert_eq!(m.as_slice(), &payload[..]);
+                m.advise(Advice::Sequential);
+                m.advise(Advice::WillNeed);
+                // a partial-length map exposes a prefix
+                let short = Mmap::map_readonly(&f, 4096).unwrap();
+                assert_eq!(short.as_slice(), &payload[..4096]);
+            }
+            // non-unix targets: the fallback errors and the store uses
+            // positioned reads — nothing further to assert
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::Unsupported),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_map_is_empty_slice() {
+        let path = std::env::temp_dir()
+            .join(format!("pfl_mman_empty_{}", std::process::id()));
+        File::create(&path).unwrap();
+        let f = File::open(&path).unwrap();
+        if let Ok(m) = Mmap::map_readonly(&f, 0) {
+            assert!(m.is_empty());
+            assert_eq!(m.as_slice(), &[] as &[u8]);
+            m.advise(Advice::WillNeed); // no-op, must not crash
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

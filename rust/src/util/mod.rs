@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod fft;
 pub mod json;
+pub mod mman;
 pub mod rng;
 
 pub use crate::tensor::ops::{add_assign, axpy, l2_norm, scale, sub_assign, sub_into};

@@ -807,10 +807,11 @@ fn store_roundtrip_bit_identical_across_partition_schemes() {
     // label-skew, natural heavy-tailed keys, covariate-shifted tabular,
     // per-user mixtures), materializing to disk and reading back through
     // `ShardedStore` reproduces the generator's output *bit for bit* —
-    // users, scheduling lengths, and central-eval shards alike.
+    // users, scheduling lengths, and central-eval shards alike — for
+    // every cell of the {none, shuffle-lz} × {mmap, pread} matrix.
     use pfl::data::{
-        materialize, FederatedDataset, ShardedStore, SynthCifar, SynthFlair, SynthGmmPoints,
-        SynthTabular, SynthText,
+        materialize_with, Compression, FederatedDataset, OpenOptions, ShardedStore, SynthCifar,
+        SynthFlair, SynthGmmPoints, SynthTabular, SynthText,
     };
     let root = std::env::temp_dir()
         .join(format!("pfl_prop_store_{}", std::process::id()));
@@ -824,22 +825,88 @@ fn store_roundtrip_bit_identical_across_partition_schemes() {
         ("gmm-mixture", Box::new(SynthGmmPoints::new(9, 12, 3, 2, 16))),
     ];
     for (tag, gen) in &datasets {
-        let dir = root.join(tag);
-        // users_per_shard 4 forces the multi-shard path for 9 users
-        materialize(gen.as_ref(), &dir, 4, 32).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
-        let store = ShardedStore::open(&dir).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
-        assert_eq!(store.num_users(), gen.num_users(), "{tag}");
-        assert_eq!(store.name(), gen.name(), "{tag}");
-        for uid in 0..gen.num_users() {
-            let (a, b) = (gen.user_data(uid), store.user_data(uid));
-            assert_eq!(data_bits(&a), data_bits(&b), "{tag}: user {uid} not bit-identical");
-            assert_eq!(store.user_len(uid), a.len(), "{tag}: user {uid} indexed length");
-        }
-        let (ea, eb) = (gen.central_eval(32), store.central_eval(32));
-        assert_eq!(ea.len(), eb.len(), "{tag}: eval shard count");
-        for (i, (a, b)) in ea.iter().zip(&eb).enumerate() {
-            assert_eq!(data_bits(a), data_bits(b), "{tag}: eval shard {i} not bit-identical");
+        for comp in [Compression::None, Compression::ShuffleLz] {
+            let cell = format!("{tag}/{comp}");
+            let dir = root.join(&cell);
+            // users_per_shard 4 forces the multi-shard path for 9 users
+            let stats = materialize_with(gen.as_ref(), &dir, 4, 32, comp)
+                .unwrap_or_else(|e| panic!("{cell}: {e:#}"));
+            assert_eq!(stats.compression, comp, "{cell}");
+            for mmap in [true, false] {
+                let cell = format!("{cell}/mmap={mmap}");
+                let store = ShardedStore::open_with(&dir, OpenOptions { mmap })
+                    .unwrap_or_else(|e| panic!("{cell}: {e:#}"));
+                assert_eq!(store.num_users(), gen.num_users(), "{cell}");
+                assert_eq!(store.name(), gen.name(), "{cell}");
+                assert_eq!(store.compression(), comp, "{cell}");
+                for uid in 0..gen.num_users() {
+                    let (a, b) = (gen.user_data(uid), store.user_data(uid));
+                    assert_eq!(
+                        data_bits(&a),
+                        data_bits(&b),
+                        "{cell}: user {uid} not bit-identical"
+                    );
+                    assert_eq!(
+                        store.user_len(uid),
+                        a.len(),
+                        "{cell}: user {uid} indexed length"
+                    );
+                }
+                let (ea, eb) = (gen.central_eval(32), store.central_eval(32));
+                assert_eq!(ea.len(), eb.len(), "{cell}: eval shard count");
+                for (i, (a, b)) in ea.iter().zip(&eb).enumerate() {
+                    assert_eq!(
+                        data_bits(a),
+                        data_bits(b),
+                        "{cell}: eval shard {i} not bit-identical"
+                    );
+                }
+            }
         }
     }
     let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn store_v1_fixture_reads_bit_identically() {
+    // Back-compat: a checked-in V1 store (raw blobs, absolute offsets,
+    // no compression fields in the index — written by the previous
+    // release's format) opens and reads the exact bytes it was packed
+    // with, through both the mmap and pread paths.
+    use pfl::data::{FederatedDataset, OpenOptions, ShardedStore, UserData};
+    let dir = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/store_v1"
+    ));
+    for mmap in [true, false] {
+        let store = ShardedStore::open_with(dir, OpenOptions { mmap })
+            .unwrap_or_else(|e| panic!("mmap={mmap}: {e:#}"));
+        assert_eq!(store.version(), 1, "mmap={mmap}");
+        assert_eq!(store.compression(), pfl::data::Compression::None);
+        assert_eq!(store.name(), "fixture-v1");
+        assert_eq!(store.num_users(), 3);
+        for uid in 0..3 {
+            // the fixture packs user u as Points{dim: 2, x: [u*10 + j
+            // + 0.25; j in 0..4]} — exactly representable f32s, so
+            // equality is bit-exact
+            let want: Vec<f32> = (0..4).map(|j| (uid * 10 + j) as f32 + 0.25).collect();
+            match store.user_data(uid) {
+                UserData::Points { x, dim } => {
+                    assert_eq!(dim, 2, "mmap={mmap} user {uid}");
+                    assert_eq!(x, want, "mmap={mmap} user {uid}");
+                }
+                other => panic!("mmap={mmap} user {uid}: wrong variant {other:?}"),
+            }
+            assert_eq!(store.user_len(uid), 2, "mmap={mmap} user {uid}");
+        }
+        let eval = store.central_eval(32);
+        assert_eq!(eval.len(), 1, "mmap={mmap}");
+        match &eval[0] {
+            UserData::Points { x, dim } => {
+                assert_eq!(*dim, 2);
+                assert_eq!(x, &[100.25f32, 101.25, 102.25, 103.25]);
+            }
+            other => panic!("mmap={mmap} eval: wrong variant {other:?}"),
+        }
+    }
 }
