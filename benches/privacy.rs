@@ -1,57 +1,163 @@
-//! Bench: the DP hot paths — noise generation on model-sized aggregates
-//! (once per round; paper §4.1 shows DP adds only ~9% wall-clock on
-//! FLAIR), BMF's correlated-noise mixing, and accountant ε evaluations
-//! (run once per calibration, so seconds are acceptable).
+//! Bench: the DP hot paths — model-sized noise generation (once per
+//! round; the last fully serial hot loop before the counter engine),
+//! banded-MF's correlated-noise round (retained ring vs counter
+//! regeneration), and accountant ε evaluations (run once per
+//! calibration, so seconds are acceptable).
+//!
+//! Gates (recorded in `BENCH_privacy.json`, asserted where the machine
+//! allows):
+//!
+//! * `noise-fill/ctr-8` ≥ 3× over `noise-fill/serial` at d=1e6 when the
+//!   machine has ≥ 8 cores.
+//! * banded-MF ring reference allocates the full `band·dim·4` bytes of
+//!   resident state on its first round; counter regeneration's per-round
+//!   scratch stays under one `NOISE_CHUNK` per thread.
 
 use pfl::fl::context::{CentralContext, LocalParams};
 use pfl::fl::model::RustClip;
 use pfl::fl::postprocess::{Postprocessor, PpEnv};
 use pfl::fl::stats::Statistics;
 use pfl::privacy::{
-    Accountant, AccountantParams, BandedMatrixFactorization, GaussianMechanism, PldAccountant,
-    RdpAccountant,
+    Accountant, AccountantParams, BandedMatrixFactorization, PldAccountant, RdpAccountant,
 };
-use pfl::util::bench::{bench, black_box};
-use pfl::util::rng::Rng;
+use pfl::tensor::ops;
+use pfl::util::bench::{
+    alloc_bytes_now, bench, black_box, write_bench_json, BenchRecord, CountingAlloc,
+};
+use pfl::util::rng::{CtrRng, Rng};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const PAR_THREADS: usize = 8;
+
+fn ctx(t: u64) -> CentralContext {
+    CentralContext::train(t, 50, LocalParams::default(), 1)
+}
+
+fn env(rng: &mut Rng, threads: usize) -> PpEnv<'_> {
+    PpEnv {
+        clip: &RustClip,
+        rng,
+        user_len: 0,
+        uid: 0,
+        noise_key: 0x5EED,
+        noise_threads: threads,
+        noise_nanos: 0,
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    let dims = [119_569usize, 1_964_640]; // mlp_flair / lm_so param counts
-    let ctx = CentralContext::train(5, 50, LocalParams::default(), 1);
+    let mut records = Vec::new();
 
+    // --- serial vs counter-parallel Gaussian fill --------------------
+    let dims = [100_000usize, 1_000_000, 10_000_000];
+    let mut serial_1m = f64::NAN;
+    let mut par_1m = f64::NAN;
     for &d in &dims {
-        let gauss = GaussianMechanism::new(1.0, 1.0, 0.1);
-        let mut rng = Rng::seed_from_u64(0);
-        bench(&format!("gaussian/server-noise d={d}"), 2, 10, || {
-            let mut s = Statistics::new_update(vec![0.01f32; d], 50.0);
-            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
-            gauss.postprocess_server(&mut s, &ctx, &mut env).unwrap();
-            black_box(s.weight);
+        let mut v = vec![0.0f32; d];
+        let mut rng = Rng::seed_from_u64(7);
+        let iters = if d >= 10_000_000 { 4 } else { 8 };
+        let r = bench(&format!("noise-fill/serial d={d}"), 1, iters, || {
+            black_box(ops::add_gaussian_noise(&mut v, 1.0, &mut rng));
         });
+        if d == 1_000_000 {
+            serial_1m = r.median.as_nanos() as f64;
+        }
+        records.push(BenchRecord::new(&r, 0.0));
 
-        let bmf = BandedMatrixFactorization::new(1.0, 1.0, 0.1, 8);
-        bench(&format!("banded-mf/server-noise d={d} band=8"), 2, 10, || {
-            let mut s = Statistics::new_update(vec![0.01f32; d], 50.0);
-            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 0 };
-            bmf.postprocess_server(&mut s, &ctx, &mut env).unwrap();
-            black_box(s.weight);
-        });
-
-        let clip = GaussianMechanism::new(0.4, 1.0, 0.1);
-        bench(&format!("gaussian/user-clip d={d} (rust path)"), 2, 10, || {
-            let mut s = Statistics::new_update(vec![0.01f32; d], 1.0);
-            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 1 };
-            clip.postprocess_one_user(&mut s, &ctx, &mut env).unwrap();
-            black_box(s.weight);
-        });
+        let ctr = CtrRng::new(0x5EED, 1);
+        for threads in [1usize, PAR_THREADS] {
+            let r = bench(&format!("noise-fill/ctr-{threads} d={d}"), 1, iters, || {
+                black_box(ops::add_gaussian_noise_par(&mut v, 1.0, &ctr, threads));
+            });
+            if d == 1_000_000 && threads == PAR_THREADS {
+                par_1m = r.median.as_nanos() as f64;
+            }
+            records.push(BenchRecord::new(&r, 0.0));
+        }
     }
 
+    let speedup = serial_1m / par_1m;
+    println!("noise-fill d=1e6: ctr-{PAR_THREADS} speedup {speedup:.2}x over serial");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= PAR_THREADS {
+        assert!(
+            speedup >= 3.0,
+            "parallel fill gate: only {speedup:.2}x over serial at d=1e6 ({cores} cores)"
+        );
+    } else {
+        println!("(speedup gate skipped: {cores} cores < {PAR_THREADS})");
+    }
+
+    // --- banded-MF: retained ring vs counter regeneration ------------
+    let d = 1_000_000usize;
+    let band = 8usize;
+
+    // ring reference (legacy noise_threads = 0): the first round
+    // materializes the full band × dim f32 ring
+    let ring_mech = BandedMatrixFactorization::new(1.0, 1.0, 0.1, band);
+    let mut s = Statistics::new_update(vec![0.01f32; d], 50.0);
+    let mut rng = Rng::seed_from_u64(3);
+    let a0 = alloc_bytes_now();
+    ring_mech.postprocess_server(&mut s, &ctx(0), &mut env(&mut rng, 0)).unwrap();
+    let ring_resident = alloc_bytes_now() - a0;
+    assert!(
+        ring_resident >= (band * d * 4) as u64,
+        "ring reference should hold band·dim·4 = {} bytes, saw {ring_resident}",
+        band * d * 4
+    );
+    let mut t = 1u64;
+    let r = bench(&format!("banded-mf/ring d={d} band={band}"), 1, 8, || {
+        ring_mech.postprocess_server(&mut s, &ctx(t), &mut env(&mut rng, 0)).unwrap();
+        t += 1;
+        black_box(s.weight);
+    });
+    records.push(BenchRecord::new(&r, ring_resident as f64));
+
+    // counter regeneration (noise_threads = 8): no retained state; the
+    // per-round scratch must stay under one chunk per worker thread
+    let regen_mech = BandedMatrixFactorization::new(1.0, 1.0, 0.1, band);
+    let mut s = Statistics::new_update(vec![0.01f32; d], 50.0);
+    // steady-round scratch, measured on a warm round past the band
+    regen_mech
+        .postprocess_server(&mut s, &ctx(band as u64), &mut env(&mut rng, PAR_THREADS))
+        .unwrap();
+    let a0 = alloc_bytes_now();
+    regen_mech
+        .postprocess_server(&mut s, &ctx(band as u64 + 1), &mut env(&mut rng, PAR_THREADS))
+        .unwrap();
+    let regen_scratch = alloc_bytes_now() - a0;
+    assert!(
+        regen_scratch <= (PAR_THREADS * ops::NOISE_CHUNK * 4) as u64,
+        "regen scratch gate: {regen_scratch} bytes/round exceeds one chunk per thread ({})",
+        PAR_THREADS * ops::NOISE_CHUNK * 4
+    );
+    let mut t = band as u64 + 2;
+    let r = bench(&format!("banded-mf/regen-{PAR_THREADS} d={d} band={band}"), 1, 8, || {
+        regen_mech.postprocess_server(&mut s, &ctx(t), &mut env(&mut rng, PAR_THREADS)).unwrap();
+        t += 1;
+        black_box(s.weight);
+    });
+    records.push(BenchRecord::new(&r, regen_scratch as f64));
+    println!(
+        "banded-mf d={d} band={band}: ring resident {ring_resident} B vs regen scratch \
+         {regen_scratch} B/round"
+    );
+
+    // --- accountant ε evaluations (once per calibration step) --------
     println!("# accountant epsilon evaluations (once per calibration step)");
     let p = AccountantParams { sampling_rate: 1e-3, delta: 1e-6, steps: 1500 };
-    bench("rdp/epsilon T=1500", 1, 5, || {
+    let r = bench("rdp/epsilon T=1500", 1, 5, || {
         black_box(RdpAccountant.epsilon(0.7, &p));
     });
-    bench("pld/epsilon T=1500 (fft)", 1, 3, || {
+    records.push(BenchRecord::new(&r, 0.0));
+    let r = bench("pld/epsilon T=1500 (fft)", 1, 3, || {
         black_box(PldAccountant::default().epsilon(0.7, &p));
     });
+    records.push(BenchRecord::new(&r, 0.0));
+
+    write_bench_json("BENCH_privacy.json", &records)?;
+    println!("wrote BENCH_privacy.json");
     Ok(())
 }

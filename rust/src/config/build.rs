@@ -294,6 +294,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         log_every: 0,
         arena: cfg.arena_config(),
         fold_tree: cfg.fold_tree,
+        noise_threads: cfg.noise_threads,
         ..Default::default()
     });
     if let Some(s) = source {

@@ -155,6 +155,13 @@ pub struct Config {
     /// Reduce worker partials with the parallel binary tree fold instead
     /// of the serial left fold (CLI `--fold-tree`).
     pub fold_tree: bool,
+    /// Worker threads for the counter-based DP noise engine (CLI
+    /// `--noise-threads`). 0 (default) keeps the legacy sequential noise
+    /// stream byte-identical to previous releases; N ≥ 1 switches every
+    /// mechanism to counter-keyed parallel kernels (bit-identical output
+    /// for any N) and lets banded-MF regenerate noise instead of
+    /// retaining its `band × dim` ring.
+    pub noise_threads: usize,
     pub seed: u64,
 }
 
@@ -321,6 +328,7 @@ impl Config {
                     ("store_compression", s(self.store_compression.clone())),
                     ("wire_quantization", s(self.wire_quantization.clone())),
                     ("fold_tree", Value::Bool(self.fold_tree)),
+                    ("noise_threads", num(self.noise_threads as f64)),
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
@@ -440,6 +448,11 @@ impl Config {
                 Some(x) => x.as_bool()?,
                 None => false,
             },
+            // optional for configs written before the counter noise engine
+            noise_threads: match e.get("noise_threads") {
+                Some(x) => x.as_usize()?,
+                None => 0,
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -512,6 +525,7 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
+        noise_threads: 0,
         seed: 0,
     }
 }
@@ -562,6 +576,7 @@ fn stackoverflow(dp: bool) -> Config {
         store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
+        noise_threads: 0,
         seed: 0,
     }
 }
@@ -615,6 +630,7 @@ fn flair(iid: bool, dp: bool) -> Config {
         store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
+        noise_threads: 0,
         seed: 0,
     }
 }
@@ -664,6 +680,7 @@ fn llm(flavor: &str, dp: bool) -> Config {
         store_compression: "none".into(),
         wire_quantization: "none".into(),
         fold_tree: false,
+        noise_threads: 0,
         seed: 0,
     }
 }
@@ -837,6 +854,7 @@ mod tests {
                     && !l.contains("store_compression")
                     && !l.contains("wire_quantization")
                     && !l.contains("fold_tree")
+                    && !l.contains("noise_threads")
             })
             .collect::<Vec<_>>()
             .join("\n");
@@ -853,17 +871,21 @@ mod tests {
         assert_eq!(parsed.store_compression, "none");
         assert_eq!(parsed.wire_quantization, "none");
         assert!(!parsed.fold_tree);
+        assert_eq!(parsed.noise_threads, 0, "pre-engine configs keep the legacy noise path");
     }
 
     #[test]
     fn quantize_and_fold_tree_knobs_roundtrip() {
         let mut c = preset("cifar10-iid").unwrap();
         assert_eq!(c.wire_quantization_bits().unwrap(), None);
+        assert_eq!(c.noise_threads, 0, "presets default to the legacy noise path");
         c.wire_quantization = "int8".into();
         c.fold_tree = true;
+        c.noise_threads = 4;
         let back = Config::from_json(&c.to_json()).unwrap();
         assert_eq!(back.wire_quantization, "int8");
         assert!(back.fold_tree);
+        assert_eq!(back.noise_threads, 4);
         assert_eq!(back.wire_quantization_bits().unwrap(), Some(8));
         c.wire_quantization = "f16".into();
         assert_eq!(c.wire_quantization_bits().unwrap(), Some(16));

@@ -69,6 +69,13 @@ pub struct RunParams {
     /// its own right (fixed adjacent pairing) but associates f32 adds
     /// differently.
     pub fold_tree: bool,
+    /// Worker threads for the counter-based DP noise engine
+    /// (`--noise-threads`). 0 (default) keeps the legacy sequential
+    /// noise stream byte-identical to previous releases; N ≥ 1 switches
+    /// every mechanism to counter-keyed parallel kernels whose output is
+    /// bit-identical for any N — and lets banded-MF regenerate past
+    /// rounds' noise instead of retaining a `band × dim` ring.
+    pub noise_threads: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,6 +96,7 @@ impl Default for RunParams {
             clip_backend: ClipBackend::Rust,
             arena: crate::tensor::ArenaConfig::default(),
             fold_tree: false,
+            noise_threads: 0,
         }
     }
 }
@@ -234,6 +242,7 @@ impl BackendBuilder {
             seed: self.params.seed,
             use_hlo_clip: self.params.clip_backend == ClipBackend::Hlo,
             arena: self.params.arena,
+            noise_threads: self.params.noise_threads,
         };
         let pool = WorkerPool::new(self.params.num_workers, shared)?;
         Ok(SimulatedBackend {
@@ -774,7 +783,7 @@ impl SimulatedBackend {
         }
         outcome.straggler_nanos.push(0);
         metrics.add_central("sys/straggler-secs", 0.0, 1.0);
-        self.postprocess_server(acc.as_mut(), ctx, server_rng, &mut metrics)?;
+        self.postprocess_server(acc.as_mut(), ctx, server_rng, &mut metrics, &mut outcome.counters)?;
         Ok((acc, metrics))
     }
 
@@ -1029,7 +1038,7 @@ impl SimulatedBackend {
         }
 
         // --- server postprocessors, reversed (paper Alg. 1 l.18) --------
-        self.postprocess_server(agg.as_mut(), ctx, server_rng, &mut metrics)?;
+        self.postprocess_server(agg.as_mut(), ctx, server_rng, &mut metrics, &mut outcome.counters)?;
         Ok((agg, metrics))
     }
 
@@ -1039,12 +1048,28 @@ impl SimulatedBackend {
         ctx: &CentralContext,
         server_rng: &mut Rng,
         metrics: &mut Metrics,
+        counters: &mut Counters,
     ) -> Result<()> {
         if let Some(agg) = agg {
-            let mut env = PpEnv { clip: &RustClip, rng: server_rng, user_len: 0, uid: 0 };
+            let mut env = PpEnv {
+                clip: &RustClip,
+                rng: server_rng,
+                user_len: 0,
+                uid: 0,
+                // the run seed is the counter engine's base key: every
+                // round's noise streams derive from (seed, round), which
+                // is what lets banded-MF regenerate past rounds' z's
+                noise_key: self.params.seed,
+                noise_threads: self.params.noise_threads,
+                noise_nanos: 0,
+            };
             for pp in self.postprocessors.iter().rev() {
                 let pm = pp.postprocess_server(agg, ctx, &mut env)?;
                 metrics.merge(&pm);
+            }
+            if env.noise_nanos > 0 {
+                counters.noise_nanos += env.noise_nanos;
+                metrics.add_central("sys/noise-nanos", env.noise_nanos as f64, 1.0);
             }
         }
         Ok(())
@@ -1356,6 +1381,35 @@ mod tests {
         assert!(serial.final_metric("sys/fold-tree-depth").is_none());
         let tree2 = tree_run();
         assert_eq!(tree.central, tree2.central, "tree fold not deterministic");
+    }
+
+    #[test]
+    fn noise_threads_do_not_change_learning() {
+        // counter noise engine invariance through the full loop: the same
+        // seed gives a bit-identical run for any thread count, and the
+        // run reports noise time (sys/noise-nanos + Counters::noise_nanos)
+        let run = |threads: usize| {
+            build_backend_cfg(
+                5,
+                16,
+                RunParams { num_workers: 2, noise_threads: threads, ..Default::default() },
+                vec![Box::new(crate::privacy::GaussianMechanism::new(1.0, 0.5, 1.0))],
+            )
+            .run(vec![1.0; 16], &mut [])
+            .unwrap()
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        let t4 = run(4);
+        assert_eq!(t1.central, t2.central, "1 vs 2 noise threads diverged");
+        assert_eq!(t1.central, t4.central, "1 vs 4 noise threads diverged");
+        assert!(t1.counters.noise_nanos > 0, "noise time not accounted");
+        assert!(t1.final_metric("sys/noise-nanos").is_some());
+        // the legacy path still works and reports too — but draws a
+        // different (stateful-stream) noise sequence
+        let t0 = run(0);
+        assert!(t0.counters.noise_nanos > 0);
+        assert_ne!(t0.central, t1.central, "legacy and counter streams should differ");
     }
 
     #[test]

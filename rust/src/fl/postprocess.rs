@@ -19,7 +19,7 @@ use super::metrics::Metrics;
 use super::model::ClipKernel;
 use super::stats::{StatValue, Statistics};
 use crate::tensor::ops;
-use crate::util::rng::Rng;
+use crate::util::rng::{round_key, CtrRng, Rng};
 
 /// Execution environment handed to a postprocessor: the calling side's
 /// clip kernel (the worker's L1 Pallas artifact on the user path, a pure
@@ -35,6 +35,29 @@ pub struct PpEnv<'a> {
     /// residuals, which must survive the user being re-dispatched to a
     /// different worker in a later round.
     pub uid: usize,
+    /// Run-level base key for the counter-based noise engine. Mechanisms
+    /// derive per-round streams via [`PpEnv::ctr`]; carrying the *base*
+    /// (not a per-round key) lets banded-MF regenerate past rounds'
+    /// noise from `(base, round)` alone.
+    pub noise_key: u64,
+    /// Worker threads for counter-based noise kernels. 0 selects the
+    /// legacy sequential `env.rng` path (byte-identical to pre-engine
+    /// output); N ≥ 1 selects the counter engine, whose output is
+    /// bit-identical for every N.
+    pub noise_threads: usize,
+    /// Wall-clock nanoseconds spent generating DP noise this call chain;
+    /// accumulated by mechanisms, drained into `Counters::noise_nanos`
+    /// and the `sys/noise-nanos` metric by the caller.
+    pub noise_nanos: u64,
+}
+
+impl PpEnv<'_> {
+    /// Counter RNG for `(mechanism stream, round)`: a pure function of
+    /// the run's noise key, so any round's stream can be re-derived at
+    /// any later time (the banded-MF regeneration contract).
+    pub fn ctr(&self, stream: u64, round: u64) -> CtrRng {
+        CtrRng::new(round_key(self.noise_key, round), stream)
+    }
 }
 
 /// Clip a statistic value to an L2 bound through the side's clip kernel.
@@ -396,7 +419,15 @@ mod tests {
 
     fn env(rng: &mut Rng, user_len: usize) -> PpEnv<'_> {
         // rng borrowed; clip is the pure-Rust oracle
-        PpEnv { clip: &RustClip, rng, user_len, uid: 0 }
+        PpEnv {
+            clip: &RustClip,
+            rng,
+            user_len,
+            uid: 0,
+            noise_key: 0,
+            noise_threads: 0,
+            noise_nanos: 0,
+        }
     }
 
     #[test]

@@ -97,6 +97,11 @@ pub struct WorkerShared {
     /// Accumulation-arena tuning (sparse spill threshold); each worker
     /// builds its resident [`StatsArena`] from this.
     pub arena: crate::tensor::ArenaConfig,
+    /// Counter noise engine setting (`RunParams::noise_threads`). On the
+    /// worker path N ≥ 1 selects the counter engine but runs it on the
+    /// worker's own thread (no nested parallelism; the counter output is
+    /// bit-identical for any thread count anyway).
+    pub noise_threads: usize,
 }
 
 /// The replica pool: w worker threads plus (baselines only) a coordinator
@@ -456,11 +461,25 @@ fn run_worker_round(
                         ^ ctx.seed.rotate_left(17)
                         ^ (uid as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
                 );
-                let mut env = PpEnv { clip, rng: &mut user_rng, user_len, uid };
+                let mut env = PpEnv {
+                    clip,
+                    rng: &mut user_rng,
+                    user_len,
+                    uid,
+                    // counter streams on the worker path key off the run
+                    // seed too (mechanisms salt them per uid); cap the
+                    // engine to one thread here — each user already runs
+                    // on its own worker, and counter output is
+                    // bit-identical for any thread count
+                    noise_key: shared.seed,
+                    noise_threads: shared.noise_threads.min(1),
+                    noise_nanos: 0,
+                };
                 for pp in shared.postprocessors.iter() {
                     let pm = pp.postprocess_one_user(&mut stats, ctx, &mut env)?;
                     metrics.merge(&pm);
                 }
+                counters.noise_nanos += env.noise_nanos;
             }
 
             if profile.cpu_roundtrip {
@@ -655,6 +674,7 @@ pub(crate) mod tests {
             seed: 0,
             use_hlo_clip: false,
             arena: crate::tensor::ArenaConfig::default(),
+            noise_threads: 0,
         };
         WorkerPool::new(workers, shared).unwrap()
     }
@@ -778,6 +798,7 @@ pub(crate) mod tests {
             seed: 0,
             use_hlo_clip: false,
             arena: crate::tensor::ArenaConfig::default(),
+            noise_threads: 0,
         };
         let pool = WorkerPool::new(2, shared).unwrap();
         let ctx = CentralContext::train(0, 4, Default::default(), 1);

@@ -46,6 +46,7 @@ COMMANDS
                                     [--data-store DIR] [--cache-users N]
                                     [--prefetch-depth N] [--store-mmap on|off]
                                     [--quantize none|f16|int8] [--fold-tree]
+                                    [--noise-threads N]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
   materialize  write a preset/config dataset to an on-disk sharded store
@@ -341,6 +342,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("fold-tree") {
         cfg.fold_tree = true;
     }
+    cfg.noise_threads = args.get_usize("noise-threads", cfg.noise_threads)?;
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }

@@ -93,6 +93,10 @@ pub struct Counters {
     pub mmap_stall_nanos: u64,
     /// Portion of `prefetch_stall_nanos` from the portable pread path.
     pub pread_stall_nanos: u64,
+    /// Nanoseconds spent generating DP noise (server mechanisms and
+    /// worker-local noise), whichever engine (legacy sequential or
+    /// counter-parallel) produced it.
+    pub noise_nanos: u64,
 }
 
 impl Counters {
@@ -119,6 +123,7 @@ impl Counters {
         self.decode_nanos += o.decode_nanos;
         self.mmap_stall_nanos += o.mmap_stall_nanos;
         self.pread_stall_nanos += o.pread_stall_nanos;
+        self.noise_nanos += o.noise_nanos;
     }
 
     pub fn busy(&self) -> Duration {
@@ -289,6 +294,7 @@ mod tests {
             decode_nanos: 11,
             mmap_stall_nanos: 5,
             pread_stall_nanos: 4,
+            noise_nanos: 13,
             ..Default::default()
         };
         a.merge(&b);
@@ -305,6 +311,7 @@ mod tests {
         assert_eq!(a.decode_nanos, 11);
         assert_eq!(a.mmap_stall_nanos, 5);
         assert_eq!(a.pread_stall_nanos, 4);
+        assert_eq!(a.noise_nanos, 13);
     }
 
     #[test]

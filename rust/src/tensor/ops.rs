@@ -13,7 +13,7 @@
 //! `fl::algorithm` (SCAFFOLD control variates), `fl::central_opt`
 //! (central step), and `crate::util`, which re-exports the common names.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{CtrRng, Rng, CTR_BLOCK};
 
 /// Lane width the kernels are written for (f32x8 — one AVX2 register).
 pub const LANES: usize = 8;
@@ -479,6 +479,178 @@ pub fn add_laplace_noise(v: &mut [f32], scale: f64, rng: &mut Rng) -> f64 {
     sq.sqrt()
 }
 
+// ----------------------------------------------------------------------
+// Counter-based parallel noise kernels (DP mechanisms' hot path)
+// ----------------------------------------------------------------------
+
+/// Work unit of the parallel noise kernels, in samples. Chunk boundaries
+/// are fixed at multiples of this (a [`CTR_BLOCK`] multiple), so the
+/// generated vector — and the per-chunk partial norm sums — are
+/// bit-identical for *any* thread count: threads only change which
+/// worker owns a chunk, never where chunks fall.
+pub const NOISE_CHUNK: usize = 1 << 16;
+
+/// Run `f(chunk, global_offset) -> partial_sq` over fixed
+/// [`NOISE_CHUNK`]-sized chunks of `v`, on `threads` scoped workers
+/// (≤ 1 runs inline). Partial squared-norm sums land in a per-chunk
+/// table and are reduced in chunk order, so the returned L2 norm is as
+/// thread-count-invariant as the vector contents.
+fn noise_par_chunks<F>(v: &mut [f32], threads: usize, f: F) -> f64
+where
+    F: Fn(&mut [f32], usize) -> f64 + Sync,
+{
+    if v.is_empty() {
+        return 0.0;
+    }
+    let nchunks = v.len().div_ceil(NOISE_CHUNK);
+    let mut partial = vec![0f64; nchunks];
+    let threads = threads.max(1).min(nchunks);
+    if threads == 1 {
+        for (ci, chunk) in v.chunks_mut(NOISE_CHUNK).enumerate() {
+            partial[ci] = f(chunk, ci * NOISE_CHUNK);
+        }
+    } else {
+        // contiguous spans of whole chunks per worker (like tree_reduce,
+        // scoped threads — no shared mutable state, no locks)
+        let per = nchunks.div_ceil(threads);
+        let mut spans: Vec<(usize, &mut [f32], &mut [f64])> = Vec::with_capacity(threads);
+        let mut rv: &mut [f32] = v;
+        let mut rp: &mut [f64] = &mut partial;
+        let mut start = 0usize;
+        while !rv.is_empty() {
+            let take = (per * NOISE_CHUNK).min(rv.len());
+            let (vh, vt) = rv.split_at_mut(take);
+            let (ph, pt) = rp.split_at_mut(vh.len().div_ceil(NOISE_CHUNK));
+            spans.push((start, vh, ph));
+            start += take;
+            rv = vt;
+            rp = pt;
+        }
+        std::thread::scope(|s| {
+            let fr = &f;
+            let handles: Vec<_> = spans
+                .into_iter()
+                .map(|(base, vh, ph)| {
+                    s.spawn(move || {
+                        for (ci, chunk) in vh.chunks_mut(NOISE_CHUNK).enumerate() {
+                            ph[ci] = fr(chunk, base + ci * NOISE_CHUNK);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("noise worker panicked");
+            }
+        });
+    }
+    partial.iter().sum::<f64>().sqrt()
+}
+
+/// One chunk of `fill`/`add`: regenerate N(0, std²) samples positioned at
+/// `offset..offset+chunk.len()` of the stream and either overwrite
+/// (`add = false`, [`Rng::fill_normal_f32`] semantics) or add in place
+/// (`add = true`, [`add_gaussian_noise`] semantics). Returns the chunk's
+/// squared noise norm (f64-accumulated, exactly like the legacy loop).
+fn normal_chunk_ctr(chunk: &mut [f32], offset: usize, std: f64, rng: &CtrRng, add: bool) -> f64 {
+    debug_assert_eq!(offset % CTR_BLOCK, 0);
+    let mut sq = 0f64;
+    let mut i = 0usize;
+    while i < chunk.len() {
+        let z = rng.normal_block(((offset + i) / CTR_BLOCK) as u64);
+        let take = (chunk.len() - i).min(CTR_BLOCK);
+        for (j, &zj) in z.iter().take(take).enumerate() {
+            let n = zj * std;
+            sq += n * n;
+            if add {
+                chunk[i + j] += n as f32;
+            } else {
+                chunk[i + j] = n as f32;
+            }
+        }
+        i += take;
+    }
+    sq
+}
+
+/// One chunk of the fused axpy: `chunk[i] += a · n32[i]` where
+/// `n32[i] = (z[offset+i]·std) as f32` is the f32 sample a retained ring
+/// buffer would have stored — the cast happens *before* the f32
+/// multiply-add, so regeneration is bit-identical to
+/// [`CtrRng`]-filled-ring-then-[`axpy`].
+fn axpy_normal_chunk_ctr(chunk: &mut [f32], offset: usize, a: f32, std: f64, rng: &CtrRng) {
+    debug_assert_eq!(offset % CTR_BLOCK, 0);
+    let mut i = 0usize;
+    while i < chunk.len() {
+        let z = rng.normal_block(((offset + i) / CTR_BLOCK) as u64);
+        let take = (chunk.len() - i).min(CTR_BLOCK);
+        for (j, &zj) in z.iter().take(take).enumerate() {
+            chunk[i + j] += a * ((zj * std) as f32);
+        }
+        i += take;
+    }
+}
+
+/// Counter-based parallel variant of [`Rng::fill_normal_f32`]:
+/// `dst[i] = (z_i·std) as f32` with `z_i` sample `i` of `rng`'s stream.
+/// Bit-identical for any `threads` ≥ 0 (0/1 run inline).
+pub fn fill_normal_f32_ctr(dst: &mut [f32], std: f64, rng: &CtrRng, threads: usize) {
+    noise_par_chunks(dst, threads, |chunk, offset| {
+        normal_chunk_ctr(chunk, offset, std, rng, false)
+    });
+}
+
+/// Counter-based parallel variant of [`add_gaussian_noise`]: adds iid
+/// N(0, std²) to `v` in place and returns the noise L2 norm. Both the
+/// vector and the returned norm are bit-identical for any thread count
+/// (per-chunk partial sums reduce in fixed chunk order).
+pub fn add_gaussian_noise_par(v: &mut [f32], std: f64, rng: &CtrRng, threads: usize) -> f64 {
+    if std <= 0.0 {
+        return 0.0;
+    }
+    noise_par_chunks(v, threads, |chunk, offset| {
+        normal_chunk_ctr(chunk, offset, std, rng, true)
+    })
+}
+
+/// Fused `y += a · noise(rng, std)` without materializing the noise
+/// vector: the single-stream view of [`axpy_normal_mix_ctr`].
+pub fn axpy_normal_ctr(y: &mut [f32], a: f32, std: f64, rng: &CtrRng, threads: usize) {
+    axpy_normal_mix_ctr(y, &[(a, *rng)], std, threads);
+}
+
+/// The banded-MF fused mix: `y[i] += Σ_j a_j · n_j[i]` with `n_j` the f32
+/// noise of the j-th counter stream — every band's z_{t−k} regenerates
+/// chunk by chunk inside ONE parallel pass (O(chunk) scratch per worker)
+/// instead of being read from a retained `band × dim` ring. Per element
+/// the terms accumulate in slice order, matching a ring mixed by
+/// repeated [`axpy`] calls in the same order bit for bit.
+pub fn axpy_normal_mix_ctr(y: &mut [f32], terms: &[(f32, CtrRng)], std: f64, threads: usize) {
+    noise_par_chunks(y, threads, |chunk, offset| {
+        for &(a, ref rng) in terms {
+            axpy_normal_chunk_ctr(chunk, offset, a, std, rng);
+        }
+        0.0
+    });
+}
+
+/// Counter-based parallel variant of [`add_laplace_noise`]: adds iid
+/// Laplace(0, scale) to `v` in place (sample `i` consumes counter `i`)
+/// and returns the noise L2 norm; bit-identical for any thread count.
+pub fn add_laplace_noise_ctr(v: &mut [f32], scale: f64, rng: &CtrRng, threads: usize) -> f64 {
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    noise_par_chunks(v, threads, |chunk, offset| {
+        let mut sq = 0f64;
+        for (i, x) in chunk.iter_mut().enumerate() {
+            let n = rng.laplace_at((offset + i) as u64, scale);
+            sq += n * n;
+            *x += n as f32;
+        }
+        sq
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +860,99 @@ mod tests {
             let want = v.iter().fold(0f32, |a, x| a.max(x.abs()));
             assert_eq!(max_abs(&v), want);
         }
+    }
+
+    #[test]
+    fn ctr_noise_bit_identical_across_thread_counts() {
+        // lengths straddling chunk and block boundaries: empty, sub-block,
+        // sub-chunk, exact chunk, chunk+tail, several chunks + ragged tail
+        for n in [0usize, 5, 1000, NOISE_CHUNK, NOISE_CHUNK + 3, 3 * NOISE_CHUNK + 17] {
+            let rng = CtrRng::new(0xBEEF, 1);
+            let mut fills: Vec<Vec<f32>> = Vec::new();
+            let mut adds: Vec<(Vec<f32>, f64)> = Vec::new();
+            let mut axpys: Vec<Vec<f32>> = Vec::new();
+            let mut laps: Vec<(Vec<f32>, f64)> = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let mut f = vec![0.0f32; n];
+                fill_normal_f32_ctr(&mut f, 1.5, &rng, threads);
+                fills.push(f);
+                let mut a = vec![0.25f32; n];
+                let norm = add_gaussian_noise_par(&mut a, 1.5, &rng, threads);
+                adds.push((a, norm));
+                let mut y = vec![0.5f32; n];
+                axpy_normal_ctr(&mut y, 0.375, 1.5, &rng, threads);
+                axpys.push(y);
+                let mut l = vec![0.0f32; n];
+                let lnorm = add_laplace_noise_ctr(&mut l, 2.0, &rng, threads);
+                laps.push((l, lnorm));
+            }
+            for t in 1..3 {
+                assert_eq!(fills[0], fills[t], "fill n={n} threads differ");
+                assert_eq!(adds[0].0, adds[t].0, "add n={n} threads differ");
+                assert_eq!(
+                    adds[0].1.to_bits(),
+                    adds[t].1.to_bits(),
+                    "add norm n={n} threads differ"
+                );
+                assert_eq!(axpys[0], axpys[t], "axpy n={n} threads differ");
+                assert_eq!(laps[0].0, laps[t].0, "laplace n={n} threads differ");
+                assert_eq!(laps[0].1.to_bits(), laps[t].1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ctr_kernels_are_consistent_views_of_one_stream() {
+        let rng = CtrRng::new(7, 3);
+        let n = NOISE_CHUNK + 123;
+        // add over zeros == fill (same samples, same positions)
+        let mut filled = vec![0.0f32; n];
+        fill_normal_f32_ctr(&mut filled, 2.0, &rng, 2);
+        let mut added = vec![0.0f32; n];
+        let norm = add_gaussian_noise_par(&mut added, 2.0, &rng, 2);
+        assert_eq!(filled, added);
+        assert!(norm > 0.0);
+        // fused axpy == fill-then-axpy against a materialized buffer
+        let base: Vec<f32> = (0..n).map(|i| (i as f32 * 0.001).sin()).collect();
+        let mut fused = base.clone();
+        axpy_normal_ctr(&mut fused, 0.5, 2.0, &rng, 4);
+        let mut reference = base;
+        axpy(&mut reference, 0.5, &filled);
+        assert_eq!(fused, reference);
+        // mix of two streams == two sequential single-stream axpys
+        let rng2 = CtrRng::new(7, 4);
+        let mut mixed = vec![1.0f32; n];
+        axpy_normal_mix_ctr(&mut mixed, &[(0.5, rng), (0.25, rng2)], 2.0, 3);
+        let mut seq = vec![1.0f32; n];
+        axpy_normal_ctr(&mut seq, 0.5, 2.0, &rng, 1);
+        axpy_normal_ctr(&mut seq, 0.25, 2.0, &rng2, 1);
+        assert_eq!(mixed, seq);
+    }
+
+    #[test]
+    fn ctr_noise_magnitudes_and_zero_guards() {
+        let rng = CtrRng::new(11, 0);
+        let mut v = vec![0.0f32; 20_000];
+        let norm = add_gaussian_noise_par(&mut v, 2.0, &rng, 2);
+        let expect = (20_000f64).sqrt() * 2.0; // E‖noise‖ = √d·σ
+        assert!((norm / expect - 1.0).abs() < 0.05, "{norm} vs {expect}");
+        // the returned norm is the norm of what was added
+        let direct = l2_norm(&v);
+        assert!((direct / norm - 1.0).abs() < 1e-4, "{direct} vs {norm}");
+        // zero std/scale are no-ops
+        let mut w = vec![1.0f32; 4];
+        assert_eq!(add_gaussian_noise_par(&mut w, 0.0, &rng, 2), 0.0);
+        assert_eq!(w, vec![1.0; 4]);
+        assert_eq!(add_laplace_noise_ctr(&mut w, 0.0, &rng, 2), 0.0);
+        assert_eq!(w, vec![1.0; 4]);
+        // laplace variance: Var = 2·scale²
+        let mut u = vec![0.0f32; 200_000];
+        add_laplace_noise_ctr(&mut u, 2.0, &rng, 4);
+        let var = u.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / u.len() as f64;
+        assert!((var - 8.0).abs() < 0.3, "laplace var {var}");
+        // chunk granularity must stay block-aligned or chunk stitching
+        // would shear Box–Muller pairs
+        assert_eq!(NOISE_CHUNK % CTR_BLOCK, 0);
     }
 
     #[test]

@@ -448,7 +448,15 @@ fn wire_quantizer_error_feedback_unbiased_over_rounds() {
         let mut sum = vec![0f64; dim];
         for _ in 0..n {
             let mut s = Statistics::new_update(truth.clone(), 1.0);
-            let mut env = PpEnv { clip: &RustClip, rng: &mut rng, user_len: 1, uid: 7 };
+            let mut env = PpEnv {
+                clip: &RustClip,
+                rng: &mut rng,
+                user_len: 1,
+                uid: 7,
+                noise_key: 0,
+                noise_threads: 0,
+                noise_nanos: 0,
+            };
             pp.postprocess_one_user(&mut s, &ctx, &mut env).unwrap();
             let dec = s.update_value().unwrap().to_dense_vec();
             for (a, v) in sum.iter_mut().zip(&dec) {
