@@ -1,0 +1,167 @@
+//! Bench: the distributed wire path (`pfl::comms`) — encode/decode of
+//! round commands and results at a benchmark model's parameter count,
+//! plus a full framed round-trip over a Unix socketpair compared to the
+//! in-process mpsc channel it replaces. The codec is pure appends into a
+//! reused buffer, so the interesting numbers are ns/op, bytes/round and
+//! heap bytes/op (via `CountingAlloc`).
+//!
+//! Results are written to `BENCH_comms.json` so the perf trajectory is
+//! tracked across PRs.
+
+use std::os::unix::net::UnixStream;
+
+use pfl::comms::codec::{
+    decode_round, decode_round_result, encode_round, encode_round_result, FRAME_RESULT,
+    FRAME_ROUND,
+};
+use pfl::comms::wire::{read_frame, write_frame, Cursor};
+use pfl::fl::context::{CentralContext, LocalParams};
+use pfl::fl::stats::{StatValue, Statistics};
+use pfl::fl::{Metrics, RoundResult};
+use pfl::simsys::{Counters, UserCost};
+use pfl::util::bench::{
+    bench_per_op_alloc, black_box, write_bench_json, BenchRecord, CountingAlloc,
+};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// cnn_c10 parameter count — the model the speed tables run (Table 1).
+const DIM: usize = 545_098;
+
+/// A result shaped like one user's fold on the CIFAR-10 benchmark: a
+/// dense model-sized partial, train metrics, populated counters and one
+/// measured user cost.
+fn sample_result(dim: usize) -> RoundResult {
+    let mut partial = Statistics::new_update((0..dim).map(|i| i as f32 * 1e-6).collect(), 8.0);
+    partial.vecs.insert(
+        "c-delta".into(),
+        StatValue::Sparse {
+            dim: dim as u32,
+            idx: vec![3, 999, dim as u32 - 1],
+            val: vec![0.5, -0.25, 1.0],
+        },
+    );
+    let mut metrics = Metrics::new();
+    metrics.add_central("loss", 12.5, 8.0);
+    metrics.add_central("accuracy", 3.0, 8.0);
+    let counters = Counters { users_trained: 1, steps: 20, ..Default::default() };
+    RoundResult {
+        worker: 3,
+        round: 41,
+        seq: 1337,
+        partial: Some(partial),
+        metrics,
+        counters,
+        costs: vec![UserCost { datapoints: 50, nanos: 1_000_000, device_nanos: 600_000 }],
+        error: None,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut records = Vec::new();
+    let result = sample_result(DIM);
+    let ctx = CentralContext::train(41, 16, LocalParams::default(), 7);
+    let central: Vec<f32> = (0..DIM).map(|i| (i % 97) as f32 * 1e-3).collect();
+
+    // ---- result encode/decode (the per-user upload) -----------------
+    let mut buf = Vec::new();
+    encode_round_result(&mut buf, &result);
+    let result_bytes = buf.len();
+    println!("result payload: {:.2} MB at d={DIM}", result_bytes as f64 / 1e6);
+
+    let (r, alloc) = bench_per_op_alloc("encode/round-result", 2, 10, 4, || {
+        for _ in 0..4 {
+            buf.clear();
+            encode_round_result(&mut buf, &result);
+            black_box(buf.len());
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+
+    let (r, alloc) = bench_per_op_alloc("decode/round-result", 2, 10, 4, || {
+        for _ in 0..4 {
+            let mut cur = Cursor::new(&buf);
+            let back = decode_round_result(&mut cur).unwrap();
+            black_box(back.seq);
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+
+    // ---- round command encode/decode (the per-user download) --------
+    let mut cmd_buf = Vec::new();
+    encode_round(&mut cmd_buf, 1337, &ctx, &central, &[41]);
+    println!("round payload:  {:.2} MB at d={DIM}", cmd_buf.len() as f64 / 1e6);
+
+    let (r, alloc) = bench_per_op_alloc("encode/round-cmd", 2, 10, 4, || {
+        for _ in 0..4 {
+            cmd_buf.clear();
+            encode_round(&mut cmd_buf, 1337, &ctx, &central, &[41]);
+            black_box(cmd_buf.len());
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+
+    let (r, alloc) = bench_per_op_alloc("decode/round-cmd", 2, 10, 4, || {
+        for _ in 0..4 {
+            let mut cur = Cursor::new(&cmd_buf);
+            let back = decode_round(&mut cur).unwrap();
+            black_box(back.seq);
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+
+    // ---- framed round-trip: socketpair vs the mpsc channel ----------
+    // echo peer: read a frame, write it straight back
+    let (mut here, mut there) = UnixStream::pair()?;
+    let echo = std::thread::spawn(move || {
+        while let Ok((tag, payload, _)) = read_frame(&mut there) {
+            if tag == FRAME_ROUND {
+                break;
+            }
+            if write_frame(&mut there, tag, &payload).is_err() {
+                break;
+            }
+        }
+    });
+    let (r, alloc) = bench_per_op_alloc("roundtrip/socketpair", 2, 10, 2, || {
+        for _ in 0..2 {
+            write_frame(&mut here, FRAME_RESULT, &buf).unwrap();
+            let (_, back, _) = read_frame(&mut here).unwrap();
+            black_box(back.len());
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+    write_frame(&mut here, FRAME_ROUND, &[]).unwrap(); // stop the echo peer
+    echo.join().unwrap();
+
+    // baseline: the same payload bytes through an in-process channel
+    // pair (what the threaded WorkerPool pays instead of the socket)
+    let (tx, rx) = std::sync::mpsc::channel::<Vec<u8>>();
+    let (tx2, rx2) = std::sync::mpsc::channel::<Vec<u8>>();
+    let pong = std::thread::spawn(move || {
+        while let Ok(v) = rx.recv() {
+            if v.is_empty() || tx2.send(v).is_err() {
+                break;
+            }
+        }
+    });
+    let (r, alloc) = bench_per_op_alloc("roundtrip/mpsc-channel", 2, 10, 2, || {
+        for _ in 0..2 {
+            tx.send(buf.clone()).unwrap();
+            black_box(rx2.recv().unwrap().len());
+        }
+    });
+    records.push(BenchRecord::new(&r, alloc));
+    tx.send(Vec::new()).unwrap();
+    pong.join().unwrap();
+
+    records.push(BenchRecord {
+        name: "bytes/round-result".into(),
+        ns_per_op: result_bytes as f64,
+        alloc_bytes_per_op: 0.0,
+    });
+    write_bench_json("BENCH_comms.json", &records)?;
+    println!("wrote BENCH_comms.json ({} records)", records.len());
+    Ok(())
+}

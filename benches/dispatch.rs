@@ -131,6 +131,7 @@ fn spin_pool(dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
             seed: 0,
             use_hlo_clip: false,
             arena: pfl::tensor::ArenaConfig::default(),
+            noise_threads: 0,
         },
     )
     .unwrap()
@@ -174,7 +175,7 @@ fn main() -> anyhow::Result<()> {
         steals_total += steal_count(&pulled);
         gaps_ws.push(straggler_gap_nanos(&busy));
     }
-    pool.shutdown();
+    pool.shutdown()?;
 
     let (gap_static, gap_ws) = (median(gaps_static), median(gaps_ws));
     println!("straggler gap (median of 5 rounds, 4 workers, lognormal cohort 48):");

@@ -1,0 +1,820 @@
+//! Explicit wire encodings for every type that crosses the
+//! dispatcher↔worker seam (DESIGN.md §7).
+//!
+//! One rule: a codec function is the *only* place a given type's byte
+//! layout exists. The in-process coordinator tax (`fl/worker.rs`) and
+//! the socket transport both call in here, so there is exactly one wire
+//! path to version. The layout is pinned by fixture tests below —
+//! change a byte, bump [`super::wire::VERSION`].
+//!
+//! All sizes/counts are LEB128 varints, all scalars little-endian,
+//! except `CentralContext::seed` which is a fixed 8-byte LE u64 (seeds
+//! are uniformly distributed, so a varint would usually cost 10 bytes).
+
+use super::wire::{self, Cursor};
+use super::CommError;
+use crate::fl::context::{CentralContext, DispatchMode, DispatchSpec, LocalParams, Population};
+use crate::fl::metrics::{MetricValue, Metrics};
+use crate::fl::stats::Statistics;
+use crate::fl::worker::{Cmd, RoundResult};
+use crate::simsys::{Counters, UserCost};
+use crate::tensor::StatValue;
+use std::sync::Arc;
+
+// ------------------------------------------------------------ frame tags
+
+/// worker → server, first frame after the preamble: identify yourself.
+pub const FRAME_HELLO: u8 = 1;
+/// server → worker, handshake reply: slot assignment + run config.
+pub const FRAME_SETUP: u8 = 2;
+/// server → worker: execute one seq-stamped unit of round work.
+pub const FRAME_ROUND: u8 = 3;
+/// worker → server: the [`RoundResult`] for one `FRAME_ROUND`.
+pub const FRAME_RESULT: u8 = 4;
+/// worker → server: liveness beacon (empty payload).
+pub const FRAME_HEARTBEAT: u8 = 5;
+/// server → worker: orderly shutdown (empty payload).
+pub const FRAME_STOP: u8 = 6;
+
+// ------------------------------------------------------------- handshake
+
+/// Worker's self-introduction (payload of [`FRAME_HELLO`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub pid: u32,
+}
+
+/// Server's handshake reply (payload of [`FRAME_SETUP`]): which worker
+/// slot this connection fills, and everything needed to reconstruct the
+/// training environment (the full run config as JSON — datasets here
+/// are config-derived, so shipping the config ships the data).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Setup {
+    pub worker: usize,
+    pub use_hlo_clip: bool,
+    /// Interval at which the worker must beacon; the server declares a
+    /// worker dead after 3× this without any frame.
+    pub heartbeat_ms: u64,
+    pub config_json: String,
+}
+
+pub fn encode_hello(buf: &mut Vec<u8>, h: &Hello) {
+    wire::put_varint(buf, u64::from(h.pid));
+}
+
+pub fn decode_hello(cur: &mut Cursor) -> Result<Hello, CommError> {
+    Ok(Hello { pid: cur.varint()? as u32 })
+}
+
+pub fn encode_setup(buf: &mut Vec<u8>, s: &Setup) {
+    wire::put_varint(buf, s.worker as u64);
+    wire::put_bool(buf, s.use_hlo_clip);
+    wire::put_varint(buf, s.heartbeat_ms);
+    wire::put_str(buf, &s.config_json);
+}
+
+pub fn decode_setup(cur: &mut Cursor) -> Result<Setup, CommError> {
+    Ok(Setup {
+        worker: cur.varint()? as usize,
+        use_hlo_clip: cur.bool()?,
+        heartbeat_ms: cur.varint()?,
+        config_json: cur.string()?,
+    })
+}
+
+// ------------------------------------------------------------ stat values
+
+const SV_DENSE: u8 = 0;
+const SV_SPARSE: u8 = 1;
+const SV_QUANTIZED: u8 = 2;
+
+pub fn encode_stat_value(buf: &mut Vec<u8>, v: &StatValue) {
+    match v {
+        StatValue::Dense(vals) => {
+            wire::put_u8(buf, SV_DENSE);
+            wire::put_varint(buf, vals.len() as u64);
+            for &x in vals {
+                wire::put_f32_le(buf, x);
+            }
+        }
+        StatValue::Sparse { dim, idx, val } => {
+            wire::put_u8(buf, SV_SPARSE);
+            wire::put_varint(buf, u64::from(*dim));
+            wire::put_varint(buf, idx.len() as u64);
+            for &i in idx {
+                wire::put_u32_le(buf, i);
+            }
+            for &x in val {
+                wire::put_f32_le(buf, x);
+            }
+        }
+        StatValue::Quantized { dim, scale, bits, idx, data } => {
+            wire::put_u8(buf, SV_QUANTIZED);
+            wire::put_varint(buf, u64::from(*dim));
+            wire::put_f32_le(buf, *scale);
+            wire::put_u8(buf, *bits);
+            wire::put_bool(buf, idx.is_some());
+            if let Some(idx) = idx {
+                wire::put_varint(buf, idx.len() as u64);
+                for &i in idx {
+                    wire::put_u32_le(buf, i);
+                }
+            }
+            wire::put_varint(buf, data.len() as u64);
+            buf.extend_from_slice(data);
+        }
+    }
+}
+
+pub fn decode_stat_value(cur: &mut Cursor) -> Result<StatValue, CommError> {
+    match cur.u8()? {
+        SV_DENSE => {
+            let n = cur.len()?;
+            let mut vals = Vec::with_capacity(n.min(cur.remaining() / 4 + 1));
+            for _ in 0..n {
+                vals.push(cur.f32_le()?);
+            }
+            Ok(StatValue::Dense(vals))
+        }
+        SV_SPARSE => {
+            let dim = cur.varint()? as u32;
+            let nnz = cur.len()?;
+            let mut idx = Vec::with_capacity(nnz.min(cur.remaining() / 4 + 1));
+            for _ in 0..nnz {
+                idx.push(cur.u32_le()?);
+            }
+            let mut val = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                val.push(cur.f32_le()?);
+            }
+            Ok(StatValue::Sparse { dim, idx, val })
+        }
+        SV_QUANTIZED => {
+            let dim = cur.varint()? as u32;
+            let scale = cur.f32_le()?;
+            let bits = cur.u8()?;
+            let idx = if cur.bool()? {
+                let nnz = cur.len()?;
+                let mut idx = Vec::with_capacity(nnz.min(cur.remaining() / 4 + 1));
+                for _ in 0..nnz {
+                    idx.push(cur.u32_le()?);
+                }
+                Some(idx)
+            } else {
+                None
+            };
+            let n = cur.len()?;
+            let data = cur.take(n)?.to_vec();
+            Ok(StatValue::Quantized { dim, scale, bits, idx, data })
+        }
+        tag => Err(CommError::BadTag { what: "stat value", tag }),
+    }
+}
+
+pub fn encode_statistics(buf: &mut Vec<u8>, s: &Statistics) {
+    wire::put_f64_le(buf, s.weight);
+    wire::put_varint(buf, s.vecs.len() as u64);
+    for (k, v) in &s.vecs {
+        wire::put_str(buf, k);
+        encode_stat_value(buf, v);
+    }
+}
+
+pub fn decode_statistics(cur: &mut Cursor) -> Result<Statistics, CommError> {
+    let weight = cur.f64_le()?;
+    let n = cur.len()?;
+    let mut stats = Statistics { weight, ..Default::default() };
+    for _ in 0..n {
+        let key = cur.string()?;
+        let value = decode_stat_value(cur)?;
+        stats.vecs.insert(key, value);
+    }
+    Ok(stats)
+}
+
+// --------------------------------------------------------------- metrics
+
+const MV_CENTRAL: u8 = 0;
+const MV_PER_USER: u8 = 1;
+
+fn encode_metric_value(buf: &mut Vec<u8>, v: &MetricValue) {
+    match v {
+        MetricValue::Central { sum, weight } => {
+            wire::put_u8(buf, MV_CENTRAL);
+            wire::put_f64_le(buf, *sum);
+            wire::put_f64_le(buf, *weight);
+        }
+        MetricValue::PerUser { sum, count } => {
+            wire::put_u8(buf, MV_PER_USER);
+            wire::put_f64_le(buf, *sum);
+            wire::put_varint(buf, *count);
+        }
+    }
+}
+
+fn decode_metric_value(cur: &mut Cursor) -> Result<MetricValue, CommError> {
+    match cur.u8()? {
+        MV_CENTRAL => Ok(MetricValue::Central { sum: cur.f64_le()?, weight: cur.f64_le()? }),
+        MV_PER_USER => Ok(MetricValue::PerUser { sum: cur.f64_le()?, count: cur.varint()? }),
+        tag => Err(CommError::BadTag { what: "metric value", tag }),
+    }
+}
+
+pub fn encode_metrics(buf: &mut Vec<u8>, m: &Metrics) {
+    wire::put_varint(buf, m.0.len() as u64);
+    for (name, v) in &m.0 {
+        wire::put_str(buf, name);
+        encode_metric_value(buf, v);
+    }
+}
+
+pub fn decode_metrics(cur: &mut Cursor) -> Result<Metrics, CommError> {
+    let n = cur.len()?;
+    let mut m = Metrics::new();
+    for _ in 0..n {
+        let name = cur.string()?;
+        let value = decode_metric_value(cur)?;
+        m.0.insert(name, value);
+    }
+    Ok(m)
+}
+
+// -------------------------------------------------------------- counters
+
+/// Counters ride as varints in declared-field order; new fields are
+/// only ever appended (and the wire version bumped).
+pub fn encode_counters(buf: &mut Vec<u8>, c: &Counters) {
+    for v in counter_fields(c) {
+        wire::put_varint(buf, v);
+    }
+}
+
+pub fn decode_counters(cur: &mut Cursor) -> Result<Counters, CommError> {
+    // Struct-literal fields evaluate in written order, which must match
+    // `counter_fields` — `counters_roundtrip_every_field` pins this.
+    Ok(Counters {
+        loop_alloc_bytes: cur.varint()?,
+        arena_grow_bytes: cur.varint()?,
+        arena_sparse_rounds: cur.varint()?,
+        arena_spill_count: cur.varint()?,
+        copy_bytes: cur.varint()?,
+        wire_bytes: cur.varint()?,
+        coordinator_msgs: cur.varint()?,
+        stat_elements: cur.varint()?,
+        stat_bytes: cur.varint()?,
+        busy_nanos: cur.varint()?,
+        users_trained: cur.varint()?,
+        steps: cur.varint()?,
+        steal_count: cur.varint()?,
+        stale_updates: cur.varint()?,
+        dropped_updates: cur.varint()?,
+        cache_hits: cur.varint()?,
+        cache_misses: cur.varint()?,
+        prefetch_stall_nanos: cur.varint()?,
+        store_bytes_read: cur.varint()?,
+        decode_nanos: cur.varint()?,
+        mmap_stall_nanos: cur.varint()?,
+        pread_stall_nanos: cur.varint()?,
+        noise_nanos: cur.varint()?,
+        requeued_users: cur.varint()?,
+        worker_reconnects: cur.varint()?,
+        wire_bytes_in: cur.varint()?,
+        wire_bytes_out: cur.varint()?,
+    })
+}
+
+fn counter_fields(c: &Counters) -> [u64; 27] {
+    [
+        c.loop_alloc_bytes,
+        c.arena_grow_bytes,
+        c.arena_sparse_rounds,
+        c.arena_spill_count,
+        c.copy_bytes,
+        c.wire_bytes,
+        c.coordinator_msgs,
+        c.stat_elements,
+        c.stat_bytes,
+        c.busy_nanos,
+        c.users_trained,
+        c.steps,
+        c.steal_count,
+        c.stale_updates,
+        c.dropped_updates,
+        c.cache_hits,
+        c.cache_misses,
+        c.prefetch_stall_nanos,
+        c.store_bytes_read,
+        c.decode_nanos,
+        c.mmap_stall_nanos,
+        c.pread_stall_nanos,
+        c.noise_nanos,
+        c.requeued_users,
+        c.worker_reconnects,
+        c.wire_bytes_in,
+        c.wire_bytes_out,
+    ]
+}
+
+// ----------------------------------------------------------- round state
+
+fn encode_user_cost(buf: &mut Vec<u8>, c: &UserCost) {
+    wire::put_varint(buf, c.datapoints as u64);
+    wire::put_varint(buf, c.nanos);
+    wire::put_varint(buf, c.device_nanos);
+}
+
+fn decode_user_cost(cur: &mut Cursor) -> Result<UserCost, CommError> {
+    Ok(UserCost {
+        datapoints: cur.varint()? as usize,
+        nanos: cur.varint()?,
+        device_nanos: cur.varint()?,
+    })
+}
+
+fn encode_local_params(buf: &mut Vec<u8>, p: &LocalParams) {
+    wire::put_varint(buf, p.epochs as u64);
+    wire::put_varint(buf, p.batch_size as u64);
+    wire::put_f32_le(buf, p.lr);
+    wire::put_f32_le(buf, p.mu);
+    wire::put_varint(buf, p.max_steps as u64);
+}
+
+fn decode_local_params(cur: &mut Cursor) -> Result<LocalParams, CommError> {
+    Ok(LocalParams {
+        epochs: cur.varint()? as usize,
+        batch_size: cur.varint()? as usize,
+        lr: cur.f32_le()?,
+        mu: cur.f32_le()?,
+        max_steps: cur.varint()? as usize,
+    })
+}
+
+fn encode_dispatch_spec(buf: &mut Vec<u8>, d: &DispatchSpec) {
+    let mode = match d.mode {
+        DispatchMode::Static => 0u8,
+        DispatchMode::WorkStealing => 1,
+        DispatchMode::Async => 2,
+        DispatchMode::Socket => 3,
+    };
+    wire::put_u8(buf, mode);
+    wire::put_varint(buf, d.max_staleness);
+    wire::put_f64_le(buf, d.buffer_frac);
+    wire::put_varint(buf, d.reorder_window as u64);
+}
+
+fn decode_dispatch_spec(cur: &mut Cursor) -> Result<DispatchSpec, CommError> {
+    let mode = match cur.u8()? {
+        0 => DispatchMode::Static,
+        1 => DispatchMode::WorkStealing,
+        2 => DispatchMode::Async,
+        3 => DispatchMode::Socket,
+        tag => return Err(CommError::BadTag { what: "dispatch mode", tag }),
+    };
+    Ok(DispatchSpec {
+        mode,
+        max_staleness: cur.varint()?,
+        buffer_frac: cur.f64_le()?,
+        reorder_window: cur.varint()? as usize,
+    })
+}
+
+/// Algorithm tags are `&'static str` in [`CentralContext`]; decoding
+/// interns against the known set (leaking only for tags this build has
+/// never seen, which a matching peer never sends).
+fn intern_algorithm(s: &str) -> &'static str {
+    const KNOWN: [&str; 9] =
+        ["", "fedavg", "fedprox", "adafedprox", "scaffold", "gbdt", "fed-gbdt", "gmm", "fed-gmm"];
+    for k in KNOWN {
+        if k == s {
+            return k;
+        }
+    }
+    Box::leak(s.to_string().into_boxed_str())
+}
+
+pub fn encode_context(buf: &mut Vec<u8>, ctx: &CentralContext) {
+    wire::put_varint(buf, ctx.iteration);
+    let pop = match ctx.population {
+        Population::Train => 0u8,
+        Population::Val => 1,
+    };
+    wire::put_u8(buf, pop);
+    wire::put_varint(buf, ctx.cohort_size as u64);
+    encode_local_params(buf, &ctx.local);
+    wire::put_u64_le(buf, ctx.seed);
+    encode_dispatch_spec(buf, &ctx.dispatch);
+    wire::put_str(buf, ctx.algorithm);
+}
+
+pub fn decode_context(cur: &mut Cursor) -> Result<CentralContext, CommError> {
+    let iteration = cur.varint()?;
+    let population = match cur.u8()? {
+        0 => Population::Train,
+        1 => Population::Val,
+        tag => return Err(CommError::BadTag { what: "population", tag }),
+    };
+    let cohort_size = cur.varint()? as usize;
+    let local = decode_local_params(cur)?;
+    let seed = cur.u64_le()?;
+    let dispatch = decode_dispatch_spec(cur)?;
+    let algorithm = intern_algorithm(&cur.string()?);
+    Ok(CentralContext { iteration, population, cohort_size, local, seed, dispatch, algorithm })
+}
+
+/// Payload of a [`FRAME_ROUND`]: one seq-stamped unit of work — the
+/// context, the central model it trains against, and the uids to train.
+#[derive(Debug, Clone)]
+pub struct RoundMsg {
+    pub seq: u64,
+    pub ctx: CentralContext,
+    pub central: Vec<f32>,
+    pub uids: Vec<usize>,
+}
+
+pub fn encode_round(
+    buf: &mut Vec<u8>,
+    seq: u64,
+    ctx: &CentralContext,
+    central: &[f32],
+    uids: &[usize],
+) {
+    wire::put_varint(buf, seq);
+    encode_context(buf, ctx);
+    wire::put_varint(buf, central.len() as u64);
+    for &x in central {
+        wire::put_f32_le(buf, x);
+    }
+    wire::put_varint(buf, uids.len() as u64);
+    for &u in uids {
+        wire::put_varint(buf, u as u64);
+    }
+}
+
+pub fn decode_round(cur: &mut Cursor) -> Result<RoundMsg, CommError> {
+    let seq = cur.varint()?;
+    let ctx = decode_context(cur)?;
+    let n = cur.len()?;
+    let mut central = Vec::with_capacity(n.min(cur.remaining() / 4 + 1));
+    for _ in 0..n {
+        central.push(cur.f32_le()?);
+    }
+    let k = cur.len()?;
+    let mut uids = Vec::with_capacity(k.min(cur.remaining() + 1));
+    for _ in 0..k {
+        uids.push(cur.varint()? as usize);
+    }
+    Ok(RoundMsg { seq, ctx, central, uids })
+}
+
+pub fn encode_round_result(buf: &mut Vec<u8>, r: &RoundResult) {
+    wire::put_varint(buf, r.worker as u64);
+    wire::put_varint(buf, r.round);
+    wire::put_varint(buf, r.seq);
+    wire::put_bool(buf, r.partial.is_some());
+    if let Some(p) = &r.partial {
+        encode_statistics(buf, p);
+    }
+    encode_metrics(buf, &r.metrics);
+    encode_counters(buf, &r.counters);
+    wire::put_varint(buf, r.costs.len() as u64);
+    for c in &r.costs {
+        encode_user_cost(buf, c);
+    }
+    wire::put_bool(buf, r.error.is_some());
+    if let Some(e) = &r.error {
+        wire::put_str(buf, e);
+    }
+}
+
+pub fn decode_round_result(cur: &mut Cursor) -> Result<RoundResult, CommError> {
+    let worker = cur.varint()? as usize;
+    let round = cur.varint()?;
+    let seq = cur.varint()?;
+    let partial = if cur.bool()? { Some(decode_statistics(cur)?) } else { None };
+    let metrics = decode_metrics(cur)?;
+    let counters = decode_counters(cur)?;
+    let n = cur.len()?;
+    let mut costs = Vec::with_capacity(n.min(cur.remaining() / 3 + 1));
+    for _ in 0..n {
+        costs.push(decode_user_cost(cur)?);
+    }
+    let error = if cur.bool()? { Some(cur.string()?) } else { None };
+    Ok(RoundResult { worker, round, seq, partial, metrics, counters, costs, error })
+}
+
+// ------------------------------------------------------------------ Cmd
+
+/// Encode a worker command as (frame tag, payload). A
+/// [`crate::fl::WorkSource::Shared`] queue is a pointer into server
+/// memory and cannot cross a process boundary — callers of the socket
+/// path materialize uid lists first.
+pub fn encode_cmd(cmd: &Cmd) -> Result<(u8, Vec<u8>), CommError> {
+    match cmd {
+        Cmd::Round { ctx, central, work, seq } => {
+            let uids = match work {
+                crate::fl::WorkSource::Owned(uids) => uids,
+                crate::fl::WorkSource::Shared(_) => {
+                    return Err(CommError::Unencodable(
+                        "shared in-process work queue cannot cross a socket",
+                    ))
+                }
+            };
+            let mut buf = Vec::new();
+            encode_round(&mut buf, *seq, ctx, central, uids);
+            Ok((FRAME_ROUND, buf))
+        }
+        Cmd::Stop => Ok((FRAME_STOP, Vec::new())),
+    }
+}
+
+/// Decode a server→worker frame back into a [`Cmd`].
+pub fn decode_cmd(tag: u8, payload: &[u8]) -> Result<Cmd, CommError> {
+    match tag {
+        FRAME_ROUND => {
+            let mut cur = Cursor::new(payload);
+            let msg = decode_round(&mut cur)?;
+            cur.done()?;
+            Ok(Cmd::Round {
+                ctx: msg.ctx,
+                central: Arc::new(msg.central),
+                work: crate::fl::WorkSource::Owned(msg.uids),
+                seq: msg.seq,
+            })
+        }
+        FRAME_STOP => Ok(Cmd::Stop),
+        tag => Err(CommError::BadTag { what: "command frame", tag }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::WorkSource;
+
+    fn roundtrip_stat(v: &StatValue) -> StatValue {
+        let mut buf = Vec::new();
+        encode_stat_value(&mut buf, v);
+        let mut cur = Cursor::new(&buf);
+        let back = decode_stat_value(&mut cur).unwrap();
+        cur.done().unwrap();
+        back
+    }
+
+    // Satellite: fixture tests pinning the frame layout byte-for-byte,
+    // so a codec edit that would break cross-version workers fails here
+    // instead of in production.
+    #[test]
+    fn dense_layout_is_pinned() {
+        let mut buf = Vec::new();
+        encode_stat_value(&mut buf, &StatValue::Dense(vec![1.0, -2.0]));
+        assert_eq!(buf, [0, 2, 0x00, 0x00, 0x80, 0x3F, 0x00, 0x00, 0x00, 0xC0]);
+    }
+
+    #[test]
+    fn empty_sparse_layout_is_pinned() {
+        let mut buf = Vec::new();
+        encode_stat_value(&mut buf, &StatValue::Sparse { dim: 7, idx: vec![], val: vec![] });
+        assert_eq!(buf, [1, 7, 0]);
+    }
+
+    #[test]
+    fn sparse_layout_is_pinned() {
+        let mut buf = Vec::new();
+        encode_stat_value(&mut buf, &StatValue::Sparse { dim: 300, idx: vec![5], val: vec![0.5] });
+        assert_eq!(buf, [1, 0xAC, 0x02, 1, 5, 0, 0, 0, 0x00, 0x00, 0x00, 0x3F]);
+    }
+
+    #[test]
+    fn quantized_layout_is_pinned() {
+        let q = StatValue::Quantized {
+            dim: 2,
+            scale: 1.5,
+            bits: 8,
+            idx: None,
+            data: vec![0x7F, 0x81],
+        };
+        let mut buf = Vec::new();
+        encode_stat_value(&mut buf, &q);
+        assert_eq!(buf, [2, 2, 0x00, 0x00, 0xC0, 0x3F, 8, 0, 2, 0x7F, 0x81]);
+    }
+
+    #[test]
+    fn stat_values_roundtrip_all_variants() {
+        let cases = vec![
+            StatValue::Dense(vec![]),
+            StatValue::Dense(vec![0.0, -0.0, f32::MIN_POSITIVE, 3.25e7]),
+            StatValue::Sparse { dim: 7, idx: vec![], val: vec![] },
+            StatValue::Sparse { dim: 4096, idx: vec![0, 9, 4000], val: vec![1.0, -1.0, 0.25] },
+            StatValue::Quantized { dim: 4, scale: 0.125, bits: 8, idx: None, data: vec![0, 255] },
+            StatValue::Quantized {
+                dim: 1000,
+                scale: 2.0,
+                bits: 8,
+                idx: Some(vec![3, 999]),
+                data: vec![1, 2],
+            },
+            StatValue::Quantized { dim: 16, scale: 1.0, bits: 16, idx: None, data: vec![0; 32] },
+        ];
+        for v in &cases {
+            assert_eq!(&roundtrip_stat(v), v, "variant {v:?}");
+        }
+    }
+
+    #[test]
+    fn nan_payloads_roundtrip_bitwise() {
+        // PartialEq fails on NaN, so compare re-encoded bytes instead.
+        let v = StatValue::Dense(vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+        let mut a = Vec::new();
+        encode_stat_value(&mut a, &v);
+        let back = roundtrip_stat(&v);
+        let mut b = Vec::new();
+        encode_stat_value(&mut b, &back);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn statistics_roundtrip() {
+        let mut s = Statistics { weight: 3.5, ..Default::default() };
+        s.vecs.insert("update".into(), StatValue::Dense(vec![1.0, 2.0, 3.0]));
+        s.vecs.insert("c-delta".into(), StatValue::Sparse { dim: 10, idx: vec![4], val: vec![-2.0] });
+        let mut buf = Vec::new();
+        encode_statistics(&mut buf, &s);
+        let mut cur = Cursor::new(&buf);
+        let back = decode_statistics(&mut cur).unwrap();
+        cur.done().unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn metrics_roundtrip() {
+        let mut m = Metrics::new();
+        m.add_central("loss", 12.5, 4.0);
+        m.0.insert("train/steps".into(), MetricValue::PerUser { sum: 18.0, count: 6 });
+        let mut buf = Vec::new();
+        encode_metrics(&mut buf, &m);
+        let mut cur = Cursor::new(&buf);
+        let back = decode_metrics(&mut cur).unwrap();
+        cur.done().unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn counters_roundtrip_every_field() {
+        // Distinct value per field: a swapped pair in encode vs decode
+        // order cannot cancel out.
+        let fields = counter_fields(&Counters::default()).len() as u64;
+        let mut buf = Vec::new();
+        for i in 1..=fields {
+            wire::put_varint(&mut buf, i * 1000 + i);
+        }
+        let mut cur = Cursor::new(&buf);
+        let c = decode_counters(&mut cur).unwrap();
+        cur.done().unwrap();
+        assert_eq!(c.loop_alloc_bytes, 1001);
+        assert_eq!(c.noise_nanos, 23_023);
+        assert_eq!(c.requeued_users, 24_024);
+        assert_eq!(c.worker_reconnects, 25_025);
+        assert_eq!(c.wire_bytes_in, 26_026);
+        assert_eq!(c.wire_bytes_out, 27_027);
+        let mut again = Vec::new();
+        encode_counters(&mut again, &c);
+        assert_eq!(again, buf);
+    }
+
+    #[test]
+    fn context_roundtrip_interns_algorithm() {
+        let local = LocalParams { epochs: 3, batch_size: 16, lr: 0.5, mu: 0.1, max_steps: 7 };
+        let mut ctx = CentralContext::train(9, 40, local, 0xDEAD_BEEF_CAFE_F00D);
+        ctx.dispatch = DispatchSpec {
+            mode: DispatchMode::Socket,
+            max_staleness: 5,
+            buffer_frac: 0.75,
+            reorder_window: 8,
+        };
+        ctx.algorithm = "scaffold";
+        let mut buf = Vec::new();
+        encode_context(&mut buf, &ctx);
+        let mut cur = Cursor::new(&buf);
+        let back = decode_context(&mut cur).unwrap();
+        cur.done().unwrap();
+        assert_eq!(back.iteration, 9);
+        assert_eq!(back.population, Population::Train);
+        assert_eq!(back.cohort_size, 40);
+        assert_eq!(back.local.epochs, 3);
+        assert_eq!(back.local.batch_size, 16);
+        assert_eq!(back.local.lr, 0.5);
+        assert_eq!(back.local.mu, 0.1);
+        assert_eq!(back.local.max_steps, 7);
+        assert_eq!(back.seed, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(back.dispatch, ctx.dispatch);
+        assert_eq!(back.algorithm, "scaffold");
+    }
+
+    #[test]
+    fn round_result_roundtrips_via_reencode() {
+        let mut stats = Statistics { weight: 2.0, ..Default::default() };
+        stats.vecs.insert("update".into(), StatValue::Dense(vec![0.5; 5]));
+        let mut metrics = Metrics::new();
+        metrics.add_central("loss", 1.0, 1.0);
+        let r = RoundResult {
+            worker: 3,
+            round: 17,
+            seq: 255,
+            partial: Some(stats),
+            metrics,
+            counters: Counters { users_trained: 4, steps: 12, ..Default::default() },
+            costs: vec![UserCost { datapoints: 10, nanos: 5000, device_nanos: 3000 }],
+            error: Some("worker 3 failed: oom".into()),
+        };
+        let mut a = Vec::new();
+        encode_round_result(&mut a, &r);
+        let mut cur = Cursor::new(&a);
+        let back = decode_round_result(&mut cur).unwrap();
+        cur.done().unwrap();
+        // RoundResult/Counters don't derive PartialEq: compare re-encode.
+        let mut b = Vec::new();
+        encode_round_result(&mut b, &back);
+        assert_eq!(a, b);
+        assert_eq!(back.worker, 3);
+        assert_eq!(back.seq, 255);
+        assert_eq!(back.error.as_deref(), Some("worker 3 failed: oom"));
+        assert_eq!(back.counters.users_trained, 4);
+    }
+
+    #[test]
+    fn cmd_round_and_stop_roundtrip() {
+        let ctx = CentralContext::train(1, 4, LocalParams::default(), 42);
+        let cmd = Cmd::Round {
+            ctx,
+            central: Arc::new(vec![1.0, -2.5, 0.0]),
+            work: WorkSource::Owned(vec![7, 0, 300]),
+            seq: 11,
+        };
+        let (tag, payload) = encode_cmd(&cmd).unwrap();
+        assert_eq!(tag, FRAME_ROUND);
+        let back = decode_cmd(tag, &payload).unwrap();
+        let (tag2, payload2) = encode_cmd(&back).unwrap();
+        assert_eq!((tag, &payload), (tag2, &payload2));
+        match back {
+            Cmd::Round { central, work, seq, .. } => {
+                assert_eq!(*central, vec![1.0, -2.5, 0.0]);
+                assert_eq!(seq, 11);
+                match work {
+                    WorkSource::Owned(uids) => assert_eq!(uids, vec![7, 0, 300]),
+                    _ => panic!("expected owned work"),
+                }
+            }
+            Cmd::Stop => panic!("expected round"),
+        }
+        let (tag, payload) = encode_cmd(&Cmd::Stop).unwrap();
+        assert_eq!((tag, payload.len()), (FRAME_STOP, 0));
+        assert!(matches!(decode_cmd(FRAME_STOP, &[]).unwrap(), Cmd::Stop));
+    }
+
+    #[test]
+    fn shared_work_is_unencodable() {
+        let queue = Arc::new(crate::fl::CohortQueue::new(vec![1, 2, 3]));
+        let cmd = Cmd::Round {
+            ctx: CentralContext::train(0, 3, LocalParams::default(), 0),
+            central: Arc::new(vec![]),
+            work: WorkSource::Shared(queue),
+            seq: 0,
+        };
+        assert!(matches!(encode_cmd(&cmd), Err(CommError::Unencodable(_))));
+    }
+
+    #[test]
+    fn handshake_roundtrip() {
+        let h = Hello { pid: 12345 };
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, &h);
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(decode_hello(&mut cur).unwrap(), h);
+        cur.done().unwrap();
+
+        let s = Setup {
+            worker: 2,
+            use_hlo_clip: true,
+            heartbeat_ms: 250,
+            config_json: "{\"name\":\"x\"}".into(),
+        };
+        let mut buf = Vec::new();
+        encode_setup(&mut buf, &s);
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(decode_setup(&mut cur).unwrap(), s);
+        cur.done().unwrap();
+    }
+
+    #[test]
+    fn unknown_tags_are_typed_errors() {
+        let mut cur = Cursor::new(&[9]);
+        assert!(matches!(
+            decode_stat_value(&mut cur),
+            Err(CommError::BadTag { what: "stat value", tag: 9 })
+        ));
+        assert!(matches!(
+            decode_cmd(99, &[]),
+            Err(CommError::BadTag { what: "command frame", tag: 99 })
+        ));
+    }
+}

@@ -1,0 +1,89 @@
+//! Transport seam between dispatcher and workers (DESIGN.md §7).
+//!
+//! Everything that crosses the dispatcher↔worker boundary goes through
+//! this module, whatever carries it:
+//!
+//! * [`wire`] — length-framed byte protocol: a 5-byte connection
+//!   preamble (magic `PFLC` + version) followed by `tag · varint-length
+//!   · payload` frames. LEB128 varints, little-endian scalars, no
+//!   external dependencies.
+//! * [`codec`] — explicit encode/decode for every domain type that
+//!   crosses the seam: `Cmd`, `RoundResult`, model deltas
+//!   (`Statistics`), all `StatValue` variants, `Metrics`, `Counters`,
+//!   `CentralContext`. The in-process coordinator tax and the socket
+//!   transport share this single byte path.
+//! * [`transport`] — Unix-domain/TCP socket drivers: [`transport::WorkerConn`]
+//!   (the `pfl worker --connect ADDR` client) and
+//!   [`transport::SocketServer`] → [`transport::SocketPool`] (the
+//!   server-side event loop feeding `--dispatch socket` runs), with
+//!   heartbeat + read-timeout dead-worker detection.
+//!
+//! Failure is typed: every fallible operation returns [`CommError`], so
+//! the engine can distinguish a dead peer ([`CommError::Closed`], I/O
+//! timeouts) from a protocol bug (bad magic/tag/length) and requeue or
+//! abort accordingly.
+
+pub mod codec;
+pub mod transport;
+pub mod wire;
+
+pub use transport::{PoolEvent, SetupSpec, SocketPool, SocketServer, WorkerConn};
+
+/// Typed communication failure — everything the wire layer can report.
+#[derive(Debug)]
+pub enum CommError {
+    /// Underlying socket/pipe error (includes read timeouts).
+    Io(std::io::Error),
+    /// Connection preamble did not start with `PFLC`.
+    BadMagic([u8; 4]),
+    /// Peer speaks a different wire version.
+    BadVersion { got: u8, want: u8 },
+    /// A payload ended before a field was fully read.
+    Truncated { need: usize, have: usize },
+    /// Unknown discriminant for `what` (frame, stat value, metric, …).
+    BadTag { what: &'static str, tag: u8 },
+    /// Declared frame length exceeds [`wire::MAX_FRAME_LEN`].
+    FrameTooLarge { len: u64 },
+    /// Structurally invalid payload (overlong varint, bad UTF-8, …).
+    Malformed(&'static str),
+    /// The value cannot be represented on the wire (e.g. a shared
+    /// in-process work queue).
+    Unencodable(&'static str),
+    /// Orderly EOF at a frame boundary — the peer went away.
+    Closed,
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Io(e) => write!(f, "i/o: {e}"),
+            CommError::BadMagic(m) => write!(f, "bad magic {m:02x?} (expected \"PFLC\")"),
+            CommError::BadVersion { got, want } => {
+                write!(f, "peer speaks wire version {got}, this build speaks {want}")
+            }
+            CommError::Truncated { need, have } => {
+                write!(f, "truncated payload: need {need} more bytes, have {have}")
+            }
+            CommError::BadTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
+            CommError::FrameTooLarge { len } => write!(f, "frame length {len} exceeds limit"),
+            CommError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            CommError::Unencodable(m) => write!(f, "cannot encode: {m}"),
+            CommError::Closed => write!(f, "connection closed by peer"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        CommError::Io(e)
+    }
+}

@@ -1,0 +1,806 @@
+//! Socket transport: the process-boundary drivers behind the seam
+//! (DESIGN.md §7).
+//!
+//! Topology: one server ([`SocketServer`] → [`SocketPool`]) and N
+//! worker processes ([`WorkerConn`], the `pfl worker --connect ADDR`
+//! entry point), over Unix-domain or TCP sockets. Address syntax:
+//! anything containing `/` (or prefixed `unix:`) is a Unix socket
+//! path; everything else is a TCP `host:port`.
+//!
+//! Failure model (one-strike): workers beacon a heartbeat frame every
+//! `heartbeat_ms`; the server reads each connection with a 3× heartbeat
+//! timeout, so a worker that is killed (`kill -9`), wedged, or
+//! partitioned surfaces as a [`PoolEvent::Dead`] within one timeout.
+//! The engine — not this layer — decides what to do with the dead
+//! worker's in-flight uids (requeue to a live peer, preserving seq
+//! order). A background accept loop keeps admitting replacement
+//! workers into dead slots for the lifetime of the run
+//! ([`PoolEvent::Joined`]).
+
+use super::codec::{
+    self, Hello, RoundMsg, Setup, FRAME_HEARTBEAT, FRAME_HELLO, FRAME_RESULT, FRAME_ROUND,
+    FRAME_SETUP, FRAME_STOP,
+};
+use super::wire;
+use super::CommError;
+use crate::fl::context::CentralContext;
+use crate::fl::worker::RoundResult;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// `unix:…` prefix or any path-looking string selects a Unix socket.
+fn unix_path(addr: &str) -> Option<&str> {
+    if let Some(p) = addr.strip_prefix("unix:") {
+        Some(p)
+    } else if addr.contains('/') {
+        Some(addr)
+    } else {
+        None
+    }
+}
+
+/// A connected byte stream over either socket family.
+pub enum SocketStream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl SocketStream {
+    pub fn connect(addr: &str) -> Result<Self, CommError> {
+        if let Some(path) = unix_path(addr) {
+            #[cfg(unix)]
+            {
+                return Ok(SocketStream::Unix(UnixStream::connect(path)?));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(CommError::Unencodable("unix sockets unsupported on this platform"));
+            }
+        }
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        Ok(SocketStream::Tcp(s))
+    }
+
+    fn try_clone(&self) -> Result<Self, CommError> {
+        Ok(match self {
+            SocketStream::Tcp(s) => SocketStream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => SocketStream::Unix(s.try_clone()?),
+        })
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> Result<(), CommError> {
+        match self {
+            SocketStream::Tcp(s) => s.set_read_timeout(d)?,
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for SocketStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SocketStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            SocketStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<SocketStream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                // Some platforms propagate the listener's non-blocking
+                // flag to accepted sockets; the frame reader needs a
+                // blocking stream.
+                let _ = s.set_nonblocking(false);
+                Ok(SocketStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nonblocking(false);
+                Ok(SocketStream::Unix(s))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+// ================================================================= worker
+
+/// Client side of the seam: one connection from a worker process back
+/// to the server, plus the background heartbeat beacon.
+pub struct WorkerConn {
+    reader: SocketStream,
+    writer: Arc<Mutex<SocketStream>>,
+    /// The server's handshake reply: slot, heartbeat interval, config.
+    pub setup: Setup,
+    hb_stop: Arc<AtomicBool>,
+    hb: Option<JoinHandle<()>>,
+}
+
+impl WorkerConn {
+    /// Dial the server, introduce ourselves, and receive the [`Setup`]
+    /// (worker slot + run config). Starts the heartbeat thread.
+    pub fn connect(addr: &str) -> Result<Self, CommError> {
+        let mut stream = SocketStream::connect(addr)?;
+        wire::write_preamble(&mut stream)?;
+        let mut buf = Vec::new();
+        codec::encode_hello(&mut buf, &Hello { pid: std::process::id() });
+        wire::write_frame(&mut stream, FRAME_HELLO, &buf)?;
+        // Bound the handshake read; cleared afterwards — a worker waiting
+        // for round work blocks indefinitely (server death is an EOF).
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        wire::read_preamble(&mut stream)?;
+        let (tag, payload, _) = wire::read_frame(&mut stream)?;
+        if tag != FRAME_SETUP {
+            return Err(CommError::BadTag { what: "setup frame", tag });
+        }
+        let mut cur = wire::Cursor::new(&payload);
+        let setup = codec::decode_setup(&mut cur)?;
+        cur.done()?;
+        stream.set_read_timeout(None)?;
+
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb = {
+            let writer = Arc::clone(&writer);
+            let stop = Arc::clone(&hb_stop);
+            let interval = Duration::from_millis(setup.heartbeat_ms.max(1));
+            std::thread::Builder::new()
+                .name("comms-heartbeat".into())
+                .spawn(move || heartbeat_loop(writer, stop, interval))
+                .map_err(std::io::Error::from)?
+        };
+        Ok(WorkerConn { reader: stream, writer, setup, hb_stop, hb: Some(hb) })
+    }
+
+    /// Block for the next unit of work. `Ok(None)` is an orderly stop
+    /// (explicit [`FRAME_STOP`] or server EOF at a frame boundary).
+    pub fn recv(&mut self) -> Result<Option<RoundMsg>, CommError> {
+        match wire::read_frame(&mut self.reader) {
+            Ok((FRAME_ROUND, payload, _)) => {
+                let mut cur = wire::Cursor::new(&payload);
+                let msg = codec::decode_round(&mut cur)?;
+                cur.done()?;
+                Ok(Some(msg))
+            }
+            Ok((FRAME_STOP, _, _)) => Ok(None),
+            Ok((tag, _, _)) => Err(CommError::BadTag { what: "server frame", tag }),
+            Err(CommError::Closed) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    pub fn send_result(&self, r: &RoundResult) -> Result<(), CommError> {
+        let mut buf = Vec::new();
+        codec::encode_round_result(&mut buf, r);
+        let mut w = self.writer.lock().unwrap();
+        wire::write_frame(&mut *w, FRAME_RESULT, &buf)?;
+        Ok(())
+    }
+}
+
+impl Drop for WorkerConn {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.hb.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn heartbeat_loop(writer: Arc<Mutex<SocketStream>>, stop: Arc<AtomicBool>, interval: Duration) {
+    loop {
+        // Chunked sleep so Drop never waits a full interval to join.
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20).min(interval));
+        }
+        let mut w = writer.lock().unwrap();
+        if wire::write_frame(&mut *w, FRAME_HEARTBEAT, &[]).is_err() {
+            return;
+        }
+    }
+}
+
+// ================================================================= server
+
+/// Everything a worker needs beyond its slot number; `worker` is filled
+/// in per accepted connection.
+#[derive(Debug, Clone)]
+pub struct SetupSpec {
+    pub use_hlo_clip: bool,
+    /// Worker heartbeat interval; server read timeout is 3× this.
+    pub heartbeat_ms: u64,
+    /// Full run config as JSON — workers rebuild dataset + algorithm
+    /// from it (datasets here are config-derived).
+    pub config_json: String,
+}
+
+/// A bound listener, not yet serving. Split from [`SocketPool`] so the
+/// caller can learn the resolved address (`--listen 127.0.0.1:0`) and
+/// launch worker processes *before* blocking in the accept loop.
+pub struct SocketServer {
+    listener: Listener,
+    local: String,
+}
+
+impl SocketServer {
+    pub fn bind(addr: &str) -> Result<Self, CommError> {
+        if let Some(path) = unix_path(addr) {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                return Ok(SocketServer {
+                    listener: Listener::Unix(l),
+                    local: format!("unix:{path}"),
+                });
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(CommError::Unencodable("unix sockets unsupported on this platform"));
+            }
+        }
+        let l = TcpListener::bind(addr)?;
+        let local = l.local_addr()?.to_string();
+        Ok(SocketServer { listener: Listener::Tcp(l), local })
+    }
+
+    /// The resolved address workers should `--connect` to (port 0 is
+    /// resolved to the actual port).
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Accept `num_workers` handshakes, then hand the listener to a
+    /// background accept loop that admits replacements into dead slots.
+    pub fn into_pool(self, num_workers: usize, spec: SetupSpec) -> Result<SocketPool, CommError> {
+        assert!(num_workers > 0, "socket pool needs at least one worker");
+        let shared = Arc::new(PoolShared {
+            writers: (0..num_workers).map(|_| Mutex::new(None)).collect(),
+            alive: (0..num_workers).map(|_| AtomicBool::new(false)).collect(),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+        });
+        let (events_tx, events_rx) = channel();
+        for slot in 0..num_workers {
+            loop {
+                let stream = self.listener.accept()?;
+                match handshake(stream, slot, &spec) {
+                    Ok(stream) => {
+                        spawn_reader(&shared, slot, stream, &events_tx)?;
+                        break;
+                    }
+                    // A worker that died before completing the handshake
+                    // is not fatal — wait for the next connection.
+                    Err(_) => continue,
+                }
+            }
+        }
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&accept_stop);
+            let events = events_tx.clone();
+            let listener = self.listener;
+            std::thread::Builder::new()
+                .name("comms-accept".into())
+                .spawn(move || accept_loop(shared, listener, stop, spec, events))
+                .map_err(std::io::Error::from)?
+        };
+        Ok(SocketPool {
+            shared,
+            events_rx,
+            events_tx,
+            accept_stop,
+            accept_handle: Some(accept_handle),
+            num_workers,
+        })
+    }
+}
+
+struct PoolShared {
+    writers: Vec<Mutex<Option<SocketStream>>>,
+    alive: Vec<AtomicBool>,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl PoolShared {
+    /// First marker wins: exactly one `Dead` event per death, however
+    /// many paths (reader error, write failure) detect it.
+    fn mark_dead(&self, worker: usize, reason: String, events: &Sender<PoolEvent>) {
+        if self.alive[worker].swap(false, Ordering::SeqCst) {
+            if let Ok(mut g) = self.writers[worker].lock() {
+                *g = None;
+            }
+            let _ = events.send(PoolEvent::Dead { worker, reason });
+        }
+    }
+}
+
+/// What the server-side engine drains from [`SocketPool::recv_event`].
+pub enum PoolEvent {
+    /// A worker finished a unit of round work.
+    Result(Box<RoundResult>),
+    /// A worker's connection died (EOF, I/O error, or 3× heartbeat
+    /// timeout). Its in-flight uids are the engine's to requeue.
+    Dead { worker: usize, reason: String },
+    /// A replacement worker completed the handshake into a dead slot.
+    Joined { worker: usize },
+}
+
+/// Server side of the seam: per-worker connections drained by reader
+/// threads into one event queue, plus liveness + wire accounting.
+pub struct SocketPool {
+    shared: Arc<PoolShared>,
+    events_rx: Receiver<PoolEvent>,
+    events_tx: Sender<PoolEvent>,
+    accept_stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    num_workers: usize,
+}
+
+impl SocketPool {
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    pub fn alive(&self, worker: usize) -> bool {
+        self.shared.alive[worker].load(Ordering::SeqCst)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.shared.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    /// Cumulative (bytes received, bytes sent) over all connections.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.shared.bytes_in.load(Ordering::Relaxed), self.shared.bytes_out.load(Ordering::Relaxed))
+    }
+
+    /// Ship one seq-stamped unit of work to `worker`. A write failure
+    /// (or an already-dead worker) is not an error here: the death is
+    /// published as a [`PoolEvent::Dead`] and the engine requeues the
+    /// in-flight uids when it drains the event.
+    pub fn send_round(
+        &self,
+        worker: usize,
+        ctx: &CentralContext,
+        central: &[f32],
+        uids: &[usize],
+        seq: u64,
+    ) -> Result<(), CommError> {
+        let mut payload = Vec::with_capacity(central.len() * 4 + 64);
+        codec::encode_round(&mut payload, seq, ctx, central, uids);
+        let mut guard = self.shared.writers[worker].lock().unwrap();
+        let Some(stream) = guard.as_mut() else {
+            return Ok(()); // already dead; Dead event already queued
+        };
+        match wire::write_frame(stream, FRAME_ROUND, &payload) {
+            Ok(n) => {
+                self.shared.bytes_out.fetch_add(n, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                *guard = None;
+                drop(guard);
+                if self.shared.alive[worker].swap(false, Ordering::SeqCst) {
+                    let _ = self
+                        .events_tx
+                        .send(PoolEvent::Dead { worker, reason: format!("send failed: {e}") });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Block for the next pool event.
+    pub fn recv_event(&self) -> Result<PoolEvent, CommError> {
+        self.events_rx.recv().map_err(|_| CommError::Closed)
+    }
+
+    /// Stop accepting replacements and send an orderly stop to every
+    /// live worker.
+    pub fn shutdown(&mut self) {
+        self.accept_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for w in &self.shared.writers {
+            if let Ok(mut g) = w.lock() {
+                if let Some(stream) = g.as_mut() {
+                    let _ = wire::write_frame(stream, FRAME_STOP, &[]);
+                }
+                *g = None;
+            }
+        }
+    }
+}
+
+impl Drop for SocketPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Complete the preamble/Hello/Setup exchange on a fresh connection and
+/// arm the steady-state read timeout (3× heartbeat, one strike).
+fn handshake(mut stream: SocketStream, slot: usize, spec: &SetupSpec) -> Result<SocketStream, CommError> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    wire::write_preamble(&mut stream)?;
+    wire::read_preamble(&mut stream)?;
+    let (tag, payload, _) = wire::read_frame(&mut stream)?;
+    if tag != FRAME_HELLO {
+        return Err(CommError::BadTag { what: "handshake frame", tag });
+    }
+    let mut cur = wire::Cursor::new(&payload);
+    let _hello = codec::decode_hello(&mut cur)?;
+    cur.done()?;
+    let setup = Setup {
+        worker: slot,
+        use_hlo_clip: spec.use_hlo_clip,
+        heartbeat_ms: spec.heartbeat_ms,
+        config_json: spec.config_json.clone(),
+    };
+    let mut buf = Vec::new();
+    codec::encode_setup(&mut buf, &setup);
+    wire::write_frame(&mut stream, FRAME_SETUP, &buf)?;
+    stream.set_read_timeout(Some(Duration::from_millis(spec.heartbeat_ms.saturating_mul(3).max(1))))?;
+    Ok(stream)
+}
+
+/// Install a handshaken connection into `slot` and start its reader.
+fn spawn_reader(
+    shared: &Arc<PoolShared>,
+    slot: usize,
+    stream: SocketStream,
+    events: &Sender<PoolEvent>,
+) -> Result<(), CommError> {
+    let reader = stream.try_clone()?;
+    *shared.writers[slot].lock().unwrap() = Some(stream);
+    shared.alive[slot].store(true, Ordering::SeqCst);
+    let shared = Arc::clone(shared);
+    let events = events.clone();
+    std::thread::Builder::new()
+        .name(format!("comms-reader-{slot}"))
+        .spawn(move || reader_loop(shared, slot, reader, events))
+        .map_err(std::io::Error::from)?;
+    Ok(())
+}
+
+fn reader_loop(shared: Arc<PoolShared>, worker: usize, mut stream: SocketStream, events: Sender<PoolEvent>) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok((FRAME_RESULT, payload, n)) => {
+                shared.bytes_in.fetch_add(n, Ordering::Relaxed);
+                let mut cur = wire::Cursor::new(&payload);
+                let decoded = codec::decode_round_result(&mut cur).and_then(|r| {
+                    cur.done()?;
+                    Ok(r)
+                });
+                match decoded {
+                    Ok(r) => {
+                        if events.send(PoolEvent::Result(Box::new(r))).is_err() {
+                            return; // pool dropped
+                        }
+                    }
+                    Err(e) => {
+                        shared.mark_dead(worker, format!("undecodable result: {e}"), &events);
+                        return;
+                    }
+                }
+            }
+            Ok((FRAME_HEARTBEAT, _, n)) => {
+                shared.bytes_in.fetch_add(n, Ordering::Relaxed);
+            }
+            Ok((tag, _, _)) => {
+                shared.mark_dead(worker, format!("unexpected frame tag {tag}"), &events);
+                return;
+            }
+            Err(e) => {
+                shared.mark_dead(worker, e.to_string(), &events);
+                return;
+            }
+        }
+    }
+}
+
+fn accept_loop(
+    shared: Arc<PoolShared>,
+    listener: Listener,
+    stop: Arc<AtomicBool>,
+    spec: SetupSpec,
+    events: Sender<PoolEvent>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                let slot =
+                    (0..shared.alive.len()).find(|&w| !shared.alive[w].load(Ordering::SeqCst));
+                let Some(slot) = slot else {
+                    continue; // all slots live: refuse the extra worker
+                };
+                if let Ok(stream) = handshake(stream, slot, &spec) {
+                    if spawn_reader(&shared, slot, stream, &events).is_ok() {
+                        let _ = events.send(PoolEvent::Joined { worker: slot });
+                    }
+                }
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::context::LocalParams;
+    use crate::fl::metrics::Metrics;
+    use crate::fl::stats::Statistics;
+    use crate::simsys::Counters;
+    use crate::tensor::StatValue;
+
+    fn spec(config: &str) -> SetupSpec {
+        SetupSpec { use_hlo_clip: false, heartbeat_ms: 100, config_json: config.into() }
+    }
+
+    // Satellite: loopback property tests — every Cmd/RoundResult/
+    // StatValue variant round-trips bit-identically through
+    // encode → socketpair → decode.
+    #[cfg(unix)]
+    #[test]
+    fn frames_roundtrip_through_unix_socketpair() {
+        use crate::fl::worker::Cmd;
+        use crate::fl::WorkSource;
+        use std::sync::Arc as StdArc;
+
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        let stat_cases = vec![
+            StatValue::Dense(vec![1.0, -2.0, 0.5]),
+            StatValue::Sparse { dim: 9, idx: vec![], val: vec![] },
+            StatValue::Sparse { dim: 300, idx: vec![5, 7], val: vec![0.5, -0.25] },
+            StatValue::Quantized { dim: 2, scale: 1.5, bits: 8, idx: None, data: vec![0x7F, 0x81] },
+            StatValue::Quantized { dim: 64, scale: 0.5, bits: 8, idx: Some(vec![1, 63]), data: vec![9, 200] },
+        ];
+        for v in &stat_cases {
+            let mut buf = Vec::new();
+            codec::encode_stat_value(&mut buf, v);
+            wire::write_frame(&mut a, 42, &buf).unwrap();
+            let (tag, payload, _) = wire::read_frame(&mut b).unwrap();
+            assert_eq!(tag, 42);
+            assert_eq!(payload, buf, "bytes must survive the socket unchanged");
+            let mut cur = wire::Cursor::new(&payload);
+            let back = codec::decode_stat_value(&mut cur).unwrap();
+            cur.done().unwrap();
+            assert_eq!(&back, v);
+        }
+
+        // Every Cmd variant (Shared is Unencodable by contract, tested in
+        // the codec module).
+        let ctx = CentralContext::train(4, 8, LocalParams::default(), 99);
+        let cmds = vec![
+            Cmd::Round {
+                ctx,
+                central: StdArc::new(vec![0.25; 6]),
+                work: WorkSource::Owned(vec![1, 2, 3]),
+                seq: 17,
+            },
+            Cmd::Stop,
+        ];
+        for cmd in &cmds {
+            let (tag, payload) = codec::encode_cmd(cmd).unwrap();
+            wire::write_frame(&mut a, tag, &payload).unwrap();
+            let (rtag, rpayload, _) = wire::read_frame(&mut b).unwrap();
+            assert_eq!((rtag, &rpayload), (tag, &payload));
+            let back = codec::decode_cmd(rtag, &rpayload).unwrap();
+            let (tag2, payload2) = codec::encode_cmd(&back).unwrap();
+            assert_eq!((tag2, payload2), (tag, payload));
+        }
+
+        // RoundResult with an int8-quantized partial and an empty-sparse
+        // entry — the codec edge cases — across the pair, both ways.
+        let mut stats = Statistics { weight: 4.0, ..Default::default() };
+        stats.vecs.insert("update".into(), stat_cases[3].clone());
+        stats.vecs.insert("mask".into(), stat_cases[1].clone());
+        let mut metrics = Metrics::new();
+        metrics.add_central("loss", 2.0, 1.0);
+        let r = RoundResult {
+            worker: 1,
+            round: 4,
+            seq: 17,
+            partial: Some(stats),
+            metrics,
+            counters: Counters { users_trained: 3, stat_bytes: 11, ..Default::default() },
+            costs: vec![],
+            error: None,
+        };
+        let mut buf = Vec::new();
+        codec::encode_round_result(&mut buf, &r);
+        wire::write_frame(&mut b, FRAME_RESULT, &buf).unwrap();
+        let (tag, payload, _) = wire::read_frame(&mut a).unwrap();
+        assert_eq!(tag, FRAME_RESULT);
+        let mut cur = wire::Cursor::new(&payload);
+        let back = codec::decode_round_result(&mut cur).unwrap();
+        cur.done().unwrap();
+        let mut again = Vec::new();
+        codec::encode_round_result(&mut again, &back);
+        assert_eq!(again, buf);
+        assert_eq!(back.partial, r.partial);
+    }
+
+    #[test]
+    fn frames_roundtrip_through_tcp_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut client = TcpStream::connect(addr).unwrap();
+            let (tag, payload, _) = wire::read_frame(&mut client).unwrap();
+            wire::write_frame(&mut client, tag, &payload).unwrap(); // echo
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        let v = StatValue::Sparse { dim: 1000, idx: vec![0, 999], val: vec![1.0, -1.0] };
+        let mut buf = Vec::new();
+        codec::encode_stat_value(&mut buf, &v);
+        wire::write_frame(&mut server, 7, &buf).unwrap();
+        let (tag, echoed, _) = wire::read_frame(&mut server).unwrap();
+        assert_eq!((tag, &echoed), (7, &buf));
+        let mut cur = wire::Cursor::new(&echoed);
+        assert_eq!(codec::decode_stat_value(&mut cur).unwrap(), v);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn pool_handshake_roundtrip_and_result_event() {
+        let server = SocketServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let client = std::thread::spawn(move || {
+            let mut conn = WorkerConn::connect(&addr).unwrap();
+            assert_eq!(conn.setup.worker, 0);
+            assert_eq!(conn.setup.config_json, "{\"cfg\":1}");
+            let msg = conn.recv().unwrap().expect("expected round work");
+            assert_eq!(msg.seq, 5);
+            assert_eq!(msg.uids, vec![3]);
+            assert_eq!(msg.central, vec![1.5, -0.5]);
+            let r = RoundResult {
+                worker: conn.setup.worker,
+                round: msg.ctx.iteration,
+                seq: msg.seq,
+                partial: None,
+                metrics: Metrics::new(),
+                counters: Counters::default(),
+                costs: vec![],
+                error: None,
+            };
+            conn.send_result(&r).unwrap();
+            assert!(conn.recv().unwrap().is_none(), "expected stop");
+        });
+        let mut pool = server.into_pool(1, spec("{\"cfg\":1}")).unwrap();
+        assert_eq!(pool.alive_count(), 1);
+        let ctx = CentralContext::train(2, 1, LocalParams::default(), 0);
+        pool.send_round(0, &ctx, &[1.5, -0.5], &[3], 5).unwrap();
+        match pool.recv_event().unwrap() {
+            PoolEvent::Result(r) => {
+                assert_eq!(r.seq, 5);
+                assert_eq!(r.worker, 0);
+            }
+            PoolEvent::Dead { reason, .. } => panic!("worker died: {reason}"),
+            PoolEvent::Joined { .. } => panic!("unexpected join"),
+        }
+        let (bin, bout) = pool.wire_bytes();
+        assert!(bin > 0 && bout > 0, "wire accounting must tick ({bin}/{bout})");
+        pool.shutdown();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_surfaces_and_replacement_joins() {
+        let server = SocketServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let first = std::thread::spawn({
+            let addr = addr.clone();
+            move || {
+                let conn = WorkerConn::connect(&addr).unwrap();
+                drop(conn); // abrupt exit: EOF on the server side
+            }
+        });
+        let pool = server.into_pool(1, spec("{}")).unwrap();
+        first.join().unwrap();
+        match pool.recv_event().unwrap() {
+            PoolEvent::Dead { worker: 0, .. } => {}
+            _ => panic!("expected Dead for worker 0"),
+        }
+        assert_eq!(pool.alive_count(), 0);
+        // A replacement connects into the dead slot.
+        let second = std::thread::spawn(move || {
+            let mut conn = WorkerConn::connect(&addr).unwrap();
+            assert_eq!(conn.setup.worker, 0);
+            assert!(conn.recv().unwrap().is_none()); // stop
+        });
+        match pool.recv_event().unwrap() {
+            PoolEvent::Joined { worker: 0 } => {}
+            PoolEvent::Dead { reason, .. } => panic!("unexpected death: {reason}"),
+            PoolEvent::Result(_) => panic!("unexpected result"),
+        }
+        assert_eq!(pool.alive_count(), 1);
+        drop(pool); // shutdown sends Stop to the replacement
+        second.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_server_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pfl-comms-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("srv.sock");
+        let addr = format!("unix:{}", path.display());
+        let server = SocketServer::bind(&addr).unwrap();
+        let local = server.local_addr().to_string();
+        assert_eq!(local, addr);
+        let client = std::thread::spawn(move || {
+            let mut conn = WorkerConn::connect(&local).unwrap();
+            assert!(conn.recv().unwrap().is_none());
+        });
+        let mut pool = server.into_pool(1, spec("{}")).unwrap();
+        assert!(pool.alive(0));
+        pool.shutdown();
+        client.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,348 @@
+//! Length-framed byte protocol (DESIGN.md §7).
+//!
+//! A connection opens with a 5-byte preamble — magic `b"PFLC"` + a
+//! version byte — written by *both* sides before either reads, so a
+//! version mismatch fails fast in one round trip. After the preamble
+//! the stream is a sequence of frames:
+//!
+//! ```text
+//! +-----+----------------+=================+
+//! | tag |  len (varint)  |  payload (len)  |
+//! | u8  |  LEB128 u64    |  codec bytes    |
+//! +-----+----------------+=================+
+//! ```
+//!
+//! Varints are unsigned LEB128 (7 bits per byte, LSB first, high bit =
+//! continue). Scalars inside payloads are little-endian. There is no
+//! per-frame checksum: the transports below this layer (Unix-domain and
+//! TCP sockets) are reliable byte streams.
+
+use super::CommError;
+use std::io::{Read, Write};
+
+/// Connection preamble magic.
+pub const MAGIC: [u8; 4] = *b"PFLC";
+/// Wire protocol version; bump on any frame-layout change.
+pub const VERSION: u8 = 1;
+/// Upper bound on a single frame payload (1 GiB) — a corrupt length
+/// field must not turn into an attempted allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+// ---------------------------------------------------------------- encode
+
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+pub fn put_u32_le(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64_le(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32_le(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64_le(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Varint byte length + UTF-8 bytes.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked reader over a received payload.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CommError> {
+        if self.remaining() < n {
+            return Err(CommError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CommError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, CommError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32_le(&mut self) -> Result<u32, CommError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64_le(&mut self) -> Result<u64, CommError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32_le(&mut self) -> Result<f32, CommError> {
+        Ok(f32::from_bits(self.u32_le()?))
+    }
+
+    pub fn f64_le(&mut self) -> Result<f64, CommError> {
+        Ok(f64::from_bits(self.u64_le()?))
+    }
+
+    pub fn varint(&mut self) -> Result<u64, CommError> {
+        let mut v = 0u64;
+        for shift in 0..10 {
+            let byte = self.u8()?;
+            if shift == 9 && byte > 1 {
+                return Err(CommError::Malformed("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7f) << (7 * shift);
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(CommError::Malformed("varint longer than 10 bytes"))
+    }
+
+    /// Varint that must fit a sane in-memory length.
+    pub fn len(&mut self) -> Result<usize, CommError> {
+        let v = self.varint()?;
+        if v > MAX_FRAME_LEN as u64 {
+            return Err(CommError::FrameTooLarge { len: v });
+        }
+        Ok(v as usize)
+    }
+
+    pub fn string(&mut self) -> Result<String, CommError> {
+        let n = self.len()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CommError::Malformed("invalid utf-8"))
+    }
+
+    /// Assert the payload was fully consumed.
+    pub fn done(&self) -> Result<(), CommError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(CommError::Malformed("trailing bytes after payload"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one frame; returns total bytes written (header + payload).
+pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<u64, CommError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(CommError::FrameTooLarge { len: payload.len() as u64 });
+    }
+    let mut head = Vec::with_capacity(11);
+    head.push(tag);
+    put_varint(&mut head, payload.len() as u64);
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok((head.len() + payload.len()) as u64)
+}
+
+/// Read one frame; returns (tag, payload, total bytes read). A clean
+/// EOF *at a frame boundary* is [`CommError::Closed`]; EOF anywhere
+/// else is an I/O error (the peer died mid-frame).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>, u64), CommError> {
+    let mut tag = [0u8; 1];
+    loop {
+        match r.read(&mut tag) {
+            Ok(0) => return Err(CommError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(CommError::Io(e)),
+        }
+    }
+    let (len, len_bytes) = read_varint(r)?;
+    if len > MAX_FRAME_LEN as u64 {
+        return Err(CommError::FrameTooLarge { len });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((tag[0], payload, 1 + len_bytes + len))
+}
+
+fn read_varint<R: Read>(r: &mut R) -> Result<(u64, u64), CommError> {
+    let mut v = 0u64;
+    let mut byte = [0u8; 1];
+    for shift in 0..10u64 {
+        r.read_exact(&mut byte)?;
+        if shift == 9 && byte[0] > 1 {
+            return Err(CommError::Malformed("varint overflows u64"));
+        }
+        v |= u64::from(byte[0] & 0x7f) << (7 * shift);
+        if byte[0] & 0x80 == 0 {
+            return Ok((v, shift + 1));
+        }
+    }
+    Err(CommError::Malformed("varint longer than 10 bytes"))
+}
+
+/// Both sides write their preamble before reading the peer's.
+pub fn write_preamble<W: Write>(w: &mut W) -> Result<(), CommError> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&[VERSION])?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_preamble<R: Read>(r: &mut R) -> Result<(), CommError> {
+    let mut m = [0u8; 5];
+    r.read_exact(&mut m).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            CommError::Closed
+        } else {
+            CommError::Io(e)
+        }
+    })?;
+    if m[..4] != MAGIC {
+        return Err(CommError::BadMagic([m[0], m[1], m[2], m[3]]));
+    }
+    if m[4] != VERSION {
+        return Err(CommError::BadVersion { got: m[4], want: VERSION });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrips_across_widths() {
+        let cases = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut cur = Cursor::new(&buf);
+            assert_eq!(cur.varint().unwrap(), v, "value {v}");
+            cur.done().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_known_encodings() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 300);
+        assert_eq!(buf, [0xAC, 0x02]);
+        buf.clear();
+        put_varint(&mut buf, 127);
+        assert_eq!(buf, [0x7F]);
+        buf.clear();
+        put_varint(&mut buf, 128);
+        assert_eq!(buf, [0x80, 0x01]);
+    }
+
+    #[test]
+    fn overlong_varint_rejected() {
+        let buf = [0xFFu8; 11];
+        let mut cur = Cursor::new(&buf);
+        assert!(matches!(cur.varint(), Err(CommError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_layout_is_pinned() {
+        // tag 4, payload [1,2,3] → exactly [4, 3, 1, 2, 3] on the wire.
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, 4, &[1, 2, 3]).unwrap();
+        assert_eq!(wire, [4, 3, 1, 2, 3]);
+        assert_eq!(n, 5);
+        let (tag, payload, read) = read_frame(&mut wire.as_slice()).unwrap();
+        assert_eq!((tag, payload.as_slice(), read), (4, &[1u8, 2, 3][..], 5));
+    }
+
+    #[test]
+    fn preamble_bytes_are_pinned() {
+        let mut wire = Vec::new();
+        write_preamble(&mut wire).unwrap();
+        assert_eq!(wire, [0x50, 0x46, 0x4C, 0x43, 0x01]); // "PFLC" + v1
+        read_preamble(&mut wire.as_slice()).unwrap();
+    }
+
+    #[test]
+    fn preamble_rejects_bad_magic_and_version() {
+        let bad = [0x50, 0x46, 0x4C, 0x58, 0x01];
+        assert!(matches!(read_preamble(&mut bad.as_slice()), Err(CommError::BadMagic(_))));
+        let vers = [0x50, 0x46, 0x4C, 0x43, 0x09];
+        assert!(matches!(
+            read_preamble(&mut vers.as_slice()),
+            Err(CommError::BadVersion { got: 9, want: 1 })
+        ));
+    }
+
+    #[test]
+    fn eof_at_frame_boundary_is_closed() {
+        let empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut &empty[..]), Err(CommError::Closed)));
+        // EOF mid-frame is an I/O error, not Closed.
+        let partial: &[u8] = &[4, 10, 1, 2];
+        assert!(matches!(read_frame(&mut &partial[..]), Err(CommError::Io(_))));
+    }
+
+    #[test]
+    fn cursor_reports_truncation() {
+        let mut cur = Cursor::new(&[1, 2]);
+        assert!(matches!(cur.u32_le(), Err(CommError::Truncated { need: 4, have: 2 })));
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_bool(&mut buf, true);
+        put_u32_le(&mut buf, 0xDEAD_BEEF);
+        put_u64_le(&mut buf, u64::MAX - 1);
+        put_f32_le(&mut buf, -1.5);
+        put_f64_le(&mut buf, std::f64::consts::PI);
+        put_str(&mut buf, "héllo");
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(cur.u8().unwrap(), 7);
+        assert!(cur.bool().unwrap());
+        assert_eq!(cur.u32_le().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(cur.u64_le().unwrap(), u64::MAX - 1);
+        assert_eq!(cur.f32_le().unwrap(), -1.5);
+        assert_eq!(cur.f64_le().unwrap(), std::f64::consts::PI);
+        assert_eq!(cur.string().unwrap(), "héllo");
+        cur.done().unwrap();
+    }
+}

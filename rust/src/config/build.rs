@@ -9,8 +9,8 @@ use anyhow::{bail, Context, Result};
 use super::{Config, DatasetConfig};
 use crate::baselines::OverheadProfile;
 use crate::data::{
-    FederatedDataset, InstructFlavor, ShardedStore, StoreSource, SynthCifar, SynthFlair,
-    SynthInstruct, SynthText, UserDataSource,
+    FederatedDataset, GeneratorSource, InstructFlavor, ShardedStore, StoreSource, SynthCifar,
+    SynthFlair, SynthInstruct, SynthTabular, SynthText, UserDataSource,
 };
 use crate::fl::algorithm::RunSpec;
 use crate::fl::backend::{BackendBuilder, RunParams, SimulatedBackend};
@@ -20,15 +20,26 @@ use crate::fl::context::LocalParams;
 #[cfg(feature = "hlo")]
 use crate::fl::model::HloModel;
 use crate::fl::postprocess::Postprocessor;
-use crate::fl::worker::ModelFactory;
+use crate::fl::worker::{ModelFactory, WorkerShared};
 use crate::fl::{AdaFedProx, FedAvg, FedProx, FederatedAlgorithm, Scaffold};
 use crate::privacy::{accountant_by_name, mechanisms::mechanism_by_name, AccountantParams};
 use crate::runtime::Manifest;
 #[cfg(feature = "hlo")]
 use crate::runtime::Runtime;
 
+/// Feature width of the `tabular` dataset / `linear` model pairing —
+/// the PJRT-free configuration the distributed tests and CI smoke runs
+/// use (the model carries `LINEAR_DIM + 1` parameters).
+pub const LINEAR_DIM: usize = 8;
+
 pub fn build_dataset(cfg: &DatasetConfig) -> Result<Arc<dyn FederatedDataset>> {
     Ok(match cfg.kind.as_str() {
+        "tabular" => Arc::new(SynthTabular::new(
+            cfg.num_users,
+            cfg.per_user.max(1),
+            LINEAR_DIM,
+            cfg.seed,
+        )),
         "cifar" => Arc::new(SynthCifar::new(
             cfg.num_users,
             cfg.per_user.max(1),
@@ -185,8 +196,24 @@ pub fn hlo_factory(model: String, _init_seed: u64) -> ModelFactory {
     })
 }
 
+/// The model factory for a config: the pure-Rust [`crate::fl::LinearModel`]
+/// for `model = "linear"` (no PJRT anywhere — what the distributed tests
+/// and CI smoke runs use), the HLO factory for the NN zoo otherwise.
+pub fn model_factory(cfg: &Config) -> ModelFactory {
+    if cfg.model == "linear" {
+        Arc::new(|_worker| {
+            Ok(Box::new(crate::fl::LinearModel::new(LINEAR_DIM)) as Box<dyn crate::fl::Model>)
+        })
+    } else {
+        hlo_factory(cfg.model.clone(), cfg.seed ^ 0x1817)
+    }
+}
+
 /// Initial central parameters for the configured model.
 pub fn init_params(cfg: &Config) -> Result<Vec<f32>> {
+    if cfg.model == "linear" {
+        return Ok(vec![0.0; crate::fl::LinearModel::param_len(LINEAR_DIM)]);
+    }
     let manifest = Manifest::load_default()?;
     Ok(manifest.model(&cfg.model)?.init_params(cfg.seed ^ 0x1817))
 }
@@ -284,7 +311,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         store
     };
     let algorithm = build_algorithm(cfg, dataset.num_users())?;
-    let factory = hlo_factory(cfg.model.clone(), cfg.seed ^ 0x1817);
+    let factory = model_factory(cfg);
     let mut builder = BackendBuilder::new(dataset, algorithm, factory).params(RunParams {
         num_workers: cfg.num_workers,
         scheduler: cfg.scheduler_kind()?,
@@ -304,6 +331,36 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         builder = builder.postprocessor(pp);
     }
     builder.build()
+}
+
+/// Assemble the [`WorkerShared`] a socket-fed worker process needs
+/// (`pfl worker --connect`) from the config the server shipped in its
+/// handshake — the same pieces [`build_backend`] hands the in-process
+/// pool, so a user trains identically on either transport. Only the
+/// pfl-style profile is supported over sockets (the coordinator
+/// emulation is an in-process baseline diagnostic).
+pub fn build_worker_shared(cfg: &Config, use_hlo_clip: bool) -> Result<WorkerShared> {
+    let mut source: Option<Arc<dyn UserDataSource>> = None;
+    let dataset: Arc<dyn FederatedDataset> = if cfg.data_store.is_empty() {
+        build_dataset(&cfg.dataset)?
+    } else {
+        let store = open_store(cfg)?;
+        source = Some(Arc::new(StoreSource::new(store.clone(), cfg.source_config())));
+        store
+    };
+    let algorithm = build_algorithm(cfg, dataset.num_users())?;
+    Ok(WorkerShared {
+        source: source.unwrap_or_else(|| Arc::new(GeneratorSource::new(dataset))),
+        algorithm,
+        postprocessors: Arc::new(build_postprocessors(cfg)?),
+        aggregator: Arc::new(crate::fl::SumAggregator),
+        factory: model_factory(cfg),
+        profile: OverheadProfile::default(),
+        seed: cfg.seed,
+        use_hlo_clip,
+        arena: cfg.arena_config(),
+        noise_threads: cfg.noise_threads,
+    })
 }
 
 #[cfg(test)]
@@ -406,6 +463,26 @@ mod tests {
         assert!(effective_dataset(&cfg).is_err());
         assert!(build_backend(&cfg, OverheadProfile::default()).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tabular_linear_pairing_is_pjrt_free() {
+        let mut cfg = preset("cifar10-iid").unwrap().scaled(0.02);
+        cfg.model = "linear".into();
+        cfg.dataset.kind = "tabular".into();
+        // init + factory never touch the artifact manifest
+        let params = init_params(&cfg).unwrap();
+        assert_eq!(params.len(), LINEAR_DIM + 1);
+        let shared = build_worker_shared(&cfg, false).unwrap();
+        let model = (shared.factory)(0).unwrap();
+        assert_eq!(model.name(), "linear");
+        assert_eq!(model.param_count(), LINEAR_DIM + 1);
+        let ds = build_dataset(&cfg.dataset).unwrap();
+        assert!(ds.num_users() > 0);
+        assert!(matches!(
+            ds.user_data(0),
+            crate::data::UserData::Tabular { dim: LINEAR_DIM, .. }
+        ));
     }
 
     #[test]

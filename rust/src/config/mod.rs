@@ -223,13 +223,22 @@ impl Config {
             "static" => crate::fl::DispatchMode::Static,
             "work-stealing" | "worksteal" => crate::fl::DispatchMode::WorkStealing,
             "async" => crate::fl::DispatchMode::Async,
-            other => bail!("unknown dispatcher {other:?} (static | work-stealing | async)"),
+            "socket" => crate::fl::DispatchMode::Socket,
+            other => {
+                bail!("unknown dispatcher {other:?} (static | work-stealing | async | socket)")
+            }
         };
         Ok(crate::fl::DispatchSpec {
             mode,
             max_staleness: self.max_staleness,
             buffer_frac: self.buffer_frac,
-            reorder_window: self.reorder_window,
+            // socket dispatch always folds through the reorder buffer (a
+            // zero window would deadlock the distributed fold loop)
+            reorder_window: if mode == crate::fl::DispatchMode::Socket {
+                self.reorder_window.max(1)
+            } else {
+                self.reorder_window
+            },
         })
     }
 
@@ -830,6 +839,15 @@ mod tests {
         assert_eq!(spec.mode, crate::fl::DispatchMode::Async);
         assert_eq!(spec.max_staleness, 3);
         assert_eq!(spec.buffer_frac, 0.25);
+        // socket dispatch clamps the replay window to >= 1 (a zero
+        // window would deadlock the distributed fold loop)
+        c.dispatcher = "socket".into();
+        c.reorder_window = 0;
+        let spec = c.dispatch_spec().unwrap();
+        assert_eq!(spec.mode, crate::fl::DispatchMode::Socket);
+        assert_eq!(spec.reorder_window, 1);
+        c.reorder_window = 8;
+        assert_eq!(c.dispatch_spec().unwrap().reorder_window, 8);
         c.dispatcher = "bogus".into();
         assert!(c.dispatch_spec().is_err());
     }

@@ -34,6 +34,7 @@ use super::postprocess::{Postprocessor, PpEnv};
 use super::scheduler::{order, SchedulerKind};
 use super::worker::{ModelFactory, WorkerPool, WorkerShared};
 use crate::baselines::OverheadProfile;
+use crate::comms::{PoolEvent, SocketPool};
 use crate::data::{
     CohortSampler, FederatedDataset, GeneratorSource, MinibatchSampler, UserDataSource,
 };
@@ -273,6 +274,13 @@ impl SimulatedBackend {
     ) -> Result<RunOutcome> {
         if self.params.dispatch.mode == DispatchMode::Async {
             return self.run_async(central, callbacks);
+        }
+        if self.params.dispatch.mode == DispatchMode::Socket {
+            return Err(anyhow!(
+                "socket dispatch needs worker connections: bind a comms::SocketServer, \
+                 accept the workers into a SocketPool and call \
+                 SimulatedBackend::run_distributed instead of run"
+            ));
         }
         let start = Instant::now();
         let mut server_rng = Rng::seed_from_u64(self.params.seed ^ 0x5E12_4E4D);
@@ -578,6 +586,323 @@ impl SimulatedBackend {
     fn drain_replay(&self, engine: &mut ReplayEngine, outcome: &mut RunOutcome) -> Result<()> {
         while let Some(head) = engine.outstanding.pop_front() {
             let r = self.replay_recv(engine, head.seq)?;
+            Self::absorb_result_bookkeeping(outcome, &r);
+            if r.partial.is_some() {
+                outcome.counters.dropped_updates += 1;
+            }
+        }
+        debug_assert!(engine.parked.is_empty(), "reorder buffer outlived its window");
+        Ok(())
+    }
+
+    /// The multi-process distributed engine (`--dispatch socket`): the
+    /// deterministic-replay round loop of [`Self::run_replay_train_context`],
+    /// but with commands crossing a process boundary through a
+    /// [`SocketPool`] instead of the in-process channels (DESIGN.md §7).
+    ///
+    /// Determinism carries over unchanged: commands are seq-stamped,
+    /// at most `reorder_window` stay outstanding, and results fold
+    /// strictly in dispatch order through the same reorder buffer — so
+    /// a distributed run's central model is **bit-identical to the
+    /// threaded async-replay run at the same seed**, for any worker
+    /// process count (which worker runs a user never enters the
+    /// numbers: per-user RNG is keyed by (run seed, context seed, uid)).
+    ///
+    /// Fault model: a worker that dies mid-round (EOF, I/O error, 3×
+    /// heartbeat silence) surfaces as [`PoolEvent::Dead`]; its in-flight
+    /// commands are re-sent *with their original sequence numbers* to
+    /// the live workers, so the fold order — and therefore the result —
+    /// is unchanged. Duplicate results (the original arrived after the
+    /// death verdict) are dropped by seq. The run only fails when every
+    /// connection is dead.
+    ///
+    /// Federated eval runs on the server's local replica pool after
+    /// draining the distributed tail: eval folds no statistics, so this
+    /// is bit-identical by construction and keeps worker processes
+    /// training-only.
+    pub fn run_distributed(
+        &mut self,
+        mut central: Vec<f32>,
+        callbacks: &mut [Box<dyn Callback>],
+        mut pool: SocketPool,
+    ) -> Result<RunOutcome> {
+        let start = Instant::now();
+        let mut server_rng = Rng::seed_from_u64(self.params.seed ^ 0x5E12_4E4D);
+        let mut outcome = self.fresh_outcome();
+        // result bookkeeping indexes by worker slot; the socket slots may
+        // outnumber the local (eval-only) pool
+        if pool.num_workers() > outcome.worker_busy_nanos.len() {
+            outcome.worker_busy_nanos.resize(pool.num_workers(), 0);
+        }
+        let mut spec = self.params.dispatch;
+        spec.mode = DispatchMode::Socket;
+        // a zero window would deadlock the fold loop (nothing outstanding)
+        spec.reorder_window = spec.reorder_window.max(1);
+        let mut engine = SocketEngine::default();
+
+        let mut t: u64 = 0;
+        'outer: loop {
+            let mut contexts = self.algorithm.next_contexts(t);
+            if contexts.is_empty() {
+                break;
+            }
+            for c in &mut contexts {
+                // the distributed engine owns dispatch wholesale, exactly
+                // like the async engine
+                c.dispatch = spec;
+            }
+            let round_start = Instant::now();
+            let busy_before: u64 = outcome.worker_busy_nanos.iter().sum();
+            let mut round_metrics = Metrics::new();
+
+            for ctx in &contexts {
+                match ctx.population {
+                    Population::Val => {
+                        self.socket_drain(&pool, &mut engine, &mut outcome)?;
+                        let (_, metrics) =
+                            self.run_context(ctx, &central, &mut server_rng, &mut outcome)?;
+                        round_metrics.merge(&metrics.prefixed("val/"));
+                    }
+                    Population::Train => {
+                        let (agg, metrics) = self.socket_train_context(
+                            &pool,
+                            ctx,
+                            &central,
+                            &mut server_rng,
+                            &mut outcome,
+                            &mut engine,
+                        )?;
+                        round_metrics.merge(&metrics);
+                        if let Some(mut agg) = agg {
+                            agg.densify_all();
+                            self.algorithm
+                                .process_aggregated(&mut central, ctx, agg, &mut round_metrics)?;
+                        }
+                    }
+                }
+            }
+
+            let stop =
+                self.close_round(&mut outcome, callbacks, &central, t, round_metrics, round_start, start, busy_before)?;
+            t += 1;
+            if stop {
+                break 'outer;
+            }
+        }
+
+        // commands trained past the horizon: wait out + drop, then an
+        // orderly STOP to every live worker process
+        self.socket_drain(&pool, &mut engine, &mut outcome)?;
+        pool.shutdown();
+        self.finish_run(outcome, central, callbacks, start)
+    }
+
+    /// One distributed train context — the socket twin of
+    /// [`Self::run_replay_train_context`], plus the transport's own round
+    /// metrics (`sys/requeued-users`, `sys/worker-reconnects`,
+    /// `sys/wire-bytes-in`/`-out`).
+    fn socket_train_context(
+        &self,
+        pool: &SocketPool,
+        ctx: &CentralContext,
+        central: &[f32],
+        server_rng: &mut Rng,
+        outcome: &mut RunOutcome,
+        engine: &mut SocketEngine,
+    ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
+        let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
+        let window = ctx.dispatch.reorder_window.max(1);
+        let cache0 = StoreSnap::take(&outcome.counters);
+        let (in0, out0) = pool.wire_bytes();
+        let requeued0 = engine.requeued_users;
+        let reconnects0 = engine.reconnects;
+
+        let mut metrics = Metrics::new();
+        let mut acc: Option<super::stats::Statistics> = None;
+        let mut folded = 0usize;
+        let mut stale_folds = 0u64;
+        let mut round_stat_elements = 0u64;
+        let mut round_stat_bytes = 0u64;
+
+        self.socket_top_up(pool, engine, &mut pending, ctx, &central_arc, window)?;
+        while folded < k {
+            // the head stays in `outstanding` until its result is in
+            // hand, so a worker death while we wait still requeues it
+            let Some((head_seq, head_round)) =
+                engine.outstanding.front().map(|o| (o.seq, o.round))
+            else {
+                break; // cohort exhausted before the buffer filled
+            };
+            let r = self.socket_recv(pool, engine, head_seq)?;
+            engine.outstanding.pop_front();
+            round_stat_elements += r.counters.stat_elements;
+            round_stat_bytes += r.counters.stat_bytes;
+            Self::absorb_result_bookkeeping(outcome, &r);
+            let staleness = ctx.iteration.saturating_sub(head_round);
+            if self.fold_async_arrival(
+                outcome,
+                &mut metrics,
+                &mut acc,
+                r,
+                staleness,
+                ctx.dispatch.max_staleness,
+                &mut stale_folds,
+            ) {
+                folded += 1;
+            }
+            self.socket_top_up(pool, engine, &mut pending, ctx, &central_arc, window)?;
+        }
+
+        metrics.add_central(
+            "sys/reorder-outstanding",
+            engine.outstanding.len() as f64,
+            1.0,
+        );
+        let (in1, out1) = pool.wire_bytes();
+        let requeued = engine.requeued_users - requeued0;
+        let reconnects = engine.reconnects - reconnects0;
+        metrics.add_central("sys/requeued-users", requeued as f64, 1.0);
+        metrics.add_central("sys/worker-reconnects", reconnects as f64, 1.0);
+        metrics.add_central("sys/wire-bytes-in", (in1 - in0) as f64, 1.0);
+        metrics.add_central("sys/wire-bytes-out", (out1 - out0) as f64, 1.0);
+        outcome.counters.requeued_users += requeued;
+        outcome.counters.worker_reconnects += reconnects;
+        // worker results never carry these (they are transport-side), so
+        // the running totals are plain assignments of the pool's gauges
+        outcome.counters.wire_bytes_in = in1;
+        outcome.counters.wire_bytes_out = out1;
+
+        self.finish_async_train_context(
+            ctx,
+            server_rng,
+            outcome,
+            acc,
+            metrics,
+            cohort_len,
+            folded,
+            stale_folds,
+            round_stat_elements,
+            round_stat_bytes,
+            cache0,
+        )
+    }
+
+    /// Keep `window` commands outstanding on the wire. Worker choice is
+    /// the first *live* slot scanning from `seq % W` — deterministic
+    /// when everyone is alive, and irrelevant to the results either way
+    /// (the fold consumes seqs in dispatch order and per-user RNG never
+    /// sees the worker id).
+    fn socket_top_up(
+        &self,
+        pool: &SocketPool,
+        engine: &mut SocketEngine,
+        pending: &mut VecDeque<usize>,
+        ctx: &CentralContext,
+        central: &Arc<Vec<f32>>,
+        window: usize,
+    ) -> Result<()> {
+        while engine.outstanding.len() < window {
+            let Some(uid) = pending.pop_front() else { break };
+            let seq = engine.next_seq;
+            engine.next_seq += 1;
+            let w = socket_worker_for(pool, seq)?;
+            pool.send_round(w, ctx, central, &[uid], seq)?;
+            engine.outstanding.push_back(SocketOutstanding {
+                seq,
+                round: ctx.iteration,
+                uid,
+                worker: w,
+                ctx: ctx.clone(),
+                central: central.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Receive the result for `seq`, parking earlier-than-expected
+    /// arrivals and servicing transport events: a death requeues the
+    /// dead worker's in-flight commands (same seqs, live workers), a
+    /// join marks a replacement available.
+    fn socket_recv(
+        &self,
+        pool: &SocketPool,
+        engine: &mut SocketEngine,
+        seq: u64,
+    ) -> Result<super::worker::RoundResult> {
+        if let Some(r) = engine.parked.remove(&seq) {
+            return Ok(r);
+        }
+        loop {
+            match pool.recv_event()? {
+                PoolEvent::Result(r) => {
+                    let r = *r;
+                    if let Some(err) = &r.error {
+                        return Err(anyhow!("worker {} failed: {err}", r.worker));
+                    }
+                    if r.seq == seq {
+                        return Ok(r);
+                    }
+                    // a command requeued after a death verdict can yield
+                    // two results (the original was already in flight);
+                    // accept only seqs still outstanding, first wins
+                    if engine.outstanding.iter().any(|o| o.seq == r.seq) {
+                        engine.parked.entry(r.seq).or_insert(r);
+                    }
+                }
+                PoolEvent::Dead { worker, reason } => {
+                    self.socket_requeue(pool, engine, worker, &reason)?;
+                }
+                PoolEvent::Joined { worker: _ } => {
+                    engine.reconnects += 1;
+                }
+            }
+        }
+    }
+
+    /// Re-send every command in flight on a dead worker to live workers,
+    /// with the **original sequence numbers** — the fold order (and so
+    /// the run's result) is unchanged by the failure. Commands whose
+    /// result already arrived (parked) are skipped.
+    fn socket_requeue(
+        &self,
+        pool: &SocketPool,
+        engine: &mut SocketEngine,
+        worker: usize,
+        reason: &str,
+    ) -> Result<()> {
+        let mut moved = 0u64;
+        for i in 0..engine.outstanding.len() {
+            if engine.outstanding[i].worker != worker {
+                continue;
+            }
+            let seq = engine.outstanding[i].seq;
+            if engine.parked.contains_key(&seq) {
+                continue; // its result beat the death verdict
+            }
+            let w = socket_worker_for(pool, seq)
+                .with_context(|| format!("requeuing after worker {worker} died: {reason}"))?;
+            {
+                let o = &engine.outstanding[i];
+                pool.send_round(w, &o.ctx, &o.central, &[o.uid], o.seq)?;
+            }
+            engine.outstanding[i].worker = w;
+            moved += 1;
+        }
+        engine.requeued_users += moved;
+        Ok(())
+    }
+
+    /// Distributed barrier: wait out every outstanding command in
+    /// dispatch order, dropping (and counting) their updates.
+    fn socket_drain(
+        &self,
+        pool: &SocketPool,
+        engine: &mut SocketEngine,
+        outcome: &mut RunOutcome,
+    ) -> Result<()> {
+        while let Some(head_seq) = engine.outstanding.front().map(|o| o.seq) {
+            let r = self.socket_recv(pool, engine, head_seq)?;
+            engine.outstanding.pop_front();
             Self::absorb_result_bookkeeping(outcome, &r);
             if r.partial.is_some() {
                 outcome.counters.dropped_updates += 1;
@@ -954,7 +1279,9 @@ impl SimulatedBackend {
         // dispatcher_for applies — so compare through it to reuse the
         // stored dispatcher instead of boxing a fresh one per round
         let effective_mode = match ctx.dispatch.mode {
-            DispatchMode::Async => DispatchMode::WorkStealing,
+            // barrier rounds of the async and distributed engines (eval,
+            // drains) execute on the local pull queue
+            DispatchMode::Async | DispatchMode::Socket => DispatchMode::WorkStealing,
             m => m,
         };
         let plan = if effective_mode == self.dispatcher.mode() {
@@ -1129,6 +1456,47 @@ struct ReplayEngine {
     next_seq: u64,
     outstanding: VecDeque<Outstanding>,
     parked: BTreeMap<u64, super::worker::RoundResult>,
+}
+
+/// One command in flight on the socket transport. Unlike the in-process
+/// [`Outstanding`], it retains everything needed to *re-send* the
+/// command verbatim (same seq → same fold order) if its worker dies.
+struct SocketOutstanding {
+    seq: u64,
+    round: u64,
+    uid: usize,
+    /// The slot currently executing it (rewritten on requeue).
+    worker: usize,
+    ctx: CentralContext,
+    central: Arc<Vec<f32>>,
+}
+
+/// State of the distributed replay engine
+/// ([`SimulatedBackend::run_distributed`]): the dispatch cursor, the
+/// outstanding window in dispatch order, the bounded arrival-reorder
+/// buffer, and the run-level transport tallies behind
+/// `sys/requeued-users` / `sys/worker-reconnects`.
+#[derive(Default)]
+struct SocketEngine {
+    next_seq: u64,
+    outstanding: VecDeque<SocketOutstanding>,
+    parked: BTreeMap<u64, super::worker::RoundResult>,
+    requeued_users: u64,
+    reconnects: u64,
+}
+
+/// First live slot scanning from `seq % W`; errors only when every
+/// connection is dead (nothing left to run the command).
+fn socket_worker_for(pool: &SocketPool, seq: u64) -> Result<usize> {
+    let w = pool.num_workers();
+    let base = (seq % w as u64) as usize;
+    for off in 0..w {
+        let cand = (base + off) % w;
+        if pool.alive(cand) {
+            return Ok(cand);
+        }
+    }
+    Err(anyhow!("no live workers left (all {w} socket connections are dead)"))
 }
 
 /// Round-start snapshot of the store-facing run counters; the deltas

@@ -30,6 +30,13 @@ pub enum DispatchMode {
     /// folds the first K arrivals weighted by staleness and launches the
     /// next context without waiting for stragglers.
     Async,
+    /// Multi-process distribution: seq-stamped per-user commands go to
+    /// worker *processes* over Unix-domain/TCP sockets
+    /// ([`crate::comms`]), folded through the same deterministic
+    /// reorder-window as async replay — so a distributed run is
+    /// bit-identical to the threaded replay run at the same seed,
+    /// whatever the worker-process count (DESIGN.md §7).
+    Socket,
 }
 
 /// Dispatch policy carried by a [`CentralContext`]: the mode plus the
@@ -95,6 +102,18 @@ impl DispatchSpec {
     pub fn async_replay(max_staleness: u64, buffer_frac: f64, window: usize) -> Self {
         DispatchSpec {
             mode: DispatchMode::Async,
+            max_staleness,
+            buffer_frac,
+            reorder_window: window.max(1),
+        }
+    }
+
+    /// Socket (multi-process) dispatch: async-replay semantics over a
+    /// process transport; the window is clamped to ≥ 1 for the same
+    /// reason as [`DispatchSpec::async_replay`].
+    pub fn socket(max_staleness: u64, buffer_frac: f64, window: usize) -> Self {
+        DispatchSpec {
+            mode: DispatchMode::Socket,
             max_staleness,
             buffer_frac,
             reorder_window: window.max(1),
@@ -233,5 +252,15 @@ mod tests {
         assert_eq!(r.reorder_window, 4);
         // a zero window would deadlock the fold loop: clamped to 1
         assert_eq!(DispatchSpec::async_replay(2, 0.5, 0).reorder_window, 1);
+    }
+
+    #[test]
+    fn socket_spec_mirrors_replay() {
+        let s = DispatchSpec::socket(3, 0.25, 6);
+        assert_eq!(s.mode, DispatchMode::Socket);
+        assert_eq!(s.max_staleness, 3);
+        assert_eq!(s.buffer_frac, 0.25);
+        assert_eq!(s.reorder_window, 6);
+        assert_eq!(DispatchSpec::socket(3, 0.25, 0).reorder_window, 1);
     }
 }

@@ -250,11 +250,14 @@ impl Dispatcher for WorkStealingDispatcher {
 /// The dispatcher implementing a [`DispatchSpec`]. `Async` maps to the
 /// pull-queue dispatcher: the async engine (`backend::run_async`) drives
 /// its own per-user streaming and uses this plan only for the barrier
-/// phases it still needs (federated eval, drains).
+/// phases it still needs (federated eval, drains). `Socket` likewise:
+/// the distributed engine (`backend::run_distributed`) streams
+/// seq-stamped commands over [`crate::comms`] itself and falls back to
+/// the local pull queue only for federated eval on the server.
 pub fn dispatcher_for(spec: DispatchSpec, scheduler: SchedulerKind) -> Box<dyn Dispatcher> {
     match spec.mode {
         DispatchMode::Static => Box::new(StaticDispatcher { scheduler }),
-        DispatchMode::WorkStealing | DispatchMode::Async => {
+        DispatchMode::WorkStealing | DispatchMode::Async | DispatchMode::Socket => {
             Box::new(WorkStealingDispatcher { scheduler })
         }
     }
@@ -401,6 +404,11 @@ mod tests {
             dispatcher_for(DispatchSpec::async_mode(2, 0.5), k).mode(),
             DispatchMode::WorkStealing
         );
+        // socket mode evals on the server's local pull queue
+        assert_eq!(
+            dispatcher_for(DispatchSpec::socket(2, 0.5, 4), k).mode(),
+            DispatchMode::WorkStealing
+        );
     }
 
     #[test]
@@ -450,7 +458,7 @@ mod tests {
             assert_eq!(trained, 12, "{} trained the wrong user count", dispatcher.name());
             let partials: Vec<_> = results.into_iter().filter_map(|r| r.partial).collect();
             reduced.push(agg.worker_reduce(partials).unwrap());
-            pool.shutdown();
+            pool.shutdown().unwrap();
         }
         let (a, b) = (&reduced[0], &reduced[1]);
         assert_eq!(a.weight, b.weight);

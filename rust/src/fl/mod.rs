@@ -48,4 +48,4 @@ pub use model::HloModel;
 pub use model::{ClipKernel, Model, TrainOutput};
 pub use scheduler::{median, order, schedule, Schedule, SchedulerKind};
 pub use stats::{StatValue, Statistics, C_DELTA, UPDATE};
-pub use worker::{RoundResult, WorkerPool};
+pub use worker::{run_socket_worker, Cmd, RoundResult, WorkerPanic, WorkerPool};

@@ -44,8 +44,11 @@ use crate::util::rng::Rng;
 /// like `HloModel` are constructed where they live).
 pub type ModelFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Model>> + Send + Sync>;
 
-/// One round command to a worker.
-enum Cmd {
+/// One round command to a worker. Public because the socket transport
+/// ([`crate::comms::codec`]) encodes/decodes the same command type the
+/// in-process channel driver sends — one command vocabulary, two
+/// transports (DESIGN.md §7).
+pub enum Cmd {
     Round {
         ctx: CentralContext,
         central: Arc<Vec<f32>>,
@@ -159,7 +162,33 @@ impl WorkerPool {
             let coord_tx = coordinator.as_ref().map(|c| c.tx.clone());
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
-                .spawn(move || worker_loop(w, rx, res_tx, shared, coord_tx))
+                .spawn(move || {
+                    // A panic in algorithm/model code must not wedge the
+                    // backend waiting on a result that will never come:
+                    // surface it as an error result (failing the round
+                    // with a diagnostic), then re-raise so join_all can
+                    // report the typed [`WorkerPanic`].
+                    let guard_tx = res_tx.clone();
+                    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker_loop(w, rx, res_tx, shared, coord_tx)
+                    }));
+                    if let Err(payload) = caught {
+                        let _ = guard_tx.send(RoundResult {
+                            worker: w,
+                            round: 0,
+                            seq: 0,
+                            partial: None,
+                            metrics: Metrics::new(),
+                            counters: Counters::default(),
+                            costs: Vec::new(),
+                            error: Some(format!(
+                                "worker panicked: {}",
+                                panic_message(payload.as_ref())
+                            )),
+                        });
+                        std::panic::resume_unwind(payload);
+                    }
+                })
                 .with_context(|| format!("spawning worker {w}"))?;
             handles.push(handle);
         }
@@ -234,28 +263,74 @@ impl WorkerPool {
 
     /// Stop every worker (and the coordinator) and join their threads.
     /// Idempotent: the explicit [`Self::shutdown`] and the `Drop` both
-    /// funnel here.
-    fn join_all(&mut self) {
+    /// funnel here. A worker thread that died by panic surfaces as a
+    /// typed [`WorkerPanic`] error (the first one, if several).
+    fn join_all(&mut self) -> Result<()> {
         for tx in &self.cmd_txs {
             let _ = tx.send(Cmd::Stop);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let mut first: Option<WorkerPanic> = None;
+        for (w, h) in self.handles.drain(..).enumerate() {
+            if let Err(payload) = h.join() {
+                let p = WorkerPanic { worker: w, message: panic_message(payload.as_ref()) };
+                if first.is_none() {
+                    first = Some(p);
+                }
+            }
         }
         if let Some(c) = self.coordinator.take() {
             let _ = c.tx.send(CoordMsg::Stop);
             let _ = c.handle.join();
         }
+        match first {
+            Some(p) => Err(p.into()),
+            None => Ok(()),
+        }
     }
 
-    pub fn shutdown(mut self) {
-        self.join_all();
+    /// Join the pool, surfacing worker panics as a typed error instead
+    /// of swallowing them (a run that looked clean but lost a worker is
+    /// not clean).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.join_all()
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.join_all();
+        // shutdown() already drained the handles; a panic surfaced there.
+        // On the plain-drop path there is no caller to hand the error to.
+        let _ = self.join_all();
+    }
+}
+
+/// A worker thread died by panic. [`WorkerPool::shutdown`] returns this
+/// (via `anyhow`) so the run fails with a diagnostic naming the worker
+/// instead of hanging on a result that will never arrive or silently
+/// losing the replica.
+#[derive(Debug)]
+pub struct WorkerPanic {
+    pub worker: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} panicked: {}", self.worker, self.message)
+    }
+}
+
+impl std::error::Error for WorkerPanic {}
+
+/// Best-effort extraction of a panic payload's message (`panic!` with a
+/// literal yields `&str`, with a format string `String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -493,36 +568,13 @@ fn run_worker_round(
                 }
             }
             if let Some(tx) = coord_tx {
-                // explicit topology: serialize and route via coordinator
-                // (sparse values ship idx + val; quantized values ship
-                // scale + idx + packed codes — like a real wire format)
-                use crate::fl::stats::StatValue;
+                // explicit topology: serialize and route via coordinator,
+                // using the comms wire codec — the exact payload a socket
+                // worker would ship (one serialization path for both the
+                // emulated and the real transport, DESIGN.md §7)
                 for v in stats.vecs.values() {
                     let mut buf = Vec::with_capacity(v.wire_bytes());
-                    match v {
-                        StatValue::Sparse { idx, val, .. } => {
-                            for i in idx {
-                                buf.extend_from_slice(&i.to_le_bytes());
-                            }
-                            for x in val {
-                                buf.extend_from_slice(&x.to_le_bytes());
-                            }
-                        }
-                        StatValue::Dense(vals) => {
-                            for x in vals {
-                                buf.extend_from_slice(&x.to_le_bytes());
-                            }
-                        }
-                        StatValue::Quantized { scale, idx, data, .. } => {
-                            buf.extend_from_slice(&scale.to_le_bytes());
-                            if let Some(idx) = idx {
-                                for i in idx {
-                                    buf.extend_from_slice(&i.to_le_bytes());
-                                }
-                            }
-                            buf.extend_from_slice(data);
-                        }
-                    }
+                    crate::comms::codec::encode_stat_value(&mut buf, v);
                     counters.wire_bytes += buf.len() as u64;
                     counters.coordinator_msgs += 1;
                     let _ = tx.send(CoordMsg::Update(buf));
@@ -569,6 +621,71 @@ fn run_worker_round(
         costs,
         error: None,
     })
+}
+
+/// The socket-fed worker driver (`pfl worker --connect ADDR`): the same
+/// transport-independent round execution as [`worker_loop`], but driven
+/// by wire frames from a [`crate::comms::WorkerConn`] instead of an
+/// in-process channel (DESIGN.md §7). Runs until the server sends STOP
+/// or closes the connection; transport errors propagate so the process
+/// exits non-zero and the server's dead-worker detection requeues its
+/// in-flight users.
+pub fn run_socket_worker(
+    mut conn: crate::comms::WorkerConn,
+    shared: Arc<WorkerShared>,
+) -> Result<()> {
+    let id = conn.setup.worker;
+    // One model + one resident arena per worker process, alive for the
+    // whole simulation — identical to the thread replica.
+    let mut model: Option<Box<dyn Model>> = None;
+    let mut arena = StatsArena::with_config(shared.arena);
+    while let Some(msg) = conn.recv()? {
+        let crate::comms::codec::RoundMsg { seq, ctx, central, uids } = msg;
+        if model.is_none() {
+            match (shared.factory)(id) {
+                Ok(m) => model = Some(m),
+                Err(e) => {
+                    conn.send_result(&RoundResult {
+                        worker: id,
+                        round: ctx.iteration,
+                        seq,
+                        partial: None,
+                        metrics: Metrics::new(),
+                        counters: Counters::default(),
+                        costs: Vec::new(),
+                        error: Some(format!("model factory: {e:#}")),
+                    })?;
+                    continue;
+                }
+            }
+        }
+        let result = run_worker_round(
+            id,
+            model.as_deref_mut().unwrap(),
+            &shared,
+            &ctx,
+            &central,
+            WorkSource::Owned(uids),
+            seq,
+            &mut arena,
+            None,
+        );
+        let result = match result {
+            Ok(r) => r,
+            Err(e) => RoundResult {
+                worker: id,
+                round: ctx.iteration,
+                seq,
+                partial: None,
+                metrics: Metrics::new(),
+                counters: Counters::default(),
+                costs: Vec::new(),
+                error: Some(format!("{e:#}")),
+            },
+        };
+        conn.send_result(&result)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -695,7 +812,7 @@ pub(crate) mod tests {
             assert_eq!(r.costs.len(), 3);
             assert_eq!(r.round, 0);
         }
-        pool.shutdown();
+        pool.shutdown().unwrap();
     }
 
     #[test]
@@ -722,7 +839,7 @@ pub(crate) mod tests {
         let total: u64 = results.iter().map(|r| r.counters.users_trained).sum();
         assert_eq!(total, 9, "shared queue must hand out each user exactly once");
         assert_eq!(q.pop(), None);
-        pool.shutdown();
+        pool.shutdown().unwrap();
     }
 
     #[test]
@@ -744,7 +861,7 @@ pub(crate) mod tests {
         let mut seqs = [a.seq, b.seq];
         seqs.sort();
         assert_eq!(seqs, [7, 8]);
-        pool.shutdown();
+        pool.shutdown().unwrap();
     }
 
     #[test]
@@ -769,7 +886,7 @@ pub(crate) mod tests {
             let partials: Vec<Statistics> =
                 results.into_iter().filter_map(|r| r.partial).collect();
             reduced.push(agg.worker_reduce(partials).unwrap());
-            pool.shutdown();
+            pool.shutdown().unwrap();
         }
         let a = &reduced[0];
         let b = &reduced[1];
@@ -817,6 +934,83 @@ pub(crate) mod tests {
         assert_eq!(c.stat_elements, 8);
         // same update in bytes: 8 f32 elements × 4 bytes
         assert_eq!(c.stat_bytes, 32);
-        pool.shutdown();
+        pool.shutdown().unwrap();
+    }
+
+    /// A model whose local training panics — stands in for a bug in
+    /// algorithm/model code (as opposed to an `Err`, which the worker
+    /// already converts into an error result).
+    struct PanicModel {
+        central: Vec<f32>,
+    }
+
+    impl Model for PanicModel {
+        fn param_count(&self) -> usize {
+            self.central.len()
+        }
+        fn set_central(&mut self, central: &[f32]) {
+            self.central.copy_from_slice(central);
+        }
+        fn central(&self) -> &[f32] {
+            &self.central
+        }
+        fn train_local(
+            &mut self,
+            _data: &UserData,
+            _p: &crate::fl::context::LocalParams,
+            _c_diff: Option<&[f32]>,
+            _seed: u64,
+        ) -> Result<super::super::model::TrainOutput> {
+            panic!("injected local-training bug");
+        }
+        fn evaluate(
+            &mut self,
+            _data: &UserData,
+            _sink: Option<&mut super::super::model::ScoreSink>,
+        ) -> Result<Metrics> {
+            panic!("injected local-training bug");
+        }
+        fn name(&self) -> &str {
+            "panic"
+        }
+    }
+
+    #[test]
+    fn panicking_worker_fails_the_run_with_a_diagnostic() {
+        let data: Arc<dyn FederatedDataset> =
+            Arc::new(crate::data::SynthGmmPoints::new(4, 10, 2, 2, 0));
+        let spec = RunSpec { iterations: 10, cohort_size: 4, ..Default::default() };
+        let shared = WorkerShared {
+            source: Arc::new(crate::data::GeneratorSource::new(data)),
+            algorithm: Arc::new(FedAvg::new(spec, Box::new(Sgd))),
+            postprocessors: Arc::new(Vec::new()),
+            aggregator: Arc::new(crate::fl::SumAggregator),
+            // worker 0 is healthy; worker 1 panics on its first user
+            factory: Arc::new(|w| {
+                Ok(if w == 0 {
+                    Box::new(MeanModel::new(2)) as Box<dyn Model>
+                } else {
+                    Box::new(PanicModel { central: vec![0.0; 2] }) as Box<dyn Model>
+                })
+            }),
+            profile: OverheadProfile::default(),
+            seed: 0,
+            use_hlo_clip: false,
+            arena: crate::tensor::ArenaConfig::default(),
+            noise_threads: 0,
+        };
+        let pool = WorkerPool::new(2, shared).unwrap();
+        let ctx = CentralContext::train(0, 4, Default::default(), 1);
+        // the round fails with a diagnostic instead of hanging on a
+        // result that will never arrive (or aborting the process)
+        let err = pool
+            .run_round(&ctx, Arc::new(vec![0.0; 2]), owned(vec![vec![0, 1], vec![2, 3]]))
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "unexpected error: {err:#}");
+        // the join surfaces the typed panic error too
+        let err = pool.shutdown().unwrap_err();
+        let panic = err.downcast_ref::<WorkerPanic>().expect("typed WorkerPanic");
+        assert_eq!(panic.worker, 1);
+        assert!(panic.message.contains("injected local-training bug"));
     }
 }

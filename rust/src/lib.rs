@@ -21,6 +21,7 @@
 //! simulation is a self-contained Rust binary.
 
 pub mod baselines;
+pub mod comms;
 pub mod config;
 pub mod data;
 pub mod experiments;

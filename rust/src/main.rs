@@ -3,6 +3,7 @@
 //! ```text
 //! pfl run --preset cifar10-iid [--scale 0.05] [--workers 2] ...
 //! pfl run --config path.json
+//! pfl worker --connect ADDR                   # socket-fed worker process
 //! pfl materialize --preset X --out DIR        # write an on-disk store
 //! pfl import --in corpus.jsonl --out DIR      # import a real corpus
 //! pfl store stat DIR                          # summarize a store
@@ -40,15 +41,20 @@ COMMANDS
   run        run one benchmark      --preset NAME | --config FILE
                                     [--scale F] [--workers N]
                                     [--algorithm A] [--mechanism M]
-                                    [--dispatch static|work-stealing|async]
+                                    [--dispatch static|work-stealing|async|socket]
                                     [--max-staleness N] [--buffer-frac F]
                                     [--reorder-window N] [--sparse-spill-frac F]
+                                    [--listen ADDR] [--spawn-workers]
+                                    [--heartbeat-ms N]
                                     [--data-store DIR] [--cache-users N]
                                     [--prefetch-depth N] [--store-mmap on|off]
                                     [--quantize none|f16|int8] [--fold-tree]
                                     [--noise-threads N]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
+  worker     socket-fed worker process --connect ADDR
+             (connects to a `pfl run --dispatch socket` server, receives
+             the config over the wire, then trains users it is sent)
   materialize  write a preset/config dataset to an on-disk sharded store
                                     --preset NAME | --config FILE
                                     --out DIR [--scale F]
@@ -90,6 +96,7 @@ fn real_main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" => print!("{HELP}"),
         "run" => cmd_run(&args)?,
+        "worker" => cmd_worker(&args)?,
         "materialize" => cmd_materialize(&args)?,
         "import" => cmd_import(&args)?,
         "store" => cmd_store(&args)?,
@@ -364,7 +371,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let dataset = backend.dataset();
     let init = pfl::config::build::init_params(&cfg)?;
     let mut callbacks: Vec<Box<dyn Callback>> = Vec::new();
-    callbacks.push(Box::new(pfl::config::build::build_eval_callback(&cfg, &dataset)?));
+    // the linear model has no HLO graph: its eval runs on-worker through
+    // the federation's Val contexts, so there is no central-eval callback
+    if cfg.model != "linear" {
+        callbacks.push(Box::new(pfl::config::build::build_eval_callback(&cfg, &dataset)?));
+    }
     if let Some(path) = args.get("csv") {
         callbacks.push(Box::new(CsvReporter::new(path)));
     }
@@ -372,7 +383,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         callbacks.push(Box::new(JsonlReporter::new(path)?));
     }
     let t0 = std::time::Instant::now();
-    let outcome = backend.run(init, &mut callbacks)?;
+    let outcome = if cfg.dispatch_spec()?.mode == pfl::fl::DispatchMode::Socket {
+        run_socket(args, &cfg, &mut backend, init, &mut callbacks)?
+    } else {
+        backend.run(init, &mut callbacks)?
+    };
     let metric = pfl::config::build::headline_metric(&cfg.model);
     if log_every > 0 {
         for (t, m) in &outcome.history {
@@ -411,4 +426,60 @@ fn cmd_run(args: &Args) -> Result<()> {
             .unwrap_or_else(|| "n/a".into()),
     );
     Ok(())
+}
+
+/// Socket-dispatch arm of `pfl run`: bind the listener, optionally spawn
+/// `cfg.num_workers` local `pfl worker` child processes, admit them into a
+/// [`pfl::comms::SocketPool`], and drive the distributed round loop.
+fn run_socket(
+    args: &Args,
+    cfg: &pfl::config::Config,
+    backend: &mut pfl::fl::SimulatedBackend,
+    init: Vec<f32>,
+    callbacks: &mut [Box<dyn Callback>],
+) -> Result<pfl::fl::RunOutcome> {
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let server = pfl::comms::SocketServer::bind(listen)?;
+    let addr = server.local_addr().to_string();
+    eprintln!(
+        "listening on {addr}; waiting for {} worker(s) — start each with \
+         `pfl worker --connect {addr}`",
+        cfg.num_workers
+    );
+    let mut children = Vec::new();
+    if args.flag("spawn-workers") {
+        let exe = std::env::current_exe().context("locating the pfl binary")?;
+        for _ in 0..cfg.num_workers {
+            children.push(
+                std::process::Command::new(&exe)
+                    .args(["worker", "--connect", &addr])
+                    .spawn()
+                    .context("spawning `pfl worker`")?,
+            );
+        }
+    }
+    let spec = pfl::comms::SetupSpec {
+        use_hlo_clip: false, // build_backend leaves ClipBackend at Rust
+        heartbeat_ms: args.get_u64("heartbeat-ms", 500)?,
+        config_json: cfg.to_json(),
+    };
+    let pool = server.into_pool(cfg.num_workers, spec)?;
+    let outcome = backend.run_distributed(init, callbacks, pool);
+    for mut c in children {
+        let _ = c.wait();
+    }
+    outcome
+}
+
+/// `pfl worker --connect ADDR` — process entry point for a socket-fed
+/// worker. The handshake delivers the run's full config JSON, so the
+/// worker rebuilds the identical dataset/algorithm/model stack locally and
+/// then trains whichever users the server streams to it.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let conn = pfl::comms::WorkerConn::connect(addr)
+        .with_context(|| format!("connecting to pfl server at {addr}"))?;
+    let cfg = pfl::config::Config::from_json(&conn.setup.config_json)?;
+    let shared = pfl::config::build::build_worker_shared(&cfg, conn.setup.use_hlo_clip)?;
+    pfl::fl::run_socket_worker(conn, std::sync::Arc::new(shared))
 }

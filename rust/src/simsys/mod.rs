@@ -97,6 +97,18 @@ pub struct Counters {
     /// worker-local noise), whichever engine (legacy sequential or
     /// counter-parallel) produced it.
     pub noise_nanos: u64,
+    /// Socket runs: in-flight uids re-dispatched to a live worker after
+    /// their original worker died mid-round (`sys/requeued-users`).
+    pub requeued_users: u64,
+    /// Socket runs: replacement worker processes admitted into a dead
+    /// slot after the run started (`sys/worker-reconnects`).
+    pub worker_reconnects: u64,
+    /// Socket runs: framed bytes received from workers — results +
+    /// heartbeats (`sys/wire-bytes-in`).
+    pub wire_bytes_in: u64,
+    /// Socket runs: framed bytes sent to workers — round commands
+    /// (`sys/wire-bytes-out`).
+    pub wire_bytes_out: u64,
 }
 
 impl Counters {
@@ -124,6 +136,10 @@ impl Counters {
         self.mmap_stall_nanos += o.mmap_stall_nanos;
         self.pread_stall_nanos += o.pread_stall_nanos;
         self.noise_nanos += o.noise_nanos;
+        self.requeued_users += o.requeued_users;
+        self.worker_reconnects += o.worker_reconnects;
+        self.wire_bytes_in += o.wire_bytes_in;
+        self.wire_bytes_out += o.wire_bytes_out;
     }
 
     pub fn busy(&self) -> Duration {
@@ -295,6 +311,10 @@ mod tests {
             mmap_stall_nanos: 5,
             pread_stall_nanos: 4,
             noise_nanos: 13,
+            requeued_users: 2,
+            worker_reconnects: 1,
+            wire_bytes_in: 77,
+            wire_bytes_out: 88,
             ..Default::default()
         };
         a.merge(&b);
@@ -312,6 +332,10 @@ mod tests {
         assert_eq!(a.mmap_stall_nanos, 5);
         assert_eq!(a.pread_stall_nanos, 4);
         assert_eq!(a.noise_nanos, 13);
+        assert_eq!(a.requeued_users, 2);
+        assert_eq!(a.worker_reconnects, 1);
+        assert_eq!(a.wire_bytes_in, 77);
+        assert_eq!(a.wire_bytes_out, 88);
     }
 
     #[test]

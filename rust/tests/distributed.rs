@@ -1,0 +1,153 @@
+//! End-to-end tests for the multi-process distributed backend: a server
+//! driving real `pfl worker` child processes over loopback TCP must
+//! produce the bit-identical central model to the in-process threaded
+//! engine at the same seed (ROADMAP acceptance: N ∈ {1, 2, 4}), and a
+//! `kill -9` mid-round must be survived by requeuing the dead worker's
+//! in-flight users onto the remaining connections.
+//!
+//! These tests are PJRT-free: they pair the `"linear"` model with the
+//! `"tabular"` synthetic dataset so worker processes rebuild the full
+//! stack from the config JSON shipped in the handshake without needing
+//! HLO artifacts (see `pfl::config::build::LINEAR_DIM`).
+
+use std::process::{Child, Command};
+use std::time::Duration;
+
+use pfl::baselines::EngineVariant;
+use pfl::comms::{SetupSpec, SocketServer};
+use pfl::config::build::{build_backend, init_params};
+use pfl::config::{preset, Config};
+use pfl::fl::RunOutcome;
+
+/// Small PJRT-free run: linear model on synthetic tabular users, async
+/// replay semantics (bounded reorder window) so the socket run has an
+/// in-process twin to be compared against bit-for-bit.
+fn base_cfg(iterations: u64) -> Config {
+    let mut cfg = preset("cifar10-iid").unwrap();
+    cfg.name = "distributed-e2e".into();
+    cfg.model = "linear".into();
+    cfg.dataset.kind = "tabular".into();
+    cfg.dataset.num_users = 48;
+    cfg.dataset.per_user = 8;
+    cfg.iterations = iterations;
+    cfg.cohort_size = 8;
+    cfg.val_cohort_size = 4;
+    cfg.eval_every = 3;
+    cfg.local_epochs = 1;
+    cfg.local_batch = 8;
+    cfg.local_max_steps = 0;
+    cfg.max_staleness = 2;
+    cfg.buffer_frac = 0.5;
+    cfg.reorder_window = 4;
+    cfg.seed = 11;
+    cfg
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_pfl"))
+        .args(["worker", "--connect", addr])
+        .spawn()
+        .expect("spawning pfl worker child process")
+}
+
+/// Run the config distributed: bind a loopback server, spawn `workers`
+/// child processes, and drive `run_distributed`. `kill_first` kills the
+/// first worker with SIGKILL shortly after the run starts and spawns a
+/// replacement process into the freed slot.
+fn socket_run(cfg: &Config, workers: usize, heartbeat_ms: u64, kill_first: bool) -> RunOutcome {
+    let mut cfg = cfg.clone();
+    cfg.dispatcher = "socket".into();
+    cfg.num_workers = workers;
+    let server = SocketServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let mut children: Vec<Child> = (0..workers).map(|_| spawn_worker(&addr)).collect();
+    let pool = server
+        .into_pool(
+            workers,
+            SetupSpec { use_hlo_clip: false, heartbeat_ms, config_json: cfg.to_json() },
+        )
+        .unwrap();
+    // kill only once every worker has handshaked (the pool exists), so
+    // the victim is mid-round rather than mid-connect
+    let killer = kill_first.then(|| {
+        let mut victim = children.remove(0);
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let _ = victim.kill();
+            let _ = victim.wait();
+            spawn_worker(&addr)
+        })
+    });
+    let mut backend = build_backend(&cfg, EngineVariant::PflStyle.profile()).unwrap();
+    let init = init_params(&cfg).unwrap();
+    let outcome = backend.run_distributed(init, &mut [], pool).unwrap();
+    if let Some(k) = killer {
+        children.push(k.join().unwrap());
+    }
+    for mut c in children {
+        // shutdown already sent Stop; reap (and kill stragglers) anyway
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    outcome
+}
+
+#[test]
+fn socket_run_bit_identical_to_threaded_run() {
+    let cfg = base_cfg(8);
+
+    // in-process reference: same config on the threaded async-replay
+    // engine (worker count is immaterial — PR 4's replay fold is
+    // bit-identical across worker counts, so one thread is the baseline)
+    let mut reference = cfg.clone();
+    reference.dispatcher = "async".into();
+    reference.num_workers = 1;
+    let mut backend = build_backend(&reference, EngineVariant::PflStyle.profile()).unwrap();
+    let expect = backend.run(init_params(&reference).unwrap(), &mut []).unwrap();
+    assert_eq!(expect.rounds, cfg.iterations);
+
+    for workers in [1usize, 2, 4] {
+        let got = socket_run(&cfg, workers, 500, false);
+        assert_eq!(got.rounds, expect.rounds, "{workers} workers: rounds diverged");
+        assert_eq!(got.central, expect.central, "{workers} workers: central model diverged");
+        assert_eq!(
+            got.series("train/loss"),
+            expect.series("train/loss"),
+            "{workers} workers: train/loss series diverged"
+        );
+        // val metrics merge across the *local* eval pool, whose worker
+        // count differs between the runs — float-sum association may
+        // differ in the last ulp, so compare approximately
+        let (gv, ev) = (got.series("val/loss"), expect.series("val/loss"));
+        assert_eq!(gv.len(), ev.len(), "{workers} workers: val cadence diverged");
+        for ((gt, g), (et, e)) in gv.iter().zip(&ev) {
+            assert_eq!(gt, et);
+            assert!((g - e).abs() <= 1e-9 * e.abs().max(1.0), "val/loss diverged: {g} vs {e}");
+        }
+        assert!(got.counters.wire_bytes_out > 0, "no wire traffic recorded");
+        assert!(got.counters.wire_bytes_in > 0, "no wire traffic recorded");
+        assert_eq!(got.counters.requeued_users, 0, "healthy run requeued users");
+    }
+}
+
+#[test]
+fn kill_nine_mid_round_requeues_and_completes() {
+    // long enough that the kill at ~30ms lands mid-run and the
+    // replacement has time to handshake before the final round
+    let mut cfg = base_cfg(300);
+    cfg.dataset.per_user = 32;
+    let out = socket_run(&cfg, 2, 20, true);
+    assert_eq!(out.rounds, cfg.iterations, "run did not complete after kill -9");
+    assert!(
+        out.counters.requeued_users > 0,
+        "kill -9 mid-round should have requeued in-flight users"
+    );
+    assert!(
+        out.counters.worker_reconnects >= 1,
+        "replacement worker never joined the pool"
+    );
+    // the run still learns through the failure
+    let series = out.series("train/loss");
+    assert!(series.last().unwrap().1 < series.first().unwrap().1);
+}
