@@ -132,6 +132,7 @@ fn spin_pool(dataset: Arc<dyn FederatedDataset>) -> WorkerPool {
             use_hlo_clip: false,
             arena: pfl::tensor::ArenaConfig::default(),
             noise_threads: 0,
+            scenario: Default::default(),
         },
     )
     .unwrap()

@@ -322,6 +322,7 @@ pub fn build_backend(cfg: &Config, profile: OverheadProfile) -> Result<Simulated
         arena: cfg.arena_config(),
         fold_tree: cfg.fold_tree,
         noise_threads: cfg.noise_threads,
+        scenario: cfg.scenario_spec(),
         ..Default::default()
     });
     if let Some(s) = source {
@@ -360,6 +361,7 @@ pub fn build_worker_shared(cfg: &Config, use_hlo_clip: bool) -> Result<WorkerSha
         use_hlo_clip,
         arena: cfg.arena_config(),
         noise_threads: cfg.noise_threads,
+        scenario: cfg.scenario_spec(),
     })
 }
 

@@ -162,6 +162,12 @@ pub struct Config {
     /// for any N) and lets banded-MF regenerate noise instead of
     /// retaining its `band × dim` ring.
     pub noise_threads: usize,
+    /// Device-realism scenario (DESIGN.md §8): speed tiers, diurnal
+    /// availability windows and a mid-round dropout hazard, sampled
+    /// deterministically per uid (CLI `--scenario`). `None` (default)
+    /// disables the layer entirely — runs are byte-identical to
+    /// previous releases and the key is omitted from the JSON form.
+    pub scenario: Option<crate::fl::device::ScenarioSpec>,
     pub seed: u64,
 }
 
@@ -242,6 +248,12 @@ impl Config {
         })
     }
 
+    /// The runtime scenario spec: the configured one, or the inert
+    /// all-off spec when `scenario` is unset.
+    pub fn scenario_spec(&self) -> crate::fl::device::ScenarioSpec {
+        self.scenario.unwrap_or_default()
+    }
+
     /// Code width of the configured wire quantization: `None` for the
     /// exact f32 wire, `Some(16)` for binary16, `Some(8)` for
     /// int8-with-scale.
@@ -263,7 +275,7 @@ impl Config {
         let a = &self.algorithm;
         let c = &self.central_opt;
         let p = &self.privacy;
-        obj(vec![
+        let mut top = vec![
             ("name", s(self.name.clone())),
             ("model", s(self.model.clone())),
             (
@@ -341,8 +353,22 @@ impl Config {
                     ("seed", num(self.seed as f64)),
                 ]),
             ),
-        ])
-        .to_string_pretty()
+        ];
+        // the scenario key is omitted entirely when unset, so configs
+        // written before (and runs without) the device-realism layer
+        // keep a byte-identical JSON form
+        if let Some(sc) = &self.scenario {
+            top.push((
+                "scenario",
+                obj(vec![
+                    ("churn", num(sc.churn)),
+                    ("diurnal", num(sc.diurnal)),
+                    ("dropout_hazard", num(sc.dropout_hazard)),
+                    ("speed_tiers", num(sc.speed_tiers as f64)),
+                ]),
+            ));
+        }
+        obj(top).to_string_pretty()
     }
 
     pub fn from_json(text: &str) -> Result<Config> {
@@ -462,6 +488,30 @@ impl Config {
                 Some(x) => x.as_usize()?,
                 None => 0,
             },
+            // optional top-level section: absent for configs written
+            // before the device-realism scenario layer (and for every
+            // run with the layer off)
+            scenario: match v.get("scenario") {
+                Some(Value::Null) | None => None,
+                Some(sc) => Some(crate::fl::device::ScenarioSpec {
+                    churn: match sc.get("churn") {
+                        Some(x) => x.as_f64()?,
+                        None => 0.0,
+                    },
+                    diurnal: match sc.get("diurnal") {
+                        Some(x) => x.as_f64()?,
+                        None => 0.0,
+                    },
+                    dropout_hazard: match sc.get("dropout_hazard") {
+                        Some(x) => x.as_f64()?,
+                        None => 0.0,
+                    },
+                    speed_tiers: match sc.get("speed_tiers") {
+                        Some(x) => x.as_u64()? as u32,
+                        None => 0,
+                    },
+                }),
+            },
             seed: e.req("seed")?.as_u64()?,
         })
     }
@@ -535,6 +585,7 @@ fn cifar10(iid: bool, dp: bool) -> Config {
         wire_quantization: "none".into(),
         fold_tree: false,
         noise_threads: 0,
+        scenario: None,
         seed: 0,
     }
 }
@@ -586,6 +637,7 @@ fn stackoverflow(dp: bool) -> Config {
         wire_quantization: "none".into(),
         fold_tree: false,
         noise_threads: 0,
+        scenario: None,
         seed: 0,
     }
 }
@@ -640,6 +692,7 @@ fn flair(iid: bool, dp: bool) -> Config {
         wire_quantization: "none".into(),
         fold_tree: false,
         noise_threads: 0,
+        scenario: None,
         seed: 0,
     }
 }
@@ -690,6 +743,7 @@ fn llm(flavor: &str, dp: bool) -> Config {
         wire_quantization: "none".into(),
         fold_tree: false,
         noise_threads: 0,
+        scenario: None,
         seed: 0,
     }
 }
@@ -929,6 +983,30 @@ mod tests {
         // and the parse helper rejects junk
         c.store_compression = "zstd".into();
         assert!(c.store_compression().is_err());
+    }
+
+    #[test]
+    fn scenario_roundtrips_and_defaults_to_none() {
+        let mut c = preset("cifar10-iid").unwrap();
+        assert_eq!(c.scenario, None, "presets ship without device realism");
+        assert!(!c.scenario_spec().enabled());
+        // None omits the key entirely, so old readers see an unchanged file
+        assert!(!c.to_json().contains("scenario"));
+        c.scenario = Some(crate::fl::device::ScenarioSpec {
+            churn: 0.2,
+            diurnal: 0.5,
+            dropout_hazard: 0.1,
+            speed_tiers: 3,
+        });
+        let json = c.to_json();
+        assert!(json.contains("scenario"));
+        let back = Config::from_json(&json).unwrap();
+        assert_eq!(back, c, "scenario section did not round-trip");
+        assert!(back.scenario_spec().enabled());
+        // pre-scenario configs (no key at all) parse to None
+        let old = preset("cifar10-iid").unwrap().to_json();
+        let parsed = Config::from_json(&old).unwrap();
+        assert_eq!(parsed.scenario, None);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod dispatch;
 pub mod privacy_fig;
 pub mod quality;
 pub mod scaling;
+pub mod scenario;
 pub mod sched;
 pub mod speed;
 

@@ -77,6 +77,12 @@ pub struct RunParams {
     /// bit-identical for any N — and lets banded-MF regenerate past
     /// rounds' noise instead of retaining a `band × dim` ring.
     pub noise_threads: usize,
+    /// Device-realism scenario (`--scenario`, DESIGN.md §8): speed
+    /// tiers, diurnal availability windows and a mid-round dropout
+    /// hazard, all pure functions of `(seed, uid, round)` via the
+    /// counter RNG. Disabled by default — the off path is byte-identical
+    /// to previous releases.
+    pub scenario: crate::fl::device::ScenarioSpec,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,6 +104,7 @@ impl Default for RunParams {
             arena: crate::tensor::ArenaConfig::default(),
             fold_tree: false,
             noise_threads: 0,
+            scenario: Default::default(),
         }
     }
 }
@@ -244,6 +251,7 @@ impl BackendBuilder {
             use_hlo_clip: self.params.clip_backend == ClipBackend::Hlo,
             arena: self.params.arena,
             noise_threads: self.params.noise_threads,
+            scenario: self.params.scenario,
         };
         let pool = WorkerPool::new(self.params.num_workers, shared)?;
         Ok(SimulatedBackend {
@@ -482,13 +490,16 @@ impl SimulatedBackend {
         outcome: &mut RunOutcome,
         engine: &mut ReplayEngine,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
-        let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
+        let (mut pending, cohort_len, k, central_arc, unavailable) =
+            self.async_cohort(ctx, central);
         let window = ctx.dispatch.reorder_window.max(1);
         let cache0 = StoreSnap::take(&outcome.counters);
+        let dropped0 = outcome.counters.dropout_users;
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
         let mut folded = 0usize;
+        let mut arrivals = 0u64;
         let mut stale_folds = 0u64;
         let mut round_stat_elements = 0u64;
         let mut round_stat_bytes = 0u64;
@@ -500,6 +511,7 @@ impl SimulatedBackend {
             };
             let r = self.replay_recv(engine, head.seq)?;
             engine.outstanding.pop_front();
+            arrivals += 1;
             round_stat_elements += r.counters.stat_elements;
             round_stat_bytes += r.counters.stat_bytes;
             Self::absorb_result_bookkeeping(outcome, &r);
@@ -537,6 +549,9 @@ impl SimulatedBackend {
             round_stat_elements,
             round_stat_bytes,
             cache0,
+            unavailable,
+            arrivals,
+            dropped0,
         )
     }
 
@@ -710,9 +725,11 @@ impl SimulatedBackend {
         outcome: &mut RunOutcome,
         engine: &mut SocketEngine,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
-        let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
+        let (mut pending, cohort_len, k, central_arc, unavailable) =
+            self.async_cohort(ctx, central);
         let window = ctx.dispatch.reorder_window.max(1);
         let cache0 = StoreSnap::take(&outcome.counters);
+        let dropped0 = outcome.counters.dropout_users;
         let (in0, out0) = pool.wire_bytes();
         let requeued0 = engine.requeued_users;
         let reconnects0 = engine.reconnects;
@@ -720,6 +737,7 @@ impl SimulatedBackend {
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
         let mut folded = 0usize;
+        let mut arrivals = 0u64;
         let mut stale_folds = 0u64;
         let mut round_stat_elements = 0u64;
         let mut round_stat_bytes = 0u64;
@@ -735,6 +753,7 @@ impl SimulatedBackend {
             };
             let r = self.socket_recv(pool, engine, head_seq)?;
             engine.outstanding.pop_front();
+            arrivals += 1;
             round_stat_elements += r.counters.stat_elements;
             round_stat_bytes += r.counters.stat_bytes;
             Self::absorb_result_bookkeeping(outcome, &r);
@@ -784,6 +803,9 @@ impl SimulatedBackend {
             round_stat_elements,
             round_stat_bytes,
             cache0,
+            unavailable,
+            arrivals,
+            dropped0,
         )
     }
 
@@ -983,12 +1005,15 @@ impl SimulatedBackend {
         outcome: &mut RunOutcome,
         engine: &mut AsyncEngine,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
-        let (mut pending, cohort_len, k, central_arc) = self.async_cohort(ctx, central);
+        let (mut pending, cohort_len, k, central_arc, unavailable) =
+            self.async_cohort(ctx, central);
         let cache0 = StoreSnap::take(&outcome.counters);
+        let dropped0 = outcome.counters.dropout_users;
 
         let mut metrics = Metrics::new();
         let mut acc: Option<super::stats::Statistics> = None;
         let mut folded = 0usize;
+        let mut arrivals = 0u64;
         let mut stale_folds = 0u64;
         let mut round_stat_elements = 0u64;
         let mut round_stat_bytes = 0u64;
@@ -1011,6 +1036,7 @@ impl SimulatedBackend {
             if let Some(err) = &r.error {
                 return Err(anyhow!("worker {w} failed: {err}"));
             }
+            arrivals += 1;
             round_stat_elements += r.counters.stat_elements;
             round_stat_bytes += r.counters.stat_bytes;
             Self::absorb_result_bookkeeping(outcome, &r);
@@ -1047,22 +1073,27 @@ impl SimulatedBackend {
             round_stat_elements,
             round_stat_bytes,
             cache0,
+            unavailable,
+            arrivals,
+            dropped0,
         )
     }
 
     /// Shared cohort prologue of both async train engines: sample the
-    /// cohort, order it by scheduling weight (heaviest first, per the
-    /// scheduler's ordering policy), size the K-arrival buffer and
-    /// snapshot the central model for dispatch. Returns
-    /// (pending queue, cohort size, K, central snapshot).
+    /// cohort (availability-filtered on scenario runs), order it by
+    /// scheduling weight (heaviest first, per the scheduler's ordering
+    /// policy; speed tiers stretch the weights), size the K-arrival
+    /// buffer and snapshot the central model for dispatch. Returns
+    /// (pending queue, cohort size, K, central snapshot,
+    /// unavailable-skipped count).
     fn async_cohort(
         &self,
         ctx: &CentralContext,
         central: &[f32],
-    ) -> (VecDeque<usize>, usize, usize, Arc<Vec<f32>>) {
-        let cohort = self.sample_cohort(ctx);
+    ) -> (VecDeque<usize>, usize, usize, Arc<Vec<f32>>, u64) {
+        let (cohort, unavailable) = self.sample_cohort(ctx);
         let weights: Vec<f64> =
-            cohort.iter().map(|&u| self.dataset.user_len(u) as f64).collect();
+            cohort.iter().map(|&u| self.scheduling_weight(&self.dataset, u)).collect();
         let pending: VecDeque<usize> =
             order(self.params.scheduler, &weights).into_iter().map(|i| cohort[i]).collect();
         // async streaming consumes `pending` front to back: that is the
@@ -1072,7 +1103,7 @@ impl SimulatedBackend {
             self.source.hint_round(&upcoming);
         }
         let k = ctx.dispatch.buffer_k(cohort.len());
-        (pending, cohort.len(), k, Arc::new(central.to_vec()))
+        (pending, cohort.len(), k, Arc::new(central.to_vec()), unavailable)
     }
 
     /// Shared round-metric epilogue of both async train engines — one
@@ -1096,12 +1127,33 @@ impl SimulatedBackend {
         round_stat_elements: u64,
         round_stat_bytes: u64,
         cache0: StoreSnap,
+        unavailable: u64,
+        arrivals: u64,
+        dropped0: u64,
     ) -> Result<(Option<super::stats::Statistics>, Metrics)> {
         metrics.add_central("sys/cohort", cohort_len as f64, 1.0);
         metrics.add_central("sys/async-folded", folded as f64, 1.0);
         metrics.add_central("sys/stale-updates", stale_folds as f64, 1.0);
         metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
         metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
+        if self.params.scenario.enabled() {
+            // device-realism accounting (DESIGN.md §8): every result
+            // consumed this round either folded, hazard-dropped, was
+            // staleness-dropped or carried no statistics — dropout-frac
+            // is the hazard share of consumed arrivals, completion-rate
+            // the folded share of the intended cohort. Emitted only on
+            // scenario runs so the disabled metric schema stays
+            // byte-identical to previous releases.
+            let dropped = outcome.counters.dropout_users - dropped0;
+            outcome.counters.unavailable_skipped += unavailable;
+            metrics.add_central("sys/unavailable-skipped", unavailable as f64, 1.0);
+            metrics.add_central("sys/dropout-frac", dropped as f64 / arrivals.max(1) as f64, 1.0);
+            metrics.add_central(
+                "sys/completion-rate",
+                folded as f64 / cohort_len.max(1) as f64,
+                1.0,
+            );
+        }
         store_metrics(&mut metrics, cache0, &outcome.counters);
         if let Some(a) = acc.as_ref() {
             metrics.add_central("sys/agg-elements", a.element_count() as f64, 1.0);
@@ -1210,8 +1262,14 @@ impl SimulatedBackend {
     }
 
     /// Sample one context's cohort (with the postprocessors'
-    /// participation filters, e.g. banded-MF min-separation).
-    fn sample_cohort(&self, ctx: &CentralContext) -> Vec<usize> {
+    /// participation filters, e.g. banded-MF min-separation, and — on
+    /// scenario runs — the device-availability filter at the round's
+    /// clock time, DESIGN.md §8). Returns the cohort plus the number of
+    /// sampled train users skipped as unavailable (outside their
+    /// diurnal window, or churned offline this round); 0 when the
+    /// scenario layer is disabled, whose path is byte-identical to
+    /// previous releases.
+    fn sample_cohort(&self, ctx: &CentralContext) -> (Vec<usize>, u64) {
         let dataset = match ctx.population {
             Population::Train => &self.dataset,
             Population::Val => &self.val_dataset,
@@ -1225,7 +1283,19 @@ impl SimulatedBackend {
         } else {
             self.sampler.sample(dataset.num_users(), ctx.iteration, ctx.seed)
         };
+        let mut unavailable = 0u64;
         if ctx.population == Population::Train {
+            // device availability first (an offline device is never even
+            // asked), then the participation policies — the filter is a
+            // pure function of (seed, uid, round), so every dispatch
+            // mode and process sees the identical cohort
+            if self.params.scenario.enabled() {
+                let before = cohort.len();
+                cohort.retain(|&uid| {
+                    self.params.scenario.available(self.params.seed, uid, ctx.iteration)
+                });
+                unavailable = (before - cohort.len()) as u64;
+            }
             cohort.retain(|&uid| {
                 self.postprocessors.iter().all(|p| p.may_participate(uid, ctx.iteration))
             });
@@ -1235,7 +1305,20 @@ impl SimulatedBackend {
                 }
             }
         }
-        cohort
+        (cohort, unavailable)
+    }
+
+    /// Scheduling weight of one user: datapoint count, stretched by the
+    /// device's speed-tier multiplier on scenario runs so slow devices
+    /// sort as the stragglers they are (feeding greedy-LPT, the shared
+    /// pull queue and the async heaviest-first order alike).
+    fn scheduling_weight(&self, dataset: &Arc<dyn FederatedDataset>, uid: usize) -> f64 {
+        let w = dataset.user_len(uid) as f64;
+        if self.params.scenario.enabled() {
+            w * self.params.scenario.speed_multiplier(self.params.seed, uid)
+        } else {
+            w
+        }
     }
 
     /// Merge one worker result's bookkeeping into the outcome; returns
@@ -1270,10 +1353,11 @@ impl SimulatedBackend {
             Population::Train => &self.dataset,
             Population::Val => &self.val_dataset,
         };
-        let cohort = self.sample_cohort(ctx);
+        let (cohort, unavailable) = self.sample_cohort(ctx);
 
         // --- cohort distribution (App. B.6 / dispatch.rs) ---------------
-        let weights: Vec<f64> = cohort.iter().map(|&u| dataset.user_len(u) as f64).collect();
+        let weights: Vec<f64> =
+            cohort.iter().map(|&u| self.scheduling_weight(dataset, u)).collect();
         // an Async context reaching a barrier round (async eval/drain
         // phases) executes as a pull queue, the same mapping
         // dispatcher_for applies — so compare through it to reuse the
@@ -1300,6 +1384,7 @@ impl SimulatedBackend {
             self.source.hint_round(&plan.dispatch_order());
         }
         let cache0 = StoreSnap::take(&outcome.counters);
+        let dropped0 = outcome.counters.dropout_users;
 
         // --- distribute + train ----------------------------------------
         let central_arc = Arc::new(central.to_vec());
@@ -1338,6 +1423,26 @@ impl SimulatedBackend {
             // (which --quantize shrinks at unchanged element count)
             metrics.add_central("sys/user-update-elems", round_stat_elements as f64, 1.0);
             metrics.add_central("sys/user-update-bytes", round_stat_bytes as f64, 1.0);
+            if self.params.scenario.enabled() {
+                // barrier rounds dispatch the whole cohort, so the
+                // hazard share is over the cohort and completion is its
+                // complement (DESIGN.md §8); emitted only on scenario
+                // runs so the disabled metric schema is unchanged
+                let dropped = outcome.counters.dropout_users - dropped0;
+                outcome.counters.unavailable_skipped += unavailable;
+                metrics.add_central("sys/unavailable-skipped", unavailable as f64, 1.0);
+                metrics.add_central(
+                    "sys/dropout-frac",
+                    dropped as f64 / cohort.len().max(1) as f64,
+                    1.0,
+                );
+                metrics.add_central(
+                    "sys/completion-rate",
+                    (cohort.len() as u64).saturating_sub(dropped) as f64
+                        / cohort.len().max(1) as f64,
+                    1.0,
+                );
+            }
             store_metrics(&mut metrics, cache0, &outcome.counters);
         }
 
@@ -1880,6 +1985,129 @@ mod tests {
         // the replay engine reports its outstanding window
         assert!(out.final_metric("sys/reorder-outstanding").is_some());
         assert!(out.final_metric("val/loss").is_some());
+    }
+
+    #[test]
+    fn scenario_unset_is_byte_identical_and_silent() {
+        // acceptance: with no scenario configured, every dispatch mode
+        // runs exactly as before the device-realism layer existed — the
+        // disabled spec short-circuits before touching any RNG stream, no
+        // scenario metric appears in the schema, and both new counters
+        // stay zero. An explicitly-disabled spec is the same as unset.
+        for dispatch in [
+            DispatchSpec::default(),
+            DispatchSpec::work_stealing(),
+            DispatchSpec::async_replay(2, 0.5, 4),
+        ] {
+            let run = |scenario: crate::fl::device::ScenarioSpec| {
+                build_backend_cfg(
+                    5,
+                    3,
+                    RunParams { num_workers: 2, dispatch, scenario, ..Default::default() },
+                    vec![],
+                )
+                .run(vec![1.0; 3], &mut [])
+                .unwrap()
+            };
+            let unset = run(Default::default());
+            let off = run(crate::fl::device::ScenarioSpec::disabled());
+            assert_eq!(unset.central, off.central, "disabled spec changed the run");
+            assert_eq!(unset.history, off.history, "disabled spec changed the metrics");
+            for out in [&unset, &off] {
+                assert_eq!(out.counters.dropout_users, 0);
+                assert_eq!(out.counters.unavailable_skipped, 0);
+                for name in
+                    ["sys/dropout-frac", "sys/unavailable-skipped", "sys/completion-rate"]
+                {
+                    assert!(
+                        out.final_metric(name).is_none(),
+                        "{name} leaked into a scenario-off run"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_dropout_bit_identical_across_worker_counts() {
+        // headline property: availability and dropout draws are keyed by
+        // (seed, uid, round) — never by worker streams — so a dropout-
+        // afflicted async-replay run is bit-identical for 1, 2 and 4
+        // workers: same central model, same per-round dropout deltas,
+        // same completion curve.
+        let scenario = crate::fl::device::ScenarioSpec {
+            churn: 0.2,
+            diurnal: 0.5,
+            dropout_hazard: 0.3,
+            speed_tiers: 3,
+        };
+        let run = |workers: usize| {
+            build_backend_cfg(
+                8,
+                3,
+                RunParams {
+                    num_workers: workers,
+                    dispatch: DispatchSpec::async_replay(2, 0.5, 4),
+                    scenario,
+                    ..Default::default()
+                },
+                vec![],
+            )
+            .run(vec![2.0; 3], &mut [])
+            .unwrap()
+        };
+        let (a, b, c) = (run(1), run(2), run(4));
+        assert!(a.counters.dropout_users > 0, "hazard 0.3 never fired");
+        assert_eq!(a.central, b.central, "1 vs 2 workers diverged under dropout");
+        assert_eq!(a.central, c.central, "1 vs 4 workers diverged under dropout");
+        assert_eq!(a.counters.dropout_users, b.counters.dropout_users);
+        assert_eq!(a.counters.dropout_users, c.counters.dropout_users);
+        assert_eq!(a.counters.unavailable_skipped, b.counters.unavailable_skipped);
+        assert_eq!(a.counters.unavailable_skipped, c.counters.unavailable_skipped);
+        for name in
+            ["sys/dropout-frac", "sys/unavailable-skipped", "sys/completion-rate", "sys/cohort"]
+        {
+            assert_eq!(a.series(name), b.series(name), "{name} diverged (2 workers)");
+            assert_eq!(a.series(name), c.series(name), "{name} diverged (4 workers)");
+        }
+    }
+
+    #[test]
+    fn scenario_dropout_shrinks_rounds_but_still_learns() {
+        // barrier path: dropped users are abandoned (partials discarded),
+        // unavailable users never enter the cohort — yet the surviving
+        // subset still solves the mean problem, and the three scenario
+        // metrics account for every dispatched user.
+        let scenario = crate::fl::device::ScenarioSpec {
+            churn: 0.1,
+            diurnal: 0.25,
+            dropout_hazard: 0.2,
+            speed_tiers: 2,
+        };
+        let out = build_backend_cfg(
+            30,
+            3,
+            RunParams { num_workers: 2, scenario, ..Default::default() },
+            vec![],
+        )
+        .run(vec![5.0; 3], &mut [])
+        .unwrap();
+        assert!(out.counters.dropout_users > 0, "hazard never fired in 30 rounds");
+        assert!(out.counters.unavailable_skipped > 0, "diurnal+churn never excluded anyone");
+        let completion = out.series("sys/completion-rate");
+        assert_eq!(completion.len() as u64, out.rounds);
+        for (t, v) in &completion {
+            assert!((0.0..=1.0).contains(v), "round {t}: completion {v} out of range");
+        }
+        assert!(
+            completion.iter().any(|(_, v)| *v < 1.0),
+            "no round ever lost a user at hazard 0.2"
+        );
+        let series = out.series("train/loss");
+        assert!(
+            series.last().unwrap().1 < series.first().unwrap().1 * 0.9,
+            "partial cohorts stopped learning"
+        );
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Per-user device realism: speed tiers, diurnal availability windows
+//! on a simulated clock, and a per-round mid-round dropout hazard
+//! (DESIGN.md §8).
+//!
+//! Every quantity here is a *pure function* of `(scenario, seed, uid,
+//! round)` through the counter-based [`CtrRng`] (the PR 8 stateless
+//! generator), so device behavior is bit-identical across worker
+//! counts, dispatch modes, threads and processes, and independent of
+//! query order. That purity is what lets the dropout-afflicted
+//! async-replay engine stay bit-identical across 1/2/4 workers (see
+//! `rust/tests/distributed.rs` and the backend determinism tests): no
+//! draw ever flows through a worker-local or time-dependent stream.
+//!
+//! The scenario layer is **off by default** ([`ScenarioSpec::disabled`])
+//! and every predicate short-circuits to its inert answer without
+//! touching an RNG, so runs with the scenario unset execute the exact
+//! code path they did before this layer existed.
+
+use crate::util::rng::CtrRng;
+
+/// Domain tag for the per-user profile stream ("DE71CE" ≈ DEVICE).
+const PROFILE_TAG: u64 = 0xDE71_CE00_0000_0001;
+/// Domain tag for per-(uid, round) churn draws (transient offline).
+const CHURN_TAG: u64 = 0xDE71_CE00_0000_0002;
+/// Domain tag for per-(uid, round) mid-round dropout draws.
+const DROPOUT_TAG: u64 = 0xDE71_CE00_0000_0003;
+
+/// Rounds per simulated day: the diurnal clock advances one central
+/// round at a time and wraps every `ROUNDS_PER_DAY` rounds (15-minute
+/// rounds on a 24 h day). Availability windows are expressed as
+/// fractions of this day.
+pub const ROUNDS_PER_DAY: u64 = 96;
+
+/// Time-of-day for a central round, as a fraction of the day in [0, 1).
+#[inline]
+pub fn clock_frac(round: u64) -> f64 {
+    (round % ROUNDS_PER_DAY) as f64 / ROUNDS_PER_DAY as f64
+}
+
+/// The scenario knobs (`scenario.{churn,diurnal,dropout_hazard,
+/// speed_tiers}` in config, `--scenario` on the CLI). All-zero means
+/// the layer is disabled and every existing run is byte-identical to
+/// pre-scenario behavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioSpec {
+    /// Mean per-round probability an otherwise-in-window user is
+    /// transiently offline at cohort-sampling time (0 disables).
+    pub churn: f64,
+    /// Fraction of the simulated day each user is available (their
+    /// window phase is sampled per uid). 0 or ≥ 1 disables the window.
+    pub diurnal: f64,
+    /// Mean per-round probability a dispatched user dies mid-round;
+    /// its partial is discarded (DESIGN.md §8 policy table). 0 disables.
+    pub dropout_hazard: f64,
+    /// Number of device speed tiers; tier t runs 2^t× slower than tier
+    /// 0. 0 or 1 means a uniform fleet.
+    pub speed_tiers: u32,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec::disabled()
+    }
+}
+
+/// One user's device profile, sampled deterministically from
+/// `(seed, uid)` — bit-identical regardless of thread count, dispatch
+/// mode, process boundary or query order (pinned by the golden fixture
+/// in `rust/tests/fixtures/device_profiles_golden.txt`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// Speed tier in `0..speed_tiers` (0 = fastest).
+    pub speed_tier: u32,
+    /// Wall-clock cost multiplier: `2^speed_tier`.
+    pub speed_multiplier: f64,
+    /// Availability window start, as a fraction of the day in [0, 1).
+    pub window_start: f64,
+    /// Availability window length as a fraction of the day; 1.0 means
+    /// always available (diurnal disabled).
+    pub window_len: f64,
+    /// This device's per-round mid-round dropout probability
+    /// (heterogeneous around the scenario mean, clamped to [0, 1]).
+    pub dropout_hazard: f64,
+    /// This device's per-round transient-offline probability.
+    pub churn_hazard: f64,
+}
+
+impl DeviceProfile {
+    /// The inert profile used when the scenario layer is disabled.
+    pub fn uniform() -> Self {
+        DeviceProfile {
+            speed_tier: 0,
+            speed_multiplier: 1.0,
+            window_start: 0.0,
+            window_len: 1.0,
+            dropout_hazard: 0.0,
+            churn_hazard: 0.0,
+        }
+    }
+
+    /// Whether time-of-day `t` (fraction of the day) falls inside this
+    /// device's availability window, with wraparound past midnight.
+    #[inline]
+    pub fn in_window(&self, t: f64) -> bool {
+        if self.window_len >= 1.0 {
+            return true;
+        }
+        let end = self.window_start + self.window_len;
+        if end <= 1.0 {
+            t >= self.window_start && t < end
+        } else {
+            t >= self.window_start || t < end - 1.0
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// The all-off spec: every predicate is inert and no RNG is drawn.
+    pub fn disabled() -> Self {
+        ScenarioSpec {
+            churn: 0.0,
+            diurnal: 0.0,
+            dropout_hazard: 0.0,
+            speed_tiers: 0,
+        }
+    }
+
+    /// Whether any scenario knob is active.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.churn > 0.0 || self.diurnal > 0.0 || self.dropout_hazard > 0.0 || self.speed_tiers > 1
+    }
+
+    /// Parse the CLI form: comma-separated `key=value` pairs, e.g.
+    /// `churn=0.1,diurnal=0.5,dropout=0.05,tiers=3`. Accepted keys:
+    /// `churn`, `diurnal`, `dropout` / `dropout_hazard`, `tiers` /
+    /// `speed_tiers`. `off` yields the disabled spec.
+    pub fn parse(s: &str) -> Result<ScenarioSpec, String> {
+        let mut spec = ScenarioSpec::disabled();
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(spec);
+        }
+        for pair in s.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("scenario: expected key=value, got '{pair}'"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let frac = |v: &str| -> Result<f64, String> {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| format!("scenario: '{v}' is not a number (key '{k}')"))?;
+                if !(0.0..=1.0).contains(&x) {
+                    return Err(format!("scenario: {k}={v} outside [0, 1]"));
+                }
+                Ok(x)
+            };
+            match k {
+                "churn" => spec.churn = frac(v)?,
+                "diurnal" => spec.diurnal = frac(v)?,
+                "dropout" | "dropout_hazard" => spec.dropout_hazard = frac(v)?,
+                "tiers" | "speed_tiers" => {
+                    spec.speed_tiers = v
+                        .parse()
+                        .map_err(|_| format!("scenario: '{v}' is not a tier count"))?
+                }
+                other => return Err(format!("scenario: unknown key '{other}'")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Sample user `uid`'s device profile — a pure function of
+    /// `(self, seed, uid)`; same inputs give bit-identical output on
+    /// any thread, in any order.
+    pub fn profile(&self, seed: u64, uid: usize) -> DeviceProfile {
+        if !self.enabled() {
+            return DeviceProfile::uniform();
+        }
+        let rng = CtrRng::new(seed ^ PROFILE_TAG, uid as u64);
+        let speed_tier = if self.speed_tiers > 1 {
+            (rng.u64_at(0) % self.speed_tiers as u64) as u32
+        } else {
+            0
+        };
+        let speed_multiplier = (1u64 << speed_tier.min(62)) as f64;
+        let (window_start, window_len) = if self.diurnal > 0.0 && self.diurnal < 1.0 {
+            (rng.f64_at(1), self.diurnal)
+        } else {
+            (0.0, 1.0)
+        };
+        // Heterogeneous hazards: uniform on [0, 2·mean] (mean preserved),
+        // clamped into probability range.
+        let dropout_hazard = (self.dropout_hazard * 2.0 * rng.f64_at(2)).clamp(0.0, 1.0);
+        let churn_hazard = (self.churn * 2.0 * rng.f64_at(3)).clamp(0.0, 1.0);
+        DeviceProfile {
+            speed_tier,
+            speed_multiplier,
+            window_start,
+            window_len,
+            dropout_hazard,
+            churn_hazard,
+        }
+    }
+
+    /// Whether `uid` can be sampled into round `round`'s cohort: inside
+    /// its diurnal window at the round's clock time and not churned
+    /// offline this round. Deterministic in `(self, seed, uid, round)`.
+    pub fn available(&self, seed: u64, uid: usize, round: u64) -> bool {
+        if !self.enabled() {
+            return true;
+        }
+        let p = self.profile(seed, uid);
+        if !p.in_window(clock_frac(round)) {
+            return false;
+        }
+        if p.churn_hazard > 0.0
+            && CtrRng::new(seed ^ CHURN_TAG, uid as u64).f64_at(round) < p.churn_hazard
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Whether `uid` dies mid-round in `round` after being dispatched
+    /// (its partial is discarded and never folded). Deterministic in
+    /// `(self, seed, uid, round)` — crucially *not* in which worker ran
+    /// it or when, so thread and socket transports agree bit-for-bit.
+    pub fn drops_out(&self, seed: u64, uid: usize, round: u64) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let p = self.profile(seed, uid);
+        p.dropout_hazard > 0.0
+            && CtrRng::new(seed ^ DROPOUT_TAG, uid as u64).f64_at(round) < p.dropout_hazard
+    }
+
+    /// The wall-clock cost multiplier for `uid` (1.0 when disabled).
+    #[inline]
+    pub fn speed_multiplier(&self, seed: u64, uid: usize) -> f64 {
+        if !self.enabled() || self.speed_tiers <= 1 {
+            return 1.0;
+        }
+        self.profile(seed, uid).speed_multiplier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn golden_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            churn: 0.2,
+            diurnal: 0.5,
+            dropout_hazard: 0.1,
+            speed_tiers: 3,
+        }
+    }
+
+    fn profile_bits(p: &DeviceProfile) -> [u64; 6] {
+        [
+            p.speed_tier as u64,
+            p.speed_multiplier.to_bits(),
+            p.window_start.to_bits(),
+            p.window_len.to_bits(),
+            p.dropout_hazard.to_bits(),
+            p.churn_hazard.to_bits(),
+        ]
+    }
+
+    #[test]
+    fn disabled_spec_is_inert() {
+        let spec = ScenarioSpec::disabled();
+        assert!(!spec.enabled());
+        assert_eq!(spec, ScenarioSpec::default());
+        for uid in 0..64 {
+            assert_eq!(spec.profile(7, uid), DeviceProfile::uniform());
+            assert_eq!(spec.speed_multiplier(7, uid), 1.0);
+            for round in 0..200 {
+                assert!(spec.available(7, uid, round));
+                assert!(!spec.drops_out(7, uid, round));
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_are_pure_functions_of_seed_and_uid() {
+        // Same (seed, uid) must give bit-identical profiles regardless
+        // of query order or thread — the property the whole scenario
+        // layer's cross-dispatcher determinism rests on.
+        let spec = golden_spec();
+        let forward: Vec<_> = (0..256).map(|u| spec.profile(42, u)).collect();
+        let reverse: Vec<_> = (0..256).rev().map(|u| spec.profile(42, u)).collect();
+        for u in 0..256 {
+            assert_eq!(
+                profile_bits(&forward[u]),
+                profile_bits(&reverse[255 - u]),
+                "uid {u}: query order changed the profile"
+            );
+        }
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let want = forward.clone();
+                std::thread::spawn(move || {
+                    // each thread walks uids in a different stride order
+                    for i in 0..256usize {
+                        let u = (i * (t * 2 + 1)) % 256;
+                        let got = spec.profile(42, u);
+                        assert_eq!(
+                            profile_bits(&got),
+                            profile_bits(&want[u]),
+                            "thread {t} uid {u}"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn seed_and_uid_separate_streams() {
+        let spec = golden_spec();
+        let a = spec.profile(42, 3);
+        assert_ne!(profile_bits(&a), profile_bits(&spec.profile(43, 3)));
+        assert_ne!(profile_bits(&a), profile_bits(&spec.profile(42, 4)));
+    }
+
+    #[test]
+    fn profile_fields_lie_in_contracted_ranges() {
+        let spec = golden_spec();
+        for uid in 0..512 {
+            let p = spec.profile(11, uid);
+            assert!(p.speed_tier < spec.speed_tiers, "uid {uid}");
+            assert_eq!(p.speed_multiplier, (1u64 << p.speed_tier) as f64);
+            assert!((0.0..1.0).contains(&p.window_start), "uid {uid}");
+            assert_eq!(p.window_len, spec.diurnal);
+            assert!((0.0..=2.0 * spec.dropout_hazard).contains(&p.dropout_hazard));
+            assert!((0.0..=2.0 * spec.churn).contains(&p.churn_hazard));
+        }
+    }
+
+    #[test]
+    fn window_membership_handles_wraparound() {
+        let mut p = DeviceProfile::uniform();
+        p.window_start = 0.75;
+        p.window_len = 0.5; // covers [0.75, 1.0) ∪ [0.0, 0.25)
+        assert!(p.in_window(0.8));
+        assert!(p.in_window(0.0));
+        assert!(p.in_window(0.2));
+        assert!(!p.in_window(0.25));
+        assert!(!p.in_window(0.5));
+        assert!(!p.in_window(0.74));
+        p.window_len = 1.0;
+        assert!(p.in_window(0.5));
+    }
+
+    #[test]
+    fn clock_is_periodic_and_in_range() {
+        for r in 0..3 * ROUNDS_PER_DAY {
+            let t = clock_frac(r);
+            assert!((0.0..1.0).contains(&t));
+            assert_eq!(t, clock_frac(r + ROUNDS_PER_DAY));
+        }
+        assert_eq!(clock_frac(0), 0.0);
+    }
+
+    #[test]
+    fn availability_tracks_window_fraction() {
+        // Over whole days, a pure-diurnal spec (no churn) admits each
+        // user for exactly its window's share of rounds.
+        let spec = ScenarioSpec {
+            diurnal: 0.25,
+            ..ScenarioSpec::disabled()
+        };
+        for uid in 0..32 {
+            let avail = (0..ROUNDS_PER_DAY)
+                .filter(|&r| spec.available(5, uid, r))
+                .count() as f64
+                / ROUNDS_PER_DAY as f64;
+            assert!(
+                (avail - 0.25).abs() < 2.0 / ROUNDS_PER_DAY as f64,
+                "uid {uid}: available {avail}"
+            );
+        }
+    }
+
+    #[test]
+    fn dropout_frequency_tracks_hazard() {
+        let spec = ScenarioSpec {
+            dropout_hazard: 0.2,
+            ..ScenarioSpec::disabled()
+        };
+        let rounds = 4000u64;
+        let mut drops = 0usize;
+        for uid in 0..16 {
+            let h = spec.profile(9, uid).dropout_hazard;
+            let got = (0..rounds).filter(|&r| spec.drops_out(9, uid, r)).count();
+            let want = h * rounds as f64;
+            assert!(
+                (got as f64 - want).abs() < 0.05 * rounds as f64,
+                "uid {uid}: {got} drops vs hazard {h}"
+            );
+            drops += got;
+        }
+        assert!(drops > 0);
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_junk() {
+        let s = ScenarioSpec::parse("churn=0.2,diurnal=0.5,dropout=0.1,tiers=3").unwrap();
+        assert_eq!(s, golden_spec());
+        let s = ScenarioSpec::parse("speed_tiers=2, dropout_hazard=0.05").unwrap();
+        assert_eq!(s.speed_tiers, 2);
+        assert_eq!(s.dropout_hazard, 0.05);
+        assert_eq!(ScenarioSpec::parse("off").unwrap(), ScenarioSpec::disabled());
+        assert_eq!(ScenarioSpec::parse("").unwrap(), ScenarioSpec::disabled());
+        assert!(ScenarioSpec::parse("churn=2.0").is_err());
+        assert!(ScenarioSpec::parse("bogus=1").is_err());
+        assert!(ScenarioSpec::parse("churn").is_err());
+        assert!(ScenarioSpec::parse("tiers=x").is_err());
+    }
+
+    #[test]
+    fn golden_fixture_of_32_profiles_is_stable() {
+        // Pins the profile sampling against finalizer drift: the
+        // fixture was generated from this exact CtrRng derivation
+        // (seed 42, uids 0..32, churn=0.2 diurnal=0.5 dropout=0.1
+        // tiers=3) with every f64 stored as its raw bit pattern.
+        let fixture = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/rust/tests/fixtures/device_profiles_golden.txt"
+        ))
+        .expect("golden fixture missing");
+        let spec = golden_spec();
+        let mut uids = 0;
+        for line in fixture.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(f.len(), 7, "fixture line: '{line}'");
+            let uid: usize = f[0].parse().unwrap();
+            let want = [
+                f[1].parse::<u64>().unwrap(),
+                u64::from_str_radix(f[2], 16).unwrap(),
+                u64::from_str_radix(f[3], 16).unwrap(),
+                u64::from_str_radix(f[4], 16).unwrap(),
+                u64::from_str_radix(f[5], 16).unwrap(),
+                u64::from_str_radix(f[6], 16).unwrap(),
+            ];
+            let got = spec.profile(42, uid);
+            assert_eq!(
+                profile_bits(&got),
+                want,
+                "uid {uid}: profile drifted from golden fixture ({got:?})"
+            );
+            uids += 1;
+        }
+        assert_eq!(uids, 32, "fixture must pin exactly 32 profiles");
+    }
+}

@@ -7,8 +7,10 @@
 //! [`callbacks`] (TrainingProcessCallback), [`hyperparam`] (HyperParam),
 //! [`metrics`] (central vs per-user), [`model`] (Model adapters),
 //! [`scheduler`] (cohort ordering policy, App. B.6), [`dispatch`]
-//! (static / work-stealing / async cohort distribution) and [`worker`]
-//! (replica worker pool, §3.1 / Fig. 1).
+//! (static / work-stealing / async cohort distribution), [`device`]
+//! (per-user device realism: speed tiers, diurnal availability and
+//! dropout hazard, DESIGN.md §8) and [`worker`] (replica worker pool,
+//! §3.1 / Fig. 1).
 
 pub mod aggregator;
 pub mod algorithm;
@@ -16,6 +18,7 @@ pub mod backend;
 pub mod callbacks;
 pub mod central_opt;
 pub mod context;
+pub mod device;
 pub mod dispatch;
 pub mod gbdt;
 pub mod gmm;
@@ -37,6 +40,7 @@ pub use callbacks::{
 };
 pub use central_opt::{Adam, CentralOptimizer, Sgd};
 pub use context::{CentralContext, DispatchMode, DispatchSpec, LocalParams, Population};
+pub use device::{DeviceProfile, ScenarioSpec};
 pub use dispatch::{
     dispatcher_for, staleness_weight, CohortQueue, DispatchPlan, Dispatcher, StaticDispatcher,
     WorkSource, WorkStealingDispatcher,

@@ -105,6 +105,11 @@ pub struct WorkerShared {
     /// worker's own thread (no nested parallelism; the counter output is
     /// bit-identical for any thread count anyway).
     pub noise_threads: usize,
+    /// Device-realism scenario (speed tiers, diurnal availability,
+    /// mid-round dropout hazard — DESIGN.md §8). Disabled by default;
+    /// every predicate is a pure function of `(seed, uid, round)`, so
+    /// thread and socket workers behave bit-identically.
+    pub scenario: crate::fl::device::ScenarioSpec,
 }
 
 /// The replica pool: w worker threads plus (baselines only) a coordinator
@@ -469,6 +474,19 @@ fn run_worker_round(
     // Owned sources iterate the precomputed queue; shared sources claim
     // the next user from the cohort-wide pull queue on every step.
     for uid in work.into_pull() {
+        // Mid-round hazard dropout (DESIGN.md §8): the device dies after
+        // being dispatched, so its partial is discarded and never folded
+        // — unlike transport death, which requeues the uid at its
+        // original seq. The draw is a pure function of (seed, uid,
+        // round), never of which worker ran it or when, so thread and
+        // socket transports drop the exact same users.
+        if shared.scenario.enabled()
+            && ctx.is_train()
+            && shared.scenario.drops_out(shared.seed, uid, ctx.iteration)
+        {
+            counters.dropout_users += 1;
+            continue;
+        }
         let t0 = Instant::now();
         let dev0 = model.busy_nanos();
 
@@ -595,10 +613,20 @@ fn run_worker_round(
             }
         }
 
+        let mut nanos = t0.elapsed().as_nanos() as u64;
+        let mut device_nanos = model.busy_nanos() - dev0;
+        if shared.scenario.enabled() {
+            // Speed tiers stretch the measured wall-clock before it
+            // feeds the LPT/work-steal/replay cost models; the disabled
+            // path leaves the measurement untouched.
+            let speed = shared.scenario.speed_multiplier(shared.seed, uid);
+            nanos = (nanos as f64 * speed) as u64;
+            device_nanos = (device_nanos as f64 * speed) as u64;
+        }
         costs.push(UserCost {
             datapoints: user_len,
-            nanos: t0.elapsed().as_nanos() as u64,
-            device_nanos: model.busy_nanos() - dev0,
+            nanos,
+            device_nanos,
         });
     }
 
@@ -792,6 +820,7 @@ pub(crate) mod tests {
             use_hlo_clip: false,
             arena: crate::tensor::ArenaConfig::default(),
             noise_threads: 0,
+            scenario: Default::default(),
         };
         WorkerPool::new(workers, shared).unwrap()
     }
@@ -916,6 +945,7 @@ pub(crate) mod tests {
             use_hlo_clip: false,
             arena: crate::tensor::ArenaConfig::default(),
             noise_threads: 0,
+            scenario: Default::default(),
         };
         let pool = WorkerPool::new(2, shared).unwrap();
         let ctx = CentralContext::train(0, 4, Default::default(), 1);
@@ -998,6 +1028,7 @@ pub(crate) mod tests {
             use_hlo_clip: false,
             arena: crate::tensor::ArenaConfig::default(),
             noise_threads: 0,
+            scenario: Default::default(),
         };
         let pool = WorkerPool::new(2, shared).unwrap();
         let ctx = CentralContext::train(0, 4, Default::default(), 1);

@@ -50,6 +50,7 @@ COMMANDS
                                     [--prefetch-depth N] [--store-mmap on|off]
                                     [--quantize none|f16|int8] [--fold-tree]
                                     [--noise-threads N]
+                                    [--scenario churn=F,diurnal=F,dropout=F,tiers=N | off]
                                     [--iterations N] [--cohort N] [--seed S]
                                     [--csv PATH] [--jsonl PATH] [--log K]
   worker     socket-fed worker process --connect ADDR
@@ -80,6 +81,8 @@ COMMANDS
   fig7       system-metric timelines per engine  [--scale F]
   dispatch   straggler gap + round time per dispatch mode
                                     [--scale F] [--workers N]
+  scenario   device realism: completion rate vs cohort size under
+             churn / diurnal windows / dropout  [--scale F] [--workers N]
   calibrate  DP noise calibration per accountant
   nonnn      federated GBDT + GMM convergence
   presets    list benchmark presets  [--dump]
@@ -127,6 +130,9 @@ fn real_main() -> Result<()> {
         "fig5" => experiments::sched::fig5(scale, args.get_usize("workers", 5)?)?,
         "dispatch" => {
             experiments::dispatch::compare(scale, args.get_usize("workers", 4)?)?;
+        }
+        "scenario" => {
+            experiments::scenario::completion_curves(scale, args.get_usize("workers", 4)?)?;
         }
         "fig6" => experiments::privacy_fig::fig6(scale, args.get_u64("seeds", 1)?)?,
         "fig7" | "fig8" => experiments::speed::fig7_fig8(scale)?,
@@ -350,6 +356,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.fold_tree = true;
     }
     cfg.noise_threads = args.get_usize("noise-threads", cfg.noise_threads)?;
+    if let Some(sv) = args.get("scenario") {
+        cfg.scenario = if sv == "off" {
+            None
+        } else {
+            let spec = pfl::fl::device::ScenarioSpec::parse(sv)
+                .map_err(|e| anyhow::anyhow!("--scenario {sv:?}: {e}"))?;
+            if spec.enabled() {
+                Some(spec)
+            } else {
+                None
+            }
+        };
+    }
     if let Some(it) = args.get("iterations") {
         cfg.iterations = it.parse()?;
     }

@@ -109,6 +109,14 @@ pub struct Counters {
     /// Socket runs: framed bytes sent to workers — round commands
     /// (`sys/wire-bytes-out`).
     pub wire_bytes_out: u64,
+    /// Scenario runs: dispatched users whose device died mid-round
+    /// (hazard dropout) — their partials were discarded, never folded
+    /// (`sys/dropout-frac`, DESIGN.md §8).
+    pub dropout_users: u64,
+    /// Scenario runs: sampled users skipped at cohort time because
+    /// their device was outside its diurnal window or churned offline
+    /// (`sys/unavailable-skipped`).
+    pub unavailable_skipped: u64,
 }
 
 impl Counters {
@@ -140,6 +148,8 @@ impl Counters {
         self.worker_reconnects += o.worker_reconnects;
         self.wire_bytes_in += o.wire_bytes_in;
         self.wire_bytes_out += o.wire_bytes_out;
+        self.dropout_users += o.dropout_users;
+        self.unavailable_skipped += o.unavailable_skipped;
     }
 
     pub fn busy(&self) -> Duration {
@@ -315,6 +325,8 @@ mod tests {
             worker_reconnects: 1,
             wire_bytes_in: 77,
             wire_bytes_out: 88,
+            dropout_users: 5,
+            unavailable_skipped: 6,
             ..Default::default()
         };
         a.merge(&b);
@@ -336,6 +348,8 @@ mod tests {
         assert_eq!(a.worker_reconnects, 1);
         assert_eq!(a.wire_bytes_in, 77);
         assert_eq!(a.wire_bytes_out, 88);
+        assert_eq!(a.dropout_users, 5);
+        assert_eq!(a.unavailable_skipped, 6);
     }
 
     #[test]

@@ -132,6 +132,101 @@ fn socket_run_bit_identical_to_threaded_run() {
 }
 
 #[test]
+fn socket_with_dropout_bit_identical_to_threaded() {
+    // tentpole property across the process boundary: device availability
+    // and mid-round dropout are pure functions of (seed, uid, round), so
+    // a scenario-afflicted socket run must match the threaded async-
+    // replay engine bit-for-bit — same central model, same dropout
+    // accounting — for any worker count.
+    let mut cfg = base_cfg(8);
+    cfg.scenario = Some(pfl::fl::device::ScenarioSpec {
+        churn: 0.2,
+        diurnal: 0.5,
+        dropout_hazard: 0.3,
+        speed_tiers: 3,
+    });
+
+    let mut reference = cfg.clone();
+    reference.dispatcher = "async".into();
+    reference.num_workers = 1;
+    let mut backend = build_backend(&reference, EngineVariant::PflStyle.profile()).unwrap();
+    let expect = backend.run(init_params(&reference).unwrap(), &mut []).unwrap();
+    assert_eq!(expect.rounds, cfg.iterations);
+    assert!(expect.counters.dropout_users > 0, "hazard 0.3 never fired in the reference");
+
+    for workers in [1usize, 2] {
+        let got = socket_run(&cfg, workers, 500, false);
+        assert_eq!(got.rounds, expect.rounds, "{workers} workers: rounds diverged");
+        assert_eq!(got.central, expect.central, "{workers} workers: central model diverged");
+        assert_eq!(
+            got.counters.dropout_users, expect.counters.dropout_users,
+            "{workers} workers: dropout accounting diverged across the transport"
+        );
+        assert_eq!(
+            got.counters.unavailable_skipped, expect.counters.unavailable_skipped,
+            "{workers} workers: availability accounting diverged"
+        );
+        for name in ["sys/dropout-frac", "sys/completion-rate", "sys/unavailable-skipped"] {
+            assert_eq!(
+                got.series(name),
+                expect.series(name),
+                "{workers} workers: {name} series diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn kill_nine_with_dropout_accounts_every_user() {
+    // combined failure: a kill -9'd worker (transport death -> requeue,
+    // same seqs) in the same run as hazard-dropped users (scenario death
+    // -> partial abandoned). The requeue preserves dispatch order and the
+    // reorder buffer accepts one result per seq (first wins), so no uid
+    // is double-folded: the run stays bit-identical to a healthy
+    // threaded run, while both failure counters fire.
+    let mut cfg = base_cfg(300);
+    cfg.dataset.per_user = 32;
+    cfg.scenario = Some(pfl::fl::device::ScenarioSpec {
+        churn: 0.0,
+        diurnal: 0.0,
+        dropout_hazard: 0.2,
+        speed_tiers: 1,
+    });
+
+    let mut reference = cfg.clone();
+    reference.dispatcher = "async".into();
+    reference.num_workers = 1;
+    let mut backend = build_backend(&reference, EngineVariant::PflStyle.profile()).unwrap();
+    let expect = backend.run(init_params(&reference).unwrap(), &mut []).unwrap();
+
+    let out = socket_run(&cfg, 2, 20, true);
+    assert_eq!(out.rounds, cfg.iterations, "run did not complete after kill -9");
+    assert!(
+        out.counters.requeued_users > 0,
+        "kill -9 mid-round should have requeued in-flight users"
+    );
+    assert!(out.counters.dropout_users > 0, "hazard 0.2 never fired in 300 rounds");
+    // no uid double-folded, none lost: the transport failure is invisible
+    // to the model and to the scenario ledger
+    assert_eq!(out.central, expect.central, "kill -9 + dropout changed the model");
+    assert_eq!(
+        out.counters.dropout_users, expect.counters.dropout_users,
+        "requeue double-counted (or lost) hazard-dropped users"
+    );
+    assert_eq!(
+        out.series("sys/dropout-frac"),
+        expect.series("sys/dropout-frac"),
+        "per-round dropout ledger diverged under kill -9"
+    );
+    // the per-round requeue metric accounts for exactly the counter total
+    let requeued_metric: f64 =
+        out.series("sys/requeued-users").iter().map(|(_, v)| v).sum();
+    assert_eq!(requeued_metric as u64, out.counters.requeued_users);
+    let series = out.series("train/loss");
+    assert!(series.last().unwrap().1 < series.first().unwrap().1);
+}
+
+#[test]
 fn kill_nine_mid_round_requeues_and_completes() {
     // long enough that the kill at ~30ms lands mid-run and the
     // replacement has time to handshake before the final round

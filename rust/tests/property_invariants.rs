@@ -282,6 +282,67 @@ fn all_sparse_arena_zero_growth_steady_state() {
     assert_eq!(arena.drain_sparse_rounds(), 6);
 }
 
+/// Dropout × spill threshold: an all-sparse cohort whose *full* union
+/// would cross `sparse_spill_frac` (and so densify) stays entirely
+/// sparse when the scenario layer's mid-round dropout shrinks the round
+/// below the threshold — the arena only ever sees the survivors, so the
+/// partial cohort must end with a spill count of zero.
+#[test]
+fn dropout_shrunk_sparse_cohort_never_spills() {
+    use pfl::fl::device::ScenarioSpec;
+
+    let dim = 1024u32;
+    let config = ArenaConfig { sparse_spill_frac: 0.25 }; // union > 256 nnz spills
+    // 16 users × 32 disjoint nnz: the full cohort's union is 512 nnz
+    let users: Vec<Statistics> = (0u32..16)
+        .map(|u| {
+            let idx: Vec<u32> = (0u32..32).map(|i| u * 64 + i * 2).collect();
+            let val: Vec<f32> = (0u32..32).map(|i| (u + i) as f32 * 0.25 - 1.0).collect();
+            Statistics::new_update_value(StatValue::sparse(dim, idx, val), 1.0)
+        })
+        .collect();
+
+    // counterfactual: with nobody dropping out the union crosses the
+    // threshold and the arena densifies
+    let mut full = StatsArena::with_config(config);
+    for u in &users {
+        full.fold(u);
+    }
+    assert!(full.drain_spill_count() > 0, "full 16-user cohort should cross 256 nnz");
+
+    // with the dropout hazard active, fold only the survivors of some
+    // round whose surviving union stays strictly below the threshold
+    // (≤ 7 users × 32 nnz < 256) — the draws are deterministic in
+    // (seed, uid, round), so scan the simulated day for such a round
+    let spec = ScenarioSpec { dropout_hazard: 0.5, ..ScenarioSpec::disabled() };
+    let seed = 77u64;
+    let round = (0..pfl::fl::device::ROUNDS_PER_DAY)
+        .find(|&r| (0..16usize).filter(|&u| !spec.drops_out(seed, u, r)).count() <= 7)
+        .expect("no round with enough dropouts in a simulated day");
+
+    let mut arena = StatsArena::with_config(config);
+    let mut survivors = 0usize;
+    for (uid, u) in users.iter().enumerate() {
+        if spec.drops_out(seed, uid, round) {
+            continue; // the worker loop abandons this user pre-fold
+        }
+        arena.fold(u);
+        survivors += 1;
+    }
+    assert!(survivors > 0 && survivors <= 7, "round {round}: {survivors} survivors");
+    let p = arena.take_partial().unwrap();
+    assert!(
+        matches!(p.update_value(), Some(StatValue::Sparse { .. })),
+        "dropout-shrunk round densified anyway"
+    );
+    assert_eq!(p.weight, survivors as f64);
+    assert_eq!(
+        arena.drain_spill_count(),
+        0,
+        "partial cohort below the spill threshold must not spill"
+    );
+}
+
 /// The sparse-aware scaled fold (async staleness discount) must equal
 /// scaling the contribution first and folding it plainly, over every
 /// shape mix.
